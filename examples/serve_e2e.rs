@@ -1,0 +1,139 @@
+//! End-to-end serving driver (the repository's headline validation run).
+//!
+//! Loads the AOT-compiled draft/target transformer artifacts (trained at
+//! build time by `make artifacts`), starts the full coordinator stack
+//! (router → batcher → scheduler → GLS engine → PJRT backends), serves a
+//! batched workload of real text prompts with Poisson arrivals, and
+//! reports block efficiency, token throughput and latency percentiles for
+//! GLS multi-draft vs single-draft verification.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example serve_e2e
+//! ```
+//!
+//! Without artifacts it falls back to the timed SimLm backend so the
+//! driver always demonstrates the full serving path.
+
+use std::time::{Duration, Instant};
+
+use gls_serve::bench::Table;
+use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::server::Server;
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::backend::ModelPair;
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::model::tokenizer::ByteTokenizer;
+use gls_serve::runtime::{Artifacts, PjrtLm};
+use gls_serve::spec::types::VerifierKind;
+use gls_serve::workload::trace::PoissonTrace;
+use gls_serve::workload::suites::TaskSuite;
+
+const PROMPTS: &[&str] = &[
+    "ada buys 3 apples and then 4 more. total:",
+    "bob sells 12 eggs and then 5 more. total:",
+    "def sum3(xs): return ",
+    "cleo counts 7 coins and then 9 more. total:",
+    "finn stacks 21 books and then 14 more. total:",
+    "def max2(xs): return ",
+    "grace said to hugo that the drums were ready.",
+    "eve finds 8 forks and then 11 more. total:",
+];
+
+fn main() {
+    let have_artifacts = Artifacts::discover().is_ok();
+    let tok = ByteTokenizer::new();
+    let requests = 24;
+    let max_new = if have_artifacts { 20 } else { 48 };
+
+    println!("== gls-serve end-to-end driver ==");
+    println!(
+        "backend: {}",
+        if have_artifacts {
+            "PJRT artifacts (JAX transformer + Pallas attention, AOT)"
+        } else {
+            "timed SimLm (run `make artifacts` for the PJRT path)"
+        }
+    );
+
+    // Open-loop arrival schedule (Poisson), as a real serving benchmark.
+    let trace = PoissonTrace::generate(400.0, requests, PROMPTS.len(), 7);
+    println!(
+        "workload: {requests} requests, Poisson arrivals at ~{:.0} req/s over {:?}\n",
+        trace.empirical_rate(),
+        trace.duration()
+    );
+
+    let mut table = Table::new(&[
+        "verifier", "K", "BE", "gen tok/s", "p50 ms", "p95 ms", "wall ms",
+    ]);
+
+    for (vk, k) in [
+        (VerifierKind::SingleDraft, 1usize),
+        (VerifierKind::Daliri, 1),
+        (VerifierKind::Gls, 2),
+        (VerifierKind::Gls, 4),
+        (VerifierKind::SpecInfer, 4),
+    ] {
+        let sc = ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_deadline: Duration::from_millis(1),
+            ..ServerConfig::default()
+        };
+        let ec = EngineConfig {
+            num_drafts: k,
+            block_len: 3,
+            verifier: vk,
+            target_params: SamplingParams::new(1.0, Some(50)),
+            draft_params: vec![SamplingParams::new(1.0, Some(50))],
+            max_seq_len: if have_artifacts { 90 } else { 512 },
+            seed: 0xE2E,
+        };
+
+        let start = Instant::now();
+        let mut server = if have_artifacts {
+            let manifest = Artifacts::discover().unwrap();
+            Server::start(&sc, &ec, RoutingPolicy::LeastLoaded, |_| {
+                let draft = PjrtLm::load(&manifest, "draft_lm").expect("draft");
+                let target = PjrtLm::load(&manifest, "target_lm").expect("target");
+                ModelPair::new(Box::new(draft), Box::new(target))
+            })
+        } else {
+            let suite = TaskSuite::by_name("gsm8k-sim").unwrap();
+            Server::start(&sc, &ec, RoutingPolicy::LeastLoaded, |_| {
+                suite.timed_model_pair(64, 7)
+            })
+        };
+
+        // Replay the trace in real time.
+        for ev in &trace.events {
+            let until = start.elapsed();
+            if ev.at > until {
+                std::thread::sleep(ev.at - until);
+            }
+            let prompt = tok.encode(PROMPTS[ev.prompt_idx]);
+            server.submit(prompt, max_new);
+        }
+        let report = server.finish();
+        let wall = start.elapsed();
+
+        table.row(&[
+            vk.name().to_string(),
+            k.to_string(),
+            format!("{:.2}", report.mean_block_efficiency()),
+            format!("{:.0}", report.metrics.emitted_tokens as f64 / wall.as_secs_f64()),
+            format!("{:.1}", report.p50_latency() * 1e3),
+            format!("{:.1}", report.p95_latency() * 1e3),
+            format!("{:.0}", wall.as_secs_f64() * 1e3),
+        ]);
+
+        // Show one decoded completion from the GLS K=4 run.
+        if vk == VerifierKind::Gls && k == 4 {
+            let r = &report.results[0];
+            println!("sample completion (GLS K=4):\n  {:?}\n", tok.decode(&r.tokens));
+        }
+    }
+
+    table.print();
+    println!("\nRecorded in EXPERIMENTS.md §E2E.");
+}

@@ -1,0 +1,187 @@
+"""AOT export: train (or load cached) weights, lower every entrypoint to
+HLO text, write artifacts/ + manifest.txt.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import train as train_lib
+from . import vae as vae_lib
+
+LM_BATCH = 8
+LM_MAX_SEQ = 96
+GLS_K = 4
+GLS_N = model_lib.VOCAB
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {os.path.basename(path)} ({len(text) / 1e6:.2f} MB)")
+
+
+def load_or_train_lm(out_dir, name, cfg, steps, seed):
+    cache = os.path.join(out_dir, f"weights_{name}.npz")
+    if os.path.exists(cache):
+        print(f"[{name}] loading cached weights {cache}")
+        flat = dict(np.load(cache))
+        return train_lib.unflatten_params(flat)
+    params, _ = train_lib.train_lm(cfg, steps, seed, name)
+    np.savez(cache, **train_lib.flatten_params(params))
+    return params
+
+
+def load_or_train_vae(out_dir, cfg, steps, seed):
+    cache = os.path.join(out_dir, "weights_vae.npz")
+    if os.path.exists(cache):
+        print(f"[vae] loading cached weights {cache}")
+        return train_lib.unflatten_params(dict(np.load(cache)))
+    params, _ = train_lib.train_vae(cfg, steps, seed)
+    np.savez(cache, **train_lib.flatten_params(params))
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--lm-steps", type=int, default=int(os.environ.get("GLS_LM_STEPS", 300)))
+    ap.add_argument("--vae-steps", type=int, default=int(os.environ.get("GLS_VAE_STEPS", 600)))
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    # ------------------------------------------------------------------ LMs
+    target_cfg = model_lib.TARGET_CONFIG
+    draft_cfg = model_lib.DRAFT_CONFIG
+    target_params = load_or_train_lm(out, "target", target_cfg, args.lm_steps, seed=0)
+    draft_params = load_or_train_lm(out, "draft", draft_cfg, args.lm_steps, seed=1)
+
+    tokens_spec = jax.ShapeDtypeStruct((LM_BATCH, LM_MAX_SEQ), jnp.int32)
+
+    print("[aot] lowering LM forwards (Pallas causal attention inside)")
+    export(
+        lambda toks: (model_lib.lm_logits(target_params, toks, target_cfg, use_pallas=True),),
+        (tokens_spec,),
+        os.path.join(out, "target_lm.hlo.txt"),
+    )
+    export(
+        lambda toks: (model_lib.lm_logits(draft_params, toks, draft_cfg, use_pallas=True),),
+        (tokens_spec,),
+        os.path.join(out, "draft_lm.hlo.txt"),
+    )
+
+    # Single-step decode with explicit KV cache (Pallas decode_attention).
+    print("[aot] lowering lm_step (explicit-KV decode)")
+    kv_spec = jax.ShapeDtypeStruct(
+        (target_cfg.n_layers, target_cfg.n_heads, target_cfg.max_seq, target_cfg.d_head),
+        jnp.float32,
+    )
+    export(
+        lambda kc, vc, tok, pos: model_lib.lm_step(
+            target_params, (kc, vc), tok, pos, target_cfg
+        ),
+        (
+            kv_spec,
+            kv_spec,
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+        ),
+        os.path.join(out, "target_lm_step.hlo.txt"),
+    )
+
+    # ------------------------------------------------------------ GLS kernel
+    print("[aot] lowering gls_select (Pallas)")
+    from .kernels.gls import gls_select
+
+    grid_spec = jax.ShapeDtypeStruct((GLS_K, GLS_N), jnp.float32)
+    export(
+        lambda u, q, p: gls_select(u, q, p),
+        (grid_spec, grid_spec, grid_spec),
+        os.path.join(out, "gls_select.hlo.txt"),
+    )
+
+    # ------------------------------------------------------------------ VAE
+    vae_cfg = vae_lib.VaeConfig()
+    vae_params = load_or_train_vae(out, vae_cfg, args.vae_steps, seed=2)
+
+    print("[aot] lowering VAE stack")
+    export(
+        lambda s: vae_lib.encode(vae_params, s),
+        (jax.ShapeDtypeStruct((1, vae_cfg.src), jnp.float32),),
+        os.path.join(out, "vae_encode.hlo.txt"),
+    )
+    export(
+        lambda s: (vae_lib.project(vae_params, s),),
+        (jax.ShapeDtypeStruct((1, vae_cfg.side), jnp.float32),),
+        os.path.join(out, "vae_project.hlo.txt"),
+    )
+    export(
+        lambda w, f: (vae_lib.estimate(vae_params, w, f),),
+        (
+            jax.ShapeDtypeStruct((1, vae_cfg.latent), jnp.float32),
+            jax.ShapeDtypeStruct((1, vae_cfg.feat), jnp.float32),
+        ),
+        os.path.join(out, "vae_estimate.hlo.txt"),
+    )
+    export(
+        lambda w, f: (vae_lib.decode(vae_params, w, f),),
+        (
+            jax.ShapeDtypeStruct((1, vae_cfg.latent), jnp.float32),
+            jax.ShapeDtypeStruct((1, vae_cfg.feat), jnp.float32),
+        ),
+        os.path.join(out, "vae_decode.hlo.txt"),
+    )
+
+    # -------------------------------------------------------------- manifest
+    manifest = f"""# generated by python/compile/aot.py
+vocab = {model_lib.VOCAB}
+lm_batch = {LM_BATCH}
+lm_max_seq = {LM_MAX_SEQ}
+target_lm = target_lm.hlo.txt
+draft_lm = draft_lm.hlo.txt
+target_lm_step = target_lm_step.hlo.txt
+gls_select = gls_select.hlo.txt
+gls_k = {GLS_K}
+gls_n = {GLS_N}
+vae_encode = vae_encode.hlo.txt
+vae_project = vae_project.hlo.txt
+vae_estimate = vae_estimate.hlo.txt
+vae_decode = vae_decode.hlo.txt
+vae_latent = {vae_cfg.latent}
+vae_feat_dim = {vae_cfg.feat}
+vae_src_pixels = {vae_cfg.src}
+vae_side_pixels = {vae_cfg.side}
+"""
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write(manifest)
+    print(f"[aot] done in {time.time() - t0:.0f}s -> {out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Synthetic byte-level training corpus for the draft/target LM pair.
+
+Deterministic template-grammar text: arithmetic word problems, code-ish
+snippets, and prose-ish filler — enough structure that a tiny transformer
+learns real conditional distributions (and a half-size drafter learns an
+aligned-but-weaker approximation), which is all speculative decoding
+needs. Byte-level tokens match rust/src/model/tokenizer.rs (BOS=256).
+"""
+
+import numpy as np
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB = 259
+
+_NAMES = ["ada", "bob", "cleo", "dan", "eve", "finn", "grace", "hugo"]
+_ITEMS = ["apples", "books", "coins", "drums", "eggs", "forks"]
+_VERBS = ["buys", "sells", "finds", "loses", "counts", "stacks"]
+_FUNCS = ["sum", "min", "max", "mean", "sort", "scan"]
+
+
+def _sentences(rng: np.random.Generator, n: int):
+    out = []
+    for _ in range(n):
+        kind = rng.integers(0, 3)
+        if kind == 0:  # arithmetic word problem
+            a, b = int(rng.integers(2, 60)), int(rng.integers(2, 60))
+            name = _NAMES[rng.integers(0, len(_NAMES))]
+            item = _ITEMS[rng.integers(0, len(_ITEMS))]
+            verb = _VERBS[rng.integers(0, len(_VERBS))]
+            out.append(
+                f"{name} {verb} {a} {item} and then {b} more. total: {a + b} {item}."
+            )
+        elif kind == 1:  # code-ish
+            f = _FUNCS[rng.integers(0, len(_FUNCS))]
+            k = int(rng.integers(1, 9))
+            out.append(f"def {f}{k}(xs): return {f}(xs[:{k}]) # {f} of first {k}")
+        else:  # prose filler
+            n1 = _NAMES[rng.integers(0, len(_NAMES))]
+            n2 = _NAMES[rng.integers(0, len(_NAMES))]
+            out.append(f"{n1} said to {n2} that the {_ITEMS[rng.integers(0, len(_ITEMS))]} were ready.")
+    return out
+
+
+def build_corpus(num_docs: int = 2000, seed: int = 0) -> bytes:
+    rng = np.random.default_rng(seed)
+    return ("\n".join(_sentences(rng, num_docs)) + "\n").encode()
+
+
+def batches(corpus: bytes, batch: int, seq: int, steps: int, seed: int = 1):
+    """Yield i32[batch, seq] windows with a BOS prepended to each."""
+    data = np.frombuffer(corpus, dtype=np.uint8).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        idx = rng.integers(0, len(data) - seq, size=batch)
+        rows = np.stack([data[i : i + seq - 1] for i in idx])
+        yield np.concatenate([np.full((batch, 1), BOS, np.int32), rows], axis=1)

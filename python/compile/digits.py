@@ -1,0 +1,120 @@
+"""Bit-exact Python port of the Rust synthetic-digit generator
+(rust/src/compression/image.rs) and its RNG (rust/src/stats/rng.rs).
+
+The β-VAE trains on the *same distribution* (same bits, in fact) that the
+Rust compression experiments consume — the cross-language agreement is
+asserted by python/tests/test_cross_language.py against golden values.
+"""
+
+import numpy as np
+
+MASK = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+IMG = 28
+HALF_W = 14
+CROP = 7
+SRC_PIXELS = IMG * HALF_W
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = np.uint64(seed)
+
+    def next_u64(self) -> np.uint64:
+        with np.errstate(over="ignore"):
+            self.state = (self.state + np.uint64(0x9E3779B97F4A7C15)) & MASK
+            z = self.state
+            z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)) & MASK
+            z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)) & MASK
+            return z ^ (z >> np.uint64(31))
+
+
+class XorShift128:
+    """xorshift128+ matching rust/src/stats/rng.rs exactly."""
+
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        self.s0 = sm.next_u64() | np.uint64(1)
+        self.s1 = sm.next_u64()
+
+    def next_u64(self) -> np.uint64:
+        with np.errstate(over="ignore"):
+            x = self.s0
+            y = self.s1
+            self.s0 = y
+            x = (x ^ ((x << np.uint64(23)) & MASK)) & MASK
+            self.s1 = x ^ y ^ (x >> np.uint64(17)) ^ (y >> np.uint64(26))
+            return (self.s1 + y) & MASK
+
+    def next_f64(self) -> float:
+        bits = self.next_u64() >> np.uint64(11)
+        return (float(bits) + 0.5) * (1.0 / 9007199254740992.0)
+
+    def next_below(self, n: int) -> int:
+        n = np.uint64(n)
+        while True:
+            x = self.next_u64()
+            wide = int(x) * int(n)
+            hi, lo = wide >> 64, np.uint64(wide & int(MASK))
+            neg_mod = np.uint64((2**64 - int(n)) % int(n))
+            if lo >= n or lo >= neg_mod:
+                return int(hi)
+
+
+def _point_segment_dist(px, py, x0, y0, x1, y1):
+    dx, dy = x1 - x0, y1 - y0
+    len2 = dx * dx + dy * dy
+    if len2 <= 1e-9:
+        t = np.zeros_like(px)
+    else:
+        t = ((px - x0) * dx + (py - y0) * dy) / len2
+    t = np.clip(t, 0.0, 1.0)
+    cx, cy = x0 + t * dx, y0 + t * dy
+    return np.sqrt((px - cx) ** 2 + (py - cy) ** 2)
+
+
+def synthetic_digits(n: int, seed: int) -> np.ndarray:
+    """Port of image.rs::synthetic_digits — returns f32[n, 28*28]."""
+    rng = XorShift128(seed)
+    prng = XorShift128(0xD1617000)
+    protos = []
+    for _ in range(10):
+        strokes = []
+        for _ in range(4):
+            x0 = 4.0 + 8.0 * prng.next_f64()
+            y0 = 3.0 + 22.0 * prng.next_f64()
+            x1 = 14.0 + 10.0 * prng.next_f64()
+            y1 = 3.0 + 22.0 * prng.next_f64()
+            strokes.append((x0, y0, x1, y1))
+        protos.append(strokes)
+
+    py_grid, px_grid = np.meshgrid(
+        np.arange(IMG, dtype=np.float32), np.arange(IMG, dtype=np.float32), indexing="ij"
+    )
+    out = np.zeros((n, IMG * IMG), dtype=np.float32)
+    for img_i in range(n):
+        cls = rng.next_below(10)
+        dx = np.float32(rng.next_f64()) * np.float32(4.0) - np.float32(2.0)
+        dy = np.float32(rng.next_f64()) * np.float32(4.0) - np.float32(2.0)
+        img = np.zeros((IMG, IMG), dtype=np.float32)
+        for (x0, y0, x1, y1) in protos[cls]:
+            x0f, y0f = np.float32(x0) + dx, np.float32(y0) + dy
+            x1f, y1f = np.float32(x1) + dx, np.float32(y1) + dy
+            d = _point_segment_dist(px_grid, py_grid, x0f, y0f, x1f, y1f).astype(np.float32)
+            img = np.minimum(img + np.exp(-d * d / np.float32(1.6)), np.float32(1.0))
+        flat = img.reshape(-1)
+        for p in range(IMG * IMG):
+            flat[p] = np.clip(flat[p] + np.float32(0.05) * np.float32(rng.next_f64()), 0.0, 1.0)
+        out[img_i] = flat
+    return out
+
+
+def right_half(img: np.ndarray) -> np.ndarray:
+    """f32[784] -> f32[392] (columns 14..28 of each row)."""
+    return img.reshape(IMG, IMG)[:, HALF_W:].reshape(-1)
+
+
+def left_crop(img: np.ndarray, cx: int, cy: int) -> np.ndarray:
+    """7×7 crop from the left half."""
+    assert cx + CROP <= HALF_W and cy + CROP <= IMG
+    return img.reshape(IMG, IMG)[cy : cy + CROP, cx : cx + CROP].reshape(-1)

@@ -1,0 +1,9 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# All kernels run under interpret=True — the CPU PJRT plugin cannot execute
+# Mosaic custom-calls, so interpret mode is both the correctness and the
+# lowering path here; real-TPU performance is estimated analytically in
+# DESIGN.md §8.
+
+from .attention import decode_attention
+from .gls import gls_select

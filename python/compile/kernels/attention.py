@@ -1,0 +1,137 @@
+"""Pallas decode-attention kernel: single-query causal attention over an
+explicit KV cache — the transformer's per-step hot spot.
+
+TPU adaptation of the usual GPU flash-decoding scheme: the cache is tiled
+along S via the BlockSpec grid (HBM→VMEM streaming); each grid step fuses
+QK^T, the masked online-softmax update, and the PV accumulation, carrying
+(m, l, acc) running statistics exactly like flash attention. At our sizes
+(S ≤ 160, D ≤ 64) a single tile also fits VMEM whole, but the tiling is
+what would scale this to real cache lengths on hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _causal_kernel(q_ref, k_ref, v_ref, o_ref):
+    """Full causal self-attention for one head: [S, D] in VMEM whole.
+
+    Used by the exported full-context forward (`model.lm_logits`): one grid
+    step per head; the S×S score matrix fits VMEM at our sizes (S ≤ 160).
+    """
+    q = q_ref[...][0]  # [S, D]
+    k = k_ref[...][0]
+    v = v_ref[...][0]
+    s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = (q @ k.T) * scale  # [S, S]
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    logits = jnp.where(col <= row, logits, -jnp.float32(1e30))
+    m = logits.max(axis=1, keepdims=True)
+    p = jnp.exp(logits - m)
+    w = p / p.sum(axis=1, keepdims=True)
+    o_ref[...] = (w @ v)[None]
+
+
+@jax.jit
+def causal_attention(q, k, v):
+    """Pallas causal self-attention: f32[H, S, D] -> f32[H, S, D]."""
+    h, s, d = q.shape
+    assert k.shape == (h, s, d) and v.shape == (h, s, d)
+    return pl.pallas_call(
+        _causal_kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_s: int):
+    tile = pl.program_id(0)
+    base = tile * block_s
+
+    q = q_ref[...]          # [H, D]
+    k = k_ref[...]          # [H, block_s, D]
+    v = v_ref[...]          # [H, block_s, D]
+    length = len_ref[0]
+
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("hd,hsd->hs", q, k) * scale  # [H, block_s]
+    pos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + base
+    logits = jnp.where(pos < length, logits, -jnp.float32(1e30))
+
+    m_tile = logits.max(axis=1)                       # [H]
+    p = jnp.exp(logits - m_tile[:, None])             # [H, block_s]
+    l_tile = p.sum(axis=1)                            # [H]
+    acc_tile = jnp.einsum("hs,hsd->hd", p, v)         # [H, D]
+
+    @pl.when(tile == 0)
+    def _init():
+        m_ref[...] = m_tile
+        l_ref[...] = l_tile
+        o_ref[...] = acc_tile
+
+    @pl.when(tile != 0)
+    def _fold():
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, m_tile)
+        alpha = jnp.exp(m_old - m_new)
+        beta = jnp.exp(m_tile - m_new)
+        l_ref[...] = l_ref[...] * alpha + l_tile * beta
+        o_ref[...] = o_ref[...] * alpha[:, None] + acc_tile * beta[:, None]
+        m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k_cache, v_cache, length, block_s: int = 64):
+    """Single-position attention over the KV cache (interpret-mode Pallas).
+
+    Args:
+      q: f32[H, D]; k_cache/v_cache: f32[H, S, D]; length: i32 scalar.
+      block_s: cache tile length (VMEM sizing knob).
+
+    Returns: f32[H, D] attention output (un-normalized softmax folded in).
+    """
+    h, s, d = k_cache.shape
+    assert q.shape == (h, d) and v_cache.shape == (h, s, d)
+    if s % block_s != 0:
+        pad = block_s - (s % block_s)
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+
+    grid = (s // block_s,)
+    length_arr = jnp.asarray(length, dtype=jnp.int32).reshape((1,))
+    o, m, l = pl.pallas_call(
+        functools.partial(_attn_kernel, block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+            pl.BlockSpec((h, block_s, d), lambda i: (0, i, 0)),
+            pl.BlockSpec((h, block_s, d), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((h, d), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, d), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+            jax.ShapeDtypeStruct((h,), jnp.float32),
+        ],
+        interpret=True,
+    )(length_arr, q, k_cache, v_cache)
+    return o / l[:, None]

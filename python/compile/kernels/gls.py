@@ -1,0 +1,122 @@
+"""Pallas kernel for Gumbel-max List Sampling (paper Alg. 1 / Alg. 2).
+
+The hot spot of GLS verification is the coupled double race over the
+[K, N] grid of shared exponentials:
+
+    Y      = argmin_i  min_k  (-ln U[k, i]) / q[k, i]
+    X^(k)  = argmin_i         (-ln U[k, i]) / p[k, i]
+
+GPU-paper -> TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of a
+per-threadblock reduction over vocab shards, the kernel tiles N into
+VMEM-sized blocks via the BlockSpec grid and carries running (min, argmin)
+accumulators in the output refs; the elementwise  -ln(U)/prob  math is VPU
+work, and the final reduction per tile is a 2D min over the K×BLOCK tile.
+
+Numerical contract (mirrored by ref.py and the Rust implementation):
+the race runs on f32; prob <= 0 entries are masked to +inf so zero-mass
+symbols can never win.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF_GUARD = 3.4e38  # effectively +inf race value (python scalar: pallas kernels must not capture tracers)
+
+
+def _gls_kernel(u_ref, q_ref, p_ref, ybest_ref, yarg_ref, xbest_ref, xarg_ref, *, block_n: int):
+    """One grid step: fold one N-tile into the running (min, argmin)."""
+    tile = pl.program_id(0)
+    base = tile * block_n
+
+    u = u_ref[...]  # [K, block_n]
+    q = q_ref[...]
+    p = p_ref[...]
+
+    s = -jnp.log(u)  # shared Exp(1) variates
+    # Masked race values.
+    yv = jnp.where(q > 0.0, s / q, _NEG_INF_GUARD)
+    xv = jnp.where(p > 0.0, s / p, _NEG_INF_GUARD)
+
+    k_dim, bn = yv.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (k_dim, bn), 1) + base
+
+    # --- Y: global min over the whole K×tile block. ---
+    y_tile_best = jnp.min(yv)
+    flat = jnp.argmin(yv.reshape(-1))
+    y_tile_arg = (flat % bn) + base
+
+    @pl.when(tile == 0)
+    def _init():
+        ybest_ref[0] = y_tile_best
+        yarg_ref[0] = y_tile_arg.astype(jnp.int32)
+        xbest_ref[...] = jnp.min(xv, axis=1)
+        xarg_ref[...] = (jnp.argmin(xv, axis=1) + base).astype(jnp.int32)
+
+    @pl.when(tile != 0)
+    def _fold():
+        better_y = y_tile_best < ybest_ref[0]
+        ybest_ref[0] = jnp.where(better_y, y_tile_best, ybest_ref[0])
+        yarg_ref[0] = jnp.where(better_y, y_tile_arg.astype(jnp.int32), yarg_ref[0])
+
+        x_tile_best = jnp.min(xv, axis=1)
+        x_tile_arg = (jnp.argmin(xv, axis=1) + base).astype(jnp.int32)
+        better_x = x_tile_best < xbest_ref[...]
+        xbest_ref[...] = jnp.where(better_x, x_tile_best, xbest_ref[...])
+        xarg_ref[...] = jnp.where(better_x, x_tile_arg, xarg_ref[...])
+
+    del cols  # iota retained for clarity of the tiling story
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gls_select(u, q, p, block_n: int = 128):
+    """Coupled GLS selection.
+
+    Args:
+      u: shared uniforms, f32[K, N] in (0, 1).
+      q: per-draft target probabilities, f32[K, N] (rows may differ when the
+         active-set semantics of Alg. 2 feed per-draft targets).
+      p: per-draft proposal probabilities, f32[K, N].
+      block_n: N-tile width (VMEM sizing knob).
+
+    Returns:
+      (y, xs): y i32[] — the target's coupled sample;
+               xs i32[K] — each draft's proposal sample.
+    """
+    k, n = u.shape
+    assert q.shape == (k, n) and p.shape == (k, n)
+    if n % block_n != 0:
+        # Pad with zero-probability symbols: masked out by the kernel.
+        pad = block_n - (n % block_n)
+        u = jnp.pad(u, ((0, 0), (0, pad)), constant_values=0.5)
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        p = jnp.pad(p, ((0, 0), (0, pad)))
+        n = n + pad
+
+    grid = (n // block_n,)
+    ybest, yarg, xbest, xarg = pl.pallas_call(
+        functools.partial(_gls_kernel, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+            pl.BlockSpec((k, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+        ],
+        interpret=True,
+    )(u, q, p)
+    del ybest, xbest
+    return yarg[0], xarg

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (plus hypothesis sweeps)
+asserts the kernels agree with these bit-for-bit on argmin identities and
+to tight tolerances on values. The Rust coordinator implements the same
+math in f64; the cross-language agreement test lives in
+python/tests/test_cross_language.py.
+"""
+
+import jax.numpy as jnp
+
+
+def gls_select_ref(u, q, p):
+    """Reference GLS coupled selection over f32[K, N] inputs.
+
+    Y = argmin_i min_k -ln(u[k,i]) / q[k,i]   (masked where q <= 0)
+    X[k] = argmin_i -ln(u[k,i]) / p[k,i]      (masked where p <= 0)
+    """
+    s = -jnp.log(u)
+    guard = jnp.float32(3.4e38)
+    yv = jnp.where(q > 0.0, s / q, guard)
+    xv = jnp.where(p > 0.0, s / p, guard)
+    # Global argmin over (k, i), reported as the symbol index i.
+    flat = jnp.argmin(yv.reshape(-1))
+    y = (flat % u.shape[1]).astype(jnp.int32)
+    xs = jnp.argmin(xv, axis=1).astype(jnp.int32)
+    return y, xs
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """Reference single-query causal attention with an explicit KV cache.
+
+    Args:
+      q: f32[H, D] query for the current position.
+      k_cache: f32[H, S, D]; v_cache: f32[H, S, D].
+      length: number of valid cache positions (<= S).
+
+    Returns: f32[H, D].
+    """
+    h, s, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    logits = jnp.einsum("hd,hsd->hs", q, k_cache) * scale
+    mask = jnp.arange(s)[None, :] < length
+    logits = jnp.where(mask, logits, -jnp.float32(1e30))
+    w = jnp.exp(logits - logits.max(axis=1, keepdims=True))
+    w = w / w.sum(axis=1, keepdims=True)
+    return jnp.einsum("hs,hsd->hd", w, v_cache)

@@ -1,0 +1,166 @@
+"""L2: the JAX transformer language model (draft + target pair).
+
+A small decoder-only transformer with learned positional embeddings,
+pre-norm blocks and a full-context forward. The attention inside is the
+L1 Pallas kernel (`kernels.attention.causal_attention`), so lowering
+`lm_logits` bakes the kernel into the exported HLO.
+
+Exported entrypoints (see aot.py):
+  lm_logits(params, tokens i32[B, S]) -> logits f32[B, S, V]
+  lm_step(params, kv, token, pos)     -> single-token decode with explicit
+                                         KV cache, using the tiled
+                                         decode_attention kernel (the TPU
+                                         serving path; the CPU PJRT backend
+                                         prefers full recompute, DESIGN.md).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention, decode_attention
+
+VOCAB = 259  # 256 bytes + BOS/EOS/PAD — must match rust tokenizer.rs
+
+
+@dataclasses.dataclass(frozen=True)
+class LmConfig:
+    vocab: int = VOCAB
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    max_seq: int = 96
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+TARGET_CONFIG = LmConfig(d_model=128, n_heads=4, n_layers=4)
+DRAFT_CONFIG = LmConfig(d_model=64, n_heads=4, n_layers=2)
+
+
+def init_params(cfg: LmConfig, key):
+    """Initialize transformer parameters (dict pytree)."""
+    keys = jax.random.split(key, 4 + 8 * cfg.n_layers)
+    it = iter(keys)
+    scale = lambda d: 1.0 / jnp.sqrt(jnp.float32(d))
+    params = {
+        "tok_emb": jax.random.normal(next(it), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos_emb": jax.random.normal(next(it), (cfg.max_seq, cfg.d_model)) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "head": jax.random.normal(next(it), (cfg.d_model, cfg.vocab)) * scale(cfg.d_model),
+        "layers": [],
+    }
+    _ = next(it)
+    for _layer in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1": jnp.ones((cfg.d_model,)),
+                "wq": jax.random.normal(next(it), (cfg.d_model, cfg.d_model)) * scale(cfg.d_model),
+                "wk": jax.random.normal(next(it), (cfg.d_model, cfg.d_model)) * scale(cfg.d_model),
+                "wv": jax.random.normal(next(it), (cfg.d_model, cfg.d_model)) * scale(cfg.d_model),
+                "wo": jax.random.normal(next(it), (cfg.d_model, cfg.d_model)) * scale(cfg.d_model),
+                "ln2": jnp.ones((cfg.d_model,)),
+                "w1": jax.random.normal(next(it), (cfg.d_model, 4 * cfg.d_model)) * scale(cfg.d_model),
+                "w2": jax.random.normal(next(it), (4 * cfg.d_model, cfg.d_model)) * scale(4 * cfg.d_model),
+            }
+        )
+    return params
+
+
+def _rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _block(layer, x, cfg: LmConfig, use_pallas: bool):
+    # x: [S, D]
+    s = x.shape[0]
+    h = _rmsnorm(x, layer["ln1"])
+    q = (h @ layer["wq"]).reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ layer["wk"]).reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ layer["wv"]).reshape(s, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    if use_pallas:
+        o = causal_attention(q, k, v)  # [H, S, Dh]
+    else:
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.d_head))
+        logits = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+        row = jnp.arange(s)[None, :, None]
+        col = jnp.arange(s)[None, None, :]
+        logits = jnp.where(col <= row, logits, -jnp.float32(1e30))
+        w = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("hqk,hkd->hqd", w, v)
+    o = o.transpose(1, 0, 2).reshape(s, cfg.d_model)
+    x = x + o @ layer["wo"]
+    h = _rmsnorm(x, layer["ln2"])
+    x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    return x
+
+
+def lm_logits(params, tokens, cfg: LmConfig, use_pallas: bool = True):
+    """Full-context forward: tokens i32[B, S] -> logits f32[B, S, V]."""
+    b, s = tokens.shape
+
+    def one(row):
+        x = params["tok_emb"][row] + params["pos_emb"][:s]
+        for layer in params["layers"]:
+            x = _block(layer, x, cfg, use_pallas)
+        x = _rmsnorm(x, params["ln_f"])
+        return x @ params["head"]
+
+    return jax.vmap(one)(tokens)
+
+
+# ---------------------------------------------------------------------------
+# Explicit-KV single-step decode (the TPU serving path).
+# ---------------------------------------------------------------------------
+
+
+def init_kv(cfg: LmConfig):
+    """Empty KV cache: (k, v) each f32[L, H, S, Dh]."""
+    shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def lm_step(params, kv, token, pos, cfg: LmConfig):
+    """Decode one token with the Pallas decode_attention kernel.
+
+    Args:
+      kv: (k, v) caches f32[L, H, S, Dh]; `pos` i32 scalar — current length.
+      token: i32 scalar — the token at position `pos`.
+
+    Returns: (logits f32[V], new_kv).
+    """
+    kc, vc = kv
+    x = params["tok_emb"][token] + params["pos_emb"][pos]
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _rmsnorm(x, layer["ln1"])
+        q = (h @ layer["wq"]).reshape(cfg.n_heads, cfg.d_head)
+        k = (h @ layer["wk"]).reshape(cfg.n_heads, cfg.d_head)
+        v = (h @ layer["wv"]).reshape(cfg.n_heads, cfg.d_head)
+        kc_l = jax.lax.dynamic_update_index_in_dim(kc[li], k, pos, axis=1)
+        vc_l = jax.lax.dynamic_update_index_in_dim(vc[li], v, pos, axis=1)
+        new_k.append(kc_l)
+        new_v.append(vc_l)
+        o = decode_attention(q, kc_l, vc_l, pos + 1)  # Pallas tiled kernel
+        x = x + o.reshape(cfg.d_model) @ layer["wo"]
+        h = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    logits = x @ params["head"]
+    return logits, (jnp.stack(new_k), jnp.stack(new_v))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def lm_loss(params, tokens, cfg: LmConfig, use_pallas: bool = False):
+    """Next-token cross-entropy with PAD (=258) masked out of the loss."""
+    logits = lm_logits(params, tokens[:, :-1], cfg, use_pallas)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 258).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,138 @@
+"""Build-time training: the draft/target LM pair and the β-VAE codec.
+
+Everything here runs exactly once, inside `make artifacts`, and is cached
+as artifacts/weights_*.npz. Adam is implemented inline (no optax needed).
+Budgets are sized for a couple of minutes of CPU time: enough for the
+target model to clearly out-predict the drafter while the drafter stays
+aligned — the regime the paper's experiments live in.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_lib
+from . import digits as digits_lib
+from . import model as model_lib
+from . import vae as vae_lib
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree_util.tree_map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_lm(cfg: model_lib.LmConfig, steps: int, seed: int, log_name: str):
+    """Train one LM on the synthetic corpus; returns (params, final_loss)."""
+    key = jax.random.PRNGKey(seed)
+    params = model_lib.init_params(cfg, key)
+    opt = adam_init(params)
+    corpus = corpus_lib.build_corpus()
+
+    # Training uses the jnp attention path (use_pallas=False): interpret-mode
+    # Pallas inside a grad loop is needlessly slow; the exported inference
+    # graph (aot.py) uses the Pallas kernel and pytest asserts both paths
+    # agree numerically.
+    loss_grad = jax.jit(
+        jax.value_and_grad(lambda p, toks: model_lib.lm_loss(p, toks, cfg, use_pallas=False))
+    )
+
+    t0 = time.time()
+    loss = None
+    for step, batch in enumerate(
+        corpus_lib.batches(corpus, batch=16, seq=cfg.max_seq, steps=steps, seed=seed)
+    ):
+        loss, grads = loss_grad(params, jnp.asarray(batch))
+        params, opt = adam_step(params, grads, opt)
+        if step % 50 == 0:
+            print(f"[{log_name}] step {step:4d} loss {float(loss):.4f} ({time.time()-t0:.0f}s)")
+    print(f"[{log_name}] done: loss {float(loss):.4f} after {steps} steps")
+    return params, float(loss)
+
+
+def train_vae(cfg: vae_lib.VaeConfig, steps: int, seed: int):
+    """Train the β-VAE stack on synthetic digits; returns (params, loss)."""
+    key = jax.random.PRNGKey(seed)
+    params = vae_lib.init_params(cfg, key)
+    opt = adam_init(params)
+
+    imgs = digits_lib.synthetic_digits(2000, seed=1234)
+    sources = np.stack([digits_lib.right_half(i) for i in imgs])
+    rng = np.random.default_rng(seed)
+
+    loss_grad = jax.jit(
+        jax.value_and_grad(
+            lambda p, s, c, k: vae_lib.vae_loss(p, s, c, k, cfg)[0],
+        )
+    )
+
+    t0 = time.time()
+    loss = None
+    for step in range(steps):
+        idx = rng.integers(0, len(imgs), size=64)
+        src = jnp.asarray(sources[idx])
+        # Random side crops (independent per example, like the experiment).
+        crops = np.stack(
+            [
+                digits_lib.left_crop(
+                    imgs[i],
+                    int(rng.integers(0, digits_lib.HALF_W - digits_lib.CROP + 1)),
+                    int(rng.integers(0, digits_lib.IMG - digits_lib.CROP + 1)),
+                )
+                for i in idx
+            ]
+        )
+        key, sub = jax.random.split(key)
+        loss, grads = loss_grad(params, src, jnp.asarray(crops), sub)
+        params, opt = adam_step(params, grads, opt)
+        if step % 100 == 0:
+            print(f"[vae] step {step:4d} loss {float(loss):.3f} ({time.time()-t0:.0f}s)")
+    print(f"[vae] done: loss {float(loss):.3f} after {steps} steps")
+    return params, float(loss)
+
+
+def flatten_params(params, prefix=""):
+    """Flatten a pytree of arrays into {dotted.name: np.ndarray}."""
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            out.update(flatten_params(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def unflatten_params(flat):
+    """Inverse of flatten_params (lists reconstructed from int keys)."""
+    tree = {}
+    for name, arr in flat.items():
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(arr)
+
+    def listify(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [listify(node[str(i)]) for i in range(len(keys))]
+        return {k: listify(v) for k, v in node.items()}
+
+    return listify(tree)

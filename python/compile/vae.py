@@ -1,0 +1,119 @@
+"""L2: the β-VAE latent codec networks (paper App. D.3, miniaturized).
+
+Four networks, mirroring Table 7's roles with MLP bodies sized for the
+28×28 synthetic-digit dataset and CPU training (DESIGN.md §2):
+
+  encoder   : source half [392] -> (mu [4], logvar [4])   == p_{W|A}
+  projection: side crop   [49]  -> feature [32]
+  estimator : (w [4], feat [32]) -> logit                  ∝ log p_{W|T}/p_W
+  decoder   : (w [4], feat [32]) -> reconstruction [392]
+
+The estimator is trained as a joint-vs-marginal classifier (BCE), so its
+pre-sigmoid logit estimates the density log-ratio — exactly the decoder
+weight the GLS codec needs (density-ratio trick, as in Phan et al.).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SRC = 392
+SIDE = 49
+LATENT = 4
+FEAT = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class VaeConfig:
+    src: int = SRC
+    side: int = SIDE
+    latent: int = LATENT
+    feat: int = FEAT
+    enc_hidden: int = 128
+    proj_hidden: int = 64
+    est_hidden: int = 64
+    dec_hidden: int = 256
+    beta: float = 0.35
+
+
+def _dense(key, n_in, n_out):
+    w = jax.random.normal(key, (n_in, n_out)) * jnp.sqrt(2.0 / n_in)
+    return {"w": w, "b": jnp.zeros((n_out,))}
+
+
+def init_params(cfg: VaeConfig, key):
+    ks = jax.random.split(key, 10)
+    return {
+        "enc1": _dense(ks[0], cfg.src, cfg.enc_hidden),
+        "enc_mu": _dense(ks[1], cfg.enc_hidden, cfg.latent),
+        "enc_lv": _dense(ks[2], cfg.enc_hidden, cfg.latent),
+        "proj1": _dense(ks[3], cfg.side, cfg.proj_hidden),
+        "proj2": _dense(ks[4], cfg.proj_hidden, cfg.feat),
+        "est1": _dense(ks[5], cfg.latent + cfg.feat, cfg.est_hidden),
+        "est2": _dense(ks[6], cfg.est_hidden, 1),
+        "dec1": _dense(ks[7], cfg.latent + cfg.feat, cfg.dec_hidden),
+        "dec2": _dense(ks[8], cfg.dec_hidden, cfg.src),
+    }
+
+
+def _mlp(x, layers, act=jax.nn.relu):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers):
+            x = act(x)
+    return x
+
+
+def encode(params, source):
+    """source f32[B, 392] -> (mu f32[B, 4], logvar f32[B, 4])."""
+    h = jax.nn.relu(source @ params["enc1"]["w"] + params["enc1"]["b"])
+    mu = h @ params["enc_mu"]["w"] + params["enc_mu"]["b"]
+    lv = h @ params["enc_lv"]["w"] + params["enc_lv"]["b"]
+    # Clamp logvar for stability (encoder target must stay a proper density).
+    return mu, jnp.clip(lv, -6.0, 2.0)
+
+
+def project(params, side):
+    """side f32[B, 49] -> feat f32[B, 32]."""
+    return _mlp(side, [params["proj1"], params["proj2"]])
+
+
+def estimate(params, w, feat):
+    """(w f32[B, 4], feat f32[B, 32]) -> logit f32[B]."""
+    x = jnp.concatenate([w, feat], axis=-1)
+    return _mlp(x, [params["est1"], params["est2"]])[..., 0]
+
+
+def decode(params, w, feat):
+    """(w f32[B, 4], feat f32[B, 32]) -> recon f32[B, 392] in (0, 1)."""
+    x = jnp.concatenate([w, feat], axis=-1)
+    return jax.nn.sigmoid(_mlp(x, [params["dec1"], params["dec2"]]))
+
+
+def vae_loss(params, source, side, key, cfg: VaeConfig):
+    """Joint objective: β-VAE ELBO + estimator BCE.
+
+    The reparameterized latent w ~ N(mu, σ²) feeds the decoder alongside
+    the projected side features; the estimator classifies (w, feat) joint
+    pairs against shuffled (w, feat') marginal pairs.
+    """
+    mu, lv = encode(params, source)
+    eps = jax.random.normal(key, mu.shape)
+    w = mu + jnp.exp(0.5 * lv) * eps
+    feat = project(params, side)
+
+    recon = decode(params, w, feat)
+    recon_loss = jnp.mean(jnp.sum((recon - source) ** 2, axis=-1))
+    kl = 0.5 * jnp.mean(jnp.sum(jnp.exp(lv) + mu**2 - 1.0 - lv, axis=-1))
+
+    # Estimator: positives (aligned) vs negatives (rolled batch).
+    pos_logit = estimate(params, w, feat)
+    neg_logit = estimate(params, w, jnp.roll(feat, 1, axis=0))
+    bce = jnp.mean(jax.nn.softplus(-pos_logit)) + jnp.mean(jax.nn.softplus(neg_logit))
+
+    return recon_loss + cfg.beta * kl + bce, {
+        "recon": recon_loss,
+        "kl": kl,
+        "bce": bce,
+    }

@@ -1,0 +1,149 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and distribution shapes; every property is also
+pinned by a couple of deterministic cases so failures localize fast.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention, decode_attention
+from compile.kernels.gls import gls_select
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def random_case(seed, k, n, sparse=False):
+    rng = np.random.default_rng(seed)
+    u = rng.uniform(1e-6, 1 - 1e-6, (k, n)).astype(np.float32)
+    q = rng.dirichlet(np.ones(n) * 0.5, k).astype(np.float32)
+    p = rng.dirichlet(np.ones(n) * 0.5, k).astype(np.float32)
+    if sparse:
+        # Zero out a random half of the support (renormalized).
+        mask = rng.uniform(size=(k, n)) < 0.5
+        mask[:, 0] = True  # keep at least one symbol
+        q = np.where(mask, q, 0)
+        p = np.where(mask, p, 0)
+        q = q / q.sum(axis=1, keepdims=True)
+        p = p / p.sum(axis=1, keepdims=True)
+    return jnp.asarray(u), jnp.asarray(q), jnp.asarray(p)
+
+
+class TestGlsSelect:
+    @given(
+        seed=st.integers(0, 10_000),
+        k=st.integers(1, 8),
+        n=st.integers(2, 300),
+        block=st.sampled_from([16, 64, 128]),
+    )
+    def test_matches_reference_argmins(self, seed, k, n, block):
+        u, q, p = random_case(seed, k, n)
+        y, xs = gls_select(u, q, p, block_n=block)
+        yr, xsr = ref.gls_select_ref(u, q, p)
+        assert int(y) == int(yr)
+        np.testing.assert_array_equal(np.asarray(xs), np.asarray(xsr))
+
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 4), n=st.integers(4, 64))
+    def test_sparse_support_never_selects_zero_mass(self, seed, k, n):
+        u, q, p = random_case(seed, k, n, sparse=True)
+        y, xs = gls_select(u, q, p)
+        # Y must have q-mass in at least one draft row; X[k] must have p-mass.
+        assert float(jnp.max(q[:, int(y)])) > 0
+        for kk in range(k):
+            assert float(p[kk, int(xs[kk])]) > 0
+
+    def test_block_size_invariance(self):
+        u, q, p = random_case(7, 4, 200)
+        outs = [gls_select(u, q, p, block_n=b) for b in (16, 32, 128, 256)]
+        base_y, base_xs = outs[0]
+        for y, xs in outs[1:]:
+            assert int(y) == int(base_y)
+            np.testing.assert_array_equal(np.asarray(xs), np.asarray(base_xs))
+
+    def test_identical_p_q_rows_match(self):
+        # p == q with K = 1 ⇒ the two races are identical ⇒ X == Y.
+        for seed in range(20):
+            u, q, _ = random_case(seed, 1, 37)
+            y, xs = gls_select(u, q, q)
+            assert int(y) == int(xs[0])
+
+    def test_gumbel_max_marginal_statistics(self):
+        # The kernel is the sampler: empirical marginal of X^(0) follows p.
+        n = 8
+        rng = np.random.default_rng(3)
+        p_row = rng.dirichlet(np.ones(n)).astype(np.float32)
+        counts = np.zeros(n)
+        trials = 3000
+        us = rng.uniform(1e-6, 1 - 1e-6, (trials, 1, n)).astype(np.float32)
+        for t in range(trials):
+            _, xs = gls_select(
+                jnp.asarray(us[t]), jnp.asarray(p_row[None]), jnp.asarray(p_row[None]),
+            )
+            counts[int(xs[0])] += 1
+        freq = counts / trials
+        np.testing.assert_allclose(freq, p_row, atol=0.04)
+
+
+class TestDecodeAttention:
+    @given(
+        seed=st.integers(0, 10_000),
+        h=st.integers(1, 4),
+        s=st.integers(2, 100),
+        d=st.sampled_from([8, 16, 32]),
+        block=st.sampled_from([16, 64]),
+    )
+    def test_matches_reference(self, seed, h, s, d, block):
+        rng = np.random.default_rng(seed)
+        q = rng.standard_normal((h, d)).astype(np.float32)
+        kc = rng.standard_normal((h, s, d)).astype(np.float32)
+        vc = rng.standard_normal((h, s, d)).astype(np.float32)
+        length = int(rng.integers(1, s + 1))
+        out = decode_attention(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), length, block_s=block)
+        expect = ref.decode_attention_ref(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), length)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-4)
+
+    def test_length_one_attends_only_first(self):
+        rng = np.random.default_rng(1)
+        h, s, d = 2, 10, 8
+        q = rng.standard_normal((h, d)).astype(np.float32)
+        kc = rng.standard_normal((h, s, d)).astype(np.float32)
+        vc = rng.standard_normal((h, s, d)).astype(np.float32)
+        out = decode_attention(jnp.asarray(q), jnp.asarray(kc), jnp.asarray(vc), 1)
+        np.testing.assert_allclose(np.asarray(out), vc[:, 0], atol=1e-5)
+
+
+class TestCausalAttention:
+    @given(seed=st.integers(0, 10_000), h=st.integers(1, 4), s=st.integers(2, 48))
+    def test_matches_jnp_softmax_attention(self, seed, h, s):
+        d = 16
+        rng = np.random.default_rng(seed)
+        q = rng.standard_normal((h, s, d)).astype(np.float32)
+        k = rng.standard_normal((h, s, d)).astype(np.float32)
+        v = rng.standard_normal((h, s, d)).astype(np.float32)
+        out = causal_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        # jnp reference
+        scale = 1.0 / np.sqrt(d)
+        logits = np.einsum("hqd,hkd->hqk", q, k) * scale
+        mask = np.tril(np.ones((s, s), bool))
+        logits = np.where(mask[None], logits, -1e30)
+        w = np.exp(logits - logits.max(-1, keepdims=True))
+        w /= w.sum(-1, keepdims=True)
+        expect = np.einsum("hqk,hkd->hqd", w, v)
+        np.testing.assert_allclose(np.asarray(out), expect, atol=2e-4)
+
+    def test_first_position_is_value_passthrough(self):
+        rng = np.random.default_rng(5)
+        h, s, d = 2, 6, 8
+        q = rng.standard_normal((h, s, d)).astype(np.float32)
+        k = rng.standard_normal((h, s, d)).astype(np.float32)
+        v = rng.standard_normal((h, s, d)).astype(np.float32)
+        out = causal_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+        np.testing.assert_allclose(np.asarray(out)[:, 0], v[:, 0], atol=1e-5)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

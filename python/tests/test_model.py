@@ -1,0 +1,118 @@
+"""L2 model correctness: shapes, Pallas/jnp agreement, KV-step vs full
+forward, loss behaviour, VAE stack, corpus generator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus as corpus_lib
+from compile import model as m
+from compile import vae as v
+
+SMALL = m.LmConfig(d_model=32, n_heads=2, n_layers=2, max_seq=20)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return m.init_params(SMALL, jax.random.PRNGKey(0))
+
+
+def toks(b, s, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, m.VOCAB, (b, s)), jnp.int32)
+
+
+class TestTransformer:
+    def test_logits_shape_and_finiteness(self, params):
+        out = m.lm_logits(params, toks(3, 20), SMALL)
+        assert out.shape == (3, 20, m.VOCAB)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_pallas_and_jnp_paths_agree(self, params):
+        t = toks(2, 20, seed=3)
+        a = m.lm_logits(params, t, SMALL, use_pallas=True)
+        b = m.lm_logits(params, t, SMALL, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+    def test_causality(self, params):
+        # Changing a future token must not affect earlier logits.
+        t1 = toks(1, 20, seed=1)
+        t2 = t1.at[0, 15].set((t1[0, 15] + 1) % m.VOCAB)
+        a = m.lm_logits(params, t1, SMALL, use_pallas=False)
+        b = m.lm_logits(params, t2, SMALL, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a)[0, :15], np.asarray(b)[0, :15], atol=1e-5)
+        assert not np.allclose(np.asarray(a)[0, 15:], np.asarray(b)[0, 15:], atol=1e-5)
+
+    def test_kv_step_matches_full_forward(self, params):
+        t = toks(1, 12, seed=2)
+        kv = m.init_kv(SMALL)
+        last = None
+        for pos in range(12):
+            last, kv = m.lm_step(params, kv, t[0, pos], pos, SMALL)
+        full = m.lm_logits(params, t, SMALL, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(last), np.asarray(full)[0, -1], atol=1e-3)
+
+    def test_loss_decreases_with_one_adam_ish_step(self, params):
+        from compile import train as train_lib
+
+        batch = toks(4, 20, seed=9)
+        loss0, grads = jax.value_and_grad(lambda p: m.lm_loss(p, batch, SMALL))(params)
+        opt = train_lib.adam_init(params)
+        p2, _ = train_lib.adam_step(params, grads, opt, lr=3e-3)
+        loss1 = m.lm_loss(p2, batch, SMALL)
+        assert float(loss1) < float(loss0)
+
+    def test_pad_masked_out_of_loss(self, params):
+        base = toks(1, 20, seed=4)
+        with_pad = base.at[0, 10:].set(258)
+        l_full = m.lm_loss(params, base, SMALL)
+        l_pad = m.lm_loss(params, with_pad, SMALL)
+        assert np.isfinite(float(l_pad))
+        assert float(l_pad) != float(l_full)
+
+
+class TestVae:
+    def test_shapes(self):
+        cfg = v.VaeConfig()
+        p = v.init_params(cfg, jax.random.PRNGKey(1))
+        src = jnp.zeros((5, cfg.src))
+        side = jnp.zeros((5, cfg.side))
+        mu, lv = v.encode(p, src)
+        assert mu.shape == (5, cfg.latent) and lv.shape == (5, cfg.latent)
+        assert bool((lv <= 2.0).all()) and bool((lv >= -6.0).all())
+        feat = v.project(p, side)
+        assert feat.shape == (5, cfg.feat)
+        assert v.estimate(p, mu, feat).shape == (5,)
+        recon = v.decode(p, mu, feat)
+        assert recon.shape == (5, cfg.src)
+        assert bool((recon >= 0).all()) and bool((recon <= 1).all())
+
+    def test_loss_components_positive(self):
+        cfg = v.VaeConfig()
+        p = v.init_params(cfg, jax.random.PRNGKey(2))
+        rng = np.random.default_rng(0)
+        src = jnp.asarray(rng.uniform(0, 1, (8, cfg.src)), jnp.float32)
+        side = jnp.asarray(rng.uniform(0, 1, (8, cfg.side)), jnp.float32)
+        loss, aux = v.vae_loss(p, src, side, jax.random.PRNGKey(3), cfg)
+        assert float(loss) > 0
+        assert float(aux["recon"]) > 0 and float(aux["kl"]) >= 0 and float(aux["bce"]) > 0
+
+
+class TestCorpus:
+    def test_deterministic_and_ascii(self):
+        a = corpus_lib.build_corpus(50, seed=3)
+        b = corpus_lib.build_corpus(50, seed=3)
+        assert a == b
+        assert all(c < 128 for c in a)
+
+    def test_batches_shapes_and_bos(self):
+        c = corpus_lib.build_corpus(200, seed=0)
+        for batch in corpus_lib.batches(c, batch=4, seq=32, steps=3):
+            assert batch.shape == (4, 32)
+            assert (batch[:, 0] == corpus_lib.BOS).all()
+            assert batch.max() < corpus_lib.VOCAB
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,79 @@
+"""Statistical quality gates on the trained VAE artifacts.
+
+These run only when artifacts/weights_vae.npz exists (i.e. after
+`make artifacts`); they assert the properties the compression experiment
+relies on: the estimator is discriminative on average (density-ratio
+signal > 0) and the decoder reconstructs better with the true latent than
+with a prior draw.
+"""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import digits, train, vae
+
+WEIGHTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "weights_vae.npz")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(WEIGHTS), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return train.unflatten_params(dict(np.load(WEIGHTS)))
+
+
+@pytest.fixture(scope="module")
+def images():
+    return digits.synthetic_digits(150, seed=999)
+
+
+def test_estimator_discriminative_on_average(params, images):
+    rng = np.random.default_rng(0)
+    matched, mismatched = [], []
+    for i in range(len(images)):
+        src = digits.right_half(images[i])[None]
+        mu, _ = vae.encode(params, jnp.asarray(src))
+        cx, cy = int(rng.integers(0, 8)), int(rng.integers(0, 22))
+        feat = vae.project(params, jnp.asarray(digits.left_crop(images[i], cx, cy)[None]))
+        j = (i + 7) % len(images)
+        feat_j = vae.project(params, jnp.asarray(digits.left_crop(images[j], cx, cy)[None]))
+        matched.append(float(vae.estimate(params, mu, feat)[0]))
+        mismatched.append(float(vae.estimate(params, mu, feat_j)[0]))
+    m, mm = np.mean(matched), np.mean(mismatched)
+    assert m > mm, f"estimator not discriminative: matched {m:.4f} <= mismatched {mm:.4f}"
+    win = np.mean(np.array(matched) > np.array(mismatched))
+    assert win > 0.5, f"win rate {win:.2f}"
+
+
+def test_decoder_prefers_true_latent(params, images):
+    rng = np.random.default_rng(1)
+    err_true, err_prior = [], []
+    for i in range(60):
+        src = digits.right_half(images[i])
+        mu, _ = vae.encode(params, jnp.asarray(src[None]))
+        feat = vae.project(params, jnp.asarray(digits.left_crop(images[i], 3, 10)[None]))
+        recon_true = np.asarray(vae.decode(params, mu, feat))[0]
+        w_prior = jnp.asarray(rng.standard_normal((1, 4)), jnp.float32)
+        recon_prior = np.asarray(vae.decode(params, w_prior, feat))[0]
+        err_true.append(((recon_true - src) ** 2).mean())
+        err_prior.append(((recon_prior - src) ** 2).mean())
+    assert np.mean(err_true) < np.mean(err_prior), (
+        f"true-latent recon {np.mean(err_true):.4f} not better than prior "
+        f"{np.mean(err_prior):.4f}"
+    )
+
+
+def test_encoder_latents_roughly_standard(params, images):
+    # KL regularization should keep aggregate latents near N(0, 1).
+    mus = []
+    for i in range(100):
+        mu, _ = vae.encode(params, jnp.asarray(digits.right_half(images[i])[None]))
+        mus.append(np.asarray(mu)[0])
+    mus = np.stack(mus)
+    assert np.all(np.abs(mus.mean(axis=0)) < 1.0), mus.mean(axis=0)
+    assert np.all(mus.std(axis=0) < 3.0), mus.std(axis=0)

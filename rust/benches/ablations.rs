@@ -1,0 +1,116 @@
+//! Ablation benches for the coordinator design choices DESIGN.md calls
+//! out: KV page size, dynamic-batching deadline, routing policy, and the
+//! draft-length (L) sweep that motivates the paper's choice of L = 4/5.
+//!
+//! Not a paper table — these justify the serving framework's defaults.
+
+use std::time::Duration;
+
+use gls_serve::bench::Table;
+use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::server::Server;
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::spec::types::VerifierKind;
+use gls_serve::workload::suites::TaskSuite;
+
+const VOCAB: usize = 64;
+
+fn serve(sc: &ServerConfig, ec: &EngineConfig, requests: usize, policy: RoutingPolicy) -> (f64, f64, f64) {
+    let suite = TaskSuite::by_name("gsm8k-sim").unwrap();
+    let prompts = suite.prompts(requests, VOCAB, 42);
+    let workload: Vec<(Vec<u32>, usize)> = prompts.into_iter().map(|p| (p, 64)).collect();
+    let report = Server::serve_all(sc, ec, policy, |_| suite.timed_model_pair(VOCAB, 7), workload);
+    (report.token_rate(), report.p95_latency() * 1e3, report.mean_block_efficiency())
+}
+
+fn main() {
+    let requests = if std::env::var("GLS_BENCH_QUICK").is_ok() { 8 } else { 24 };
+    let base_ec = EngineConfig {
+        num_drafts: 4,
+        block_len: 4,
+        verifier: VerifierKind::Gls,
+        target_params: SamplingParams::new(1.0, Some(50)),
+        draft_params: vec![SamplingParams::new(1.0, Some(50))],
+        max_seq_len: 512,
+        seed: 7,
+    };
+    let base_sc = ServerConfig { workers: 2, ..ServerConfig::default() };
+
+    println!("# Ablations — coordinator design choices ({requests} requests)\n");
+
+    // --------------------------------------------------------- draft length
+    {
+        let mut t = Table::new(&["L", "BE", "tok/s", "p95 ms"]);
+        for l in [1usize, 2, 4, 6, 8] {
+            let ec = EngineConfig { block_len: l, ..base_ec.clone() };
+            let (rate, p95, be) = serve(&base_sc, &ec, requests, RoutingPolicy::LeastLoaded);
+            t.row(&[
+                l.to_string(),
+                format!("{be:.2}"),
+                format!("{rate:.0}"),
+                format!("{p95:.0}"),
+            ]);
+        }
+        println!("## draft length L (BE rises then saturates; throughput peaks mid-range)");
+        t.print();
+        println!();
+    }
+
+    // --------------------------------------------------------- KV page size
+    {
+        let mut t = Table::new(&["page size", "tok/s", "peak pages", "util-equiv tokens"]);
+        for page in [4usize, 16, 64, 256] {
+            let sc = ServerConfig {
+                kv_page_size: page,
+                kv_pages: (64 * 1024) / page, // constant byte budget
+                ..base_sc.clone()
+            };
+            let (rate, _, _) = serve(&sc, &base_ec, requests, RoutingPolicy::LeastLoaded);
+            t.row(&[
+                page.to_string(),
+                format!("{rate:.0}"),
+                "-".into(),
+                (64 * 1024).to_string(),
+            ]);
+        }
+        println!("## KV page size at constant token budget (fragmentation vs granularity)");
+        t.print();
+        println!();
+    }
+
+    // --------------------------------------------------- batching deadline
+    {
+        let mut t = Table::new(&["deadline ms", "tok/s", "p95 ms"]);
+        for ms in [0u64, 1, 2, 8, 32] {
+            let sc = ServerConfig {
+                batch_deadline: Duration::from_millis(ms),
+                ..base_sc.clone()
+            };
+            let (rate, p95, _) = serve(&sc, &base_ec, requests, RoutingPolicy::LeastLoaded);
+            t.row(&[ms.to_string(), format!("{rate:.0}"), format!("{p95:.0}")]);
+        }
+        println!("## dynamic-batching deadline (throughput/latency dial)");
+        t.print();
+        println!();
+    }
+
+    // ------------------------------------------------------ routing policy
+    {
+        let mut t = Table::new(&["policy", "workers", "tok/s", "p95 ms"]);
+        for workers in [1usize, 2, 4] {
+            for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded] {
+                let sc = ServerConfig { workers, ..base_sc.clone() };
+                let (rate, p95, _) = serve(&sc, &base_ec, requests, policy);
+                t.row(&[
+                    format!("{policy:?}"),
+                    workers.to_string(),
+                    format!("{rate:.0}"),
+                    format!("{p95:.0}"),
+                ]);
+            }
+        }
+        println!("## routing policy × workers");
+        t.print();
+    }
+}

@@ -1,0 +1,109 @@
+//! Figure 6 reproduction: token-level matching rate on random toy
+//! distributions (N = 10 symbols, 100 random (p, q) instances) as the
+//! number of drafts K sweeps 1..20, for GLS, SpecTr, SpecInfer, and the
+//! optimal-with-communication reference (closed-form upper bound, LP-exact
+//! cross-checked at small K).
+//!
+//! Paper expectation (shape): all schemes increase monotonically in K,
+//! cluster within a few percent of each other, and sit below the optimal
+//! curve, with the gap narrowing as K grows.
+
+use gls_serve::bench::Table;
+use gls_serve::spec::gls::sample_gls;
+use gls_serve::spec::specinfer::SpecInferVerifier;
+use gls_serve::spec::spectr::SpecTrVerifier;
+use gls_serve::spec::types::Categorical;
+use gls_serve::spec::{lml, optimal};
+use gls_serve::stats::rng::{CounterRng, XorShift128};
+use gls_serve::stats::summary::mean;
+use gls_serve::testkit::gen_categorical;
+
+const N: usize = 10;
+const INSTANCES: usize = 100;
+const TRIALS: u64 = 2000;
+
+fn main() {
+    let ks: Vec<usize> = vec![1, 2, 3, 4, 6, 8, 12, 16, 20];
+    let mut gen = XorShift128::new(0xF16_6);
+    let instances: Vec<(Categorical, Categorical)> = (0..INSTANCES)
+        .map(|_| (gen_categorical(&mut gen, N), gen_categorical(&mut gen, N)))
+        .collect();
+
+    let mut table = Table::new(&[
+        "K", "GLS", "SpecTr", "SpecInfer", "LML bound", "Optimal (UB)", "LP (exact)",
+    ]);
+
+    for &k in &ks {
+        let mut gls_rates = Vec::new();
+        let mut spectr_rates = Vec::new();
+        let mut specinfer_rates = Vec::new();
+        let mut bounds = Vec::new();
+        let mut ubs = Vec::new();
+        let mut lps = Vec::new();
+
+        for (idx, (p, q)) in instances.iter().enumerate() {
+            let rng = CounterRng::new(1000 + idx as u64);
+
+            // GLS accept rate.
+            let hits = (0..TRIALS).filter(|&t| sample_gls(p, q, k, &rng, t).accept).count();
+            gls_rates.push(hits as f64 / TRIALS as f64);
+
+            // SpecTr K-SEQ accept rate (i.i.d. proposals).
+            let st = SpecTrVerifier::new();
+            let hits = (0..TRIALS)
+                .filter(|&t| {
+                    let cands: Vec<(usize, u32)> = (0..k)
+                        .map(|kk| (kk, p.sample_race(&rng, t, kk as u64) as u32))
+                        .collect();
+                    st.step(p, q, &cands, &rng, t, k).1.is_some()
+                })
+                .count();
+            spectr_rates.push(hits as f64 / TRIALS as f64);
+
+            // SpecInfer recursive rejection accept rate.
+            let si = SpecInferVerifier::new();
+            let hits = (0..TRIALS)
+                .filter(|&t| {
+                    let toks: Vec<u32> =
+                        (0..k).map(|kk| p.sample_race(&rng, t, kk as u64) as u32).collect();
+                    let cands: Vec<(usize, u32, &Categorical)> =
+                        toks.iter().enumerate().map(|(kk, &x)| (kk, x, p)).collect();
+                    si.step(q, &cands, &rng, t, k).1.is_some()
+                })
+                .count();
+            specinfer_rates.push(hits as f64 / TRIALS as f64);
+
+            bounds.push(lml::theorem1_bound(p, q, k));
+            ubs.push(optimal::upper_bound(p, q, k));
+            // Exact LP only where tractable (N^(K+1) vars).
+            if k <= 2 {
+                if let Ok(v) = optimal::lp_optimal(p, q, k) {
+                    lps.push(v);
+                }
+            }
+        }
+
+        let lp_cell = if lps.is_empty() {
+            "—".to_string()
+        } else {
+            format!("{:.4}", mean(&lps))
+        };
+        table.row(&[
+            k.to_string(),
+            format!("{:.4}", mean(&gls_rates)),
+            format!("{:.4}", mean(&spectr_rates)),
+            format!("{:.4}", mean(&specinfer_rates)),
+            format!("{:.4}", mean(&bounds)),
+            format!("{:.4}", mean(&ubs)),
+            lp_cell,
+        ]);
+    }
+
+    println!("# Figure 6 — toy-distribution matching rate vs number of drafts");
+    println!("# N = {N} symbols, {INSTANCES} random instances, {TRIALS} trials each\n");
+    table.print();
+    println!(
+        "\nshape checks: rates monotone in K; GLS within a few % of SpecTr/SpecInfer;\n\
+         all ≤ Optimal (UB); LML bound ≤ GLS empirical."
+    );
+}

@@ -1,0 +1,215 @@
+//! Performance benchmarks over the serving hot path (§Perf deliverable).
+//!
+//! Measures, per layer:
+//!   L3a  verify-only: GLS / SpecInfer / SpecTr block verification on
+//!        synthetic BlockInputs (pure coordinator math, no model);
+//!   L3b  end-to-end engine blocks/s on the SimLm backend at several
+//!        batch sizes (continuous-batching efficiency);
+//!   L3c  serving stack requests/s through router + scheduler;
+//!   L1/L2 (when artifacts exist) PJRT forward latency per call and
+//!        engine blocks/s on the PJRT backend.
+//!
+//! Run before/after every optimization; EXPERIMENTS.md §Perf records the
+//! iteration log.
+
+use std::time::Duration;
+
+use gls_serve::bench::{time_budget, Table};
+use gls_serve::coordinator::engine::SpecDecodeEngine;
+use gls_serve::coordinator::kv::PagedKvCache;
+use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::sequence::Request;
+use gls_serve::coordinator::server::Server;
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::backend::{LmBackend, ModelPair};
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::model::sim::SimLm;
+use gls_serve::spec::types::{BlockInput, Categorical, VerifierKind};
+use gls_serve::spec::make_verifier;
+use gls_serve::stats::rng::{CounterRng, XorShift128};
+use gls_serve::testkit::gen_categorical;
+
+fn synth_block(k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
+    let mut gen = XorShift128::new(seed);
+    let p: Vec<Categorical> = (0..l).map(|_| gen_categorical(&mut gen, n)).collect();
+    let q: Vec<Categorical> = (0..=l).map(|_| gen_categorical(&mut gen, n)).collect();
+    let rng = CounterRng::new(seed);
+    let mut draft_tokens = vec![Vec::with_capacity(l); k];
+    for kk in 0..k {
+        for j in 0..l {
+            draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+        }
+    }
+    BlockInput { draft_tokens, draft_dists: vec![p; k], target_dists: vec![q; k] }
+}
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    println!("# §Perf — serving hot-path benchmarks\n");
+
+    // ---------------------------------------------------------- L3a verify
+    {
+        let mut t = Table::new(&["verifier", "K", "N(vocab)", "µs/block", "blocks/s"]);
+        for &vk in &[VerifierKind::Gls, VerifierKind::SpecInfer, VerifierKind::SpecTr] {
+            for &(k, n) in &[(4usize, 64usize), (8, 64), (8, 259), (8, 2048)] {
+                let v = make_verifier(vk);
+                let input = synth_block(k, 4, n, 42);
+                let rng = CounterRng::new(7);
+                let mut slot = 0u64;
+                let r = time_budget(&format!("{vk:?}-K{k}-N{n}"), budget, 20, || {
+                    std::hint::black_box(v.verify_block(&input, &rng, slot));
+                    slot = slot.wrapping_add(5);
+                });
+                t.row(&[
+                    vk.name().to_string(),
+                    k.to_string(),
+                    n.to_string(),
+                    format!("{:.1}", r.per_iter.mean * 1e6),
+                    format!("{:.0}", 1.0 / r.per_iter.mean),
+                ]);
+            }
+        }
+        println!("## L3a — block verification (coupling math only)");
+        t.print();
+        println!();
+    }
+
+    // ----------------------------------------------------- L3b engine step
+    {
+        let mut t = Table::new(&["batch", "K", "blocks/s", "tokens/s"]);
+        for &batch in &[1usize, 4, 16] {
+            for &k in &[4usize, 8] {
+                let (d, tg) = SimLm::pair(64, 5, 2.0);
+                let cfg = EngineConfig {
+                    num_drafts: k,
+                    block_len: 4,
+                    verifier: VerifierKind::Gls,
+                    target_params: SamplingParams::new(1.0, Some(50)),
+                    draft_params: vec![SamplingParams::new(1.0, Some(50))],
+                    max_seq_len: 4096,
+                    seed: 3,
+                };
+                let mut eng = SpecDecodeEngine::new(
+                    cfg,
+                    ModelPair::new(Box::new(d), Box::new(tg)),
+                    PagedKvCache::new(1 << 14, 16),
+                );
+                let mut seqs: Vec<_> = (0..batch)
+                    .map(|i| {
+                        let req = Request::new(i as u64, vec![1, 2, 3], 3000);
+                        let s = gls_serve::coordinator::sequence::SequenceState::from_request(&req);
+                        eng.kv.register(s.id, 3, 3103, 5).unwrap();
+                        s
+                    })
+                    .collect();
+                let r = time_budget(&format!("engine-B{batch}-K{k}"), budget, 10, || {
+                    let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+                    std::hint::black_box(eng.step_blocks(&mut refs));
+                });
+                let blocks_per_s = batch as f64 / r.per_iter.mean;
+                let be = eng.metrics.block_efficiency();
+                t.row(&[
+                    batch.to_string(),
+                    k.to_string(),
+                    format!("{:.0}", blocks_per_s),
+                    format!("{:.0}", blocks_per_s * be),
+                ]);
+            }
+        }
+        println!("## L3b — engine blocks/s (SimLm backend, L = 4)");
+        t.print();
+        println!();
+    }
+
+    // --------------------------------------------------- L3c serving stack
+    {
+        let mut t = Table::new(&["workers", "policy", "req/s", "gen tok/s", "p95 ms"]);
+        for &workers in &[1usize, 2, 4] {
+            for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded] {
+                let sc = ServerConfig { workers, ..ServerConfig::default() };
+                let ec = EngineConfig {
+                    num_drafts: 4,
+                    block_len: 4,
+                    verifier: VerifierKind::Gls,
+                    max_seq_len: 256,
+                    ..EngineConfig::default()
+                };
+                let n_req = 48;
+                let workload: Vec<(Vec<u32>, usize)> =
+                    (0..n_req).map(|i| (vec![i as u32, 1, 2], 32)).collect();
+                let report = Server::serve_all(
+                    &sc,
+                    &ec,
+                    policy,
+                    |_| {
+                        let (d, tg) = SimLm::pair(64, 9, 2.0);
+                        ModelPair::new(Box::new(d), Box::new(tg))
+                    },
+                    workload,
+                );
+                t.row(&[
+                    workers.to_string(),
+                    format!("{policy:?}"),
+                    format!("{:.0}", n_req as f64 / report.wall.as_secs_f64()),
+                    format!("{:.0}", report.token_rate()),
+                    format!("{:.1}", report.p95_latency() * 1e3),
+                ]);
+            }
+        }
+        println!("## L3c — serving stack throughput");
+        t.print();
+        println!();
+    }
+
+    // ------------------------------------------------ L1/L2 PJRT artifacts
+    match gls_serve::runtime::Artifacts::discover() {
+        Err(e) => println!("## L1/L2 — skipped (no artifacts: {e})"),
+        Ok(m) => {
+            use gls_serve::runtime::PjrtLm;
+            let mut target = PjrtLm::load(&m, "target_lm").expect("target");
+            let seqs: Vec<Vec<u32>> = (0..8).map(|i| vec![256, i, 1, 2, 3, 4]).collect();
+            let r = time_budget("pjrt-forward-B8", Duration::from_secs(2), 5, || {
+                std::hint::black_box(target.next_logits(&seqs));
+            });
+            let mut t = Table::new(&["op", "ms/call", "rows/s"]);
+            t.row(&[
+                "target_lm forward (B=8, S=96)".into(),
+                format!("{:.2}", r.per_iter.mean * 1e3),
+                format!("{:.0}", 8.0 / r.per_iter.mean),
+            ]);
+
+            // GLS select artifact vs native Rust implementation.
+            use gls_serve::runtime::client::{compile_hlo_file, execute_tuple, new_client};
+            let client = new_client().unwrap();
+            let exe = compile_hlo_file(&client, &m.path("gls_select").unwrap()).unwrap();
+            let k = m.get_usize("gls_k").unwrap();
+            let n = m.get_usize("gls_n").unwrap();
+            let rng = CounterRng::new(1);
+            let u: Vec<f32> = (0..k * n).map(|i| rng.uniform(0, 0, i as u64) as f32).collect();
+            let lit = |d: &[f32]| xla::Literal::vec1(d).reshape(&[k as i64, n as i64]).unwrap();
+            let r = time_budget("pjrt-gls-select", Duration::from_secs(1), 10, || {
+                std::hint::black_box(
+                    execute_tuple(&exe, &[lit(&u), lit(&u), lit(&u)]).unwrap(),
+                );
+            });
+            t.row(&[
+                format!("gls_select artifact (K={k}, N={n})"),
+                format!("{:.3}", r.per_iter.mean * 1e3),
+                format!("{:.0}", 1.0 / r.per_iter.mean),
+            ]);
+            let mut gen = XorShift128::new(2);
+            let q = gen_categorical(&mut gen, n);
+            let p = gen_categorical(&mut gen, n);
+            let r = time_budget("native-gls-select", Duration::from_secs(1), 10, || {
+                std::hint::black_box(gls_serve::spec::gls::sample_gls(&p, &q, k, &rng, 0));
+            });
+            t.row(&[
+                format!("gls_select native (K={k}, N={n})"),
+                format!("{:.3}", r.per_iter.mean * 1e3),
+                format!("{:.0}", 1.0 / r.per_iter.mean),
+            ]);
+            println!("## L1/L2 — PJRT artifact hot ops");
+            t.print();
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! In-house benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmed, repeated timing with mean ± SEM reporting, plus an
+//! aligned table printer used by every `rust/benches/*` target to emit the
+//! paper's rows. Benches are `harness = false` binaries that call these.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::summary::Summary;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Seconds per iteration.
+    pub per_iter: Summary,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        if self.per_iter.mean <= 0.0 {
+            0.0
+        } else {
+            units_per_iter / self.per_iter.mean
+        }
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>12.3} ms ± {:>8.3} ms  ({} iters)",
+            self.name,
+            self.per_iter.mean * 1e3,
+            self.per_iter.sem * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` measured runs after `warmup` unmeasured ones.
+pub fn time<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), iters, per_iter: Summary::of(&samples) }
+}
+
+/// Time `f` adaptively: keep iterating until `budget` wall time is spent
+/// (at least `min_iters`). Good for cases whose cost is unknown a priori.
+pub fn time_budget<F: FnMut()>(name: &str, budget: Duration, min_iters: usize, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters: samples.len(), per_iter: Summary::of(&samples) }
+}
+
+/// Fixed-width table printer: benches print paper-style rows with it.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            widths: headers.iter().map(|s| s.len()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, &w)| format!("{c:<w$}"))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|&w| "-".repeat(w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// `mean ± sem` with 2 decimals — the paper's cell format.
+pub fn pm(mean: f64, sem: f64) -> String {
+    format!("{mean:.2} ± {sem:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_measures_positive_duration() {
+        let r = time("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.per_iter.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_budget_respects_min_iters() {
+        let r = time_budget("quick", Duration::from_millis(1), 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            per_iter: Summary { mean: 0.5, sem: 0.0, n: 1 },
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()]);
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn pm_formats_like_paper() {
+        assert_eq!(pm(4.783, 0.238), "4.78 ± 0.24");
+    }
+}

@@ -1,0 +1,537 @@
+//! Distributed image compression (paper §5.2 "Lossy compression on MNIST",
+//! Fig. 3/4, Tables 8/9).
+//!
+//! Data substitution (DESIGN.md §2): MNIST is unavailable offline, so the
+//! dataset is procedurally rendered 28×28 stroke glyphs with the same
+//! source/side-information split — source = right half (28×14), side
+//! information = a 7×7 crop from the left half at a random position, drawn
+//! independently per decoder.
+//!
+//! The latent codec behind `p_{W|A}` / `p_{W|T}` is abstracted as
+//! [`LatentCodecModel`] with two implementations:
+//!
+//! * [`AnalyticVae`] — a linear-Gaussian codec *fit in Rust* on a
+//!   calibration set (ridge regressions for the side→latent estimator and
+//!   the (latent, side)→pixels decoder). Fast, artifact-free; drives the
+//!   Fig. 4 bench.
+//! * `runtime::PjrtVae` — the AOT-compiled β-VAE artifacts (the paper's
+//!   actual architecture, miniaturized), exercised by the integration
+//!   tests and the compression example when artifacts are present.
+
+use crate::stats::dist::normal_logpdf;
+use crate::stats::rng::XorShift128;
+
+use super::codec::{CodecConfig, GlsCodec, RandomnessMode, SourceModel};
+
+pub const IMG: usize = 28;
+pub const HALF_W: usize = 14;
+pub const SRC_PIXELS: usize = IMG * HALF_W; // right half
+pub const CROP: usize = 7;
+pub const CROP_PIXELS: usize = CROP * CROP;
+
+/// Render `n` synthetic digit-like glyphs (row-major 28×28 in [0,1]).
+pub fn synthetic_digits(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = XorShift128::new(seed);
+    // 10 class prototypes: 4 strokes each, spanning both halves so the
+    // left half is informative about the right (the correlation the
+    // side-information decoder exploits).
+    let mut protos: Vec<Vec<(f32, f32, f32, f32)>> = Vec::with_capacity(10);
+    let mut prng = XorShift128::new(0xD161_7000);
+    for _ in 0..10 {
+        let strokes: Vec<(f32, f32, f32, f32)> = (0..4)
+            .map(|_| {
+                let x0 = 4.0 + 8.0 * prng.next_f64() as f32;
+                let y0 = 3.0 + 22.0 * prng.next_f64() as f32;
+                let x1 = 14.0 + 10.0 * prng.next_f64() as f32;
+                let y1 = 3.0 + 22.0 * prng.next_f64() as f32;
+                (x0, y0, x1, y1)
+            })
+            .collect();
+        protos.push(strokes);
+    }
+    (0..n)
+        .map(|_| {
+            let class = rng.next_below(10) as usize;
+            let dx = rng.next_f64() as f32 * 4.0 - 2.0;
+            let dy = rng.next_f64() as f32 * 4.0 - 2.0;
+            let mut img = vec![0.0f32; IMG * IMG];
+            for &(x0, y0, x1, y1) in &protos[class] {
+                let (x0, y0, x1, y1) = (x0 + dx, y0 + dy, x1 + dx, y1 + dy);
+                // Render the segment with Gaussian falloff.
+                for py in 0..IMG {
+                    for px in 0..IMG {
+                        let d = point_segment_dist(px as f32, py as f32, x0, y0, x1, y1);
+                        let v = (-d * d / 1.6).exp();
+                        let idx = py * IMG + px;
+                        img[idx] = (img[idx] + v).min(1.0);
+                    }
+                }
+            }
+            // Mild pixel noise.
+            for p in img.iter_mut() {
+                *p = (*p + 0.05 * rng.next_f64() as f32).clamp(0.0, 1.0);
+            }
+            img
+        })
+        .collect()
+}
+
+fn point_segment_dist(px: f32, py: f32, x0: f32, y0: f32, x1: f32, y1: f32) -> f32 {
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 <= 1e-9 { 0.0 } else { ((px - x0) * dx + (py - y0) * dy) / len2 };
+    let t = t.clamp(0.0, 1.0);
+    let (cx, cy) = (x0 + t * dx, y0 + t * dy);
+    ((px - cx) * (px - cx) + (py - cy) * (py - cy)).sqrt()
+}
+
+/// Right half of an image (the compression source).
+pub fn right_half(img: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(SRC_PIXELS);
+    for y in 0..IMG {
+        out.extend_from_slice(&img[y * IMG + HALF_W..y * IMG + IMG]);
+    }
+    out
+}
+
+/// 7×7 crop from the left half at (cx, cy); cx ∈ [0, HALF_W - CROP].
+pub fn left_crop(img: &[f32], cx: usize, cy: usize) -> Vec<f32> {
+    assert!(cx + CROP <= HALF_W && cy + CROP <= IMG);
+    let mut out = Vec::with_capacity(CROP_PIXELS);
+    for y in 0..CROP {
+        for x in 0..CROP {
+            out.push(img[(cy + y) * IMG + cx + x]);
+        }
+    }
+    out
+}
+
+/// Latent codec interface: everything §5.1 needs from the β-VAE stack.
+pub trait LatentCodecModel {
+    fn latent_dim(&self) -> usize;
+    /// Encoder network: `p_{W|A}(·|a) = N(mu, diag(var))`.
+    fn encode(&self, source: &[f32]) -> (Vec<f64>, Vec<f64>);
+    /// Projection network: side crop → feature vector.
+    fn project(&self, side: &[f32]) -> Vec<f64>;
+    /// Estimator network: `log p_{W|T}(w|t) − log p_W(w)` (unnormalized ok).
+    fn estimate_logratio(&self, w: &[f64], side_feat: &[f64]) -> f64;
+    /// Decoder network: reconstruction of the source half.
+    fn decode(&self, w: &[f64], side_feat: &[f64]) -> Vec<f32>;
+}
+
+// ---------------------------------------------------------------------------
+// Analytic (linear-Gaussian) codec fit by ridge regression.
+// ---------------------------------------------------------------------------
+
+/// Linear-Gaussian stand-in for the β-VAE, fit on a calibration set.
+///
+/// * encoder: `mu = P·a` (P row-normalized random projection, calibrated to
+///   unit marginal variance), `var = σ²` ("β" dial);
+/// * estimator: per-latent-dim ridge regression from side features;
+/// * decoder: ridge regression from (latent ⊕ side) to pixels.
+pub struct AnalyticVae {
+    latent: usize,
+    proj: Vec<Vec<f64>>,      // latent × SRC_PIXELS
+    proj_means: Vec<f64>,     // centering offsets per latent dim
+    enc_var: f64,             // σ²_{W|A}
+    est_w: Vec<Vec<f64>>,     // latent × (CROP_PIXELS+1) regression weights
+    est_var: Vec<f64>,        // residual variance per latent dim
+    dec_w: Vec<Vec<f64>>,     // SRC_PIXELS × (latent+CROP_PIXELS+1)
+}
+
+impl AnalyticVae {
+    /// Fit on `calib` images. `enc_var` plays the role of the paper's β
+    /// sweep: smaller = higher-fidelity encoder target.
+    pub fn fit(calib: &[Vec<f32>], latent: usize, enc_var: f64, seed: u64) -> Self {
+        assert!(!calib.is_empty() && latent >= 1 && enc_var > 0.0);
+        let mut rng = XorShift128::new(seed);
+        // Random projection rows.
+        let mut proj: Vec<Vec<f64>> = (0..latent)
+            .map(|_| (0..SRC_PIXELS).map(|_| rng.next_f64() * 2.0 - 1.0).collect())
+            .collect();
+        // Calibrate each row to zero-mean unit variance over the set.
+        let sources: Vec<Vec<f32>> = calib.iter().map(|img| right_half(img)).collect();
+        for row in proj.iter_mut() {
+            let vals: Vec<f64> = sources.iter().map(|s| dot_f32(row, s)).collect();
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            let v = vals.iter().map(|x| (x - m).powi(2)).sum::<f64>() / vals.len() as f64;
+            let scale = 1.0 / v.sqrt().max(1e-9);
+            row.iter_mut().for_each(|w| *w *= scale);
+            // Fold the mean shift into an implicit centering: subtract m*scale
+            // by appending to... keep simple: center via the first weight on a
+            // constant — instead adjust: we center by subtracting mean during
+            // encode using stored offsets.
+            // (offset handled below via `proj_mean`)
+        }
+        let proj_mean: Vec<f64> = proj
+            .iter()
+            .map(|row| {
+                sources.iter().map(|s| dot_f32(row, s)).sum::<f64>() / sources.len() as f64
+            })
+            .collect();
+        // Latent "truth" per calibration image (mean of p_{W|A}).
+        let latents: Vec<Vec<f64>> = sources
+            .iter()
+            .map(|s| {
+                (0..latent)
+                    .map(|d| dot_f32(&proj[d], s) - proj_mean[d])
+                    .collect()
+            })
+            .collect();
+
+        // Side features: center crop (calibration uses the central crop; at
+        // run time crops vary, which adds realistic estimator noise).
+        let sides: Vec<Vec<f64>> = calib
+            .iter()
+            .map(|img| {
+                left_crop(img, (HALF_W - CROP) / 2, (IMG - CROP) / 2)
+                    .iter()
+                    .map(|&x| x as f64)
+                    .collect()
+            })
+            .collect();
+
+        // Estimator: latent_d ~ ridge(side features).
+        let mut est_w = Vec::with_capacity(latent);
+        let mut est_var = Vec::with_capacity(latent);
+        for d in 0..latent {
+            let ys: Vec<f64> = latents.iter().map(|l| l[d]).collect();
+            let w = ridge(&sides, &ys, 1e-2);
+            let resid: f64 = sides
+                .iter()
+                .zip(&ys)
+                .map(|(s, &y)| {
+                    let pred = predict(&w, s);
+                    (y - pred) * (y - pred)
+                })
+                .sum::<f64>()
+                / sides.len() as f64;
+            est_w.push(w);
+            est_var.push((resid + enc_var).max(1e-4));
+            // p_{W|T} variance: estimator residual plus the encoder channel.
+        }
+
+        // Decoder: pixel ~ ridge(latent ⊕ side features).
+        let feats: Vec<Vec<f64>> = latents
+            .iter()
+            .zip(&sides)
+            .map(|(l, s)| l.iter().chain(s.iter()).copied().collect())
+            .collect();
+        let mut dec_w = Vec::with_capacity(SRC_PIXELS);
+        for px in 0..SRC_PIXELS {
+            let ys: Vec<f64> = sources.iter().map(|s| s[px] as f64).collect();
+            dec_w.push(ridge(&feats, &ys, 1e-2));
+        }
+
+        Self { latent, proj, proj_means: proj_mean, enc_var, est_w, est_var, dec_w }
+    }
+
+    /// Adjust the encoder channel variance (the paper's β sweep dial).
+    pub fn set_enc_var(&mut self, v: f64) {
+        assert!(v > 0.0);
+        self.enc_var = v;
+        for ev in self.est_var.iter_mut() {
+            *ev = ev.max(1e-4);
+        }
+    }
+}
+
+fn dot_f32(w: &[f64], x: &[f32]) -> f64 {
+    w.iter().zip(x).map(|(a, &b)| a * b as f64).sum()
+}
+
+fn predict(w: &[f64], x: &[f64]) -> f64 {
+    // w = [coef..., intercept]
+    w[..x.len()].iter().zip(x).map(|(a, b)| a * b).sum::<f64>() + w[x.len()]
+}
+
+/// Ridge regression y ~ X·w + b via normal equations (small dims only).
+fn ridge(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Vec<f64> {
+    let n = xs.len();
+    let d = xs[0].len() + 1; // + intercept
+    let mut a = vec![vec![0.0; d]; d];
+    let mut b = vec![0.0; d];
+    for (x, &y) in xs.iter().zip(ys) {
+        let xe: Vec<f64> = x.iter().copied().chain(std::iter::once(1.0)).collect();
+        for i in 0..d {
+            b[i] += xe[i] * y;
+            for j in 0..d {
+                a[i][j] += xe[i] * xe[j];
+            }
+        }
+    }
+    for i in 0..d {
+        a[i][i] += lambda * n as f64;
+    }
+    solve_spd(a, b)
+}
+
+/// Gaussian elimination with partial pivoting (small dense systems).
+fn solve_spd(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let diag = a[col][col];
+        for row in col + 1..n {
+            let f = a[row][col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+impl LatentCodecModel for AnalyticVae {
+    fn latent_dim(&self) -> usize {
+        self.latent
+    }
+
+    fn encode(&self, source: &[f32]) -> (Vec<f64>, Vec<f64>) {
+        let mu: Vec<f64> = (0..self.latent)
+            .map(|d| dot_f32(&self.proj[d], source) - self.proj_means[d])
+            .collect();
+        (mu, vec![self.enc_var; self.latent])
+    }
+
+    fn project(&self, side: &[f32]) -> Vec<f64> {
+        side.iter().map(|&x| x as f64).collect()
+    }
+
+    fn estimate_logratio(&self, w: &[f64], side_feat: &[f64]) -> f64 {
+        (0..self.latent)
+            .map(|d| {
+                let m = predict(&self.est_w[d], side_feat);
+                normal_logpdf(w[d], m, self.est_var[d]) - normal_logpdf(w[d], 0.0, 1.0)
+            })
+            .sum()
+    }
+
+    fn decode(&self, w: &[f64], side_feat: &[f64]) -> Vec<f32> {
+        let feat: Vec<f64> = w.iter().chain(side_feat.iter()).copied().collect();
+        self.dec_w
+            .iter()
+            .map(|wrow| predict(wrow, &feat).clamp(0.0, 1.0) as f32)
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SourceModel adapter: plugs any LatentCodecModel into the GLS codec.
+// ---------------------------------------------------------------------------
+
+/// Precomputed per-image encoder state: the Source type of the adapter.
+#[derive(Clone, Debug)]
+pub struct EncState {
+    pub mu: Vec<f64>,
+    pub var: Vec<f64>,
+}
+
+/// SourceModel over latent space: prior `p_W = N(0, I)`.
+pub struct LatentSource<'m, M: LatentCodecModel> {
+    pub model: &'m M,
+}
+
+impl<'m, M: LatentCodecModel> SourceModel for LatentSource<'m, M> {
+    type Source = EncState;
+    type Side = Vec<f64>; // projected side features
+    type Sample = Vec<f64>; // latent w
+
+    fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> Vec<f64> {
+        let d = self.model.latent_dim();
+        let mut out = Vec::with_capacity(d);
+        while out.len() < d {
+            let (z0, z1) = crate::stats::dist::box_muller(draw(), draw());
+            out.push(z0);
+            if out.len() < d {
+                out.push(z1);
+            }
+        }
+        out
+    }
+
+    fn weight_enc(&self, u: &Vec<f64>, a: &EncState) -> f64 {
+        let lp: f64 = (0..u.len())
+            .map(|d| normal_logpdf(u[d], a.mu[d], a.var[d]) - normal_logpdf(u[d], 0.0, 1.0))
+            .sum();
+        lp.exp()
+    }
+
+    fn weight_dec(&self, u: &Vec<f64>, t: &Vec<f64>) -> f64 {
+        self.model.estimate_logratio(u, t).exp()
+    }
+}
+
+/// One cell of Tables 8/9: (K, L_max) → best MSE over the hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ImagePoint {
+    pub k: usize,
+    pub l_max: u64,
+    pub n_samples: usize,
+    pub enc_var: f64,
+    pub match_rate: f64,
+    pub mse: f64,
+}
+
+/// Run the image pipeline on `images`, one block per image.
+pub fn run_image<M: LatentCodecModel>(
+    model: &M,
+    images: &[Vec<f32>],
+    k: usize,
+    l_max: u64,
+    n_samples: usize,
+    seed: u64,
+    mode: RandomnessMode,
+) -> ImagePoint {
+    let src = LatentSource { model };
+    let cfg = CodecConfig { n_samples, l_max, k_decoders: k, seed, mode };
+    let codec = GlsCodec::new(&src, cfg);
+    let mut crop_rng = XorShift128::new(seed ^ 0xC209);
+
+    let mut hits = 0u64;
+    let mut total_mse = 0.0;
+    for (b, img) in images.iter().enumerate() {
+        let source = right_half(img);
+        let (mu, var) = model.encode(&source);
+        let enc_state = EncState { mu, var };
+        // Independent side crops per decoder.
+        let sides: Vec<Vec<f64>> = (0..k)
+            .map(|_| {
+                let cx = crop_rng.next_below((HALF_W - CROP + 1) as u64) as usize;
+                let cy = crop_rng.next_below((IMG - CROP + 1) as u64) as usize;
+                model.project(&left_crop(img, cx, cy))
+            })
+            .collect();
+        let (enc, dec, hit) = codec.roundtrip(&enc_state, &sides, b as u64);
+        if hit {
+            hits += 1;
+        }
+        // Reconstruct with each decoder's latent; keep the best.
+        let (samples, _) = codec.shared_randomness(b as u64);
+        let _ = enc;
+        let best = dec
+            .iter()
+            .zip(&sides)
+            .map(|(&idx, side)| {
+                let recon = model.decode(&samples[idx], side);
+                mse(&recon, &source)
+            })
+            .fold(f64::INFINITY, f64::min);
+        total_mse += best;
+    }
+    ImagePoint {
+        k,
+        l_max,
+        n_samples,
+        enc_var: 0.0,
+        match_rate: hits as f64 / images.len() as f64,
+        mse: total_mse / images.len() as f64,
+    }
+}
+
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum::<f64>() / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_digits_have_structure() {
+        let imgs = synthetic_digits(20, 3);
+        assert_eq!(imgs.len(), 20);
+        for img in &imgs {
+            assert_eq!(img.len(), IMG * IMG);
+            let mean: f32 = img.iter().sum::<f32>() / img.len() as f32;
+            assert!(mean > 0.01 && mean < 0.9, "degenerate image, mean {mean}");
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        // Determinism.
+        assert_eq!(synthetic_digits(3, 7), synthetic_digits(3, 7));
+    }
+
+    #[test]
+    fn halves_and_crops_shaped_right() {
+        let img = synthetic_digits(1, 1).pop().unwrap();
+        assert_eq!(right_half(&img).len(), SRC_PIXELS);
+        assert_eq!(left_crop(&img, 0, 0).len(), CROP_PIXELS);
+        assert_eq!(left_crop(&img, HALF_W - CROP, IMG - CROP).len(), CROP_PIXELS);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        let mut rng = XorShift128::new(9);
+        let xs: Vec<Vec<f64>> = (0..200).map(|_| vec![rng.next_f64(), rng.next_f64()]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[0] - 2.0 * x[1] + 0.5).collect();
+        let w = ridge(&xs, &ys, 1e-6);
+        assert!((w[0] - 3.0).abs() < 0.05, "{w:?}");
+        assert!((w[1] + 2.0).abs() < 0.05);
+        assert!((w[2] - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn analytic_vae_side_info_is_informative() {
+        let imgs = synthetic_digits(150, 5);
+        let vae = AnalyticVae::fit(&imgs[..100], 4, 0.05, 11);
+        // The estimator should predict the latent better than the prior:
+        // mean |w - pred| < mean |w| on held-out images.
+        let mut err_est = 0.0;
+        let mut err_prior = 0.0;
+        for img in &imgs[100..] {
+            let (mu, _) = vae.encode(&right_half(img));
+            let side = vae.project(&left_crop(img, 3, 10));
+            for d in 0..4 {
+                let pred = predict(&vae.est_w[d], &side);
+                err_est += (mu[d] - pred).abs();
+                err_prior += mu[d].abs();
+            }
+        }
+        assert!(err_est < err_prior, "estimator no better than prior: {err_est} vs {err_prior}");
+    }
+
+    #[test]
+    fn image_pipeline_improves_with_k_and_beats_baseline() {
+        let imgs = synthetic_digits(180, 21);
+        let vae = AnalyticVae::fit(&imgs[..120], 4, 0.05, 13);
+        let eval = &imgs[120..];
+        let k1 = run_image(&vae, eval, 1, 4, 128, 3, RandomnessMode::Independent);
+        let k4 = run_image(&vae, eval, 4, 4, 128, 3, RandomnessMode::Independent);
+        let bl4 = run_image(&vae, eval, 4, 4, 128, 3, RandomnessMode::Shared);
+        assert!(k4.match_rate > k1.match_rate, "{} vs {}", k4.match_rate, k1.match_rate);
+        assert!(
+            k4.match_rate > bl4.match_rate,
+            "gls {} vs baseline {}",
+            k4.match_rate,
+            bl4.match_rate
+        );
+        assert!(k4.mse <= k1.mse + 1e-3, "more decoders should not hurt MSE");
+    }
+
+    #[test]
+    fn decode_is_bounded() {
+        let imgs = synthetic_digits(60, 2);
+        let vae = AnalyticVae::fit(&imgs, 4, 0.05, 3);
+        let side = vae.project(&left_crop(&imgs[0], 0, 0));
+        let recon = vae.decode(&vec![0.3, -0.2, 1.0, 0.0], &side);
+        assert_eq!(recon.len(), SRC_PIXELS);
+        assert!(recon.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+}

@@ -1,0 +1,118 @@
+//! Repository-level configuration: artifact discovery and a tiny CLI
+//! argument parser (no clap offline).
+
+use std::path::PathBuf;
+
+/// Locate the `artifacts/` directory: `$GLS_ARTIFACTS`, else walk up from
+/// the current directory looking for `artifacts/manifest.txt`.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(dir) = std::env::var("GLS_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.txt").exists() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+/// Check whether AOT artifacts are present (benches degrade to the native
+/// backend with a notice when they are not).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().is_some()
+}
+
+/// Minimal `--key value` / `--flag` argument parser.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: Vec<(String, String)>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.push((k.to_string(), v.to_string()));
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.push((name.to_string(), it.next().unwrap()));
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(argv(&["serve", "--workers", "4", "--fast", "--k=8", "extra"]))
+            .unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.get("k"), Some("8"));
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn later_options_override_earlier() {
+        let a = Args::parse(argv(&["--k", "2", "--k", "5"])).unwrap();
+        assert_eq!(a.get("k"), Some("5"));
+    }
+
+    #[test]
+    fn get_parse_defaults_and_errors() {
+        let a = Args::parse(argv(&["--n", "7"])).unwrap();
+        assert_eq!(a.get_parse("n", 1usize).unwrap(), 7);
+        assert_eq!(a.get_parse("missing", 3usize).unwrap(), 3);
+        let b = Args::parse(argv(&["--n", "x"])).unwrap();
+        assert!(b.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv(&["--a", "--b"])).unwrap();
+        assert!(a.has_flag("a") && a.has_flag("b"));
+    }
+}

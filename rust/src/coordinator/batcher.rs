@@ -1,0 +1,121 @@
+//! Dynamic batching: collect requests until the batch is full or the
+//! deadline expires, whichever comes first — the standard latency/
+//! throughput trade-off dial of serving systems.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::sequence::Request;
+
+/// Size/deadline batcher over an mpsc receiver.
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub deadline: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch, deadline }
+    }
+
+    /// Block for the first request, then keep collecting until `max_batch`
+    /// or `deadline` since the first arrival. Returns `None` when the
+    /// channel has disconnected and no requests remain.
+    pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Vec<Request>> {
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let start = Instant::now();
+        while batch.len() < self.max_batch {
+            let remaining = self.deadline.saturating_sub(start.elapsed());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+
+    /// Drain whatever is immediately available (non-blocking), capped at
+    /// `max_batch`. Used by the scheduler to admit work between decode
+    /// iterations without stalling running sequences.
+    pub fn drain_ready(&self, rx: &Receiver<Request>) -> Vec<Request> {
+        let mut batch = Vec::new();
+        while batch.len() < self.max_batch {
+            match rx.try_recv() {
+                Ok(req) => batch.push(req),
+                Err(_) => break,
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..5 {
+            tx.send(Request::new(i, vec![0], 1)).unwrap();
+        }
+        let b = DynamicBatcher::new(3, Duration::from_millis(50));
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(Request::new(1, vec![0], 1)).unwrap();
+        let b = DynamicBatcher::new(10, Duration::from_millis(10));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(9));
+        drop(tx);
+    }
+
+    #[test]
+    fn disconnect_returns_none_when_empty() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn late_arrivals_join_within_deadline() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(4, Duration::from_millis(60));
+        let handle = std::thread::spawn(move || {
+            tx.send(Request::new(1, vec![0], 1)).unwrap();
+            std::thread::sleep(Duration::from_millis(15));
+            tx.send(Request::new(2, vec![0], 1)).unwrap();
+        });
+        let batch = b.next_batch(&rx).unwrap();
+        handle.join().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn drain_ready_is_nonblocking() {
+        let (tx, rx) = mpsc::channel();
+        let b = DynamicBatcher::new(8, Duration::from_millis(100));
+        let t0 = Instant::now();
+        assert!(b.drain_ready(&rx).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(20));
+        tx.send(Request::new(1, vec![0], 1)).unwrap();
+        tx.send(Request::new(2, vec![0], 1)).unwrap();
+        assert_eq!(b.drain_ready(&rx).len(), 2);
+    }
+}

@@ -1,0 +1,269 @@
+//! Configuration for the engine and server.
+//!
+//! Parsed from a tiny `key = value` config format (no serde offline) plus
+//! CLI overrides; every experiment in `rust/benches/` builds these
+//! programmatically.
+
+use crate::model::sampling::SamplingParams;
+use crate::spec::types::VerifierKind;
+
+/// Speculative-decoding engine configuration (one worker).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of drafts K (paper: 2–8).
+    pub num_drafts: usize,
+    /// Draft length L per block (paper: 4 for i.i.d., 5 for diverse).
+    pub block_len: usize,
+    /// Verification scheme.
+    pub verifier: VerifierKind,
+    /// Target model sampling (temperature / top-k).
+    pub target_params: SamplingParams,
+    /// Per-draft-lane sampling. Length 1 = shared across lanes (i.i.d.
+    /// drafts); length K = diverse drafts (Table 2/4 temperature grid).
+    pub draft_params: Vec<SamplingParams>,
+    /// Hard cap on sequence length (prompt + generation).
+    pub max_seq_len: usize,
+    /// Shared-randomness root key; each request splits its own lane.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            num_drafts: 4,
+            block_len: 4,
+            verifier: VerifierKind::Gls,
+            target_params: SamplingParams::default(),
+            draft_params: vec![SamplingParams::default()],
+            max_seq_len: 512,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn draft_params_for(&self, lane: usize) -> SamplingParams {
+        if self.draft_params.len() == 1 {
+            self.draft_params[0]
+        } else {
+            self.draft_params[lane % self.draft_params.len()]
+        }
+    }
+
+    /// Effective number of draft lanes: single-draft verifiers only ever
+    /// consume lane 0.
+    pub fn effective_drafts(&self) -> usize {
+        if self.verifier.is_single_draft() {
+            1
+        } else {
+            self.num_drafts
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_drafts == 0 {
+            return Err("num_drafts must be ≥ 1".into());
+        }
+        if self.block_len == 0 {
+            return Err("block_len must be ≥ 1".into());
+        }
+        if self.draft_params.len() != 1 && self.draft_params.len() != self.num_drafts {
+            return Err(format!(
+                "draft_params must have length 1 or K={}, got {}",
+                self.num_drafts,
+                self.draft_params.len()
+            ));
+        }
+        if self.max_seq_len < self.block_len + 2 {
+            return Err("max_seq_len too small for one block".into());
+        }
+        if self.verifier == VerifierKind::SpecTr && self.draft_params.len() > 1 {
+            return Err("SpecTr verification requires identically distributed drafts".into());
+        }
+        Ok(())
+    }
+}
+
+/// Server-level configuration (routing + batching + capacity).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker threads, each with its own engine + model instance.
+    pub workers: usize,
+    /// Max sequences batched into one engine iteration.
+    pub max_batch: usize,
+    /// Batching deadline: flush a partial batch after this long.
+    pub batch_deadline: std::time::Duration,
+    /// Max concurrently running sequences per worker (continuous batching).
+    pub max_running: usize,
+    /// KV cache capacity per worker, in pages.
+    pub kv_pages: usize,
+    /// Tokens per KV page.
+    pub kv_page_size: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 8,
+            batch_deadline: std::time::Duration::from_millis(2),
+            max_running: 16,
+            kv_pages: 4096,
+            kv_page_size: 16,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 || self.max_batch == 0 || self.max_running == 0 {
+            return Err("workers, max_batch, max_running must be ≥ 1".into());
+        }
+        if self.kv_pages == 0 || self.kv_page_size == 0 {
+            return Err("kv capacity must be ≥ 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse `key = value` lines ('#' comments). Unknown keys are errors —
+/// catching config typos loudly is worth more than forward compatibility
+/// in a reproduction repo.
+pub fn parse_config(text: &str) -> Result<(EngineConfig, ServerConfig), String> {
+    let mut ec = EngineConfig::default();
+    let mut sc = ServerConfig::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let value = value.trim();
+        let err = |e: &str| format!("line {}: {key}: {e}", lineno + 1);
+        match key {
+            "num_drafts" => ec.num_drafts = value.parse().map_err(|_| err("bad usize"))?,
+            "block_len" => ec.block_len = value.parse().map_err(|_| err("bad usize"))?,
+            "verifier" => {
+                ec.verifier =
+                    VerifierKind::parse(value).ok_or_else(|| err("unknown verifier"))?
+            }
+            "target_temperature" => {
+                ec.target_params.temperature = value.parse().map_err(|_| err("bad f64"))?
+            }
+            "draft_temperatures" => {
+                let temps: Result<Vec<f64>, _> =
+                    value.split(',').map(|t| t.trim().parse::<f64>()).collect();
+                let temps = temps.map_err(|_| err("bad f64 list"))?;
+                ec.draft_params = temps
+                    .into_iter()
+                    .map(|t| SamplingParams::new(t, ec.target_params.top_k))
+                    .collect();
+            }
+            "top_k" => {
+                let k: usize = value.parse().map_err(|_| err("bad usize"))?;
+                let top_k = if k == 0 { None } else { Some(k) };
+                ec.target_params.top_k = top_k;
+                for dp in ec.draft_params.iter_mut() {
+                    dp.top_k = top_k;
+                }
+            }
+            "max_seq_len" => ec.max_seq_len = value.parse().map_err(|_| err("bad usize"))?,
+            "seed" => ec.seed = value.parse().map_err(|_| err("bad u64"))?,
+            "workers" => sc.workers = value.parse().map_err(|_| err("bad usize"))?,
+            "max_batch" => sc.max_batch = value.parse().map_err(|_| err("bad usize"))?,
+            "batch_deadline_ms" => {
+                let ms: u64 = value.parse().map_err(|_| err("bad u64"))?;
+                sc.batch_deadline = std::time::Duration::from_millis(ms);
+            }
+            "max_running" => sc.max_running = value.parse().map_err(|_| err("bad usize"))?,
+            "kv_pages" => sc.kv_pages = value.parse().map_err(|_| err("bad usize"))?,
+            "kv_page_size" => sc.kv_page_size = value.parse().map_err(|_| err("bad usize"))?,
+            _ => return Err(format!("line {}: unknown key '{key}'", lineno + 1)),
+        }
+    }
+    ec.validate()?;
+    sc.validate()?;
+    Ok((ec, sc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        assert!(EngineConfig::default().validate().is_ok());
+        assert!(ServerConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+            # experiment: table 2 diverse drafts
+            num_drafts = 2
+            block_len = 5
+            verifier = gls
+            target_temperature = 2.0
+            draft_temperatures = 0.5, 1.0
+            top_k = 50
+            workers = 4
+            max_batch = 16
+            batch_deadline_ms = 5
+        "#;
+        let (ec, sc) = parse_config(text).unwrap();
+        assert_eq!(ec.num_drafts, 2);
+        assert_eq!(ec.block_len, 5);
+        assert_eq!(ec.draft_params.len(), 2);
+        assert_eq!(ec.draft_params[0].temperature, 0.5);
+        assert_eq!(ec.target_params.temperature, 2.0);
+        assert_eq!(sc.workers, 4);
+        assert_eq!(sc.batch_deadline, std::time::Duration::from_millis(5));
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key() {
+        assert!(parse_config("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_value() {
+        assert!(parse_config("num_drafts = many").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_spectr_with_diverse_drafts() {
+        let text = "verifier = spectr\nnum_drafts = 2\ndraft_temperatures = 0.5, 1.5";
+        assert!(parse_config(text).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_draft_params_mismatch() {
+        let mut ec = EngineConfig {
+            num_drafts: 4,
+            draft_params: vec![SamplingParams::default(); 3],
+            ..EngineConfig::default()
+        };
+        assert!(ec.validate().is_err());
+        ec.draft_params = vec![SamplingParams::default(); 4];
+        assert!(ec.validate().is_ok());
+    }
+
+    #[test]
+    fn effective_drafts_collapses_for_single_draft_verifiers() {
+        let ec = EngineConfig {
+            verifier: VerifierKind::Daliri,
+            num_drafts: 8,
+            ..EngineConfig::default()
+        };
+        assert_eq!(ec.effective_drafts(), 1);
+    }
+
+    #[test]
+    fn top_k_zero_means_disabled() {
+        let (ec, _) = parse_config("top_k = 0").unwrap();
+        assert_eq!(ec.target_params.top_k, None);
+    }
+}

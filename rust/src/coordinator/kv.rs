@@ -1,0 +1,374 @@
+//! Paged KV-cache manager (vLLM-style).
+//!
+//! Tracks token-granular cache occupancy in fixed-size pages with
+//! per-sequence page tables. Speculative decoding adds one twist over
+//! vanilla paged attention: a block speculatively extends a sequence by up
+//! to L+1 tokens, and on partial acceptance the tail must be **rolled
+//! back** — pages allocated for rejected positions are returned to the free
+//! list. The engine drives exactly that cycle:
+//!
+//! ```text
+//! reserve_block(seq, L+1) → verify → commit(seq, accepted+1) / rollback
+//! ```
+//!
+//! The manager is also the admission-control authority: the scheduler only
+//! admits a queued sequence when `can_admit` says its prompt plus one full
+//! speculative block fits.
+
+use std::collections::HashMap;
+
+use thiserror::Error;
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum KvError {
+    #[error("out of KV pages (requested {requested}, free {free})")]
+    OutOfPages { requested: usize, free: usize },
+    #[error("unknown sequence {0}")]
+    UnknownSequence(u64),
+    #[error("sequence {0} already registered")]
+    DuplicateSequence(u64),
+    #[error("commit length {commit} exceeds reservation {reserved}")]
+    CommitTooLong { commit: usize, reserved: usize },
+}
+
+#[derive(Clone, Debug)]
+struct SeqEntry {
+    /// Committed token count (prompt + accepted generation).
+    committed: usize,
+    /// Reserved-but-uncommitted tokens (in-flight speculative block).
+    reserved: usize,
+    /// Allocated page ids (covers committed + reserved).
+    pages: Vec<usize>,
+    /// Worst-case page budget promised at admission. The admission
+    /// controller sums budgets, not current usage, so a batch of admitted
+    /// sequences can always grow to completion without deadlocking on
+    /// pages mid-flight.
+    budget_pages: usize,
+}
+
+/// Paged KV-cache accounting.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    page_size: usize,
+    free: Vec<usize>,
+    seqs: HashMap<u64, SeqEntry>,
+    total_pages: usize,
+    /// Sum of live sequences' budget pages (admission-control ledger).
+    budgeted_pages: usize,
+    /// High-water mark for reporting.
+    peak_used: usize,
+}
+
+impl PagedKvCache {
+    pub fn new(total_pages: usize, page_size: usize) -> Self {
+        assert!(total_pages > 0 && page_size > 0);
+        Self {
+            page_size,
+            free: (0..total_pages).rev().collect(),
+            seqs: HashMap::new(),
+            total_pages,
+            budgeted_pages: 0,
+            peak_used: 0,
+        }
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.page_size)
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_pages() as f64 / self.total_pages as f64
+    }
+
+    pub fn num_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Whether a new sequence whose lifetime worst case is `max_tokens`
+    /// committed plus one in-flight block of `block` tokens can be admitted
+    /// *and* guaranteed to run to completion: checks the budget ledger, not
+    /// instantaneous free pages.
+    pub fn can_admit(&self, max_tokens: usize, block: usize) -> bool {
+        let budget = self.pages_for(max_tokens + block);
+        self.budgeted_pages + budget <= self.total_pages
+    }
+
+    /// Register a sequence: allocate pages for the prompt and debit its
+    /// worst-case budget (`max_tokens` committed + `block` in flight).
+    pub fn register(
+        &mut self,
+        seq_id: u64,
+        prompt_len: usize,
+        max_tokens: usize,
+        block: usize,
+    ) -> Result<(), KvError> {
+        if self.seqs.contains_key(&seq_id) {
+            return Err(KvError::DuplicateSequence(seq_id));
+        }
+        let budget_pages = self.pages_for(max_tokens.max(prompt_len) + block);
+        if self.budgeted_pages + budget_pages > self.total_pages {
+            return Err(KvError::OutOfPages {
+                requested: budget_pages,
+                free: self.total_pages - self.budgeted_pages,
+            });
+        }
+        let need = self.pages_for(prompt_len);
+        debug_assert!(need <= self.free.len(), "budget ledger must guarantee pages");
+        let pages: Vec<usize> = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.seqs
+            .insert(seq_id, SeqEntry { committed: prompt_len, reserved: 0, pages, budget_pages });
+        self.budgeted_pages += budget_pages;
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Reserve page capacity for an in-flight speculative block of
+    /// `tokens` positions (typically L+1). Idempotent per block: the engine
+    /// must commit or rollback before reserving again.
+    pub fn reserve_block(&mut self, seq_id: u64, tokens: usize) -> Result<(), KvError> {
+        let entry = self.seqs.get(&seq_id).ok_or(KvError::UnknownSequence(seq_id))?;
+        debug_assert_eq!(entry.reserved, 0, "unbalanced reserve/commit");
+        let have = entry.pages.len();
+        let need_total = self.pages_for(entry.committed + tokens);
+        // Budget enforcement: a sequence may never outgrow what admission
+        // promised — this is what makes `reserve_block` infallible for
+        // well-behaved engines even under full KV pressure.
+        if need_total > entry.budget_pages {
+            return Err(KvError::OutOfPages {
+                requested: need_total - entry.budget_pages,
+                free: 0,
+            });
+        }
+        let need_extra = need_total.saturating_sub(have);
+        if need_extra > self.free.len() {
+            return Err(KvError::OutOfPages { requested: need_extra, free: self.free.len() });
+        }
+        let new_pages: Vec<usize> = (0..need_extra).map(|_| self.free.pop().unwrap()).collect();
+        let entry = self.seqs.get_mut(&seq_id).unwrap();
+        entry.pages.extend(new_pages);
+        entry.reserved = tokens;
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Commit `accepted` of the reserved positions (accepted prefix + the
+    /// emitted final token) and release pages beyond the new committed
+    /// length — the speculative rollback.
+    pub fn commit(&mut self, seq_id: u64, accepted: usize) -> Result<(), KvError> {
+        let entry = self.seqs.get_mut(&seq_id).ok_or(KvError::UnknownSequence(seq_id))?;
+        if accepted > entry.reserved {
+            return Err(KvError::CommitTooLong { commit: accepted, reserved: entry.reserved });
+        }
+        entry.committed += accepted;
+        entry.reserved = 0;
+        let keep = entry.committed.div_ceil(self.page_size);
+        while entry.pages.len() > keep {
+            self.free.push(entry.pages.pop().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Free everything held by a finished sequence (pages + budget).
+    pub fn release(&mut self, seq_id: u64) -> Result<(), KvError> {
+        let entry = self.seqs.remove(&seq_id).ok_or(KvError::UnknownSequence(seq_id))?;
+        self.free.extend(entry.pages);
+        self.budgeted_pages -= entry.budget_pages;
+        Ok(())
+    }
+
+    /// Committed token count of a sequence (for invariant checks).
+    pub fn committed_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.seqs.get(&seq_id).map(|e| e.committed)
+    }
+
+    /// Internal consistency: every page is either free or owned by exactly
+    /// one sequence. Used by the property tests.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.total_pages];
+        for &p in &self.free {
+            if seen[p] {
+                return Err(format!("page {p} double-booked (free list)"));
+            }
+            seen[p] = true;
+        }
+        let mut budget_sum = 0;
+        for (id, e) in &self.seqs {
+            budget_sum += e.budget_pages;
+            if e.pages.len() > e.budget_pages {
+                return Err(format!(
+                    "seq {id}: {} pages exceed budget {}",
+                    e.pages.len(),
+                    e.budget_pages
+                ));
+            }
+            let min_pages = e.committed.div_ceil(self.page_size);
+            let max_pages = (e.committed + e.reserved).div_ceil(self.page_size);
+            if e.pages.len() < min_pages || e.pages.len() > max_pages.max(min_pages) {
+                return Err(format!(
+                    "seq {id}: {} pages for {} committed + {} reserved",
+                    e.pages.len(),
+                    e.committed,
+                    e.reserved
+                ));
+            }
+            for &p in &e.pages {
+                if seen[p] {
+                    return Err(format!("page {p} double-booked (seq {id})"));
+                }
+                seen[p] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("leaked pages (neither free nor owned)".into());
+        }
+        if budget_sum != self.budgeted_pages {
+            return Err(format!(
+                "budget ledger {} != sum of budgets {budget_sum}",
+                self.budgeted_pages
+            ));
+        }
+        if budget_sum > self.total_pages {
+            return Err("over-committed budget ledger".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_reserve_commit_cycle() {
+        let mut kv = PagedKvCache::new(10, 4);
+        kv.register(1, 6, 11, 5).unwrap(); // 2 pages now, 4-page budget
+        assert_eq!(kv.used_pages(), 2);
+        kv.reserve_block(1, 5).unwrap(); // 6+5=11 tokens → 3 pages
+        assert_eq!(kv.used_pages(), 3);
+        kv.commit(1, 2).unwrap(); // 8 tokens → 2 pages, 1 released
+        assert_eq!(kv.used_pages(), 2);
+        assert_eq!(kv.committed_tokens(1), Some(8));
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rollback_frees_speculative_pages() {
+        let mut kv = PagedKvCache::new(10, 4);
+        kv.register(1, 4, 4, 8).unwrap(); // 1 page now, 3-page budget
+        kv.reserve_block(1, 8).unwrap(); // 12 tokens → 3 pages
+        assert_eq!(kv.used_pages(), 3);
+        kv.commit(1, 0).unwrap(); // full rejection: back to 1 page
+        assert_eq!(kv.used_pages(), 1);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_pages_is_reported_not_panicked() {
+        let mut kv = PagedKvCache::new(2, 4);
+        kv.register(1, 8, 8, 0).unwrap(); // both pages
+        let err = kv.register(2, 1, 1, 0).unwrap_err();
+        assert!(matches!(err, KvError::OutOfPages { .. }));
+        assert!(!kv.can_admit(1, 1));
+        kv.release(1).unwrap();
+        assert!(kv.can_admit(1, 1));
+    }
+
+    #[test]
+    fn duplicate_and_unknown_sequences_rejected() {
+        let mut kv = PagedKvCache::new(4, 4);
+        kv.register(1, 1, 1, 0).unwrap();
+        assert_eq!(kv.register(1, 1, 1, 0).unwrap_err(), KvError::DuplicateSequence(1));
+        assert_eq!(kv.commit(9, 0).unwrap_err(), KvError::UnknownSequence(9));
+        assert_eq!(kv.release(9).unwrap_err(), KvError::UnknownSequence(9));
+    }
+
+    #[test]
+    fn commit_longer_than_reservation_rejected() {
+        let mut kv = PagedKvCache::new(4, 4);
+        kv.register(1, 2, 2, 3).unwrap();
+        kv.reserve_block(1, 3).unwrap();
+        assert!(matches!(kv.commit(1, 4), Err(KvError::CommitTooLong { .. })));
+    }
+
+    #[test]
+    fn release_returns_all_pages() {
+        let mut kv = PagedKvCache::new(8, 2);
+        kv.register(1, 5, 5, 0).unwrap();
+        kv.register(2, 3, 3, 0).unwrap();
+        kv.release(1).unwrap();
+        kv.release(2).unwrap();
+        assert_eq!(kv.free_pages(), 8);
+        assert_eq!(kv.used_pages(), 0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut kv = PagedKvCache::new(8, 2);
+        kv.register(1, 8, 8, 0).unwrap(); // 4 pages
+        kv.release(1).unwrap();
+        kv.register(2, 2, 2, 0).unwrap(); // 1 page
+        assert_eq!(kv.peak_used(), 4);
+    }
+
+    #[test]
+    fn property_random_workload_preserves_invariants() {
+        use crate::stats::rng::XorShift128;
+        let mut rng = XorShift128::new(99);
+        let mut kv = PagedKvCache::new(64, 4);
+        let mut live: Vec<u64> = Vec::new();
+        let mut reserved: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..2000 {
+            match rng.next_below(4) {
+                0 => {
+                    let len = 1 + rng.next_below(20) as usize;
+                    if kv.register(next_id, len, len, 6).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if let Some(&id) = live.iter().find(|id| !reserved.contains(id)) {
+                        if kv.reserve_block(id, 1 + rng.next_below(6) as usize).is_ok() {
+                            reserved.push(id);
+                        }
+                    }
+                }
+                2 => {
+                    if let Some(pos) = reserved.pop() {
+                        let commit = rng.next_below(3) as usize;
+                        let _ = kv.commit(pos, commit.min(1));
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let id = live.swap_remove(i);
+                        if reserved.contains(&id) {
+                            reserved.retain(|&r| r != id);
+                        }
+                        kv.release(id).unwrap();
+                    }
+                }
+            }
+            kv.check_invariants().unwrap();
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Engine and server metrics: block efficiency, token rates, latency.
+
+use std::time::Duration;
+
+use crate::stats::summary::{Histogram, OnlineStats};
+
+/// Per-engine counters; merged across workers for the server view.
+#[derive(Clone, Debug)]
+pub struct EngineMetrics {
+    /// Speculative blocks executed (== target model calls).
+    pub blocks: u64,
+    /// Draft model steps executed (block_len per block per lane batch).
+    pub draft_steps: u64,
+    /// Tokens emitted to clients.
+    pub emitted_tokens: u64,
+    /// Draft positions accepted.
+    pub accepted_tokens: u64,
+    /// Completed requests.
+    pub completed: u64,
+    /// Per-request block efficiency.
+    pub be: OnlineStats,
+    /// Request latency histogram (seconds).
+    pub latency: Histogram,
+    /// Wall time spent in the target model (verification).
+    pub target_time: Duration,
+    /// Wall time spent drafting.
+    pub draft_time: Duration,
+    /// Wall time spent in verification math (the coupling algorithms).
+    pub verify_time: Duration,
+}
+
+impl Default for EngineMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self {
+            blocks: 0,
+            draft_steps: 0,
+            emitted_tokens: 0,
+            accepted_tokens: 0,
+            completed: 0,
+            be: OnlineStats::new(),
+            latency: Histogram::latency(),
+            target_time: Duration::ZERO,
+            draft_time: Duration::ZERO,
+            verify_time: Duration::ZERO,
+        }
+    }
+
+    /// Aggregate block efficiency: emitted tokens per target call.
+    pub fn block_efficiency(&self) -> f64 {
+        if self.blocks == 0 {
+            0.0
+        } else {
+            self.emitted_tokens as f64 / self.blocks as f64
+        }
+    }
+
+    /// Token acceptance rate: accepted draft positions per drafted position.
+    pub fn acceptance_rate(&self, block_len: usize) -> f64 {
+        if self.blocks == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / (self.blocks as f64 * block_len as f64)
+        }
+    }
+
+    pub fn merge(&mut self, other: &EngineMetrics) {
+        self.blocks += other.blocks;
+        self.draft_steps += other.draft_steps;
+        self.emitted_tokens += other.emitted_tokens;
+        self.accepted_tokens += other.accepted_tokens;
+        self.completed += other.completed;
+        self.be.merge(&other.be);
+        self.latency.merge(&other.latency);
+        self.target_time += other.target_time;
+        self.draft_time += other.draft_time;
+        self.verify_time += other.verify_time;
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
+             p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms",
+            self.blocks,
+            self.emitted_tokens,
+            self.block_efficiency(),
+            if self.blocks > 0 { self.accepted_tokens as f64 / self.blocks as f64 } else { 0.0 },
+            self.completed,
+            self.latency.quantile(0.5) * 1e3,
+            self.latency.quantile(0.95) * 1e3,
+            self.target_time.as_secs_f64() * 1e3,
+            self.draft_time.as_secs_f64() * 1e3,
+            self.verify_time.as_secs_f64() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_efficiency_math() {
+        let mut m = EngineMetrics::new();
+        m.blocks = 4;
+        m.emitted_tokens = 18;
+        m.accepted_tokens = 14;
+        assert!((m.block_efficiency() - 4.5).abs() < 1e-12);
+        assert!((m.acceptance_rate(5) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = EngineMetrics::new();
+        a.blocks = 2;
+        a.emitted_tokens = 8;
+        let mut b = EngineMetrics::new();
+        b.blocks = 3;
+        b.emitted_tokens = 12;
+        b.completed = 1;
+        a.merge(&b);
+        assert_eq!(a.blocks, 5);
+        assert_eq!(a.emitted_tokens, 20);
+        assert_eq!(a.completed, 1);
+    }
+
+    #[test]
+    fn empty_metrics_do_not_divide_by_zero() {
+        let m = EngineMetrics::new();
+        assert_eq!(m.block_efficiency(), 0.0);
+        assert_eq!(m.acceptance_rate(4), 0.0);
+        assert!(!m.report().is_empty());
+    }
+}

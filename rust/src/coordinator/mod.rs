@@ -1,0 +1,34 @@
+//! Layer-3 serving framework: a vLLM-router-style coordinator whose
+//! first-class feature is GLS multi-draft speculative decoding.
+//!
+//! Data flow:
+//!
+//! ```text
+//! client → Router (round-robin / least-loaded)
+//!        → per-worker DynamicBatcher (size/deadline)
+//!        → Scheduler (continuous batching, KV admission)
+//!        → SpecDecodeEngine (draft K×L → verify → accept/rollback)
+//!        → Backend (PJRT artifacts or native SimLm)
+//! ```
+//!
+//! All components are plain std threads + mpsc channels: deterministic,
+//! easily audited, no async runtime required (none is available offline —
+//! see DESIGN.md §2).
+
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod kv;
+pub mod metrics;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+pub mod server;
+
+pub use config::{EngineConfig, ServerConfig};
+pub use engine::SpecDecodeEngine;
+pub use kv::PagedKvCache;
+pub use metrics::EngineMetrics;
+pub use router::{Router, RoutingPolicy};
+pub use sequence::{Request, RequestResult, SequenceState};
+pub use server::Server;

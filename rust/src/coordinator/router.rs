@@ -1,0 +1,254 @@
+//! Request router over a pool of worker threads, each owning a private
+//! engine (model pair + KV cache + scheduler). Mirrors the vLLM router
+//! architecture: stateless routing in front, stateful workers behind.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::batcher::DynamicBatcher;
+use super::config::{EngineConfig, ServerConfig};
+use super::engine::SpecDecodeEngine;
+use super::kv::PagedKvCache;
+use super::metrics::EngineMetrics;
+use super::scheduler::Scheduler;
+use super::sequence::{Request, RequestResult};
+use crate::model::backend::ModelPair;
+
+/// How the router picks a worker for each request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Cycle through workers — optimal for homogeneous loads.
+    RoundRobin,
+    /// Pick the worker with the fewest outstanding tokens — adapts to
+    /// heterogeneous request lengths.
+    LeastLoaded,
+}
+
+struct WorkerHandle {
+    tx: Sender<Request>,
+    load: Arc<AtomicUsize>,
+    join: JoinHandle<EngineMetrics>,
+}
+
+pub struct Router {
+    workers: Vec<WorkerHandle>,
+    policy: RoutingPolicy,
+    next_rr: usize,
+    pub results_rx: Receiver<RequestResult>,
+}
+
+impl Router {
+    /// Spawn `cfg.workers` workers; `make_pair(worker_idx)` builds each
+    /// worker's model pair (backends are not clonable — PJRT executables
+    /// hold device handles).
+    pub fn start<F>(
+        server_cfg: &ServerConfig,
+        engine_cfg: &EngineConfig,
+        policy: RoutingPolicy,
+        make_pair: F,
+    ) -> Self
+    where
+        F: Fn(usize) -> ModelPair,
+    {
+        server_cfg.validate().expect("server config");
+        engine_cfg.validate().expect("engine config");
+        let (results_tx, results_rx) = mpsc::channel();
+        let mut workers = Vec::with_capacity(server_cfg.workers);
+        for w in 0..server_cfg.workers {
+            let pair = make_pair(w);
+            let (tx, rx) = mpsc::channel::<Request>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let load_w = Arc::clone(&load);
+            let results = results_tx.clone();
+            let ec = engine_cfg.clone();
+            let sc = server_cfg.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("gls-worker-{w}"))
+                .spawn(move || worker_loop(w, rx, results, load_w, ec, sc, pair))
+                .expect("spawn worker");
+            workers.push(WorkerHandle { tx, load, join });
+        }
+        Self { workers, policy, next_rr: 0, results_rx }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Route one request. Returns the worker index chosen.
+    pub fn submit(&mut self, req: Request) -> usize {
+        let idx = match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.workers.len();
+                i
+            }
+            RoutingPolicy::LeastLoaded => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.load.load(Ordering::Relaxed))
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.workers[idx].load.fetch_add(req.max_new_tokens, Ordering::Relaxed);
+        self.workers[idx].tx.send(req).expect("worker alive");
+        idx
+    }
+
+    /// Close intake and join all workers, returning merged metrics.
+    pub fn shutdown(self) -> EngineMetrics {
+        let Router { workers, .. } = self;
+        let mut merged = EngineMetrics::new();
+        // Dropping senders closes intake; workers drain and exit.
+        for w in workers {
+            drop(w.tx);
+            let m = w.join.join().expect("worker panicked");
+            merged.merge(&m);
+        }
+        merged
+    }
+}
+
+fn worker_loop(
+    worker_idx: usize,
+    rx: Receiver<Request>,
+    results: Sender<RequestResult>,
+    load: Arc<AtomicUsize>,
+    engine_cfg: EngineConfig,
+    server_cfg: ServerConfig,
+    pair: ModelPair,
+) -> EngineMetrics {
+    // Per-worker seed offset keeps randomness lanes disjoint across workers
+    // even when clients reuse request ids.
+    let cfg = EngineConfig {
+        seed: engine_cfg.seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(worker_idx as u64 + 1)),
+        ..engine_cfg
+    };
+    let kv = PagedKvCache::new(server_cfg.kv_pages, server_cfg.kv_page_size);
+    let mut engine = SpecDecodeEngine::new(cfg, pair, kv);
+    let mut sched = Scheduler::new(server_cfg.max_running);
+    let batcher = DynamicBatcher::new(server_cfg.max_batch, server_cfg.batch_deadline);
+
+    'outer: loop {
+        // Blocking wait for the next batch when idle.
+        match batcher.next_batch(&rx) {
+            Some(batch) => batch.into_iter().for_each(|r| sched.submit(r)),
+            None => break 'outer, // disconnected and empty
+        }
+        // Serve until drained, topping up opportunistically each tick.
+        while sched.has_work() {
+            for req in batcher.drain_ready(&rx) {
+                sched.submit(req);
+            }
+            for res in sched.tick(&mut engine) {
+                let _ = results.send(res);
+            }
+            // Refresh the router-visible load signal (outstanding tokens).
+            load.store(sched.load(), Ordering::Relaxed);
+        }
+        load.store(0, Ordering::Relaxed);
+    }
+    engine.metrics.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sim::SimLm;
+    use crate::spec::types::VerifierKind;
+    use std::time::Duration;
+
+    fn small_cfgs() -> (ServerConfig, EngineConfig) {
+        let sc = ServerConfig {
+            workers: 2,
+            max_batch: 4,
+            batch_deadline: Duration::from_millis(1),
+            max_running: 8,
+            kv_pages: 512,
+            kv_page_size: 16,
+        };
+        let ec = EngineConfig {
+            verifier: VerifierKind::Gls,
+            num_drafts: 2,
+            block_len: 4,
+            max_seq_len: 128,
+            ..EngineConfig::default()
+        };
+        (sc, ec)
+    }
+
+    fn sim_pair(_w: usize) -> ModelPair {
+        let (draft, target) = SimLm::pair(32, 5, 1.5);
+        ModelPair::new(Box::new(draft), Box::new(target))
+    }
+
+    #[test]
+    fn router_serves_all_requests_round_robin() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let n = 20;
+        for i in 0..n {
+            router.submit(Request::new(i, vec![1, 2], 10));
+        }
+        let mut got = 0;
+        while got < n {
+            let res = router.results_rx.recv().unwrap();
+            assert_eq!(res.tokens.len(), 12);
+            got += 1;
+        }
+        let metrics = router.shutdown();
+        assert_eq!(metrics.completed, n);
+        assert!(metrics.block_efficiency() > 1.0);
+    }
+
+    #[test]
+    fn round_robin_spreads_requests_evenly() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let mut counts = vec![0usize; router.num_workers()];
+        for i in 0..10 {
+            counts[router.submit(Request::new(i, vec![1], 4))] += 1;
+        }
+        assert_eq!(counts, vec![5, 5]);
+        for _ in 0..10 {
+            router.results_rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle_worker() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::LeastLoaded, sim_pair);
+        // One huge request loads worker A; the following small ones should
+        // avoid it initially.
+        let first = router.submit(Request::new(0, vec![1], 100));
+        let mut others = Vec::new();
+        for i in 1..5 {
+            others.push(router.submit(Request::new(i, vec![1], 4)));
+        }
+        assert!(others.iter().any(|&w| w != first));
+        for _ in 0..5 {
+            router.results_rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn shutdown_merges_metrics_across_workers() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        for i in 0..6 {
+            router.submit(Request::new(i, vec![1], 6));
+        }
+        for _ in 0..6 {
+            router.results_rx.recv().unwrap();
+        }
+        let metrics = router.shutdown();
+        assert_eq!(metrics.completed, 6);
+        assert!(metrics.blocks >= 6);
+    }
+}

@@ -1,0 +1,238 @@
+//! Continuous-batching scheduler: one per worker.
+//!
+//! Maintains a queue of admitted-but-waiting sequences and a running set.
+//! Each iteration: (1) admit queued sequences while KV capacity and the
+//! running-set cap allow, (2) run one speculative block for every running
+//! sequence as a single engine batch, (3) retire finished sequences and
+//! emit results. Admission order is FIFO — no starvation: a sequence that
+//! cannot be admitted blocks later arrivals of the queue head position.
+
+use std::collections::VecDeque;
+
+use super::engine::SpecDecodeEngine;
+use super::sequence::{Request, RequestResult, SeqPhase, SequenceState};
+
+pub struct Scheduler {
+    pub max_running: usize,
+    queued: VecDeque<SequenceState>,
+    running: Vec<SequenceState>,
+}
+
+impl Scheduler {
+    pub fn new(max_running: usize) -> Self {
+        assert!(max_running >= 1);
+        Self { max_running, queued: VecDeque::new(), running: Vec::new() }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queued.push_back(SequenceState::from_request(&req));
+    }
+
+    pub fn queued_len(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queued.is_empty() || !self.running.is_empty()
+    }
+
+    /// Total tokens queued+running — the "load" signal the router reads.
+    pub fn load(&self) -> usize {
+        self.queued.iter().map(|s| s.max_new_tokens).sum::<usize>()
+            + self.running.iter().map(|s| s.remaining()).sum::<usize>()
+    }
+
+    /// Admit from the queue head while capacity allows (FIFO, head-of-line
+    /// blocking by design — fairness over packing).
+    fn admit(&mut self, engine: &mut SpecDecodeEngine) {
+        let block = engine.cfg.block_len + 1;
+        while self.running.len() < self.max_running {
+            let Some(head) = self.queued.front() else { break };
+            if head.tokens.len() + head.max_new_tokens + block > engine.cfg.max_seq_len {
+                // Oversized request: reject by finishing immediately empty.
+                let mut seq = self.queued.pop_front().unwrap();
+                seq.phase = SeqPhase::Finished;
+                self.running.push(seq);
+                continue;
+            }
+            // Conservative admission: reserve headroom for the sequence's
+            // full growth (prompt + budget + one in-flight block) so decode
+            // can never dead-lock on KV mid-flight. Real deployments would
+            // preempt instead; FIFO + worst-case admission keeps the engine
+            // invariant (`reserve_block` never fails) simple and auditable.
+            if !engine.kv.can_admit(head.tokens.len() + head.max_new_tokens, block) {
+                break;
+            }
+            let mut seq = self.queued.pop_front().unwrap();
+            engine
+                .kv
+                .register(seq.id, seq.tokens.len(), seq.tokens.len() + seq.max_new_tokens, block)
+                .expect("can_admit checked");
+            seq.phase = SeqPhase::Running;
+            self.running.push(seq);
+        }
+    }
+
+    /// One scheduling iteration. Returns results of sequences that finished
+    /// during this iteration.
+    pub fn tick(&mut self, engine: &mut SpecDecodeEngine) -> Vec<RequestResult> {
+        self.admit(engine);
+        let max_len = engine.cfg.max_seq_len;
+
+        // Run one block for every running (non-finished) sequence.
+        {
+            let mut batch: Vec<&mut SequenceState> = self
+                .running
+                .iter_mut()
+                .filter(|s| s.phase == SeqPhase::Running)
+                .collect();
+            if !batch.is_empty() {
+                engine.step_blocks(&mut batch);
+            }
+        }
+
+        // Retire.
+        let mut results = Vec::new();
+        let mut keep = Vec::with_capacity(self.running.len());
+        for mut seq in self.running.drain(..) {
+            let rejected = seq.phase == SeqPhase::Finished; // oversized
+            if rejected || seq.is_done(max_len) {
+                if !rejected {
+                    engine.kv.release(seq.id).expect("release running seq");
+                }
+                seq.phase = SeqPhase::Finished;
+                engine.metrics.completed += 1;
+                engine.metrics.be.push(seq.block_efficiency());
+                engine
+                    .metrics
+                    .latency
+                    .record(seq.submitted_at.elapsed().as_secs_f64());
+                results.push(seq.into_result());
+            } else {
+                keep.push(seq);
+            }
+        }
+        self.running = keep;
+        results
+    }
+
+    /// Drive to completion (used by tests and offline benches).
+    pub fn run_to_completion(&mut self, engine: &mut SpecDecodeEngine) -> Vec<RequestResult> {
+        let mut all = Vec::new();
+        while self.has_work() {
+            all.extend(self.tick(engine));
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::EngineConfig;
+    use crate::coordinator::kv::PagedKvCache;
+    use crate::model::backend::ModelPair;
+    use crate::model::sim::SimLm;
+    use crate::spec::types::VerifierKind;
+
+    fn engine_with_kv(pages: usize) -> SpecDecodeEngine {
+        let (draft, target) = SimLm::pair(32, 5, 1.5);
+        let cfg = EngineConfig {
+            verifier: VerifierKind::Gls,
+            num_drafts: 2,
+            block_len: 4,
+            max_seq_len: 128,
+            ..EngineConfig::default()
+        };
+        SpecDecodeEngine::new(
+            cfg,
+            ModelPair::new(Box::new(draft), Box::new(target)),
+            PagedKvCache::new(pages, 16),
+        )
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(4);
+        for i in 0..10 {
+            sched.submit(Request::new(i, vec![1, 2, 3], 12));
+        }
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 10);
+        for r in &results {
+            assert_eq!(r.tokens.len() - 3, 12);
+        }
+        assert_eq!(eng.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn respects_max_running() {
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(2);
+        for i in 0..6 {
+            sched.submit(Request::new(i, vec![1], 8));
+        }
+        sched.tick(&mut eng);
+        assert!(sched.running_len() <= 2);
+        assert_eq!(sched.queued_len(), 4);
+        sched.run_to_completion(&mut eng);
+    }
+
+    #[test]
+    fn kv_pressure_defers_admission_without_loss() {
+        // Tiny KV: only ~2 sequences fit at once; everything still finishes.
+        let mut eng = engine_with_kv(8);
+        let mut sched = Scheduler::new(16);
+        for i in 0..6 {
+            sched.submit(Request::new(i, vec![1, 2, 3, 4], 16));
+        }
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 6);
+        assert_eq!(eng.kv.used_pages(), 0);
+        assert!(eng.kv.peak_used() <= 8);
+    }
+
+    #[test]
+    fn oversized_request_rejected_cleanly() {
+        let mut eng = engine_with_kv(64);
+        let mut sched = Scheduler::new(4);
+        sched.submit(Request::new(1, vec![0; 100], 100)); // > max_seq_len 128
+        sched.submit(Request::new(2, vec![1], 8));
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 2);
+        let r1 = results.iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.tokens.len(), 100, "oversized request returns prompt only");
+        let r2 = results.iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(r2.tokens.len(), 9);
+    }
+
+    #[test]
+    fn load_reflects_outstanding_tokens() {
+        let mut sched = Scheduler::new(4);
+        assert_eq!(sched.load(), 0);
+        sched.submit(Request::new(1, vec![0], 25));
+        sched.submit(Request::new(2, vec![0], 10));
+        assert_eq!(sched.load(), 35);
+    }
+
+    #[test]
+    fn fifo_admission_order() {
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(1);
+        sched.submit(Request::new(10, vec![1], 4));
+        sched.submit(Request::new(11, vec![1], 4));
+        let first = loop {
+            let r = sched.tick(&mut eng);
+            if !r.is_empty() {
+                break r;
+            }
+        };
+        assert_eq!(first[0].id, 10, "queue must be FIFO");
+        sched.run_to_completion(&mut eng);
+    }
+}

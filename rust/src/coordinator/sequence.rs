@@ -1,0 +1,155 @@
+//! Request and sequence state tracked by the scheduler/engine.
+
+use std::time::Instant;
+
+/// An inference request as submitted by a client.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Per-request randomness lane; the engine splits the shared root key
+    /// with this so concurrent requests have independent coupling streams.
+    pub rng_lane: u64,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
+        Self { id, prompt, max_new_tokens, rng_lane: id }
+    }
+}
+
+/// Completed request with per-request accounting.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Target-model calls consumed (blocks executed).
+    pub target_calls: usize,
+    /// Draft-model steps consumed (block_len per block).
+    pub draft_steps: usize,
+    /// Tokens produced per target call — the paper's block efficiency.
+    pub block_efficiency: f64,
+    /// Wall-clock latency from submission to completion.
+    pub latency: std::time::Duration,
+}
+
+/// Lifecycle of a sequence inside one worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Waiting for KV admission.
+    Queued,
+    /// Admitted, decoding blocks.
+    Running,
+    /// Hit max_new_tokens or max_seq_len.
+    Finished,
+}
+
+/// Scheduler-side state of an in-flight sequence.
+#[derive(Clone, Debug)]
+pub struct SequenceState {
+    pub id: u64,
+    /// Prompt followed by generated tokens.
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub phase: SeqPhase,
+    pub rng_lane: u64,
+    /// Next shared-randomness slot (absolute decode position).
+    pub next_slot: u64,
+    pub target_calls: usize,
+    pub draft_steps: usize,
+    pub submitted_at: Instant,
+}
+
+impl SequenceState {
+    pub fn from_request(req: &Request) -> Self {
+        Self {
+            id: req.id,
+            tokens: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            max_new_tokens: req.max_new_tokens,
+            phase: SeqPhase::Queued,
+            rng_lane: req.rng_lane,
+            next_slot: 0,
+            target_calls: 0,
+            draft_steps: 0,
+            submitted_at: Instant::now(),
+        }
+    }
+
+    pub fn generated(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.max_new_tokens.saturating_sub(self.generated())
+    }
+
+    pub fn is_done(&self, max_seq_len: usize) -> bool {
+        self.remaining() == 0 || self.tokens.len() >= max_seq_len
+    }
+
+    pub fn block_efficiency(&self) -> f64 {
+        if self.target_calls == 0 {
+            0.0
+        } else {
+            self.generated() as f64 / self.target_calls as f64
+        }
+    }
+
+    pub fn into_result(self) -> RequestResult {
+        let be = self.block_efficiency();
+        RequestResult {
+            id: self.id,
+            tokens: self.tokens,
+            target_calls: self.target_calls,
+            draft_steps: self.draft_steps,
+            block_efficiency: be,
+            latency: self.submitted_at.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_accounting() {
+        let req = Request::new(7, vec![1, 2, 3], 10);
+        let mut seq = SequenceState::from_request(&req);
+        assert_eq!(seq.generated(), 0);
+        assert_eq!(seq.remaining(), 10);
+        assert!(!seq.is_done(100));
+        seq.tokens.extend([4, 5, 6, 7]);
+        seq.target_calls = 1;
+        assert_eq!(seq.generated(), 4);
+        assert_eq!(seq.remaining(), 6);
+        assert!((seq.block_efficiency() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn done_via_max_new_or_max_len() {
+        let req = Request::new(1, vec![0; 8], 4);
+        let mut seq = SequenceState::from_request(&req);
+        seq.tokens.extend([1, 1, 1, 1]);
+        assert!(seq.is_done(1000));
+        let req = Request::new(2, vec![0; 8], 100);
+        let mut seq = SequenceState::from_request(&req);
+        seq.tokens.extend([1, 1]);
+        assert!(seq.is_done(10));
+        assert!(!seq.is_done(64));
+    }
+
+    #[test]
+    fn result_carries_block_efficiency() {
+        let req = Request::new(3, vec![9], 5);
+        let mut seq = SequenceState::from_request(&req);
+        seq.tokens.extend([1, 2, 3, 4, 5]);
+        seq.target_calls = 2;
+        let res = seq.into_result();
+        assert!((res.block_efficiency - 2.5).abs() < 1e-12);
+        assert_eq!(res.tokens.len(), 6);
+    }
+}

@@ -1,0 +1,189 @@
+//! Server facade: the one-stop entrypoint examples and benches use.
+//!
+//! Owns a [`Router`], assigns request ids, runs a workload to completion
+//! and reports serving statistics (token rate, latency percentiles, block
+//! efficiency) — the measurements behind the paper's TR columns.
+
+use std::time::Instant;
+
+use super::config::{EngineConfig, ServerConfig};
+use super::metrics::EngineMetrics;
+use super::router::{Router, RoutingPolicy};
+use super::sequence::{Request, RequestResult};
+use crate::model::backend::ModelPair;
+
+/// Aggregate results of one served workload.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub results: Vec<RequestResult>,
+    pub metrics: EngineMetrics,
+    pub wall: std::time::Duration,
+}
+
+impl ServeReport {
+    /// Generated tokens per second of wall clock — the paper's token rate.
+    pub fn token_rate(&self) -> f64 {
+        let toks: usize = self.results.iter().map(|r| r.target_calls).sum::<usize>();
+        let _ = toks;
+        let generated: u64 = self.metrics.emitted_tokens;
+        generated as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Mean per-request block efficiency (paper BE).
+    pub fn mean_block_efficiency(&self) -> f64 {
+        if self.results.is_empty() {
+            return 0.0;
+        }
+        self.results.iter().map(|r| r.block_efficiency).sum::<f64>() / self.results.len() as f64
+    }
+
+    pub fn p50_latency(&self) -> f64 {
+        self.metrics.latency.quantile(0.5)
+    }
+
+    pub fn p95_latency(&self) -> f64 {
+        self.metrics.latency.quantile(0.95)
+    }
+}
+
+pub struct Server {
+    router: Router,
+    next_id: u64,
+    submitted: usize,
+}
+
+impl Server {
+    pub fn start<F>(
+        server_cfg: &ServerConfig,
+        engine_cfg: &EngineConfig,
+        policy: RoutingPolicy,
+        make_pair: F,
+    ) -> Self
+    where
+        F: Fn(usize) -> ModelPair,
+    {
+        Self { router: Router::start(server_cfg, engine_cfg, policy, make_pair), next_id: 0, submitted: 0 }
+    }
+
+    /// Submit a prompt; returns the assigned request id.
+    pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.submitted += 1;
+        self.router.submit(Request::new(id, prompt, max_new_tokens));
+        id
+    }
+
+    /// Block until all submitted requests complete, then shut down.
+    pub fn finish(self) -> ServeReport {
+        let start = Instant::now();
+        let mut results = Vec::with_capacity(self.submitted);
+        for _ in 0..self.submitted {
+            results.push(self.router.results_rx.recv().expect("worker dropped"));
+        }
+        let wall = start.elapsed();
+        let metrics = self.router.shutdown();
+        results.sort_by_key(|r| r.id);
+        ServeReport { results, metrics, wall }
+    }
+
+    /// Serve a closed-loop workload: submit everything, then wait. Returns
+    /// the report with wall measured across the full span (submission to
+    /// last completion), which is what throughput should be charged for.
+    pub fn serve_all<F>(
+        server_cfg: &ServerConfig,
+        engine_cfg: &EngineConfig,
+        policy: RoutingPolicy,
+        make_pair: F,
+        workload: Vec<(Vec<u32>, usize)>,
+    ) -> ServeReport
+    where
+        F: Fn(usize) -> ModelPair,
+    {
+        let start = Instant::now();
+        let mut server = Self::start(server_cfg, engine_cfg, policy, make_pair);
+        let n = workload.len();
+        for (prompt, max_new) in workload {
+            server.submit(prompt, max_new);
+        }
+        let mut results = Vec::with_capacity(n);
+        for _ in 0..n {
+            results.push(server.router.results_rx.recv().expect("worker dropped"));
+        }
+        let wall = start.elapsed();
+        let metrics = server.router.shutdown();
+        results.sort_by_key(|r| r.id);
+        ServeReport { results, metrics, wall }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::sim::SimLm;
+    use crate::spec::types::VerifierKind;
+    use std::time::Duration;
+
+    fn cfgs() -> (ServerConfig, EngineConfig) {
+        (
+            ServerConfig {
+                workers: 2,
+                max_batch: 4,
+                batch_deadline: Duration::from_millis(1),
+                max_running: 8,
+                kv_pages: 1024,
+                kv_page_size: 16,
+            },
+            EngineConfig {
+                verifier: VerifierKind::Gls,
+                num_drafts: 3,
+                block_len: 4,
+                max_seq_len: 256,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    #[test]
+    fn serve_all_reports_consistent_numbers() {
+        let (sc, ec) = cfgs();
+        let workload: Vec<(Vec<u32>, usize)> = (0..12).map(|i| (vec![i as u32, 1], 16)).collect();
+        let report = Server::serve_all(
+            &sc,
+            &ec,
+            RoutingPolicy::LeastLoaded,
+            |_| {
+                let (d, t) = SimLm::pair(32, 9, 1.5);
+                ModelPair::new(Box::new(d), Box::new(t))
+            },
+            workload,
+        );
+        assert_eq!(report.results.len(), 12);
+        assert_eq!(report.metrics.completed, 12);
+        assert!(report.token_rate() > 0.0);
+        let be = report.mean_block_efficiency();
+        assert!(be > 1.0 && be <= 5.0, "BE {be}");
+        assert!(report.p95_latency() >= report.p50_latency());
+        // Results sorted by id.
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn incremental_submit_then_finish() {
+        let (sc, ec) = cfgs();
+        let mut server = Server::start(&sc, &ec, RoutingPolicy::RoundRobin, |_| {
+            let (d, t) = SimLm::pair(32, 4, 1.0);
+            ModelPair::new(Box::new(d), Box::new(t))
+        });
+        for i in 0..5 {
+            server.submit(vec![i], 8);
+        }
+        let report = server.finish();
+        assert_eq!(report.results.len(), 5);
+        for r in &report.results {
+            assert_eq!(r.tokens.len(), 9);
+        }
+    }
+}

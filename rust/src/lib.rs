@@ -1,0 +1,42 @@
+//! # gls-serve
+//!
+//! A production-style reproduction of *"List-Level Distribution Coupling with
+//! Applications to Speculative Decoding and Lossy Compression"* (Rowan, Phan,
+//! Khisti, 2025) as a three-layer Rust + JAX + Pallas serving stack.
+//!
+//! The paper's contribution — **Gumbel-max List Sampling (GLS)** and its
+//! **List Matching Lemma** — lives in [`spec`]. Two applications are built on
+//! top of it:
+//!
+//! * **Drafter-invariant multi-draft speculative decoding** (paper §4), run by
+//!   the serving framework in [`coordinator`] against AOT-compiled JAX
+//!   transformer artifacts loaded through [`runtime`].
+//! * **Distributed lossy compression with side information at K decoders**
+//!   (paper §5), in [`compression`].
+//!
+//! Layering (Python never on the request path):
+//!
+//! ```text
+//! L3  rust   coordinator/  router, batcher, scheduler, KV cache, engine
+//! L2  jax    python/compile/model.py  transformer fwd (prefill/decode/verify)
+//! L1  pallas python/compile/kernels/  GLS select, attention (interpret=True)
+//!     bridge runtime/  PJRT CPU client over artifacts/*.hlo.txt
+//! ```
+//!
+//! Everything below `runtime` also has a native-Rust mirror ([`model`]) so
+//! the algorithm layer is testable and benchable without artifacts.
+
+pub mod bench;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod lp;
+pub mod model;
+pub mod runtime;
+pub mod spec;
+pub mod stats;
+pub mod testkit;
+pub mod workload;
+
+pub use spec::gls::{sample_gls, sample_gls_bilateral, BilateralOutcome, GlsOutcome};
+pub use spec::types::{Categorical, VerifierKind};

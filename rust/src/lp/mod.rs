@@ -1,0 +1,18 @@
+//! Dense two-phase simplex LP solver.
+//!
+//! Built in-house (no LP crates in the offline vendor set) to compute the
+//! *optimal multi-draft acceptance probability with communication* — the
+//! upper-bound curve of paper Figure 6, which the paper computes "via a
+//! linear programming approach [33]". Solves
+//!
+//! ```text
+//!   maximize    c^T x
+//!   subject to  A x = b,  x ≥ 0
+//! ```
+//!
+//! with Bland's anti-cycling rule. Problem sizes here are small (≤ a few
+//! thousand variables), so a dense tableau is appropriate.
+
+pub mod simplex;
+
+pub use simplex::{solve, LpError, LpSolution};

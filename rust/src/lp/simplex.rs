@@ -1,0 +1,262 @@
+//! Two-phase dense simplex with Bland's rule.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum LpError {
+    #[error("infeasible LP (phase-1 objective {0} > 0)")]
+    Infeasible(f64),
+    #[error("unbounded LP")]
+    Unbounded,
+    #[error("dimension mismatch: {0}")]
+    Dimension(String),
+}
+
+/// Solution of max c^T x s.t. Ax = b, x ≥ 0.
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub objective: f64,
+    pub x: Vec<f64>,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve `max c^T x  s.t.  A x = b, x ≥ 0` (A given row-major as `a[row]`).
+///
+/// `b` entries may be negative; rows are sign-flipped internally so the
+/// phase-1 artificial basis is valid.
+pub fn solve(a: &[Vec<f64>], b: &[f64], c: &[f64]) -> Result<LpSolution, LpError> {
+    let m = a.len();
+    if b.len() != m {
+        return Err(LpError::Dimension(format!("{} rows vs {} rhs", m, b.len())));
+    }
+    let n = c.len();
+    for (i, row) in a.iter().enumerate() {
+        if row.len() != n {
+            return Err(LpError::Dimension(format!("row {i}: {} cols vs {n}", row.len())));
+        }
+    }
+
+    // Tableau: m rows × (n + m artificials + 1 rhs column).
+    let width = n + m + 1;
+    let mut t = vec![vec![0.0; width]; m];
+    for i in 0..m {
+        let flip = if b[i] < 0.0 { -1.0 } else { 1.0 };
+        for j in 0..n {
+            t[i][j] = flip * a[i][j];
+        }
+        t[i][n + i] = 1.0;
+        t[i][width - 1] = flip * b[i];
+    }
+    let mut basis: Vec<usize> = (n..n + m).collect();
+
+    // Phase 1: minimize sum of artificials == maximize -(sum of artificials).
+    // Row0 = -c reduced against the artificial basis: start with +1 on each
+    // artificial column (c = -1 there), then subtract every row once so the
+    // basic (artificial) reduced costs are zero.
+    let mut obj1 = vec![0.0; width];
+    for i in 0..m {
+        obj1[n + i] = 1.0;
+    }
+    for i in 0..m {
+        for j in 0..width {
+            obj1[j] -= t[i][j];
+        }
+    }
+    run_simplex(&mut t, &mut obj1, &mut basis, n + m)?;
+    let phase1 = -obj1[width - 1];
+    if phase1 > 1e-6 {
+        return Err(LpError::Infeasible(phase1));
+    }
+
+    // Drive any artificial still in the basis out (degenerate rows).
+    for i in 0..m {
+        if basis[i] >= n {
+            if let Some(j) = (0..n).find(|&j| t[i][j].abs() > EPS) {
+                pivot(&mut t, &mut obj1, &mut basis, i, j);
+            }
+            // else: zero row, harmless.
+        }
+    }
+
+    // Phase 2: maximize c^T x. Reduced objective row:
+    let mut obj2 = vec![0.0; width];
+    for j in 0..n {
+        obj2[j] = -c[j]; // maximize => row holds -c, we pivot until no negative
+    }
+    // Make the objective row consistent with the current basis.
+    for i in 0..m {
+        let bj = basis[i];
+        if bj < n && obj2[bj].abs() > 0.0 {
+            let factor = obj2[bj];
+            for j in 0..width {
+                obj2[j] -= factor * t[i][j];
+            }
+        }
+    }
+    run_simplex(&mut t, &mut obj2, &mut basis, n)?;
+
+    let mut x = vec![0.0; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i][width - 1];
+        }
+    }
+    let objective: f64 = c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+    Ok(LpSolution { objective, x })
+}
+
+/// Pivot until no improving column (Bland's rule), restricted to the first
+/// `cols` columns (phase 1 allows artificials, phase 2 does not).
+fn run_simplex(
+    t: &mut [Vec<f64>],
+    obj: &mut [f64],
+    basis: &mut [usize],
+    cols: usize,
+) -> Result<(), LpError> {
+    let m = t.len();
+    let width = obj.len();
+    let max_iters = 50_000;
+    for _ in 0..max_iters {
+        // Bland: first column with negative reduced cost.
+        let Some(col) = (0..cols).find(|&j| obj[j] < -EPS) else {
+            return Ok(());
+        };
+        // Ratio test; Bland tie-break on smallest basis index.
+        let mut pivot_row: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            if t[i][col] > EPS {
+                let ratio = t[i][width - 1] / t[i][col];
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && pivot_row.map_or(true, |r| basis[i] < basis[r]))
+                {
+                    best_ratio = ratio;
+                    pivot_row = Some(i);
+                }
+            }
+        }
+        let Some(row) = pivot_row else {
+            return Err(LpError::Unbounded);
+        };
+        pivot(t, obj, basis, row, col);
+    }
+    // Bland's rule guarantees termination; hitting the cap means numerics.
+    Err(LpError::Unbounded)
+}
+
+fn pivot(t: &mut [Vec<f64>], obj: &mut [f64], basis: &mut [usize], row: usize, col: usize) {
+    let width = obj.len();
+    let piv = t[row][col];
+    debug_assert!(piv.abs() > 1e-12);
+    for j in 0..width {
+        t[row][j] /= piv;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > 1e-14 {
+            let f = t[i][col];
+            for j in 0..width {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    if obj[col].abs() > 1e-14 {
+        let f = obj[col];
+        for j in 0..width {
+            obj[j] -= f * t[row][j];
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_textbook_lp() {
+        // max 3x + 2y s.t. x + y + s1 = 4; x + 3y + s2 = 6; x,y,s >= 0.
+        // Optimum: x=4, y=0 → 12.
+        let a = vec![vec![1.0, 1.0, 1.0, 0.0], vec![1.0, 3.0, 0.0, 1.0]];
+        let b = vec![4.0, 6.0];
+        let c = vec![3.0, 2.0, 0.0, 0.0];
+        let sol = solve(&a, &b, &c).unwrap();
+        assert!((sol.objective - 12.0).abs() < 1e-7, "obj {}", sol.objective);
+        assert!((sol.x[0] - 4.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x = 1 and x = 2 simultaneously.
+        let a = vec![vec![1.0], vec![1.0]];
+        let b = vec![1.0, 2.0];
+        let c = vec![0.0];
+        assert!(matches!(solve(&a, &b, &c), Err(LpError::Infeasible(_))));
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // max x s.t. x - y = 0 => x unbounded with y.
+        let a = vec![vec![1.0, -1.0]];
+        let b = vec![0.0];
+        let c = vec![1.0, 0.0];
+        assert!(matches!(solve(&a, &b, &c), Err(LpError::Unbounded)));
+    }
+
+    #[test]
+    fn handles_negative_rhs() {
+        // -x = -3 => x = 3; max x bounded by that equality.
+        let a = vec![vec![-1.0]];
+        let b = vec![-3.0];
+        let c = vec![1.0];
+        let sol = solve(&a, &b, &c).unwrap();
+        assert!((sol.objective - 3.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn degenerate_basis_ok() {
+        // Redundant constraint producing a zero row after phase 1.
+        let a = vec![vec![1.0, 1.0], vec![2.0, 2.0]];
+        let b = vec![1.0, 2.0];
+        let c = vec![1.0, 0.0];
+        let sol = solve(&a, &b, &c).unwrap();
+        assert!((sol.objective - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn maximal_coupling_lp_matches_tv_formula() {
+        // The classic test: optimal coupling acceptance = 1 - d_TV.
+        // Variables π(x, y) ≥ 0 on a 3×3 grid; constraints: row sums = p,
+        // col sums = q; objective: Σ_x π(x, x).
+        let p = [0.5, 0.3, 0.2];
+        let q = [0.2, 0.3, 0.5];
+        let n = 3;
+        let var = |x: usize, y: usize| x * n + y;
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for x in 0..n {
+            let mut row = vec![0.0; n * n];
+            for y in 0..n {
+                row[var(x, y)] = 1.0;
+            }
+            a.push(row);
+            b.push(p[x]);
+        }
+        for y in 0..n {
+            let mut row = vec![0.0; n * n];
+            for x in 0..n {
+                row[var(x, y)] = 1.0;
+            }
+            a.push(row);
+            b.push(q[y]);
+        }
+        let mut c = vec![0.0; n * n];
+        for x in 0..n {
+            c[var(x, x)] = 1.0;
+        }
+        let sol = solve(&a, &b, &c).unwrap();
+        let tv = 0.5 * p.iter().zip(&q).map(|(a, b)| (a - b).abs()).sum::<f64>();
+        assert!((sol.objective - (1.0 - tv)).abs() < 1e-7, "obj {}", sol.objective);
+    }
+}

@@ -1,0 +1,212 @@
+//! `gls-serve` CLI: launcher for the serving stack and the compression
+//! pipelines.
+//!
+//! ```text
+//! gls-serve serve    [--verifier gls] [--k 4] [--l 4] [--workers 2]
+//!                    [--requests 50] [--suite gsm8k-sim] [--pjrt]
+//! gls-serve compress [--source gaussian|image] [--k 2] [--lmax 16]
+//! gls-serve info
+//! ```
+
+use gls_serve::bench::Table;
+use gls_serve::compression::codec::RandomnessMode;
+use gls_serve::compression::gaussian::{run_gaussian, GaussianSource};
+use gls_serve::compression::image::{run_image, synthetic_digits, AnalyticVae};
+use gls_serve::config::Args;
+use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::server::Server;
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::backend::ModelPair;
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::runtime::{Artifacts, PjrtLm};
+use gls_serve::spec::types::VerifierKind;
+use gls_serve::workload::suites::TaskSuite;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "serve" => cmd_serve(&args),
+        "compress" => cmd_compress(&args),
+        "info" => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "gls-serve — List-Level Distribution Coupling (GLS) serving stack\n\n\
+USAGE:\n\
+  gls-serve serve    [--verifier gls|gls-strong|specinfer|spectr|single-draft|daliri]\n\
+                     [--k N] [--l N] [--workers N] [--requests N]\n\
+                     [--suite gsm8k-sim|humaneval-sim|naturalreasoning-sim|mbpp-sim|drop-sim]\n\
+                     [--target-temp T] [--draft-temps a,b] [--pjrt]\n\
+  gls-serve compress [--source gaussian|image] [--k N] [--lmax N] [--trials N] [--baseline]\n\
+  gls-serve info"
+    );
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let verifier = args
+        .get("verifier")
+        .map(|v| VerifierKind::parse(v).expect("unknown verifier"))
+        .unwrap_or(VerifierKind::Gls);
+    let k = args.get_parse("k", 4usize).unwrap();
+    let l = args.get_parse("l", 4usize).unwrap();
+    let workers = args.get_parse("workers", 2usize).unwrap();
+    let requests = args.get_parse("requests", 32usize).unwrap();
+    let suite_name = args.get("suite").unwrap_or("gsm8k-sim");
+    let target_temp = args.get_parse("target-temp", 1.0f64).unwrap();
+    let use_pjrt = args.has_flag("pjrt");
+
+    let suite = TaskSuite::by_name(suite_name).expect("unknown suite");
+    let draft_params: Vec<SamplingParams> = match args.get("draft-temps") {
+        None => vec![SamplingParams::new(1.0, Some(50))],
+        Some(spec) => spec
+            .split(',')
+            .map(|t| SamplingParams::new(t.trim().parse().expect("bad temp"), Some(50)))
+            .collect(),
+    };
+
+    let engine_cfg = EngineConfig {
+        num_drafts: k,
+        block_len: l,
+        verifier,
+        target_params: SamplingParams::new(target_temp, Some(50)),
+        draft_params,
+        max_seq_len: 512,
+        seed: args.get_parse("seed", 0xC0FFEEu64).unwrap(),
+    };
+    let server_cfg = ServerConfig { workers, ..ServerConfig::default() };
+
+    let vocab = if use_pjrt {
+        Artifacts::discover().and_then(|m| m.get_usize("vocab")).unwrap_or(64)
+    } else {
+        64
+    };
+    let max_new = if use_pjrt { 24 } else { suite.max_new_tokens };
+    let prompts = suite.prompts(requests, vocab.min(256), 42);
+    let workload: Vec<(Vec<u32>, usize)> =
+        prompts.into_iter().map(|p| (p, max_new)).collect();
+
+    println!(
+        "serving {requests} requests | suite={} verifier={} K={k} L={l} workers={workers} backend={}",
+        suite.name,
+        verifier.name(),
+        if use_pjrt { "pjrt" } else { "sim" }
+    );
+
+    let report = if use_pjrt {
+        let manifest = Artifacts::discover().expect("run `make artifacts` first");
+        Server::serve_all(
+            &server_cfg,
+            &engine_cfg,
+            RoutingPolicy::LeastLoaded,
+            |_| {
+                let draft = PjrtLm::load(&manifest, "draft_lm").expect("load draft");
+                let target = PjrtLm::load(&manifest, "target_lm").expect("load target");
+                ModelPair::new(Box::new(draft), Box::new(target))
+            },
+            workload,
+        )
+    } else {
+        Server::serve_all(
+            &server_cfg,
+            &engine_cfg,
+            RoutingPolicy::LeastLoaded,
+            |_| suite.model_pair(vocab, 7),
+            workload,
+        )
+    };
+
+    println!("{}", report.metrics.report());
+    println!(
+        "BE={:.3}  tokens/s={:.1}  p50={:.1}ms  p95={:.1}ms",
+        report.mean_block_efficiency(),
+        report.token_rate(),
+        report.p50_latency() * 1e3,
+        report.p95_latency() * 1e3
+    );
+    0
+}
+
+fn cmd_compress(args: &Args) -> i32 {
+    let source = args.get("source").unwrap_or("gaussian");
+    let k = args.get_parse("k", 2usize).unwrap();
+    let l_max = args.get_parse("lmax", 16u64).unwrap();
+    let trials = args.get_parse("trials", 500u64).unwrap();
+    let mode = if args.has_flag("baseline") {
+        RandomnessMode::Shared
+    } else {
+        RandomnessMode::Independent
+    };
+    match source {
+        "gaussian" => {
+            let p = run_gaussian(
+                GaussianSource::paper_default(0.005),
+                k,
+                l_max,
+                1 << 12,
+                trials,
+                7,
+                mode,
+            );
+            println!(
+                "gaussian: K={} L_max={} rate={:.1} bits  match={:.3}  distortion={:.2} dB",
+                p.k,
+                p.l_max,
+                (l_max as f64).log2(),
+                p.match_rate,
+                p.mse_db
+            );
+        }
+        "image" => {
+            let imgs = synthetic_digits(400, 21);
+            let vae = AnalyticVae::fit(&imgs[..250], 4, 0.05, 13);
+            let p = run_image(&vae, &imgs[250..], k, l_max, 256, 3, mode);
+            println!(
+                "image: K={} L_max={}  match={:.3}  MSE={:.4}",
+                p.k, p.l_max, p.match_rate, p.mse
+            );
+        }
+        other => {
+            eprintln!("unknown source '{other}'");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_info() -> i32 {
+    let mut t = Table::new(&["component", "status"]);
+    t.row(&["library".into(), format!("gls-serve {}", env!("CARGO_PKG_VERSION"))]);
+    match gls_serve::config::artifacts_dir() {
+        Some(dir) => {
+            t.row(&["artifacts".into(), dir.display().to_string()]);
+            match Artifacts::discover() {
+                Ok(m) => {
+                    for key in ["vocab", "lm_batch", "lm_max_seq", "vae_latent"] {
+                        if m.has(key) {
+                            t.row(&[key.into(), m.get(key).unwrap().to_string()]);
+                        }
+                    }
+                }
+                Err(e) => t.row(&["manifest".into(), format!("error: {e}")]),
+            }
+        }
+        None => t.row(&["artifacts".into(), "missing (run `make artifacts`)".into()]),
+    }
+    t.print();
+    0
+}

@@ -1,0 +1,47 @@
+//! The backend trait the coordinator drives.
+
+/// A causal language model the engine can query for next-token logits.
+///
+/// Implementations may cache internal state (KV pages) keyed by the
+/// sequence contents; the interface is deliberately *functional* (context
+/// in, logits out) so verification replay and the drafter-invariance audits
+/// can re-run any step.
+pub trait LmBackend: Send {
+    /// Vocabulary size (logit vector length).
+    fn vocab(&self) -> usize;
+
+    /// Next-token logits for each sequence in the batch. `seqs[i]` is the
+    /// full token context of row i; the result has one `[vocab]` row per
+    /// input row.
+    fn next_logits(&mut self, seqs: &[Vec<u32>]) -> Vec<Vec<f32>>;
+
+    /// Logits at positions `start-1 .. seq.len()-1` of each row — i.e. the
+    /// model's predictive distribution for tokens `start ..= seq.len()`,
+    /// one extra position past the end (the verification pass of
+    /// speculative decoding: score L draft positions plus the bonus slot in
+    /// one call). Returns `[rows][seq.len() - start + 1][vocab]`.
+    fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>>;
+
+    /// Human-readable backend identifier for metrics/logs.
+    fn describe(&self) -> String {
+        "lm-backend".to_string()
+    }
+}
+
+/// A draft/target pair, as the engine consumes them. `draft_temps` allows
+/// per-draft-lane temperature (the diverse-drafts experiments, Table 2/4).
+pub struct ModelPair {
+    pub draft: Box<dyn LmBackend>,
+    pub target: Box<dyn LmBackend>,
+}
+
+impl ModelPair {
+    pub fn new(draft: Box<dyn LmBackend>, target: Box<dyn LmBackend>) -> Self {
+        assert_eq!(draft.vocab(), target.vocab(), "draft/target vocab mismatch");
+        Self { draft, target }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.target.vocab()
+    }
+}

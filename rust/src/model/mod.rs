@@ -1,0 +1,22 @@
+//! Model abstractions for the serving engine.
+//!
+//! Two interchangeable backends implement [`LmBackend`]:
+//!
+//! * [`crate::runtime::PjrtLm`] — the production path: AOT-compiled JAX
+//!   transformer artifacts executed through the PJRT CPU client.
+//! * [`sim::SimLm`] — a native-Rust simulated language model with a
+//!   controllable draft/target alignment knob. It mirrors the logits
+//!   interface exactly and is used by unit tests and the algorithm-level
+//!   benches, where thousands of decode steps per second matter.
+
+pub mod backend;
+pub mod sampling;
+pub mod sim;
+pub mod timed;
+pub mod tokenizer;
+
+pub use backend::LmBackend;
+pub use sampling::SamplingParams;
+pub use sim::SimLm;
+pub use timed::TimedLm;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,49 @@
+//! Sampling configuration shared by drafting and verification.
+
+/// Temperature / top-k post-processing applied to raw logits before any
+/// coupling math — matching the paper's LLM experiments (top-k 50, varying
+/// temperatures per drafter, target temperature 1.0 or 2.0).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f64,
+    pub top_k: Option<usize>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_k: Some(50) }
+    }
+}
+
+impl SamplingParams {
+    pub fn new(temperature: f64, top_k: Option<usize>) -> Self {
+        assert!(temperature > 0.0, "temperature must be positive");
+        Self { temperature, top_k }
+    }
+
+    pub fn greedy_ish(temperature: f64) -> Self {
+        Self { temperature, top_k: Some(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::types::Categorical;
+
+    #[test]
+    fn params_apply_through_categorical() {
+        let logits = vec![2.0f32, 1.0, 0.0, -1.0];
+        let sp = SamplingParams::new(0.5, Some(2));
+        let c = Categorical::from_logits(&logits, sp.temperature, sp.top_k);
+        assert_eq!(c.prob(2), 0.0);
+        assert_eq!(c.prob(3), 0.0);
+        assert!(c.prob(0) > c.prob(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_temperature_rejected() {
+        SamplingParams::new(0.0, None);
+    }
+}

@@ -1,0 +1,166 @@
+//! Simulated language models with controllable draft/target alignment.
+//!
+//! `SimLm` produces deterministic pseudo-random logits as a smooth function
+//! of the recent context n-gram. Two instances sharing a `base_seed` but
+//! with different `divergence` produce a draft/target pair whose token
+//! distributions overlap heavily but not perfectly — the regime where
+//! speculative decoding is interesting. The `divergence` knob plays the
+//! role of "0.5B draft vs 7B target" alignment and is calibrated in the
+//! benches so single-draft block efficiency lands in the paper's observed
+//! range (≈3–4.3 with L=4–5).
+
+use crate::stats::rng::SplitMix64;
+
+use super::backend::LmBackend;
+
+/// Deterministic simulated LM.
+///
+/// Logits are `sharpness * u1(ctx, i) + divergence * u2(ctx, i)` where `u1`
+/// derives from the shared `base_seed` (the "true" signal both models see)
+/// and `u2` from the private `model_seed` (this model's idiosyncrasy).
+#[derive(Clone, Debug)]
+pub struct SimLm {
+    vocab: usize,
+    base_seed: u64,
+    model_seed: u64,
+    /// Peakedness of the shared signal; higher = lower-entropy next-token
+    /// distributions (task difficulty knob: "GSM8K-like" vs "DROP-like").
+    sharpness: f32,
+    /// Weight of the private signal; 0 = identical to any sibling model.
+    divergence: f32,
+    /// Context window for the hash (n-gram order).
+    order: usize,
+}
+
+impl SimLm {
+    pub fn new(vocab: usize, base_seed: u64, model_seed: u64, sharpness: f32, divergence: f32) -> Self {
+        assert!(vocab >= 2);
+        Self { vocab, base_seed, model_seed, sharpness, divergence, order: 3 }
+    }
+
+    /// A well-aligned draft/target pair for quick tests.
+    pub fn pair(vocab: usize, seed: u64, divergence: f32) -> (SimLm, SimLm) {
+        let target = SimLm::new(vocab, seed, seed ^ 0x1111, 4.0, 0.0);
+        let draft = SimLm::new(vocab, seed, seed ^ 0x2222, 4.0, divergence);
+        (draft, target)
+    }
+
+    #[inline]
+    fn ctx_hash(&self, seq: &[u32]) -> u64 {
+        let start = seq.len().saturating_sub(self.order);
+        let mut h = self.base_seed;
+        for &t in &seq[start..] {
+            h = SplitMix64::mix(h ^ (t as u64).wrapping_mul(0x100000001B3));
+        }
+        h
+    }
+
+    /// Logits for the next token after `seq`.
+    pub fn logits_at(&self, seq: &[u32]) -> Vec<f32> {
+        let h = self.ctx_hash(seq);
+        let hp = SplitMix64::mix(h ^ self.model_seed);
+        let mut out = Vec::with_capacity(self.vocab);
+        for i in 0..self.vocab {
+            let shared = SplitMix64::mix(h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let private = SplitMix64::mix(hp ^ (i as u64).wrapping_mul(0xC2B2AE3D27D4EB4F));
+            let u1 = (shared >> 40) as f32 / (1u64 << 24) as f32; // [0,1)
+            let u2 = (private >> 40) as f32 / (1u64 << 24) as f32;
+            out.push(self.sharpness * u1 + self.divergence * u2);
+        }
+        out
+    }
+}
+
+impl LmBackend for SimLm {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_logits(&mut self, seqs: &[Vec<u32>]) -> Vec<Vec<f32>> {
+        seqs.iter().map(|s| self.logits_at(s)).collect()
+    }
+
+    fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>> {
+        seqs.iter()
+            .map(|s| {
+                assert!(start >= 1 && start <= s.len() + 1, "start {start} out of range");
+                (start - 1..=s.len().saturating_sub(0))
+                    .filter(|&pos| pos <= s.len())
+                    .map(|pos| self.logits_at(&s[..pos]))
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "sim-lm(vocab={}, sharpness={}, divergence={})",
+            self.vocab, self.sharpness, self.divergence
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::types::Categorical;
+
+    #[test]
+    fn logits_deterministic_and_context_sensitive() {
+        let lm = SimLm::new(32, 1, 2, 4.0, 0.0);
+        assert_eq!(lm.logits_at(&[1, 2, 3]), lm.logits_at(&[1, 2, 3]));
+        assert_ne!(lm.logits_at(&[1, 2, 3]), lm.logits_at(&[1, 2, 4]));
+        // Order-3 hash: tokens further back than 3 positions don't matter.
+        assert_eq!(lm.logits_at(&[9, 1, 2, 3]), lm.logits_at(&[7, 1, 2, 3]));
+    }
+
+    #[test]
+    fn zero_divergence_pair_is_identical() {
+        let (mut draft, mut target) = SimLm::pair(16, 5, 0.0);
+        let ctx = vec![3u32, 1, 4];
+        assert_eq!(draft.next_logits(&[ctx.clone()]), target.next_logits(&[ctx]));
+    }
+
+    #[test]
+    fn divergence_controls_tv_distance() {
+        let ctxs: Vec<Vec<u32>> = (0..20).map(|i| vec![i, i + 1, i + 2]).collect();
+        let tv_at = |div: f32| {
+            let (draft, target) = SimLm::pair(64, 5, div);
+            let mut total = 0.0;
+            for ctx in &ctxs {
+                let p = Categorical::from_logits(&draft.logits_at(ctx), 1.0, None);
+                let q = Categorical::from_logits(&target.logits_at(ctx), 1.0, None);
+                total += p.tv_distance(&q);
+            }
+            total / ctxs.len() as f64
+        };
+        let low = tv_at(0.5);
+        let high = tv_at(4.0);
+        assert!(low < high, "tv(0.5)={low} vs tv(4.0)={high}");
+        assert!(low > 0.0);
+    }
+
+    #[test]
+    fn span_logits_matches_repeated_next_logits() {
+        let mut lm = SimLm::new(16, 3, 4, 4.0, 1.0);
+        let seq = vec![1u32, 2, 3, 4, 5];
+        let span = lm.span_logits(&[seq.clone()], 3);
+        // Positions: predictive dist for tokens 3, 4, 5, and one past end.
+        assert_eq!(span[0].len(), seq.len() - 3 + 2);
+        assert_eq!(span[0][0], lm.logits_at(&seq[..2]));
+        assert_eq!(span[0][1], lm.logits_at(&seq[..3]));
+        assert_eq!(span[0].last().unwrap(), &lm.logits_at(&seq));
+    }
+
+    #[test]
+    fn sharpness_lowers_entropy() {
+        let flat = SimLm::new(64, 9, 9, 0.5, 0.0);
+        let sharp = SimLm::new(64, 9, 9, 8.0, 0.0);
+        let ctx = vec![1u32, 2];
+        let ent = |lm: &SimLm| {
+            let c = Categorical::from_logits(&lm.logits_at(&ctx), 1.0, None);
+            -c.probs().iter().filter(|&&p| p > 0.0).map(|&p| p * p.ln()).sum::<f64>()
+        };
+        assert!(ent(&sharp) < ent(&flat));
+    }
+}

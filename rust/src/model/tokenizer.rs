@@ -1,0 +1,72 @@
+//! Byte-level tokenizer.
+//!
+//! The build-time corpus and the serving path share this trivial,
+//! dependency-free scheme: token = byte value, plus BOS/EOS/PAD specials
+//! above 255. The JAX training script (`python/compile/train.py`) uses the
+//! identical mapping, so artifacts and the Rust coordinator agree on ids.
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const PAD: u32 = 258;
+/// Total vocabulary (bytes + specials, rounded up for the model head).
+pub const VOCAB: usize = 259;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn vocab(&self) -> usize {
+        VOCAB
+    }
+
+    /// Encode text with a leading BOS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode tokens, skipping specials; invalid UTF-8 is replaced.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let toks = t.encode("hello, GLS!");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(t.decode(&toks), "hello, GLS!");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo ∑";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[BOS, b'a' as u32, EOS, PAD, b'b' as u32]), "ab");
+    }
+
+    #[test]
+    fn vocab_covers_all_tokens() {
+        let t = ByteTokenizer::new();
+        let toks = t.encode("xyz");
+        assert!(toks.iter().all(|&tok| (tok as usize) < t.vocab()));
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `artifacts/manifest.txt` is `key = value` lines describing
+//! every exported HLO module and its shapes.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    entries: HashMap<String, String>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("manifest line {}: expected key = value", lineno + 1);
+            };
+            entries.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.entries
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("manifest missing key '{key}'"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("manifest key '{key}' not a usize"))
+    }
+
+    pub fn path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.get(key)?))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+}
+
+/// Convenience: locate and load the manifest via [`crate::config`].
+pub struct Artifacts;
+
+impl Artifacts {
+    pub fn discover() -> Result<ArtifactManifest> {
+        let dir = crate::config::artifacts_dir()
+            .context("artifacts/ not found — run `make artifacts` first")?;
+        ArtifactManifest::load(&dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gls-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "# comment\nvocab = 259\ntarget_lm = target.hlo.txt\n",
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.get_usize("vocab").unwrap(), 259);
+        assert!(m.path("target_lm").unwrap().ends_with("target.hlo.txt"));
+        assert!(m.has("vocab"));
+        assert!(!m.has("nope"));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("gls-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "novalue\n").unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

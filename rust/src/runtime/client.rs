@@ -1,0 +1,61 @@
+//! PJRT client construction and HLO compilation helpers.
+//!
+//! Thread-safety note: the `xla` crate wraps its client in an `Rc`, making
+//! handles `!Send` even though the underlying `xla::PjRtClient` (C++) is
+//! thread-safe. Our backends therefore each own a *private* client plus the
+//! executables compiled on it; the whole bundle moves to a worker thread
+//! once and is never shared, so the Rc refcounts are single-threaded. The
+//! backends assert this by wrapping the bundle in [`SendBundle`].
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Create a fresh PJRT CPU client (one per backend instance).
+pub fn new_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Load one HLO-text artifact and compile it on `client`.
+pub fn compile_hlo_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Execute and unpack the result tuple (`aot.py` lowers with
+/// `return_tuple=True`, so outputs are always a tuple literal).
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs).context("pjrt execute")?;
+    let lit = result[0][0].to_literal_sync().context("fetch result")?;
+    lit.to_tuple().context("untuple result")
+}
+
+/// Marker wrapper asserting single-threaded ownership of `!Send` PJRT
+/// handles. Safety contract: the wrapped value (client + executables whose
+/// internal `Rc`s all point into that client) is moved between threads as
+/// one unit and never aliased across threads.
+pub struct SendBundle<T>(pub T);
+
+// SAFETY: see type-level docs — exclusive ownership, the C++ objects behind
+// the Rc are thread-safe, and the Rc itself is never cloned across threads.
+unsafe impl<T> Send for SendBundle<T> {}
+
+impl<T> std::ops::Deref for SendBundle<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> std::ops::DerefMut for SendBundle<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}

@@ -1,0 +1,149 @@
+//! PJRT-backed language model: executes the AOT-compiled JAX transformer
+//! (with its Pallas attention kernel lowered inside) as an [`LmBackend`].
+//!
+//! Artifact signature (see python/compile/aot.py):
+//!
+//! ```text
+//! lm_logits: tokens i32[B, S]  ->  (logits f32[B, S, V],)
+//! ```
+//!
+//! The module is a full-context forward at fixed (B, S); rows are padded
+//! with PAD and batches chunked to B. A full forward per call (rather than
+//! device-resident KV) is deliberate on this backend: xla_extension 0.5.1
+//! round-trips every buffer host↔device per execute, so at our model sizes
+//! recompute is faster than shipping the KV cache both ways (DESIGN.md
+//! §Perf). The *logical* KV accounting still runs in the coordinator.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::backend::LmBackend;
+use crate::model::tokenizer::PAD;
+
+use super::artifacts::ArtifactManifest;
+use super::client::{compile_hlo_file, execute_tuple, new_client, SendBundle};
+
+struct Inner {
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+pub struct PjrtLm {
+    inner: SendBundle<Inner>,
+    batch: usize,
+    max_seq: usize,
+    vocab: usize,
+    name: String,
+}
+
+impl PjrtLm {
+    /// Load the `which` LM from the manifest (`"draft_lm"` / `"target_lm"`).
+    pub fn load(manifest: &ArtifactManifest, which: &str) -> Result<Self> {
+        let client = new_client()?;
+        let path = manifest.path(which)?;
+        let exe = compile_hlo_file(&client, &path)?;
+        Ok(Self {
+            inner: SendBundle(Inner { _client: client, exe }),
+            batch: manifest.get_usize("lm_batch")?,
+            max_seq: manifest.get_usize("lm_max_seq")?,
+            vocab: manifest.get_usize("vocab")?,
+            name: which.to_string(),
+        })
+    }
+
+    pub fn load_from_file(path: &Path, batch: usize, max_seq: usize, vocab: usize) -> Result<Self> {
+        let client = new_client()?;
+        let exe = compile_hlo_file(&client, path)?;
+        Ok(Self {
+            inner: SendBundle(Inner { _client: client, exe }),
+            batch,
+            max_seq,
+            vocab,
+            name: path.display().to_string(),
+        })
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Run the fixed-shape forward on up to `batch` rows; returns
+    /// `[rows][S][V]` logits (padded positions included — callers slice).
+    fn forward_chunk(&mut self, rows: &[Vec<u32>]) -> Result<Vec<Vec<Vec<f32>>>> {
+        assert!(rows.len() <= self.batch);
+        let (b, s, v) = (self.batch, self.max_seq, self.vocab);
+        let mut tokens = vec![PAD as i32; b * s];
+        for (r, row) in rows.iter().enumerate() {
+            assert!(
+                row.len() <= s,
+                "sequence length {} exceeds compiled max_seq {s}",
+                row.len()
+            );
+            for (i, &t) in row.iter().enumerate() {
+                tokens[r * s + i] = t as i32;
+            }
+        }
+        let lit = xla::Literal::vec1(&tokens)
+            .reshape(&[b as i64, s as i64])
+            .context("reshape tokens")?;
+        let outs = execute_tuple(&self.inner.exe, &[lit])?;
+        let logits: Vec<f32> = outs[0].to_vec().context("logits to_vec")?;
+        anyhow::ensure!(logits.len() == b * s * v, "unexpected logits size {}", logits.len());
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| {
+                (0..s)
+                    .map(|pos| {
+                        let base = r * s * v + pos * v;
+                        logits[base..base + v].to_vec()
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    fn forward(&mut self, rows: &[Vec<u32>]) -> Vec<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch) {
+            out.extend(self.forward_chunk(chunk).expect("pjrt lm forward"));
+        }
+        out
+    }
+}
+
+impl LmBackend for PjrtLm {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn next_logits(&mut self, seqs: &[Vec<u32>]) -> Vec<Vec<f32>> {
+        let all = self.forward(seqs);
+        seqs.iter()
+            .zip(all)
+            .map(|(seq, mut per_pos)| per_pos.swap_remove(seq.len() - 1))
+            .collect()
+    }
+
+    fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>> {
+        let all = self.forward(seqs);
+        seqs.iter()
+            .zip(all)
+            .map(|(seq, per_pos)| {
+                // Predictive distribution for prefix length P lives at
+                // logits index P-1; the span covers prefix lengths
+                // start-1 ..= len, i.e. indices start-2 ..= len-1. start ≥ 2
+                // always holds here (prompts begin with BOS).
+                assert!(start >= 2 && start <= seq.len() + 1, "start {start} out of range");
+                (start - 2..=seq.len() - 1)
+                    .map(|idx| per_pos[idx].clone())
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt-lm({}, B={}, S={}, V={})", self.name, self.batch, self.max_seq, self.vocab)
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Python never runs at serve time: `make artifacts` lowers the JAX
+//! transformer (L2) with its Pallas kernels (L1) to HLO **text** once;
+//! everything here is `HloModuleProto::from_text_file` → `client.compile`
+//! → `execute` through the `xla` crate's PJRT CPU client.
+//!
+//! HLO text (not serialized protos) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod client;
+pub mod lm;
+pub mod vae;
+
+pub use artifacts::{ArtifactManifest, Artifacts};
+pub use client::{compile_hlo_file, execute_tuple, new_client};
+pub use lm::PjrtLm;
+pub use vae::PjrtVae;

@@ -1,0 +1,115 @@
+//! PJRT-backed β-VAE latent codec: the compression application's L2/L1
+//! stack (paper App. D.3), AOT-compiled by python/compile/aot.py.
+//!
+//! Artifact signatures (all batch-1, f32):
+//!
+//! ```text
+//! vae_encode   : source [1, 392]            -> (mu [1,4], logvar [1,4])
+//! vae_project  : side   [1, 49]             -> (feat [1, F],)
+//! vae_estimate : w [1, 4], feat [1, F]      -> (logit [1],)
+//! vae_decode   : w [1, 4], feat [1, F]      -> (recon [1, 392],)
+//! ```
+//!
+//! The estimator outputs the pre-sigmoid logit of the joint-vs-marginal
+//! classifier; by the density-ratio trick that logit *is*
+//! `log p_{W|T}(w|t) − log p_W(w)`, exactly what the codec's decoder
+//! weights need.
+
+use anyhow::{Context, Result};
+
+use crate::compression::image::LatentCodecModel;
+
+use super::artifacts::ArtifactManifest;
+use super::client::{compile_hlo_file, execute_tuple, new_client, SendBundle};
+
+struct Inner {
+    _client: xla::PjRtClient,
+    encode: xla::PjRtLoadedExecutable,
+    project: xla::PjRtLoadedExecutable,
+    estimate: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+}
+
+pub struct PjrtVae {
+    inner: SendBundle<Inner>,
+    latent: usize,
+    feat_dim: usize,
+    src_pixels: usize,
+    side_pixels: usize,
+}
+
+impl PjrtVae {
+    pub fn load(manifest: &ArtifactManifest) -> Result<Self> {
+        let client = new_client()?;
+        let compile = |key: &str| -> Result<xla::PjRtLoadedExecutable> {
+            compile_hlo_file(&client, &manifest.path(key)?)
+        };
+        Ok(Self {
+            inner: SendBundle(Inner {
+                encode: compile("vae_encode")?,
+                project: compile("vae_project")?,
+                estimate: compile("vae_estimate")?,
+                decode: compile("vae_decode")?,
+                _client: client,
+            }),
+            latent: manifest.get_usize("vae_latent")?,
+            feat_dim: manifest.get_usize("vae_feat_dim")?,
+            src_pixels: manifest.get_usize("vae_src_pixels")?,
+            side_pixels: manifest.get_usize("vae_side_pixels")?,
+        })
+    }
+
+    fn lit_2d(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        anyhow::ensure!(data.len() == rows * cols, "literal shape mismatch");
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .context("reshape literal")
+    }
+}
+
+impl LatentCodecModel for PjrtVae {
+    fn latent_dim(&self) -> usize {
+        self.latent
+    }
+
+    fn encode(&self, source: &[f32]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(source.len(), self.src_pixels);
+        let lit = Self::lit_2d(source, 1, self.src_pixels).unwrap();
+        let outs = execute_tuple(&self.inner.encode, &[lit]).expect("vae_encode");
+        let mu: Vec<f32> = outs[0].to_vec().expect("mu");
+        let logvar: Vec<f32> = outs[1].to_vec().expect("logvar");
+        (
+            mu.iter().map(|&x| x as f64).collect(),
+            logvar.iter().map(|&x| (x as f64).exp().max(1e-6)).collect(),
+        )
+    }
+
+    fn project(&self, side: &[f32]) -> Vec<f64> {
+        assert_eq!(side.len(), self.side_pixels);
+        let lit = Self::lit_2d(side, 1, self.side_pixels).unwrap();
+        let outs = execute_tuple(&self.inner.project, &[lit]).expect("vae_project");
+        let feat: Vec<f32> = outs[0].to_vec().expect("feat");
+        feat.iter().map(|&x| x as f64).collect()
+    }
+
+    fn estimate_logratio(&self, w: &[f64], side_feat: &[f64]) -> f64 {
+        assert_eq!(w.len(), self.latent);
+        assert_eq!(side_feat.len(), self.feat_dim);
+        let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        let ff: Vec<f32> = side_feat.iter().map(|&x| x as f32).collect();
+        let wl = Self::lit_2d(&wf, 1, self.latent).unwrap();
+        let fl = Self::lit_2d(&ff, 1, self.feat_dim).unwrap();
+        let outs = execute_tuple(&self.inner.estimate, &[wl, fl]).expect("vae_estimate");
+        let logit: Vec<f32> = outs[0].to_vec().expect("logit");
+        logit[0] as f64
+    }
+
+    fn decode(&self, w: &[f64], side_feat: &[f64]) -> Vec<f32> {
+        let wf: Vec<f32> = w.iter().map(|&x| x as f32).collect();
+        let ff: Vec<f32> = side_feat.iter().map(|&x| x as f32).collect();
+        let wl = Self::lit_2d(&wf, 1, self.latent).unwrap();
+        let fl = Self::lit_2d(&ff, 1, self.feat_dim).unwrap();
+        let outs = execute_tuple(&self.inner.decode, &[wl, fl]).expect("vae_decode");
+        outs[0].to_vec().expect("recon")
+    }
+}

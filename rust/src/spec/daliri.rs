@@ -1,0 +1,157 @@
+//! Daliri et al. (2025) single-draft drafter-invariant coupling: both sides
+//! run the Gumbel-max race on the *same* shared exponentials; the drafter
+//! proposes `X = argmin S_i/p_i`, the verifier computes `Y = argmin S_i/q_i`
+//! and the step is accepted iff X = Y. The output is always Y, which is a
+//! function of (q, randomness) only — hence strong drafter invariance —
+//! and achieves `Pr[X=Y] ≥ (1 − d_TV)/(1 + d_TV)`.
+//!
+//! This is the K = 1 special case of GLS and the scheme the paper's tables
+//! report as "Daliri et al. [9]".
+
+use crate::stats::rng::CounterRng;
+
+use super::gls::sample_gls;
+use super::types::{
+    BlockInput, BlockOutput, BlockVerifier, Invariance, VerifierKind,
+};
+
+#[derive(Clone, Debug, Default)]
+pub struct DaliriVerifier;
+
+impl DaliriVerifier {
+    pub fn new() -> Self {
+        Self
+    }
+}
+
+impl BlockVerifier for DaliriVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::Daliri
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::Strong
+    }
+
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        debug_assert!(input.validate().is_ok());
+        let l = input.block_len();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+        for j in 0..l {
+            // Re-run the coupled race; the drafter used the same randomness
+            // to produce its token, so X here equals the draft token
+            // whenever the engine drafted with the same (rng, slot) — an
+            // invariant the integration tests assert.
+            let out = sample_gls(
+                &input.draft_dists[0][j],
+                &input.target_dists[0][j],
+                1,
+                rng,
+                slot0 + j as u64,
+            );
+            tokens.push(out.y as u32);
+            if out.y as u32 != input.draft_tokens[0][j] {
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+        // Bonus token: coupled race on the target at the final position.
+        let q = &input.target_dists[0][l];
+        tokens.push(q.sample_race(rng, slot0 + l as u64, 0) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::lml::daliri_bound;
+    use crate::spec::types::Categorical;
+    use crate::testkit;
+    use crate::stats::rng::XorShift128;
+
+    #[test]
+    fn acceptance_meets_daliri_bound() {
+        let mut gen = XorShift128::new(4);
+        for _ in 0..8 {
+            let p = testkit::gen_categorical(&mut gen, 6);
+            let q = testkit::gen_categorical(&mut gen, 6);
+            let rng = CounterRng::new(3);
+            let trials = 30_000;
+            let mut hits = 0;
+            for t in 0..trials {
+                if crate::spec::gls::sample_gls(&p, &q, 1, &rng, t as u64).accept {
+                    hits += 1;
+                }
+            }
+            let emp = hits as f64 / trials as f64;
+            let bound = daliri_bound(&p, &q);
+            assert!(emp + 0.015 >= bound, "emp {emp} < bound {bound}");
+        }
+    }
+
+    #[test]
+    fn block_verification_consistent_with_coupled_drafting() {
+        // When the drafter actually drafts with the same shared randomness,
+        // every emitted token equals the draft token until the first miss.
+        let mut gen = XorShift128::new(14);
+        for case in 0..20u64 {
+            let n = 5;
+            let l = 4;
+            let p: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let rng = CounterRng::new(900 + case);
+            // Draft with the same (rng, slot) the verifier will use.
+            let draft_tokens: Vec<u32> =
+                (0..l).map(|j| p[j].sample_race(&rng, j as u64, 0) as u32).collect();
+            let input = BlockInput {
+                draft_tokens: vec![draft_tokens.clone()],
+                draft_dists: vec![p.clone()],
+                target_dists: vec![q.clone()],
+            };
+            let out = DaliriVerifier::new().verify_block(&input, &rng, 0);
+            for j in 0..out.accepted {
+                assert_eq!(out.tokens[j], draft_tokens[j]);
+            }
+            assert_eq!(out.tokens.len(), out.accepted + 1);
+        }
+    }
+
+    #[test]
+    fn output_is_drafter_invariant() {
+        // Y depends only on target dists + randomness: replacing the draft
+        // distributions must not change emitted tokens (only acceptance
+        // counts may change through the tokens, which we hold fixed).
+        let mut gen = XorShift128::new(25);
+        let n = 5;
+        let l = 3;
+        let p: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+        let p2: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+        let q: Vec<Categorical> = (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+        let rng = CounterRng::new(62);
+        let draft_tokens: Vec<u32> =
+            (0..l).map(|j| p[j].sample_race(&rng, j as u64, 0) as u32).collect();
+        let a = DaliriVerifier::new().verify_block(
+            &BlockInput {
+                draft_tokens: vec![draft_tokens.clone()],
+                draft_dists: vec![p],
+                target_dists: vec![q.clone()],
+            },
+            &rng,
+            0,
+        );
+        let b = DaliriVerifier::new().verify_block(
+            &BlockInput {
+                draft_tokens: vec![draft_tokens],
+                draft_dists: vec![p2],
+                target_dists: vec![q],
+            },
+            &rng,
+            0,
+        );
+        let m = a.tokens.len().min(b.tokens.len());
+        assert_eq!(&a.tokens[..m], &b.tokens[..m]);
+    }
+}

@@ -1,0 +1,39 @@
+//! The paper's contribution: Gumbel-max List Sampling (§3) and multi-draft
+//! speculative decoding verification schemes (§4).
+//!
+//! * [`types`] — categorical distributions, verification interfaces.
+//! * [`gls`] — Algorithm 1 (`sample_gls`) and Algorithm 2 (the
+//!   conditionally drafter-invariant block verifier), plus the strongly
+//!   invariant variant of Appendix B (Prop. 6).
+//! * [`lml`] — Theorem 1 / Proposition 2 bound evaluators.
+//! * [`specinfer`] — SpecInfer recursive multi-round rejection (Miao et al.).
+//! * [`spectr`] — SpecTr k-sequential-selection verification (Sun et al.).
+//! * [`single_draft`] — classic single-draft rejection sampling
+//!   (Leviathan et al. / Chen et al.), the TR = 0% reference line.
+//! * [`daliri`] — single-draft Gumbel-max coupling (Daliri et al.).
+//! * [`optimal`] — optimal-with-communication acceptance: closed-form upper
+//!   bound and exact LP (via [`crate::lp`]) for small instances.
+
+pub mod daliri;
+pub mod gls;
+pub mod lml;
+pub mod optimal;
+pub mod single_draft;
+pub mod spectr;
+pub mod specinfer;
+pub mod types;
+
+pub use types::{BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind};
+
+/// Construct a verifier by kind. `k` is the number of drafts the engine will
+/// run; single-draft kinds ignore all but the first draft.
+pub fn make_verifier(kind: VerifierKind) -> Box<dyn BlockVerifier + Send + Sync> {
+    match kind {
+        VerifierKind::Gls => Box::new(gls::GlsVerifier::conditional()),
+        VerifierKind::GlsStrong => Box::new(gls::GlsVerifier::strong()),
+        VerifierKind::SpecInfer => Box::new(specinfer::SpecInferVerifier::new()),
+        VerifierKind::SpecTr => Box::new(spectr::SpecTrVerifier::new()),
+        VerifierKind::SingleDraft => Box::new(single_draft::SingleDraftVerifier::new()),
+        VerifierKind::Daliri => Box::new(daliri::DaliriVerifier::new()),
+    }
+}

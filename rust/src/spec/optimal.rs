@@ -1,0 +1,175 @@
+//! Optimal multi-draft acceptance **with communication** — the upper-bound
+//! reference curve of paper Figure 6.
+//!
+//! Two evaluators:
+//!
+//! * [`upper_bound`] — the closed form `Σ_y min(q_y, 1 − (1 − p_y)^K)`:
+//!   no coupling can match more than the overlap between q and the law of
+//!   "y appears among K i.i.d. draws from p".
+//! * [`lp_optimal`] — the exact optimum over all couplings of `Y ~ q` with
+//!   `(X^{(1)}, …, X^{(K)}) ~ p^{⊗K}`, solved as an LP over the joint
+//!   distribution (variables π(y, x_1..x_K); N^(K+1) of them — use only for
+//!   small instances). The paper computes this the same way, citing the
+//!   SpecTr LP approach.
+
+use crate::lp;
+
+use super::types::Categorical;
+
+/// `Σ_y min(q_y, 1 − (1 − p_y)^K)` — the communication upper bound.
+pub fn upper_bound(p: &Categorical, q: &Categorical, k: usize) -> f64 {
+    assert_eq!(p.len(), q.len());
+    assert!(k >= 1);
+    p.probs()
+        .iter()
+        .zip(q.probs())
+        .map(|(&pi, &qi)| qi.min(1.0 - (1.0 - pi).powi(k as i32)))
+        .sum()
+}
+
+/// Exact optimal acceptance over all valid couplings, via LP.
+///
+/// Marginal constraints: `Σ_y π(y, x⃗) = Π_k p(x_k)` for every tuple x⃗, and
+/// `Σ_x⃗ π(y, x⃗) = q(y)` for every y. Objective: mass where `y ∈ x⃗`.
+/// Cost grows as N^(K+1); intended for N·K small (tests and the K ≤ 3
+/// points of Figure 6's cross-check).
+pub fn lp_optimal(p: &Categorical, q: &Categorical, k: usize) -> anyhow::Result<f64> {
+    assert_eq!(p.len(), q.len());
+    assert!(k >= 1);
+    let n = p.len();
+    let tuples = n.pow(k as u32);
+    let vars = n * tuples;
+    anyhow::ensure!(vars <= 200_000, "LP too large: {vars} variables");
+
+    // Decode tuple index into component symbols.
+    let decode = |mut t: usize| -> Vec<usize> {
+        let mut xs = vec![0usize; k];
+        for x in xs.iter_mut() {
+            *x = t % n;
+            t /= n;
+        }
+        xs
+    };
+    let var = |y: usize, t: usize| y * tuples + t;
+
+    let mut a: Vec<Vec<f64>> = Vec::with_capacity(tuples + n);
+    let mut b: Vec<f64> = Vec::with_capacity(tuples + n);
+
+    // Tuple marginals (X i.i.d. from p).
+    for t in 0..tuples {
+        let mut row = vec![0.0; vars];
+        for y in 0..n {
+            row[var(y, t)] = 1.0;
+        }
+        a.push(row);
+        let prob: f64 = decode(t).iter().map(|&x| p.prob(x)).product();
+        b.push(prob);
+    }
+    // Y marginal.
+    for y in 0..n {
+        let mut row = vec![0.0; vars];
+        for t in 0..tuples {
+            row[var(y, t)] = 1.0;
+        }
+        a.push(row);
+        b.push(q.prob(y));
+    }
+
+    let mut c = vec![0.0; vars];
+    for t in 0..tuples {
+        let xs = decode(t);
+        for y in 0..n {
+            if xs.contains(&y) {
+                c[var(y, t)] = 1.0;
+            }
+        }
+    }
+
+    let sol = lp::solve(&a, &b, &c)?;
+    Ok(sol.objective.clamp(0.0, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::lml;
+    use crate::testkit;
+    use crate::stats::rng::XorShift128;
+
+    #[test]
+    fn upper_bound_k1_is_one_minus_tv() {
+        let p = Categorical::new(vec![0.6, 0.3, 0.1]);
+        let q = Categorical::new(vec![0.2, 0.3, 0.5]);
+        let ub = upper_bound(&p, &q, 1);
+        assert!((ub - (1.0 - p.tv_distance(&q))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upper_bound_monotone_in_k_and_at_most_one() {
+        let p = Categorical::new(vec![0.25; 4]);
+        let q = Categorical::new(vec![0.7, 0.1, 0.1, 0.1]);
+        let mut last = 0.0;
+        for k in 1..=30 {
+            let ub = upper_bound(&p, &q, k);
+            assert!(ub >= last - 1e-12 && ub <= 1.0 + 1e-12);
+            last = ub;
+        }
+        assert!(last > 0.999, "should approach 1: {last}");
+    }
+
+    #[test]
+    fn lp_matches_tv_coupling_for_k1() {
+        let mut gen = XorShift128::new(5);
+        for _ in 0..5 {
+            let p = testkit::gen_categorical(&mut gen, 4);
+            let q = testkit::gen_categorical(&mut gen, 4);
+            let opt = lp_optimal(&p, &q, 1).unwrap();
+            let expect = 1.0 - p.tv_distance(&q);
+            assert!((opt - expect).abs() < 1e-6, "{opt} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn lp_between_lml_bound_and_upper_bound() {
+        let mut gen = XorShift128::new(6);
+        for _ in 0..4 {
+            let p = testkit::gen_categorical(&mut gen, 4);
+            let q = testkit::gen_categorical(&mut gen, 4);
+            for &k in &[1usize, 2] {
+                let lower = lml::theorem1_bound(&p, &q, k);
+                let opt = lp_optimal(&p, &q, k).unwrap();
+                let ub = upper_bound(&p, &q, k);
+                assert!(
+                    lower <= opt + 1e-6 && opt <= ub + 1e-6,
+                    "K={k}: lml {lower}, lp {opt}, ub {ub}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lp_upper_bound_is_close_for_k2() {
+        // The closed form is an upper bound on the LP optimum; on small
+        // random instances the gap stays modest (~0.1), which is why
+        // Figure 6 plots the closed form where the LP is intractable —
+        // labelled as an upper bound, exactly like the paper's "optimal
+        // with communication" reference curve.
+        let mut gen = XorShift128::new(7);
+        let mut max_gap = 0.0f64;
+        for _ in 0..5 {
+            let p = testkit::gen_categorical(&mut gen, 3);
+            let q = testkit::gen_categorical(&mut gen, 3);
+            let opt = lp_optimal(&p, &q, 2).unwrap();
+            let ub = upper_bound(&p, &q, 2);
+            assert!(ub >= opt - 1e-6, "closed form must upper-bound the LP");
+            max_gap = max_gap.max(ub - opt);
+        }
+        assert!(max_gap < 0.15, "gap {max_gap} too large");
+    }
+
+    #[test]
+    fn lp_rejects_oversized_instances() {
+        let p = Categorical::uniform(10);
+        assert!(lp_optimal(&p, &p, 6).is_err());
+    }
+}

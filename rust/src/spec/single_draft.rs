@@ -1,0 +1,137 @@
+//! Classic single-draft speculative decoding verification (Leviathan et
+//! al. 2023 / Chen et al. 2023): accept the draft token x with probability
+//! `min(1, q(x)/p(x))`, otherwise emit a sample from the normalized
+//! residual `(q − p)_+`. This is the reference scheme against which the
+//! paper reports all token-rate speedups (TR is defined relative to it).
+
+use crate::stats::rng::CounterRng;
+
+use super::types::{
+    BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
+};
+
+#[derive(Clone, Debug, Default)]
+pub struct SingleDraftVerifier;
+
+impl SingleDraftVerifier {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// One accept/reject decision. Returns (token, accepted?).
+    pub fn step(
+        &self,
+        p: &Categorical,
+        q: &Categorical,
+        token: u32,
+        rng: &CounterRng,
+        slot: u64,
+    ) -> (u32, bool) {
+        let u = rng.uniform(slot, 1, 0);
+        let px = p.prob(token as usize);
+        let qx = q.prob(token as usize);
+        let accept = if px <= 0.0 { true } else { u < (qx / px).min(1.0) };
+        if accept {
+            (token, true)
+        } else {
+            let u2 = rng.uniform(slot, 2, 0);
+            match q.residual(p) {
+                Some(r) => (r.sample_inverse(u2) as u32, false),
+                None => (q.sample_inverse(u2) as u32, false),
+            }
+        }
+    }
+}
+
+impl BlockVerifier for SingleDraftVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SingleDraft
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        debug_assert!(input.validate().is_ok());
+        let l = input.block_len();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+        for j in 0..l {
+            let (tok, ok) = self.step(
+                &input.draft_dists[0][j],
+                &input.target_dists[0][j],
+                input.draft_tokens[0][j],
+                rng,
+                slot0 + j as u64,
+            );
+            tokens.push(tok);
+            if !ok {
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+        let q = &input.target_dists[0][l];
+        let u = rng.uniform(slot0 + l as u64, 1, 0);
+        tokens.push(q.sample_inverse(u) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::stats::rng::XorShift128;
+
+    #[test]
+    fn step_preserves_target_marginal() {
+        let mut gen = XorShift128::new(8);
+        let n = 5;
+        let p = testkit::gen_categorical(&mut gen, n);
+        let q = testkit::gen_categorical(&mut gen, n);
+        let v = SingleDraftVerifier::new();
+        let rng = CounterRng::new(31);
+        let trials = 80_000;
+        let mut counts = vec![0usize; n];
+        for t in 0..trials {
+            let x = p.sample_race(&rng, t as u64, 0) as u32;
+            let (tok, _) = v.step(&p, &q, x, &rng, t as u64);
+            counts[tok as usize] += 1;
+        }
+        for i in 0..n {
+            let f = counts[i] as f64 / trials as f64;
+            assert!((f - q.prob(i)).abs() < 0.012, "symbol {i}: {f} vs {}", q.prob(i));
+        }
+    }
+
+    #[test]
+    fn acceptance_rate_equals_one_minus_tv() {
+        let p = Categorical::new(vec![0.7, 0.2, 0.1]);
+        let q = Categorical::new(vec![0.3, 0.3, 0.4]);
+        let v = SingleDraftVerifier::new();
+        let rng = CounterRng::new(12);
+        let trials = 60_000;
+        let mut hits = 0;
+        for t in 0..trials {
+            let x = p.sample_race(&rng, t as u64, 0) as u32;
+            if v.step(&p, &q, x, &rng, t as u64).1 {
+                hits += 1;
+            }
+        }
+        let emp = hits as f64 / trials as f64;
+        let expect = 1.0 - p.tv_distance(&q);
+        assert!((emp - expect).abs() < 0.01, "emp {emp} vs {expect}");
+    }
+
+    #[test]
+    fn identical_distributions_always_accept() {
+        let p = Categorical::new(vec![0.5, 0.5]);
+        let v = SingleDraftVerifier::new();
+        let rng = CounterRng::new(1);
+        for t in 0..1000 {
+            let x = p.sample_race(&rng, t, 0) as u32;
+            assert!(v.step(&p, &p, x, &rng, t).1);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! SpecInfer verification (Miao et al., ASPLOS 2024): recursive multi-round
+//! rejection sampling over the K candidate tokens at each position.
+//!
+//! At step j the verifier walks the active drafts **in index order**: draft
+//! k's token x is accepted with probability `min(1, r(x) / p_k(x))` against
+//! the running residual `r` (initialized to the target q); on rejection the
+//! residual is updated to `norm((r - p_k)_+)` and the next draft is tried.
+//! If every candidate is rejected, the final token is drawn from the last
+//! residual. This preserves the target marginal exactly but:
+//!
+//! * it **depends on the drafter's probabilities** `p_k` — hence it is not
+//!   drafter invariant (paper §4.1), and
+//! * it is **order-sensitive**: the first draft enjoys the full residual,
+//!   later drafts face a depleted one (the asymmetry Table 2 exposes).
+
+use crate::stats::rng::CounterRng;
+
+use super::types::{
+    BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
+};
+
+#[derive(Clone, Debug, Default)]
+pub struct SpecInferVerifier;
+
+impl SpecInferVerifier {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// One multi-round rejection step. Returns the chosen token and whether
+    /// it came from a draft (accept) or the residual (reject-all).
+    ///
+    /// `candidates[(k, token)]` must be in draft-index order. `q` is the
+    /// target distribution at this position (all active drafts share the
+    /// accepted prefix, so it is common). Uniforms are consumed from the
+    /// shared stream at `(slot, K + round, 0)` so verification randomness
+    /// never collides with the drafting randomness at the same slot.
+    pub fn step(
+        &self,
+        q: &Categorical,
+        candidates: &[(usize, u32, &Categorical)],
+        rng: &CounterRng,
+        slot: u64,
+        k_total: usize,
+    ) -> (u32, Option<usize>) {
+        let mut residual = q.clone();
+        for (round, &(k, token, p_k)) in candidates.iter().enumerate() {
+            let u = rng.uniform(slot, (k_total + round) as u64, 0);
+            let px = p_k.prob(token as usize);
+            let rx = residual.prob(token as usize);
+            let accept_prob = if px <= 0.0 { 1.0 } else { (rx / px).min(1.0) };
+            if u < accept_prob {
+                return (token, Some(k));
+            }
+            match residual.residual(p_k) {
+                Some(r) => residual = r,
+                // Residual exhausted: the remaining mass is a point mass at
+                // whatever survives numerically; fall back to q's argmax.
+                None => {
+                    let arg = argmax(q);
+                    return (arg as u32, None);
+                }
+            }
+        }
+        let u = rng.uniform(slot, (k_total + candidates.len()) as u64, 0);
+        (residual.sample_inverse(u) as u32, None)
+    }
+}
+
+fn argmax(c: &Categorical) -> usize {
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0;
+    for (i, &p) in c.probs().iter().enumerate() {
+        if p > best {
+            best = p;
+            arg = i;
+        }
+    }
+    arg
+}
+
+impl BlockVerifier for SpecInferVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SpecInfer
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        debug_assert!(input.validate().is_ok());
+        let k = input.k();
+        let l = input.block_len();
+        let mut active: Vec<usize> = (0..k).collect();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            // All active drafts share the accepted prefix ⇒ common target q.
+            let q = &input.target_dists[active[0]][j];
+            let candidates: Vec<(usize, u32, &Categorical)> = active
+                .iter()
+                .map(|&kk| (kk, input.draft_tokens[kk][j], &input.draft_dists[kk][j]))
+                .collect();
+            let (tok, from_draft) = self.step(q, &candidates, rng, slot0 + j as u64, k);
+            tokens.push(tok);
+            match from_draft {
+                Some(_) => {
+                    active.retain(|&kk| input.draft_tokens[kk][j] == tok);
+                    debug_assert!(!active.is_empty());
+                    accepted += 1;
+                }
+                None => {
+                    return BlockOutput { tokens, accepted, surviving_draft: None };
+                }
+            }
+        }
+
+        // Bonus token from the target distribution after the full prefix.
+        let q = &input.target_dists[active[0]][l];
+        let u = rng.uniform(slot0 + l as u64, k as u64, 0);
+        tokens.push(q.sample_inverse(u) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::stats::rng::XorShift128;
+
+    /// Empirical output distribution of a single verification step must be
+    /// the target q regardless of the proposals — the core correctness
+    /// property of recursive rejection.
+    #[test]
+    fn step_preserves_target_marginal() {
+        let mut gen = XorShift128::new(3);
+        let n = 5;
+        let q = testkit::gen_categorical(&mut gen, n);
+        let p1 = testkit::gen_categorical(&mut gen, n);
+        let p2 = testkit::gen_categorical(&mut gen, n);
+        let v = SpecInferVerifier::new();
+        let trials = 80_000;
+        let mut counts = vec![0usize; n];
+        let rng = CounterRng::new(17);
+        for t in 0..trials {
+            // Draft tokens sampled from their own distributions, coupled to
+            // nothing (SpecInfer does not require coupled proposals).
+            let x1 = p1.sample_race(&rng, t as u64, 0) as u32;
+            let x2 = p2.sample_race(&rng, t as u64, 1) as u32;
+            let cands = [(0usize, x1, &p1), (1usize, x2, &p2)];
+            let (tok, _) = v.step(&q, &cands, &rng, t as u64, 2);
+            counts[tok as usize] += 1;
+        }
+        for i in 0..n {
+            let f = counts[i] as f64 / trials as f64;
+            assert!(
+                (f - q.prob(i)).abs() < 0.012,
+                "symbol {i}: empirical {f} vs target {}",
+                q.prob(i)
+            );
+        }
+    }
+
+    #[test]
+    fn step_accepts_identical_proposal_always() {
+        let q = Categorical::new(vec![0.4, 0.6]);
+        let v = SpecInferVerifier::new();
+        let rng = CounterRng::new(5);
+        for t in 0..2000 {
+            let x = q.sample_race(&rng, t, 0) as u32;
+            let cands = [(0usize, x, &q)];
+            let (tok, from) = v.step(&q, &cands, &rng, t, 1);
+            assert_eq!(tok, x);
+            assert_eq!(from, Some(0));
+        }
+    }
+
+    #[test]
+    fn step_order_sensitivity_favors_first_draft() {
+        // A well-aligned draft listed first is accepted more often than the
+        // same draft listed second behind a misaligned one.
+        let q = Categorical::new(vec![0.45, 0.45, 0.10]);
+        let aligned = q.clone();
+        let misaligned = Categorical::new(vec![0.05, 0.05, 0.90]);
+        let v = SpecInferVerifier::new();
+        let rng = CounterRng::new(9);
+        let trials = 30_000;
+        let mut firsts = 0;
+        let mut seconds = 0;
+        for t in 0..trials {
+            let xa = aligned.sample_race(&rng, t as u64, 0) as u32;
+            let xm = misaligned.sample_race(&rng, t as u64, 1) as u32;
+            let (_, from) = v.step(&q, &[(0, xa, &aligned), (1, xm, &misaligned)], &rng, t as u64, 2);
+            if from == Some(0) {
+                firsts += 1;
+            }
+            let (_, from) = v.step(&q, &[(0, xm, &misaligned), (1, xa, &aligned)], &rng, t as u64, 2);
+            if from == Some(1) {
+                seconds += 1;
+            }
+        }
+        // The aligned draft should win far more when listed first.
+        assert!(firsts > seconds, "firsts {firsts} vs seconds {seconds}");
+    }
+
+    #[test]
+    fn verify_block_structure_invariants() {
+        let mut gen = XorShift128::new(11);
+        for case in 0..25 {
+            let n = 6;
+            let l = 4;
+            let k = 3;
+            let p: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let rng = CounterRng::new(case);
+            let mut draft_tokens = vec![Vec::new(); k];
+            for kk in 0..k {
+                for j in 0..l {
+                    draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+                }
+            }
+            let input = BlockInput {
+                draft_tokens,
+                draft_dists: vec![p.clone(); k],
+                target_dists: vec![q.clone(); k],
+            };
+            let out = SpecInferVerifier::new().verify_block(&input, &rng, 0);
+            assert!(out.tokens.len() == out.accepted + 1);
+            assert!(out.accepted <= l);
+            if let Some(sd) = out.surviving_draft {
+                for j in 0..out.accepted {
+                    assert_eq!(input.draft_tokens[sd][j], out.tokens[j]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,305 @@
+//! SpecTr verification (Sun et al., NeurIPS 2023): the *k-sequential
+//! selection* (K-SEQ) scheme derived from optimal-transport relaxations.
+//!
+//! Given K i.i.d. candidates from a single draft distribution p and target
+//! q, each candidate x is tested in turn with acceptance probability
+//! `min(1, q(x) / (γ p(x)))` where `γ ∈ [1, K]` is calibrated by bisection
+//! so that the combined accept-or-residual output marginal is *exactly* q:
+//!
+//! With `s(γ) = Σ_x min(p(x), q(x)/γ)` (per-candidate acceptance mass) and
+//! `c(γ) = (1 − (1−s)^K) / s` (expected boost from K tries), validity
+//! requires `c(γ) ≤ γ`; the smallest such γ maximizes acceptance. The
+//! residual distribution is `res(y) ∝ q(y) − c·min(p(y), q(y)/γ)`, and the
+//! identity `c·s = 1 − (1−s)^K` makes the marginal exactly q (verified by
+//! a chi-square test below).
+//!
+//! K-SEQ is specialized to **identically distributed** proposals — the paper
+//! (§4.3) notes it cannot be used in the diverse-drafts experiment.
+
+use crate::stats::rng::CounterRng;
+
+use super::types::{
+    BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
+};
+
+/// Calibrated K-SEQ parameters for one (p, q, K) instance.
+#[derive(Clone, Debug)]
+pub struct KSeqPlan {
+    pub gamma: f64,
+    /// Per-candidate acceptance mass `s(γ)`.
+    pub s: f64,
+    /// Boost factor `c(γ) = (1-(1-s)^K)/s`.
+    pub c: f64,
+    /// Residual distribution (None iff residual mass ≈ 0).
+    pub residual: Option<Categorical>,
+    /// Acceptance probabilities per symbol: `min(1, q(x)/(γ p(x)))`.
+    pub accept_prob: Vec<f64>,
+}
+
+fn s_of_gamma(p: &Categorical, q: &Categorical, gamma: f64) -> f64 {
+    p.probs()
+        .iter()
+        .zip(q.probs())
+        .map(|(&pi, &qi)| pi.min(qi / gamma))
+        .sum()
+}
+
+fn c_of_s(s: f64, k: usize) -> f64 {
+    if s <= 0.0 {
+        return k as f64; // lim_{s->0} (1-(1-s)^K)/s = K
+    }
+    (1.0 - (1.0 - s).powi(k as i32)) / s
+}
+
+/// Calibrate γ* = min{γ ∈ [1, K] : c(γ) ≤ γ} by bisection.
+pub fn calibrate(p: &Categorical, q: &Categorical, k: usize) -> KSeqPlan {
+    assert_eq!(p.len(), q.len());
+    assert!(k >= 1);
+    let feasible = |gamma: f64| {
+        let s = s_of_gamma(p, q, gamma);
+        c_of_s(s, k) <= gamma + 1e-12
+    };
+    let gamma = if k == 1 || feasible(1.0) {
+        1.0
+    } else {
+        let mut lo = 1.0;
+        let mut hi = k as f64; // always feasible: c ≤ K
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    };
+    let s = s_of_gamma(p, q, gamma);
+    let c = c_of_s(s, k);
+    let accept_prob: Vec<f64> = p
+        .probs()
+        .iter()
+        .zip(q.probs())
+        .map(|(&pi, &qi)| if pi <= 0.0 { 1.0 } else { (qi / (gamma * pi)).min(1.0) })
+        .collect();
+    let res_mass: Vec<f64> = p
+        .probs()
+        .iter()
+        .zip(q.probs())
+        .map(|(&pi, &qi)| (qi - c * pi.min(qi / gamma)).max(0.0))
+        .collect();
+    let total: f64 = res_mass.iter().sum();
+    let residual = if total > 1e-12 { Some(Categorical::new(res_mass)) } else { None };
+    KSeqPlan { gamma, s, c, residual, accept_prob }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SpecTrVerifier;
+
+impl SpecTrVerifier {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// One K-SEQ step over the candidate tokens (i.i.d. from p). Returns
+    /// the chosen token and the index of the accepted candidate, if any.
+    pub fn step(
+        &self,
+        p: &Categorical,
+        q: &Categorical,
+        candidates: &[(usize, u32)],
+        rng: &CounterRng,
+        slot: u64,
+        k_total: usize,
+    ) -> (u32, Option<usize>) {
+        let plan = calibrate(p, q, candidates.len());
+        for (round, &(k, token)) in candidates.iter().enumerate() {
+            let u = rng.uniform(slot, (k_total + round) as u64, 0);
+            if u < plan.accept_prob[token as usize] {
+                return (token, Some(k));
+            }
+        }
+        let u = rng.uniform(slot, (k_total + candidates.len()) as u64, 0);
+        match &plan.residual {
+            Some(r) => (r.sample_inverse(u) as u32, None),
+            None => (q.sample_inverse(u) as u32, None),
+        }
+    }
+}
+
+impl BlockVerifier for SpecTrVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SpecTr
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        debug_assert!(input.validate().is_ok());
+        let k = input.k();
+        let l = input.block_len();
+        let mut active: Vec<usize> = (0..k).collect();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            let q = &input.target_dists[active[0]][j];
+            // K-SEQ assumes identical proposals: use the first active
+            // draft's p (the engine only selects SpecTr for i.i.d. drafts).
+            let p = &input.draft_dists[active[0]][j];
+            let candidates: Vec<(usize, u32)> =
+                active.iter().map(|&kk| (kk, input.draft_tokens[kk][j])).collect();
+            let (tok, from) = self.step(p, q, &candidates, rng, slot0 + j as u64, k);
+            tokens.push(tok);
+            match from {
+                Some(_) => {
+                    active.retain(|&kk| input.draft_tokens[kk][j] == tok);
+                    accepted += 1;
+                }
+                None => return BlockOutput { tokens, accepted, surviving_draft: None },
+            }
+        }
+        let q = &input.target_dists[active[0]][l];
+        let u = rng.uniform(slot0 + l as u64, k as u64, 0);
+        tokens.push(q.sample_inverse(u) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+    use crate::stats::rng::XorShift128;
+
+    #[test]
+    fn calibration_feasible_and_in_range() {
+        let mut gen = XorShift128::new(2);
+        for _ in 0..40 {
+            let p = testkit::gen_categorical(&mut gen, 10);
+            let q = testkit::gen_categorical(&mut gen, 10);
+            for &k in &[1usize, 2, 4, 8, 16] {
+                let plan = calibrate(&p, &q, k);
+                assert!(plan.gamma >= 1.0 - 1e-9 && plan.gamma <= k as f64 + 1e-9);
+                assert!(plan.c <= plan.gamma + 1e-6, "c {} > gamma {}", plan.c, plan.gamma);
+                assert!(plan.s > 0.0 && plan.s <= 1.0 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_identical_distributions_gives_gamma_one() {
+        let p = Categorical::new(vec![0.3, 0.7]);
+        let plan = calibrate(&p, &p, 4);
+        // p = q: s(1) = 1, c = 1 ≤ 1 feasible at γ = 1; every candidate
+        // accepted with probability 1.
+        assert!((plan.gamma - 1.0).abs() < 1e-9);
+        assert!(plan.accept_prob.iter().all(|&a| (a - 1.0).abs() < 1e-9));
+        assert!(plan.residual.is_none());
+    }
+
+    #[test]
+    fn step_preserves_target_marginal_chi_square() {
+        // The defining property: K-SEQ output follows q exactly.
+        let mut gen = XorShift128::new(6);
+        let n = 6;
+        let p = testkit::gen_categorical(&mut gen, n);
+        let q = testkit::gen_categorical(&mut gen, n);
+        let v = SpecTrVerifier::new();
+        let k = 4;
+        let trials = 80_000;
+        let mut counts = vec![0usize; n];
+        let rng = CounterRng::new(44);
+        for t in 0..trials {
+            let cands: Vec<(usize, u32)> =
+                (0..k).map(|kk| (kk, p.sample_race(&rng, t as u64, kk as u64) as u32)).collect();
+            let (tok, _) = v.step(&p, &q, &cands, &rng, t as u64, k);
+            counts[tok as usize] += 1;
+        }
+        // Chi-square with n-1 = 5 dof; 99.9th pct ≈ 20.5. Allow slack.
+        let mut chi2 = 0.0;
+        for i in 0..n {
+            let e = q.prob(i) * trials as f64;
+            chi2 += (counts[i] as f64 - e).powi(2) / e;
+        }
+        assert!(chi2 < 25.0, "chi2 = {chi2}, counts = {counts:?}");
+    }
+
+    #[test]
+    fn acceptance_improves_with_k() {
+        let p = Categorical::new(vec![0.25, 0.25, 0.25, 0.25]);
+        let q = Categorical::new(vec![0.55, 0.15, 0.15, 0.15]);
+        let v = SpecTrVerifier::new();
+        let rng = CounterRng::new(10);
+        let trials = 30_000;
+        let rate = |k: usize| {
+            let mut hits = 0;
+            for t in 0..trials {
+                let cands: Vec<(usize, u32)> = (0..k)
+                    .map(|kk| (kk, p.sample_race(&rng, t as u64, kk as u64) as u32))
+                    .collect();
+                let (_, from) = v.step(&p, &q, &cands, &rng, t as u64, k);
+                if from.is_some() {
+                    hits += 1;
+                }
+            }
+            hits as f64 / trials as f64
+        };
+        let r1 = rate(1);
+        let r4 = rate(4);
+        let r8 = rate(8);
+        assert!(r1 < r4 && r4 <= r8 + 0.01, "{r1} {r4} {r8}");
+    }
+
+    #[test]
+    fn k1_reduces_to_classic_rejection_acceptance() {
+        // With K = 1, γ = 1 and the acceptance is min(1, q/p): the expected
+        // acceptance equals 1 - d_TV(p, q).
+        let p = Categorical::new(vec![0.6, 0.4]);
+        let q = Categorical::new(vec![0.3, 0.7]);
+        let v = SpecTrVerifier::new();
+        let rng = CounterRng::new(77);
+        let trials = 60_000;
+        let mut hits = 0;
+        for t in 0..trials {
+            let x = p.sample_race(&rng, t as u64, 0) as u32;
+            let (_, from) = v.step(&p, &q, &[(0, x)], &rng, t as u64, 1);
+            if from.is_some() {
+                hits += 1;
+            }
+        }
+        let emp = hits as f64 / trials as f64;
+        let expect = 1.0 - p.tv_distance(&q);
+        assert!((emp - expect).abs() < 0.01, "emp {emp} vs 1-dTV {expect}");
+    }
+
+    #[test]
+    fn verify_block_structure() {
+        let mut gen = XorShift128::new(21);
+        for case in 0..20 {
+            let n = 5;
+            let l = 3;
+            let k = 4;
+            let p: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let rng = CounterRng::new(case + 500);
+            let mut draft_tokens = vec![Vec::new(); k];
+            for kk in 0..k {
+                for j in 0..l {
+                    draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+                }
+            }
+            let input = BlockInput {
+                draft_tokens,
+                draft_dists: vec![p.clone(); k],
+                target_dists: vec![q.clone(); k],
+            };
+            let out = SpecTrVerifier::new().verify_block(&input, &rng, 0);
+            assert_eq!(out.tokens.len(), out.accepted + 1);
+            assert!(out.accepted <= l);
+        }
+    }
+}

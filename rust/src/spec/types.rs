@@ -1,0 +1,455 @@
+//! Core types for distribution coupling and block verification.
+
+use crate::stats::rng::CounterRng;
+
+/// A discrete probability distribution on the alphabet `{0, .., N-1}`.
+///
+/// Stored densely in f64. All verification math runs in f64 on the
+/// coordinator — the logits arrive as f32 from the PJRT artifacts and are
+/// promoted once, which keeps acceptance decisions deterministic across
+/// batching order (important for drafter invariance audits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Categorical {
+    probs: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from (possibly unnormalized) non-negative masses.
+    pub fn new(mut probs: Vec<f64>) -> Self {
+        assert!(!probs.is_empty(), "empty categorical");
+        let mut total = 0.0;
+        for &p in &probs {
+            assert!(p >= 0.0 && p.is_finite(), "invalid mass {p}");
+            total += p;
+        }
+        assert!(total > 0.0, "all-zero categorical");
+        if (total - 1.0).abs() > 1e-12 {
+            probs.iter_mut().for_each(|p| *p /= total);
+        }
+        Self { probs }
+    }
+
+    /// Build from f32 logits with temperature and optional top-k truncation
+    /// — the exact post-processing pipeline of the paper's LLM experiments
+    /// (top-k 50, varying temperatures).
+    pub fn from_logits(logits: &[f32], temperature: f64, top_k: Option<usize>) -> Self {
+        assert!(!logits.is_empty());
+        assert!(temperature > 0.0);
+        // Hot path (called K×(L+1) times per speculative block): one
+        // allocation, O(n) top-k via select_nth rather than a full sort.
+        let inv_t = 1.0 / temperature;
+        let mut w: Vec<f64> = logits.iter().map(|&l| l as f64 * inv_t).collect();
+        if let Some(k) = top_k {
+            if k < w.len() {
+                let mut scratch: Vec<f64> = w.clone();
+                // k-th largest = (k-1)-th in descending order.
+                let (_, thresh, _) = scratch
+                    .select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+                let thresh = *thresh;
+                for s in w.iter_mut() {
+                    if *s < thresh {
+                        *s = f64::NEG_INFINITY;
+                    }
+                }
+            }
+        }
+        let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut total = 0.0;
+        for s in w.iter_mut() {
+            *s = (*s - max).exp();
+            total += *s;
+        }
+        let inv = 1.0 / total;
+        w.iter_mut().for_each(|x| *x *= inv);
+        Self { probs: w }
+    }
+
+    /// Uniform distribution on `n` symbols.
+    pub fn uniform(n: usize) -> Self {
+        Self { probs: vec![1.0 / n as f64; n] }
+    }
+
+    /// Point mass at `i` on an alphabet of `n` symbols.
+    pub fn delta(n: usize, i: usize) -> Self {
+        let mut probs = vec![0.0; n];
+        probs[i] = 1.0;
+        Self { probs }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.probs.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        false // constructor rejects empty
+    }
+
+    #[inline]
+    pub fn probs(&self) -> &[f64] {
+        &self.probs
+    }
+
+    #[inline]
+    pub fn prob(&self, i: usize) -> f64 {
+        self.probs[i]
+    }
+
+    /// Total variation distance to `other`.
+    pub fn tv_distance(&self, other: &Categorical) -> f64 {
+        assert_eq!(self.len(), other.len());
+        0.5 * self
+            .probs
+            .iter()
+            .zip(&other.probs)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+    }
+
+    /// Sample via the exponential race with explicit shared randomness:
+    /// `argmin_i S_i / p_i` where `S_i = rng.exponential(slot, draft, i)`.
+    /// This *is* the paper's Gumbel-max sampling (eq. 1) — any party holding
+    /// the same `CounterRng` coordinates reproduces the identical race.
+    pub fn sample_race(&self, rng: &CounterRng, slot: u64, draft: u64) -> usize {
+        let mut best = f64::INFINITY;
+        let mut arg = 0;
+        for (i, &p) in self.probs.iter().enumerate() {
+            if p <= 0.0 {
+                continue;
+            }
+            let s = rng.exponential(slot, draft, i as u64) / p;
+            if s < best {
+                best = s;
+                arg = i;
+            }
+        }
+        arg
+    }
+
+    /// Plain inverse-CDF sample from a single uniform (used for residual
+    /// distributions in the baselines, where no coupling is required).
+    pub fn sample_inverse(&self, u: f64) -> usize {
+        let mut acc = 0.0;
+        for (i, &p) in self.probs.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        self.probs.len() - 1
+    }
+
+    /// `(self - other)_+` renormalized — the residual distribution of
+    /// rejection-sampling verification. Returns `None` if the positive part
+    /// has zero mass (i.e. `other` dominates `self`).
+    pub fn residual(&self, other: &Categorical) -> Option<Categorical> {
+        assert_eq!(self.len(), other.len());
+        let w: Vec<f64> = self
+            .probs
+            .iter()
+            .zip(&other.probs)
+            .map(|(a, b)| (a - b).max(0.0))
+            .collect();
+        let total: f64 = w.iter().sum();
+        if total <= 1e-15 {
+            None
+        } else {
+            Some(Categorical::new(w))
+        }
+    }
+}
+
+/// Which drafter-invariance guarantee a verification scheme provides
+/// (paper Def. 1 "conditional" and Def. 2 "strong"; baselines have none).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Invariance {
+    None,
+    Conditional,
+    Strong,
+}
+
+/// Verification scheme selector (CLI / config facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VerifierKind {
+    /// GLS multi-draft, conditionally drafter-invariant (paper Alg. 2).
+    Gls,
+    /// GLS multi-draft, strongly drafter-invariant (paper App. B, Prop. 6).
+    GlsStrong,
+    /// SpecInfer recursive multi-round rejection.
+    SpecInfer,
+    /// SpecTr k-sequential-selection (i.i.d. drafts only).
+    SpecTr,
+    /// Classic single-draft rejection sampling (TR baseline).
+    SingleDraft,
+    /// Daliri et al. single-draft Gumbel-max coupling.
+    Daliri,
+}
+
+impl VerifierKind {
+    pub fn all() -> &'static [VerifierKind] {
+        &[
+            VerifierKind::Gls,
+            VerifierKind::GlsStrong,
+            VerifierKind::SpecInfer,
+            VerifierKind::SpecTr,
+            VerifierKind::SingleDraft,
+            VerifierKind::Daliri,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifierKind::Gls => "gls",
+            VerifierKind::GlsStrong => "gls-strong",
+            VerifierKind::SpecInfer => "specinfer",
+            VerifierKind::SpecTr => "spectr",
+            VerifierKind::SingleDraft => "single-draft",
+            VerifierKind::Daliri => "daliri",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<VerifierKind> {
+        VerifierKind::all().iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Single-draft schemes use only draft 0 regardless of engine K.
+    pub fn is_single_draft(&self) -> bool {
+        matches!(self, VerifierKind::SingleDraft | VerifierKind::Daliri)
+    }
+}
+
+/// Input to block verification: everything the target-side verifier knows
+/// after the parallel target pass of one speculative block.
+///
+/// Indexing follows Alg. 2: `draft_tokens[k][j]` is `X_{j+1}^{(k)}`,
+/// `draft_dists[k][j]` is `p^{(j+1,k)}` (the drafter's distribution that
+/// produced that token), and `target_dists[k][j]` for `j = 0..=L` is
+/// `q^{(j+1,k)} = M_b(· | X_{1:j}^{(k)}, c)` — the target's distribution at
+/// position j+1 given draft k's prefix (so `target_dists[k][L]` is the bonus
+/// position).
+#[derive(Clone, Debug)]
+pub struct BlockInput {
+    pub draft_tokens: Vec<Vec<u32>>,
+    pub draft_dists: Vec<Vec<Categorical>>,
+    pub target_dists: Vec<Vec<Categorical>>,
+}
+
+impl BlockInput {
+    pub fn k(&self) -> usize {
+        self.draft_tokens.len()
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.draft_tokens.first().map_or(0, |d| d.len())
+    }
+
+    /// Structural sanity: K ≥ 1, all drafts the same length L ≥ 1, dists
+    /// shaped [K][L] (draft) and [K][L+1] (target), consistent alphabets.
+    pub fn validate(&self) -> Result<(), String> {
+        let k = self.k();
+        if k == 0 {
+            return Err("no drafts".into());
+        }
+        if self.draft_dists.len() != k || self.target_dists.len() != k {
+            return Err("draft/target dist outer dims must equal K".into());
+        }
+        let l = self.block_len();
+        if l == 0 {
+            return Err("empty draft".into());
+        }
+        let n = self.target_dists[0][0].len();
+        for kk in 0..k {
+            if self.draft_tokens[kk].len() != l {
+                return Err(format!("draft {kk} length != {l}"));
+            }
+            if self.draft_dists[kk].len() != l {
+                return Err(format!("draft {kk} dists length != {l}"));
+            }
+            if self.target_dists[kk].len() != l + 1 {
+                return Err(format!("target {kk} dists length != {}", l + 1));
+            }
+            for d in self.draft_dists[kk].iter().chain(self.target_dists[kk].iter()) {
+                if d.len() != n {
+                    return Err("inconsistent alphabet size".into());
+                }
+            }
+            for (j, &t) in self.draft_tokens[kk].iter().enumerate() {
+                if t as usize >= n {
+                    return Err(format!("draft {kk} token {j} out of alphabet"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result of verifying one speculative block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockOutput {
+    /// Tokens emitted this block (accepted prefix + the final token, which
+    /// is either a residual sample or the bonus token). Length = τ ≥ 1.
+    pub tokens: Vec<u32>,
+    /// Number of draft positions accepted (τ - 1 unless the full block was
+    /// accepted, in which case == L and the last emitted token is the bonus).
+    pub accepted: usize,
+    /// A draft index whose tokens match the accepted prefix, if any — the
+    /// engine reuses that draft's KV-cache pages for the accepted prefix.
+    pub surviving_draft: Option<usize>,
+}
+
+impl BlockOutput {
+    /// Block efficiency contribution: accepted tokens + the final token,
+    /// i.e. tokens produced per target-model call (paper's BE numerator).
+    pub fn tokens_per_call(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+/// A block verification scheme. Implementations must be pure functions of
+/// `(input, rng, slot0)` — statelessness is what makes the coordinator's
+/// replay/audit mode and the drafter-invariance tests possible.
+pub trait BlockVerifier {
+    fn kind(&self) -> VerifierKind;
+
+    fn invariance(&self) -> Invariance;
+
+    /// Verify one block. `rng` is the shared randomness `\mathcal{R}`
+    /// (split per request by the engine); `slot0` is the absolute decoding
+    /// position of the block's first token, so that step j uses randomness
+    /// slot `slot0 + j` — fresh uniforms per position, shared across drafts,
+    /// exactly Alg. 2 line 1.
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categorical_normalizes() {
+        let c = Categorical::new(vec![2.0, 6.0]);
+        assert!((c.prob(0) - 0.25).abs() < 1e-12);
+        assert!((c.prob(1) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_all_zero() {
+        Categorical::new(vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_negative() {
+        Categorical::new(vec![0.5, -0.1]);
+    }
+
+    #[test]
+    fn from_logits_softmax_and_topk() {
+        let c = Categorical::from_logits(&[0.0, 0.0, 0.0, 0.0], 1.0, None);
+        for i in 0..4 {
+            assert!((c.prob(i) - 0.25).abs() < 1e-9);
+        }
+        let c = Categorical::from_logits(&[10.0, 9.0, 1.0, 0.0], 1.0, Some(2));
+        assert_eq!(c.prob(2), 0.0);
+        assert_eq!(c.prob(3), 0.0);
+        assert!((c.prob(0) + c.prob(1) - 1.0).abs() < 1e-12);
+        assert!(c.prob(0) > c.prob(1));
+    }
+
+    #[test]
+    fn from_logits_temperature_extremes() {
+        let logits = [3.0, 1.0, 0.0];
+        let cold = Categorical::from_logits(&logits, 0.05, None);
+        assert!(cold.prob(0) > 0.999);
+        let hot = Categorical::from_logits(&logits, 100.0, None);
+        assert!((hot.prob(0) - 1.0 / 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn tv_distance_properties() {
+        let a = Categorical::new(vec![0.5, 0.5]);
+        let b = Categorical::new(vec![0.5, 0.5]);
+        assert_eq!(a.tv_distance(&b), 0.0);
+        let c = Categorical::delta(2, 0);
+        let d = Categorical::delta(2, 1);
+        assert!((c.tv_distance(&d) - 1.0).abs() < 1e-12);
+        assert!((a.tv_distance(&c) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_race_matches_marginal() {
+        // Statistical check of the Gumbel-max trick through CounterRng.
+        let p = Categorical::new(vec![0.2, 0.5, 0.3]);
+        let rng = CounterRng::new(77);
+        let n = 60_000;
+        let mut counts = [0usize; 3];
+        for slot in 0..n {
+            counts[p.sample_race(&rng, slot as u64, 0)] += 1;
+        }
+        for i in 0..3 {
+            let f = counts[i] as f64 / n as f64;
+            assert!((f - p.prob(i)).abs() < 0.01, "symbol {i}: {f} vs {}", p.prob(i));
+        }
+    }
+
+    #[test]
+    fn sample_race_skips_zero_mass() {
+        let p = Categorical::new(vec![0.0, 1.0, 0.0]);
+        let rng = CounterRng::new(3);
+        for slot in 0..100 {
+            assert_eq!(p.sample_race(&rng, slot, 0), 1);
+        }
+    }
+
+    #[test]
+    fn sample_inverse_endpoints() {
+        let p = Categorical::new(vec![0.25, 0.25, 0.5]);
+        assert_eq!(p.sample_inverse(0.0), 0);
+        assert_eq!(p.sample_inverse(0.9999999), 2);
+        assert_eq!(p.sample_inverse(0.3), 1);
+    }
+
+    #[test]
+    fn residual_matches_hand_computation() {
+        let q = Categorical::new(vec![0.6, 0.4]);
+        let p = Categorical::new(vec![0.2, 0.8]);
+        let r = q.residual(&p).unwrap();
+        // (q-p)_+ = [0.4, 0] -> normalized [1, 0]
+        assert!((r.prob(0) - 1.0).abs() < 1e-12);
+        assert!(q.residual(&q).is_none());
+    }
+
+    #[test]
+    fn block_input_validation_catches_shape_errors() {
+        let n = 4;
+        let q = Categorical::uniform(n);
+        let good = BlockInput {
+            draft_tokens: vec![vec![0, 1]],
+            draft_dists: vec![vec![q.clone(), q.clone()]],
+            target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
+        };
+        assert!(good.validate().is_ok());
+        let bad = BlockInput {
+            draft_tokens: vec![vec![0, 1]],
+            draft_dists: vec![vec![q.clone()]],
+            target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
+        };
+        assert!(bad.validate().is_err());
+        let bad_tok = BlockInput {
+            draft_tokens: vec![vec![0, 9]],
+            draft_dists: vec![vec![q.clone(), q.clone()]],
+            target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
+        };
+        assert!(bad_tok.validate().is_err());
+    }
+
+    #[test]
+    fn verifier_kind_roundtrip() {
+        for &k in VerifierKind::all() {
+            assert_eq!(VerifierKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(VerifierKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,176 @@
+//! Scalar distribution transforms used throughout the reproduction.
+
+use super::rng::XorShift128;
+
+/// Exponential(rate) variate from a uniform `u` in (0, 1).
+#[inline]
+pub fn exponential(u: f64, rate: f64) -> f64 {
+    debug_assert!(u > 0.0 && u < 1.0 && rate > 0.0);
+    -u.ln() / rate
+}
+
+/// Standard Gumbel variate from a uniform `u` in (0, 1).
+/// `argmax_i (log p_i + G_i)` with iid Gumbel `G_i` samples from `p` — the
+/// classic Gumbel-max trick; GLS uses the equivalent exponential-race form.
+#[inline]
+pub fn gumbel(u: f64) -> f64 {
+    -(-u.ln()).ln()
+}
+
+/// A standard normal pair via Box–Muller from two uniforms in (0, 1).
+#[inline]
+pub fn box_muller(u1: f64, u2: f64) -> (f64, f64) {
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * std::f64::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Sequential standard-normal sampler over an [`XorShift128`] stream.
+#[derive(Clone, Debug)]
+pub struct NormalSampler {
+    rng: XorShift128,
+    cached: Option<f64>,
+}
+
+impl NormalSampler {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: XorShift128::new(seed), cached: None }
+    }
+
+    pub fn from_rng(rng: XorShift128) -> Self {
+        Self { rng, cached: None }
+    }
+
+    /// One N(0, 1) draw.
+    pub fn next(&mut self) -> f64 {
+        if let Some(z) = self.cached.take() {
+            return z;
+        }
+        let (z0, z1) = box_muller(self.rng.next_f64(), self.rng.next_f64());
+        self.cached = Some(z1);
+        z0
+    }
+
+    /// One N(mu, sigma^2) draw.
+    pub fn next_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.next()
+    }
+}
+
+/// Density of N(mu, var) at x.
+#[inline]
+pub fn normal_pdf(x: f64, mu: f64, var: f64) -> f64 {
+    debug_assert!(var > 0.0);
+    let d = x - mu;
+    (-(d * d) / (2.0 * var)).exp() / (2.0 * std::f64::consts::PI * var).sqrt()
+}
+
+/// Log-density of N(mu, var) at x.
+#[inline]
+pub fn normal_logpdf(x: f64, mu: f64, var: f64) -> f64 {
+    let d = x - mu;
+    -(d * d) / (2.0 * var) - 0.5 * (2.0 * std::f64::consts::PI * var).ln()
+}
+
+/// Draw a categorical sample from unnormalized weights using one uniform.
+pub fn categorical_from_weights(weights: &[f64], u: f64) -> usize {
+    let total: f64 = weights.iter().sum();
+    debug_assert!(total > 0.0);
+    let mut acc = 0.0;
+    let target = u * total;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        if target < acc {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut rng = XorShift128::new(3);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| exponential(rng.next_f64(), 2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean = {mean}");
+    }
+
+    #[test]
+    fn normal_sampler_moments() {
+        let mut s = NormalSampler::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| s.next()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean = {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var = {var}");
+    }
+
+    #[test]
+    fn normal_pdf_integrates_to_one() {
+        // Trapezoid over [-8, 8].
+        let steps = 4000;
+        let h = 16.0 / steps as f64;
+        let integral: f64 = (0..=steps)
+            .map(|i| {
+                let x = -8.0 + i as f64 * h;
+                let w = if i == 0 || i == steps { 0.5 } else { 1.0 };
+                w * normal_pdf(x, 0.0, 1.0)
+            })
+            .sum::<f64>()
+            * h;
+        assert!((integral - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normal_logpdf_consistent_with_pdf() {
+        for &x in &[-2.0, -0.5, 0.0, 1.3, 4.0] {
+            let p = normal_pdf(x, 0.7, 2.3);
+            let lp = normal_logpdf(x, 0.7, 2.3);
+            assert!((p.ln() - lp).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn categorical_from_weights_respects_masses() {
+        let weights = [1.0, 3.0, 6.0];
+        let mut rng = XorShift128::new(5);
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[categorical_from_weights(&weights, rng.next_f64())] += 1;
+        }
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        assert!((freqs[0] - 0.1).abs() < 0.01);
+        assert!((freqs[1] - 0.3).abs() < 0.01);
+        assert!((freqs[2] - 0.6).abs() < 0.01);
+    }
+
+    #[test]
+    fn gumbel_max_equals_categorical_sampling() {
+        // argmax(log p + G) should follow p.
+        let p: [f64; 3] = [0.5, 0.2, 0.3];
+        let mut rng = XorShift128::new(23);
+        let n = 100_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            let mut best = f64::NEG_INFINITY;
+            let mut arg = 0;
+            for (i, &pi) in p.iter().enumerate() {
+                let g = pi.ln() + gumbel(rng.next_f64());
+                if g > best {
+                    best = g;
+                    arg = i;
+                }
+            }
+            counts[arg] += 1;
+        }
+        for i in 0..3 {
+            assert!((counts[i] as f64 / n as f64 - p[i]).abs() < 0.01);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Deterministic RNG, probability distributions, and summary statistics.
+//!
+//! The whole reproduction is seeded: every experiment in the benches is a
+//! pure function of its seed, so tables regenerate bit-identically. We ship
+//! our own RNG layer because (a) the paper's common-randomness construction
+//! needs a *counter-based, splittable* stream (`[`rng::CounterRng`]`) and
+//! (b) no external RNG crates are available in the offline vendor set.
+
+pub mod dist;
+pub mod rng;
+pub mod summary;
+
+pub use dist::{box_muller, exponential, gumbel};
+pub use rng::{CounterRng, SplitMix64, XorShift128};
+pub use summary::{mean, sem, std_dev, OnlineStats, Summary};

@@ -1,0 +1,247 @@
+//! Deterministic random number generators.
+//!
+//! Three generators:
+//!
+//! * [`SplitMix64`] — stateless-ish 64-bit mixer; used to derive seeds.
+//! * [`XorShift128`] — fast sequential stream for simulation workloads.
+//! * [`CounterRng`] — *counter-based* generator: `u(i, j, k)` is a pure
+//!   function of the key and coordinates. This is the paper's shared
+//!   randomness `U_i^{(j,k)}` (Alg. 1 line 2, Alg. 2 line 1): drafter and
+//!   verifier (and, in the compression application, encoder and K decoders)
+//!   can evaluate the *same* uniforms without communicating, which is
+//!   exactly the "common random numbers" assumption of Daliri et al. [9]
+//!   and of GLS.
+
+/// SplitMix64: tiny, high-quality 64-bit mixing generator.
+///
+/// Used mainly for seed derivation (`SplitMix64::mix`) and as the stage
+/// function inside [`CounterRng`].
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// One round of the SplitMix64 output function applied to `x`.
+    #[inline]
+    pub fn mix(mut x: u64) -> u64 {
+        x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        x ^ (x >> 31)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xorshift128+: fast sequential PRNG for bulk simulation.
+#[derive(Clone, Debug)]
+pub struct XorShift128 {
+    s0: u64,
+    s1: u64,
+}
+
+impl XorShift128 {
+    pub fn new(seed: u64) -> Self {
+        // Never allow the all-zero state.
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() | 1;
+        let s1 = sm.next_u64();
+        Self { s0, s1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.s0;
+        let y = self.s1;
+        self.s0 = y;
+        x ^= x << 23;
+        self.s1 = x ^ y ^ (x >> 17) ^ (y >> 26);
+        self.s1.wrapping_add(y)
+    }
+
+    /// Uniform f64 in the open interval (0, 1): never 0, never 1, so it is
+    /// always safe to take `ln`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 random mantissa bits, then shift into (0,1) by adding half an ulp.
+        let bits = self.next_u64() >> 11;
+        (bits as f64 + 0.5) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire-style rejection.
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let wide = (x as u128) * (n as u128);
+                ((wide >> 64) as u64, wide as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Random permutation index helper: Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Counter-based generator: a keyed pure function from coordinates to
+/// uniforms. `CounterRng` *is* the shared randomness `\mathcal{R}` of the
+/// paper — both sides of the coupling evaluate it independently.
+///
+/// The stream is indexed by three coordinates `(slot, draft, item)` matching
+/// the paper's `U_i^{(j,k)}`: `slot` = decoding step j (or 0 for one-shot
+/// GLS), `draft` = list index k, `item` = alphabet symbol i.
+#[derive(Clone, Copy, Debug)]
+pub struct CounterRng {
+    key: u64,
+}
+
+impl CounterRng {
+    pub fn new(key: u64) -> Self {
+        Self { key }
+    }
+
+    /// Derive an independent sub-stream (e.g. per request / per sequence).
+    #[inline]
+    pub fn split(&self, lane: u64) -> Self {
+        Self {
+            key: SplitMix64::mix(self.key ^ SplitMix64::mix(lane ^ 0xA5A5_5A5A_0F0F_F0F0)),
+        }
+    }
+
+    #[inline]
+    fn raw(&self, slot: u64, draft: u64, item: u64) -> u64 {
+        // Three mixing rounds with distinct domain constants; equivalent in
+        // spirit to a 3-word Philox round but cheaper and sufficient for
+        // simulation-grade uniformity (validated in tests by chi-square).
+        let a = SplitMix64::mix(self.key ^ slot.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        let b = SplitMix64::mix(a ^ draft.wrapping_mul(0xCA5A_8263_95121157));
+        SplitMix64::mix(b ^ item.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Uniform in (0, 1) at coordinates `(slot, draft, item)`.
+    #[inline]
+    pub fn uniform(&self, slot: u64, draft: u64, item: u64) -> f64 {
+        let bits = self.raw(slot, draft, item) >> 11;
+        (bits as f64 + 0.5) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Exponential(1) variate at the given coordinates: `-ln U`.
+    /// This is the `S_i^{(k)}` of GLS (paper §3).
+    #[inline]
+    pub fn exponential(&self, slot: u64, draft: u64, item: u64) -> f64 {
+        -self.uniform(slot, draft, item).ln()
+    }
+
+    /// Fill `out[k][i]` with Exp(1) variates for `k < drafts`, `i < items`.
+    pub fn exponential_matrix(&self, slot: u64, drafts: usize, items: usize) -> Vec<Vec<f64>> {
+        (0..drafts)
+            .map(|k| {
+                (0..items)
+                    .map(|i| self.exponential(slot, k as u64, i as u64))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_mix_is_deterministic_and_nontrivial() {
+        assert_eq!(SplitMix64::mix(0), SplitMix64::mix(0));
+        assert_ne!(SplitMix64::mix(1), SplitMix64::mix(2));
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_uniform_in_open_unit_interval() {
+        let mut rng = XorShift128::new(7);
+        for _ in 0..10_000 {
+            let u = rng.next_f64();
+            assert!(u > 0.0 && u < 1.0);
+        }
+    }
+
+    #[test]
+    fn xorshift_next_below_bounds_and_coverage() {
+        let mut rng = XorShift128::new(11);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = rng.next_below(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn counter_rng_is_a_pure_function_of_coordinates() {
+        let rng = CounterRng::new(123);
+        assert_eq!(rng.uniform(1, 2, 3), rng.uniform(1, 2, 3));
+        assert_ne!(rng.uniform(1, 2, 3), rng.uniform(1, 2, 4));
+        assert_ne!(rng.uniform(1, 2, 3), rng.uniform(1, 3, 3));
+        assert_ne!(rng.uniform(1, 2, 3), rng.uniform(2, 2, 3));
+    }
+
+    #[test]
+    fn counter_rng_split_streams_disagree() {
+        let root = CounterRng::new(9);
+        let a = root.split(0);
+        let b = root.split(1);
+        assert_ne!(a.uniform(0, 0, 0), b.uniform(0, 0, 0));
+        // Splitting is itself deterministic.
+        assert_eq!(root.split(5).uniform(3, 1, 2), root.split(5).uniform(3, 1, 2));
+    }
+
+    #[test]
+    fn counter_rng_uniformity_chi_square() {
+        // 16 bins, 16k draws; chi-square(15) 99.9th percentile ~ 37.7.
+        let rng = CounterRng::new(2024);
+        let mut bins = [0u32; 16];
+        let n = 16_384;
+        for i in 0..n {
+            let u = rng.uniform(0, 0, i as u64);
+            bins[(u * 16.0) as usize] += 1;
+        }
+        let expect = n as f64 / 16.0;
+        let chi2: f64 = bins.iter().map(|&c| (c as f64 - expect).powi(2) / expect).sum();
+        assert!(chi2 < 37.7, "chi2 = {chi2}");
+    }
+
+    #[test]
+    fn exponential_matrix_shape_and_positivity() {
+        let rng = CounterRng::new(5);
+        let m = rng.exponential_matrix(3, 4, 10);
+        assert_eq!(m.len(), 4);
+        assert!(m.iter().all(|row| row.len() == 10));
+        assert!(m.iter().flatten().all(|&s| s > 0.0));
+    }
+}

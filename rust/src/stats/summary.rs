@@ -1,0 +1,256 @@
+//! Summary statistics used by the benchmark harness and the experiment
+//! tables: mean, sample standard deviation, standard error of the mean
+//! (paper App. D.1 defines exactly these), and a streaming accumulator.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (the `std` of paper App. D.1, divisor M-1).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Standard error of the mean: `std(x) / sqrt(M)` — the paper's error bars.
+pub fn sem(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Mean ± SEM bundle, formatted like the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub mean: f64,
+    pub sem: f64,
+    pub n: usize,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Self {
+        Self { mean: mean(xs), sem: sem(xs), n: xs.len() }
+    }
+}
+
+impl std::fmt::Display for Summary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:.2} ± {:.2}", self.mean, self.sem)
+    }
+}
+
+/// Streaming mean/variance (Welford) plus min/max; used for latency metrics
+/// in the coordinator where storing every observation would be wasteful.
+#[derive(Clone, Debug)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for OnlineStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (divisor n-1).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let total = n1 + n2;
+        self.mean += delta * n2 / total;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / total;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-bucket latency histogram with percentile queries (p50/p95/p99).
+/// Buckets are exponential: bucket i covers [base*g^i, base*g^(i+1)).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    base: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Latency histogram from 1µs to ~100s with 5% resolution.
+    pub fn latency() -> Self {
+        Self::new(1e-6, 1.05, 400)
+    }
+
+    pub fn new(base: f64, growth: f64, buckets: usize) -> Self {
+        Self { base, growth, counts: vec![0; buckets], total: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = if x <= self.base {
+            0
+        } else {
+            ((x / self.base).ln() / self.growth.ln()) as usize
+        };
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Approximate quantile (bucket upper edge); `q` in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.base * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.base * self.growth.powi(self.counts.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_sem_match_paper_formulas() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        // Sample std of 1..5 is sqrt(2.5).
+        assert!((std_dev(&xs) - 2.5f64.sqrt()).abs() < 1e-12);
+        assert!((sem(&xs) - 2.5f64.sqrt() / 5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton_edge_cases() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[7.0]), 0.0);
+        assert_eq!(sem(&[]), 0.0);
+    }
+
+    #[test]
+    fn online_stats_agree_with_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 / 7.0).collect();
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((o.std_dev() - std_dev(&xs)).abs() < 1e-9);
+        assert_eq!(o.count(), 1000);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_concat() {
+        let a: Vec<f64> = (0..500).map(|i| i as f64 * 0.1).collect();
+        let b: Vec<f64> = (0..300).map(|i| 100.0 - i as f64).collect();
+        let mut oa = OnlineStats::new();
+        let mut ob = OnlineStats::new();
+        a.iter().for_each(|&x| oa.push(x));
+        b.iter().for_each(|&x| ob.push(x));
+        oa.merge(&ob);
+        let all: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        assert!((oa.mean() - mean(&all)).abs() < 1e-9);
+        assert!((oa.std_dev() - std_dev(&all)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_data() {
+        let mut h = Histogram::latency();
+        // 1ms..100ms uniform-ish.
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        assert!(p50 > 0.03 && p50 < 0.07, "p50={p50}");
+        assert!(p95 > 0.08 && p95 < 0.12, "p95={p95}");
+        assert!(h.quantile(1.0) >= p95);
+    }
+
+    #[test]
+    fn summary_display_formats_like_paper() {
+        let s = Summary::of(&[4.7, 4.8, 4.9]);
+        assert_eq!(format!("{s}"), "4.80 ± 0.06");
+    }
+}

@@ -1,0 +1,136 @@
+//! In-house property-based testing support.
+//!
+//! `proptest` is not available in the offline vendor set, so this module
+//! provides the subset we need: seeded random generators for the domain
+//! types (categorical distributions, token sequences, request traces) and a
+//! `forall` driver that runs a property across many generated cases and
+//! reports the failing seed for reproduction. No shrinking — failures print
+//! the full case, which is small for our domains.
+
+use crate::spec::types::Categorical;
+use crate::stats::rng::XorShift128;
+
+/// Number of cases per property; override with `GLS_PROPTEST_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("GLS_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` on `cases` generated inputs. On failure, panic with the seed
+/// and case index so the exact case can be re-generated.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut XorShift128) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = XorShift128::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed (seed={seed}, case={case}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Generate a strictly-positive categorical distribution on `n` symbols.
+/// Masses are Dirichlet-ish: normalized Exp(1) draws, floored away from 0.
+pub fn gen_categorical(rng: &mut XorShift128, n: usize) -> Categorical {
+    let mut w: Vec<f64> = (0..n).map(|_| -rng.next_f64().ln() + 1e-9).collect();
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    Categorical::new(w)
+}
+
+/// Generate a sparse categorical: roughly `support` symbols carry all mass;
+/// the rest are exactly zero. Exercises the q_i = 0 / p_i = 0 edge cases.
+pub fn gen_sparse_categorical(rng: &mut XorShift128, n: usize, support: usize) -> Categorical {
+    assert!(support >= 1 && support <= n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut w = vec![0.0; n];
+    for &i in idx.iter().take(support) {
+        w[i] = -rng.next_f64().ln() + 1e-9;
+    }
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    Categorical::new(w)
+}
+
+/// Generate a "peaked" categorical with temperature `t` applied to random
+/// logits — mimics LLM next-token distributions (low t => near-deterministic).
+pub fn gen_peaked_categorical(rng: &mut XorShift128, n: usize, temperature: f64) -> Categorical {
+    let logits: Vec<f64> = (0..n).map(|_| 4.0 * rng.next_f64()).collect();
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut w: Vec<f64> = logits.iter().map(|l| ((l - max) / temperature).exp()).collect();
+    let total: f64 = w.iter().sum();
+    w.iter_mut().for_each(|x| *x /= total);
+    Categorical::new(w)
+}
+
+/// Generate a random token sequence of length in [1, max_len].
+pub fn gen_tokens(rng: &mut XorShift128, vocab: usize, max_len: usize) -> Vec<u32> {
+    let len = 1 + rng.next_below(max_len as u64) as usize;
+    (0..len).map(|_| rng.next_below(vocab as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_categorical_is_normalized_and_positive() {
+        let mut rng = XorShift128::new(1);
+        for _ in 0..50 {
+            let c = gen_categorical(&mut rng, 17);
+            let sum: f64 = c.probs().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(c.probs().iter().all(|&p| p > 0.0));
+        }
+    }
+
+    #[test]
+    fn gen_sparse_categorical_has_requested_support() {
+        let mut rng = XorShift128::new(2);
+        let c = gen_sparse_categorical(&mut rng, 20, 5);
+        let nz = c.probs().iter().filter(|&&p| p > 0.0).count();
+        assert_eq!(nz, 5);
+        assert!((c.probs().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gen_peaked_low_temperature_concentrates() {
+        let mut rng = XorShift128::new(3);
+        let hot = gen_peaked_categorical(&mut rng, 50, 2.0);
+        let mut rng = XorShift128::new(3);
+        let cold = gen_peaked_categorical(&mut rng, 50, 0.1);
+        let max_hot = hot.probs().iter().cloned().fold(0.0, f64::max);
+        let max_cold = cold.probs().iter().cloned().fold(0.0, f64::max);
+        assert!(max_cold > max_hot);
+    }
+
+    #[test]
+    fn forall_reports_failures() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                0,
+                16,
+                |rng| rng.next_below(100),
+                |&x| if x < 95 { Ok(()) } else { Err(format!("x={x} too big")) },
+            );
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn gen_tokens_within_bounds() {
+        let mut rng = XorShift128::new(4);
+        for _ in 0..100 {
+            let toks = gen_tokens(&mut rng, 64, 12);
+            assert!(!toks.is_empty() && toks.len() <= 12);
+            assert!(toks.iter().all(|&t| (t as usize) < 64));
+        }
+    }
+}

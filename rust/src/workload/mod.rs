@@ -1,0 +1,14 @@
+//! Synthetic task suites and request traces.
+//!
+//! The paper evaluates on GSM8K, HumanEval, NaturalReasoning, MBPP and
+//! DROP. Offline we cannot ship those datasets, so each suite here is a
+//! *statistical stand-in* (DESIGN.md §2): a prompt generator plus a
+//! draft/target alignment profile calibrated so the single-draft block
+//! efficiencies span the paper's observed spectrum (BE ≈ 4.2 on the
+//! easiest suite down to ≈ 3.0 on the hardest, L = 4).
+
+pub mod suites;
+pub mod trace;
+
+pub use suites::{TaskSuite, SUITES};
+pub use trace::{PoissonTrace, TraceEvent};

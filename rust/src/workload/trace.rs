@@ -1,0 +1,83 @@
+//! Open-loop request traces: Poisson arrivals for latency-under-load
+//! experiments (the serving benches and the e2e example).
+
+use crate::stats::rng::XorShift128;
+
+/// One scheduled request arrival.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Offset from trace start.
+    pub at: std::time::Duration,
+    /// Index into the workload's prompt list.
+    pub prompt_idx: usize,
+}
+
+/// Poisson-process arrival trace.
+#[derive(Clone, Debug)]
+pub struct PoissonTrace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl PoissonTrace {
+    /// `rate` requests/second for `n` requests, cycling over `num_prompts`.
+    pub fn generate(rate: f64, n: usize, num_prompts: usize, seed: u64) -> Self {
+        assert!(rate > 0.0 && num_prompts > 0);
+        let mut rng = XorShift128::new(seed);
+        let mut t = 0.0f64;
+        let events = (0..n)
+            .map(|i| {
+                t += -rng.next_f64().ln() / rate; // Exp(rate) inter-arrival
+                TraceEvent {
+                    at: std::time::Duration::from_secs_f64(t),
+                    prompt_idx: i % num_prompts,
+                }
+            })
+            .collect();
+        Self { events }
+    }
+
+    pub fn duration(&self) -> std::time::Duration {
+        self.events.last().map(|e| e.at).unwrap_or_default()
+    }
+
+    /// Empirical arrival rate (events per second over the span).
+    pub fn empirical_rate(&self) -> f64 {
+        let d = self.duration().as_secs_f64();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.events.len() as f64 / d
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_sorted_and_rate_is_close() {
+        let tr = PoissonTrace::generate(100.0, 2000, 10, 3);
+        assert_eq!(tr.events.len(), 2000);
+        for w in tr.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let rate = tr.empirical_rate();
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn prompt_indices_cycle() {
+        let tr = PoissonTrace::generate(10.0, 25, 10, 1);
+        assert_eq!(tr.events[0].prompt_idx, 0);
+        assert_eq!(tr.events[10].prompt_idx, 0);
+        assert_eq!(tr.events[24].prompt_idx, 4);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = PoissonTrace::generate(50.0, 100, 5, 9);
+        let b = PoissonTrace::generate(50.0, 100, 5, 9);
+        assert_eq!(a.duration(), b.duration());
+    }
+}

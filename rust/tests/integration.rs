@@ -1,0 +1,313 @@
+//! Cross-module integration tests (artifact-free: SimLm backends).
+//!
+//! These exercise whole-system behaviours the unit tests cannot: verifier
+//! comparisons under one engine, paper-property audits (drafter
+//! invariance end-to-end, order sensitivity), serving-stack round trips,
+//! and the compression pipelines end to end.
+
+use gls_serve::coordinator::engine::SpecDecodeEngine;
+use gls_serve::coordinator::kv::PagedKvCache;
+use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::scheduler::Scheduler;
+use gls_serve::coordinator::sequence::{Request, SequenceState};
+use gls_serve::coordinator::server::Server;
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::backend::ModelPair;
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::model::sim::SimLm;
+use gls_serve::spec::types::VerifierKind;
+use gls_serve::workload::suites::SUITES;
+
+fn mk_engine(
+    verifier: VerifierKind,
+    k: usize,
+    l: usize,
+    divergence: f32,
+    seed: u64,
+    draft_temps: &[f64],
+    target_temp: f64,
+) -> SpecDecodeEngine {
+    let (draft, target) = SimLm::pair(48, seed, divergence);
+    let draft_params = if draft_temps.is_empty() {
+        vec![SamplingParams::new(1.0, Some(50))]
+    } else {
+        draft_temps.iter().map(|&t| SamplingParams::new(t, Some(50))).collect()
+    };
+    let cfg = EngineConfig {
+        num_drafts: k,
+        block_len: l,
+        verifier,
+        target_params: SamplingParams::new(target_temp, Some(50)),
+        draft_params,
+        max_seq_len: 512,
+        seed,
+    };
+    SpecDecodeEngine::new(
+        cfg,
+        ModelPair::new(Box::new(draft), Box::new(target)),
+        PagedKvCache::new(4096, 16),
+    )
+}
+
+fn be_of(engine: &mut SpecDecodeEngine, prompts: usize, new_tokens: usize) -> f64 {
+    let mut total = 0.0;
+    for i in 0..prompts {
+        let req = Request::new(i as u64, vec![i as u32, 1, 2], new_tokens);
+        let mut seq = SequenceState::from_request(&req);
+        engine.decode_sequence(&mut seq);
+        total += seq.block_efficiency();
+    }
+    total / prompts as f64
+}
+
+#[test]
+fn multi_draft_schemes_cluster_and_beat_single_draft_iid() {
+    // Table 1's qualitative content: with i.i.d. drafts, GLS ≈ SpecInfer ≈
+    // SpecTr on BE, all above the K=1 single-draft baseline and the Daliri
+    // single-draft coupling.
+    let run = |vk: VerifierKind, k: usize| {
+        let mut eng = mk_engine(vk, k, 4, 2.0, 11, &[], 1.0);
+        be_of(&mut eng, 12, 40)
+    };
+    let gls = run(VerifierKind::Gls, 8);
+    let specinfer = run(VerifierKind::SpecInfer, 8);
+    let spectr = run(VerifierKind::SpecTr, 8);
+    let single = run(VerifierKind::SingleDraft, 1);
+    let daliri = run(VerifierKind::Daliri, 1);
+    assert!(gls > single + 0.1, "gls {gls} vs single {single}");
+    assert!(specinfer > single + 0.1);
+    assert!(spectr > single + 0.1);
+    assert!((gls - specinfer).abs() < 0.5, "gls {gls} vs specinfer {specinfer}");
+    assert!((gls - spectr).abs() < 0.5, "gls {gls} vs spectr {spectr}");
+    assert!(gls > daliri, "gls {gls} vs daliri {daliri}");
+}
+
+#[test]
+fn block_efficiency_monotone_in_k_for_gls() {
+    let be: Vec<f64> = [1, 2, 4, 8]
+        .iter()
+        .map(|&k| {
+            let mut eng = mk_engine(VerifierKind::Gls, k, 4, 2.0, 5, &[], 1.0);
+            be_of(&mut eng, 10, 40)
+        })
+        .collect();
+    for w in be.windows(2) {
+        assert!(w[1] >= w[0] - 0.08, "BE not (weakly) monotone: {be:?}");
+    }
+    assert!(be[3] > be[0] + 0.1, "K=8 should clearly beat K=1: {be:?}");
+}
+
+#[test]
+fn gls_order_insensitive_specinfer_order_sensitive() {
+    // Table 2's asymmetry: swap two mismatched drafters' temperatures and
+    // GLS's BE moves much less than SpecInfer's.
+    let run = |vk: VerifierKind, temps: &[f64]| {
+        let mut eng = mk_engine(vk, 2, 5, 2.0, 23, temps, 2.0);
+        be_of(&mut eng, 16, 40)
+    };
+    let gls_a = run(VerifierKind::Gls, &[0.5, 2.0]);
+    let gls_b = run(VerifierKind::Gls, &[2.0, 0.5]);
+    let si_a = run(VerifierKind::SpecInfer, &[0.5, 2.0]);
+    let si_b = run(VerifierKind::SpecInfer, &[2.0, 0.5]);
+    let gls_gap = (gls_a - gls_b).abs();
+    let si_gap = (si_a - si_b).abs();
+    // GLS treats drafts symmetrically; SpecInfer favors the first.
+    assert!(
+        gls_gap <= si_gap + 0.05,
+        "gls gap {gls_gap:.3} vs specinfer gap {si_gap:.3} (a/b: {gls_a:.2}/{gls_b:.2} vs {si_a:.2}/{si_b:.2})"
+    );
+}
+
+#[test]
+fn drafter_invariance_audit_end_to_end() {
+    // Def. 1 at the system level: run the GLS engine twice with the same
+    // seed but different draft models. Whenever the two runs have produced
+    // identical draft token matrices for a block, their outputs match.
+    // We force that by replaying with divergence-0 drafts (draft == target
+    // in run A; a *different but coupled* drafter in run B would change
+    // tokens, so instead we verify the pure verifier path in-unit) —
+    // here we check the weaker end-to-end consequence: same seed + same
+    // draft model ⇒ bit-identical outputs (full determinism).
+    let out = |_which: u8| {
+        let mut eng = mk_engine(VerifierKind::Gls, 4, 4, 1.5, 99, &[], 1.0);
+        let req = Request::new(1, vec![3, 1, 4], 32);
+        let mut seq = SequenceState::from_request(&req);
+        eng.decode_sequence(&mut seq);
+        seq.tokens
+    };
+    assert_eq!(out(0), out(1), "engine must be deterministic per seed");
+}
+
+#[test]
+fn sequence_correctness_chi_square_all_multi_draft_verifiers() {
+    // Prop. 3-style check at engine level for every verifier: the marginal
+    // of the first generated token matches the target model's next-token
+    // distribution (temperature + top-k applied).
+    let vocab = 24;
+    let trials = 3000u64;
+    for &vk in &[VerifierKind::Gls, VerifierKind::GlsStrong, VerifierKind::SpecInfer, VerifierKind::SpecTr]
+    {
+        let (draft, target) = SimLm::pair(vocab, 31, 2.5);
+        let q_expect = gls_serve::spec::types::Categorical::from_logits(
+            &target.logits_at(&[2, 7]),
+            1.0,
+            None,
+        );
+        let cfg = EngineConfig {
+            num_drafts: 3,
+            block_len: 2,
+            verifier: vk,
+            target_params: SamplingParams::new(1.0, None),
+            draft_params: vec![SamplingParams::new(1.0, None)],
+            max_seq_len: 64,
+            seed: 1234,
+        };
+        let mut eng = SpecDecodeEngine::new(
+            cfg,
+            ModelPair::new(Box::new(draft), Box::new(target)),
+            PagedKvCache::new(4096, 16),
+        );
+        let mut counts = vec![0usize; vocab];
+        for lane in 0..trials {
+            let req = Request { id: lane, prompt: vec![2, 7], max_new_tokens: 1, rng_lane: lane };
+            let mut seq = SequenceState::from_request(&req);
+            eng.decode_sequence(&mut seq);
+            counts[seq.tokens[2] as usize] += 1;
+        }
+        let mut chi2 = 0.0;
+        let mut dof = 0;
+        for i in 0..vocab {
+            let e = q_expect.prob(i) * trials as f64;
+            if e > 2.0 {
+                chi2 += (counts[i] as f64 - e).powi(2) / e;
+                dof += 1;
+            }
+        }
+        // 99.9th percentile of chi2(dof) ≈ dof + 3*sqrt(2 dof) + slack.
+        let limit = dof as f64 + 4.0 * (2.0 * dof as f64).sqrt() + 10.0;
+        assert!(chi2 < limit, "{vk:?}: chi2 {chi2:.1} over dof {dof} (limit {limit:.1})");
+    }
+}
+
+#[test]
+fn serving_stack_round_trip_all_policies() {
+    for policy in [RoutingPolicy::RoundRobin, RoutingPolicy::LeastLoaded] {
+        let sc = ServerConfig { workers: 3, ..ServerConfig::default() };
+        let ec = EngineConfig {
+            verifier: VerifierKind::Gls,
+            num_drafts: 4,
+            block_len: 4,
+            max_seq_len: 256,
+            ..EngineConfig::default()
+        };
+        let workload: Vec<(Vec<u32>, usize)> =
+            (0..24).map(|i| (vec![i as u32, 2, 3], 12)).collect();
+        let report = Server::serve_all(
+            &sc,
+            &ec,
+            policy,
+            |_| {
+                let (d, t) = SimLm::pair(32, 8, 1.5);
+                ModelPair::new(Box::new(d), Box::new(t))
+            },
+            workload,
+        );
+        assert_eq!(report.results.len(), 24);
+        for r in &report.results {
+            assert_eq!(r.tokens.len(), 15, "policy {policy:?}");
+        }
+        assert!(report.metrics.block_efficiency() > 1.0);
+    }
+}
+
+#[test]
+fn scheduler_under_pressure_matches_unconstrained_outputs() {
+    // KV pressure changes *scheduling*, never *content*: outputs under a
+    // tiny KV budget equal outputs under an ample one.
+    let run = |pages: usize| {
+        let (d, t) = SimLm::pair(32, 77, 1.5);
+        let cfg = EngineConfig {
+            verifier: VerifierKind::Gls,
+            num_drafts: 2,
+            block_len: 4,
+            max_seq_len: 128,
+            ..EngineConfig::default()
+        };
+        let mut eng = SpecDecodeEngine::new(
+            cfg,
+            ModelPair::new(Box::new(d), Box::new(t)),
+            PagedKvCache::new(pages, 16),
+        );
+        let mut sched = Scheduler::new(8);
+        for i in 0..6 {
+            sched.submit(Request::new(i, vec![1, 2, 3], 16));
+        }
+        let mut results = sched.run_to_completion(&mut eng);
+        results.sort_by_key(|r| r.id);
+        results.into_iter().map(|r| r.tokens).collect::<Vec<_>>()
+    };
+    assert_eq!(run(4), run(4096));
+}
+
+#[test]
+fn suite_difficulty_ordering_holds() {
+    // The calibrated suites must order single-draft BE the same way the
+    // paper's datasets do: gsm8k easiest, drop hardest.
+    let be: Vec<(f64, &str)> = SUITES
+        .iter()
+        .map(|s| {
+            let pair = s.model_pair(48, 3);
+            let cfg = EngineConfig {
+                verifier: VerifierKind::SingleDraft,
+                num_drafts: 1,
+                block_len: 4,
+                target_params: SamplingParams::new(1.0, Some(50)),
+                draft_params: vec![SamplingParams::new(1.0, Some(50))],
+                max_seq_len: 512,
+                seed: 17,
+            };
+            let mut eng = SpecDecodeEngine::new(cfg, pair, PagedKvCache::new(4096, 16));
+            (be_of(&mut eng, 10, 40), s.name)
+        })
+        .collect();
+    let gsm = be.iter().find(|(_, n)| *n == "gsm8k-sim").unwrap().0;
+    let drop = be.iter().find(|(_, n)| *n == "drop-sim").unwrap().0;
+    assert!(gsm > drop, "difficulty ordering broken: {be:?}");
+}
+
+#[test]
+fn compression_pipelines_end_to_end() {
+    use gls_serve::compression::codec::RandomnessMode;
+    use gls_serve::compression::gaussian::{run_gaussian, GaussianSource};
+    use gls_serve::compression::image::{run_image, synthetic_digits, AnalyticVae};
+
+    // Gaussian: K=3 GLS beats baseline at low rate, distortion sane.
+    let g_gls = run_gaussian(
+        GaussianSource::paper_default(0.005),
+        3,
+        4,
+        1 << 10,
+        300,
+        3,
+        RandomnessMode::Independent,
+    );
+    let g_bl = run_gaussian(
+        GaussianSource::paper_default(0.005),
+        3,
+        4,
+        1 << 10,
+        300,
+        3,
+        RandomnessMode::Shared,
+    );
+    assert!(g_gls.match_rate > g_bl.match_rate, "{} vs {}", g_gls.match_rate, g_bl.match_rate);
+    assert!(g_gls.mse < 1.0);
+
+    // Image: pipeline runs and GLS at K=4 beats its own K=1.
+    let imgs = synthetic_digits(120, 8);
+    let vae = AnalyticVae::fit(&imgs[..80], 4, 0.05, 2);
+    let k1 = run_image(&vae, &imgs[80..], 1, 8, 128, 5, RandomnessMode::Independent);
+    let k4 = run_image(&vae, &imgs[80..], 4, 8, 128, 5, RandomnessMode::Independent);
+    assert!(k4.match_rate >= k1.match_rate);
+    assert!(k4.mse <= k1.mse + 1e-3);
+}

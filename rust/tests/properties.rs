@@ -1,0 +1,312 @@
+//! Property-based tests (in-house `testkit::forall`) on the paper's
+//! mathematical guarantees and the coordinator's state invariants.
+
+use gls_serve::spec::gls::{sample_gls, sample_gls_diverse, GlsVerifier};
+use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical, VerifierKind};
+use gls_serve::spec::{lml, make_verifier, optimal};
+use gls_serve::stats::rng::{CounterRng, XorShift128};
+use gls_serve::testkit::{forall, gen_categorical, gen_peaked_categorical, gen_sparse_categorical};
+
+#[derive(Debug)]
+struct Instance {
+    p: Categorical,
+    q: Categorical,
+    k: usize,
+}
+
+fn gen_instance(rng: &mut XorShift128) -> Instance {
+    let n = 2 + rng.next_below(12) as usize;
+    let k = 1 + rng.next_below(8) as usize;
+    let sparse = rng.next_below(4) == 0;
+    let (p, q) = if sparse {
+        let support = 1 + rng.next_below(n as u64) as usize;
+        (gen_sparse_categorical(rng, n, support.max(2)), gen_categorical(rng, n))
+    } else if rng.next_below(2) == 0 {
+        (gen_peaked_categorical(rng, n, 0.7), gen_peaked_categorical(rng, n, 1.3))
+    } else {
+        (gen_categorical(rng, n), gen_categorical(rng, n))
+    };
+    Instance { p, q, k }
+}
+
+#[test]
+fn prop_lml_bound_is_valid_lower_bound() {
+    // Empirical acceptance of GLS ≥ Theorem 1 bound, across random shapes
+    // including sparse supports and peaked (LLM-like) distributions.
+    forall(101, 30, gen_instance, |inst| {
+        let rng = CounterRng::new(7);
+        let trials = 6000;
+        let hits = (0..trials)
+            .filter(|&t| sample_gls(&inst.p, &inst.q, inst.k, &rng, t as u64).accept)
+            .count();
+        let emp = hits as f64 / trials as f64;
+        let bound = lml::theorem1_bound(&inst.p, &inst.q, inst.k);
+        if emp + 0.03 < bound {
+            return Err(format!("empirical {emp:.4} < LML bound {bound:.4} (K={})", inst.k));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_acceptance_never_exceeds_upper_bound() {
+    forall(202, 30, gen_instance, |inst| {
+        let rng = CounterRng::new(9);
+        let trials = 6000;
+        let hits = (0..trials)
+            .filter(|&t| sample_gls(&inst.p, &inst.q, inst.k, &rng, t as u64).accept)
+            .count();
+        let emp = hits as f64 / trials as f64;
+        let ub = optimal::upper_bound(&inst.p, &inst.q, inst.k);
+        if emp > ub + 0.03 {
+            return Err(format!("empirical {emp:.4} > optimal bound {ub:.4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gls_marginals_preserved() {
+    // Prop. 1 over random instances: Y ~ q and X^(k) ~ p (chi-square).
+    forall(303, 12, gen_instance, |inst| {
+        let rng = CounterRng::new(13);
+        let trials = 20_000usize;
+        let n = inst.p.len();
+        let mut yc = vec![0usize; n];
+        let mut xc = vec![0usize; n];
+        for t in 0..trials {
+            let out = sample_gls(&inst.p, &inst.q, inst.k, &rng, t as u64);
+            yc[out.y] += 1;
+            xc[out.xs[0]] += 1;
+        }
+        let chi = |counts: &[usize], dist: &Categorical| {
+            let mut c2 = 0.0;
+            let mut dof = 0;
+            for i in 0..n {
+                let e = dist.prob(i) * trials as f64;
+                if e > 4.0 {
+                    c2 += (counts[i] as f64 - e).powi(2) / e;
+                    dof += 1;
+                }
+            }
+            (c2, dof)
+        };
+        let (cy, dy) = chi(&yc, &inst.q);
+        let (cx, dx) = chi(&xc, &inst.p);
+        let lim = |d: usize| d as f64 + 5.0 * (2.0 * d as f64).sqrt() + 12.0;
+        if cy > lim(dy) {
+            return Err(format!("Y marginal chi2 {cy:.1} (dof {dy})"));
+        }
+        if cx > lim(dx) {
+            return Err(format!("X marginal chi2 {cx:.1} (dof {dx})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diverse_proposals_marginals_preserved() {
+    // Prop. 5: per-draft marginals with heterogeneous proposals.
+    forall(404, 10, |rng| {
+        let n = 2 + rng.next_below(8) as usize;
+        let k = 1 + rng.next_below(4) as usize;
+        let ps: Vec<Categorical> = (0..k).map(|_| gen_categorical(rng, n)).collect();
+        let q = gen_categorical(rng, n);
+        (ps, q)
+    }, |(ps, q)| {
+        let rng = CounterRng::new(21);
+        let trials = 15_000usize;
+        let n = q.len();
+        let k = ps.len();
+        let mut xc = vec![vec![0usize; n]; k];
+        for t in 0..trials {
+            let out = sample_gls_diverse(ps, q, &rng, t as u64);
+            for (kk, &x) in out.xs.iter().enumerate() {
+                xc[kk][x] += 1;
+            }
+        }
+        for kk in 0..k {
+            for i in 0..n {
+                let f = xc[kk][i] as f64 / trials as f64;
+                if (f - ps[kk].prob(i)).abs() > 0.03 {
+                    return Err(format!("draft {kk} marginal off at {i}: {f} vs {}", ps[kk].prob(i)));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[derive(Debug)]
+struct BlockCase {
+    input: BlockInput,
+    seed: u64,
+}
+
+fn gen_block(rng: &mut XorShift128) -> BlockCase {
+    let n = 3 + rng.next_below(8) as usize;
+    let k = 1 + rng.next_below(5) as usize;
+    let l = 1 + rng.next_below(5) as usize;
+    let seed = rng.next_u64();
+    let p: Vec<Categorical> = (0..l).map(|_| gen_categorical(rng, n)).collect();
+    let q: Vec<Categorical> = (0..=l).map(|_| gen_categorical(rng, n)).collect();
+    let crng = CounterRng::new(seed);
+    let mut draft_tokens = vec![Vec::with_capacity(l); k];
+    for kk in 0..k {
+        for j in 0..l {
+            draft_tokens[kk].push(p[j].sample_race(&crng, j as u64, kk as u64) as u32);
+        }
+    }
+    BlockCase {
+        input: BlockInput {
+            draft_tokens,
+            draft_dists: vec![p; k],
+            target_dists: vec![q; k],
+        },
+        seed,
+    }
+}
+
+#[test]
+fn prop_every_verifier_emits_valid_blocks() {
+    // Structural invariants across all verifiers and random blocks:
+    // τ = accepted + 1, accepted ≤ L, accepted prefix matches a draft,
+    // tokens within the alphabet, determinism.
+    forall(505, 40, gen_block, |case| {
+        for &vk in VerifierKind::all() {
+            let v = make_verifier(vk);
+            let rng = CounterRng::new(case.seed);
+            let out = v.verify_block(&case.input, &rng, 0);
+            let out2 = v.verify_block(&case.input, &rng, 0);
+            if out != out2 {
+                return Err(format!("{vk:?} nondeterministic"));
+            }
+            let l = case.input.block_len();
+            let n = case.input.target_dists[0][0].len() as u32;
+            if out.tokens.len() != out.accepted + 1 {
+                return Err(format!("{vk:?}: τ {} != accepted {} + 1", out.tokens.len(), out.accepted));
+            }
+            if out.accepted > l {
+                return Err(format!("{vk:?}: accepted {} > L {l}", out.accepted));
+            }
+            if out.tokens.iter().any(|&t| t >= n) {
+                return Err(format!("{vk:?}: token out of alphabet"));
+            }
+            if let Some(sd) = out.surviving_draft {
+                let lane = if vk.is_single_draft() { 0 } else { sd };
+                for j in 0..out.accepted {
+                    if case.input.draft_tokens[lane][j] != out.tokens[j] {
+                        return Err(format!("{vk:?}: accepted prefix mismatch"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gls_conditional_invariance_under_draft_dist_swaps() {
+    // Def. 1 as a property: replace draft distributions (not tokens), the
+    // conditional-GLS output must not change at all.
+    forall(606, 40, gen_block, |case| {
+        let v = GlsVerifier::conditional();
+        let rng = CounterRng::new(case.seed ^ 0xAB);
+        let base = v.verify_block(&case.input, &rng, 3);
+        let mut swapped = case.input.clone();
+        let mut gen = XorShift128::new(case.seed ^ 0xCD);
+        let n = case.input.target_dists[0][0].len();
+        for kk in 0..swapped.k() {
+            for j in 0..swapped.block_len() {
+                swapped.draft_dists[kk][j] = gen_categorical(&mut gen, n);
+            }
+        }
+        let out = v.verify_block(&swapped, &rng, 3);
+        if base != out {
+            return Err("conditional invariance violated".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kv_cache_never_corrupts_under_random_ops() {
+    // Coordinator state invariant under adversarial op sequences.
+    use gls_serve::coordinator::kv::PagedKvCache;
+    forall(707, 20, |rng| rng.next_u64(), |&seed| {
+        let mut rng = XorShift128::new(seed);
+        let total = 16 + rng.next_below(64) as usize;
+        let page = 1 + rng.next_below(32) as usize;
+        let mut kv = PagedKvCache::new(total, page);
+        let mut live: Vec<(u64, bool)> = Vec::new(); // (id, has_reservation)
+        let mut next = 0u64;
+        for _ in 0..500 {
+            match rng.next_below(4) {
+                0 => {
+                    let prompt = 1 + rng.next_below(40) as usize;
+                    let max = prompt + rng.next_below(40) as usize;
+                    if kv.register(next, prompt, max, 6).is_ok() {
+                        live.push((next, false));
+                    }
+                    next += 1;
+                }
+                1 => {
+                    if let Some(e) = live.iter_mut().find(|(_, r)| !*r) {
+                        if kv.reserve_block(e.0, 1 + rng.next_below(6) as usize).is_ok() {
+                            e.1 = true;
+                        }
+                    }
+                }
+                2 => {
+                    if let Some(e) = live.iter_mut().find(|(_, r)| *r) {
+                        kv.commit(e.0, rng.next_below(2) as usize).unwrap();
+                        e.1 = false;
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.next_below(live.len() as u64) as usize;
+                        let (id, _) = live.swap_remove(i);
+                        kv.release(id).unwrap();
+                    }
+                }
+            }
+            kv.check_invariants().map_err(|e| format!("seed {seed}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spectr_calibration_is_exact_coupling() {
+    // K-SEQ with calibrated γ preserves the target marginal — checked via
+    // total-variation of the analytic output law vs q (no sampling noise):
+    // law(y) = c·min(p, q/γ) + residual mass (see spectr.rs derivation).
+    forall(808, 60, |rng| {
+        let n = 2 + rng.next_below(10) as usize;
+        let k = 1 + rng.next_below(8) as usize;
+        (gen_categorical(rng, n), gen_categorical(rng, n), k)
+    }, |(p, q, k)| {
+        let plan = gls_serve::spec::spectr::calibrate(p, q, *k);
+        let s = plan.s;
+        let c = plan.c;
+        let n = p.len();
+        let mut law = vec![0.0; n];
+        for y in 0..n {
+            law[y] = c * p.prob(y).min(q.prob(y) / plan.gamma);
+        }
+        // All candidates rejected with probability (1-s)^K = 1 - c·s, and
+        // the residual distribution then fires: law += (1-s)^K · res(y).
+        let res_scale = (1.0 - s).powi(*k as i32);
+        if let Some(r) = &plan.residual {
+            for y in 0..n {
+                law[y] += res_scale * r.prob(y);
+            }
+        }
+        let tv: f64 = 0.5 * (0..n).map(|y| (law[y] - q.prob(y)).abs()).sum::<f64>();
+        if tv > 1e-6 {
+            return Err(format!("K-SEQ law deviates from q: TV {tv:.2e} (γ={})", plan.gamma));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,208 @@
+//! Integration tests over the AOT artifacts: the full L1→L2→L3 composition.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` is missing —
+//! run `make artifacts` first. Everything else in the suite runs without
+//! artifacts.
+
+use gls_serve::compression::image::{left_crop, right_half, synthetic_digits, LatentCodecModel};
+use gls_serve::coordinator::engine::SpecDecodeEngine;
+use gls_serve::coordinator::kv::PagedKvCache;
+use gls_serve::coordinator::sequence::{Request, SequenceState};
+use gls_serve::coordinator::EngineConfig;
+use gls_serve::model::backend::{LmBackend, ModelPair};
+use gls_serve::model::sampling::SamplingParams;
+use gls_serve::model::tokenizer::ByteTokenizer;
+use gls_serve::runtime::{ArtifactManifest, PjrtLm, PjrtVae};
+use gls_serve::spec::types::VerifierKind;
+
+fn manifest() -> Option<ArtifactManifest> {
+    match gls_serve::runtime::Artifacts::discover() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_lm_loads_and_produces_finite_logits() {
+    let Some(m) = manifest() else { return };
+    let mut lm = PjrtLm::load(&m, "target_lm").expect("load target_lm");
+    assert_eq!(lm.vocab(), 259);
+    let tok = ByteTokenizer::new();
+    let seqs = vec![tok.encode("ada buys 3 apples"), tok.encode("def sum")];
+    let logits = lm.next_logits(&seqs);
+    assert_eq!(logits.len(), 2);
+    assert_eq!(logits[0].len(), 259);
+    assert!(logits.iter().flatten().all(|x| x.is_finite()));
+    // The trained model should be context-sensitive.
+    assert_ne!(logits[0], logits[1]);
+}
+
+#[test]
+fn pjrt_lm_span_consistent_with_next() {
+    let Some(m) = manifest() else { return };
+    let mut lm = PjrtLm::load(&m, "draft_lm").expect("load draft_lm");
+    let tok = ByteTokenizer::new();
+    let seq = tok.encode("cleo counts 7 coins");
+    let span = lm.span_logits(&[seq.clone()], seq.len() - 2);
+    // Span covers prefix lengths len-3 ..= len: 4 positions.
+    assert_eq!(span[0].len(), 4);
+    let next = lm.next_logits(&[seq.clone()]);
+    // Last span position == next-token logits for the full sequence.
+    for (a, b) in span[0].last().unwrap().iter().zip(&next[0]) {
+        assert!((a - b).abs() < 1e-4, "span/next disagree: {a} vs {b}");
+    }
+}
+
+#[test]
+fn trained_draft_is_aligned_with_target() {
+    // The whole premise of speculative decoding: the draft's next-token
+    // distribution is close to the target's on in-distribution text.
+    let Some(m) = manifest() else { return };
+    let mut draft = PjrtLm::load(&m, "draft_lm").unwrap();
+    let mut target = PjrtLm::load(&m, "target_lm").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompts = ["bob sells 12 eggs and then 5 more. total:", "def min3(xs): return "];
+    let mut tv_total = 0.0;
+    for p in prompts {
+        let seq = tok.encode(p);
+        let dq = gls_serve::spec::types::Categorical::from_logits(
+            &draft.next_logits(&[seq.clone()])[0],
+            1.0,
+            None,
+        );
+        let tq = gls_serve::spec::types::Categorical::from_logits(
+            &target.next_logits(&[seq])[0],
+            1.0,
+            None,
+        );
+        tv_total += dq.tv_distance(&tq);
+    }
+    let mean_tv = tv_total / prompts.len() as f64;
+    assert!(mean_tv < 0.8, "draft/target hopelessly misaligned: TV {mean_tv}");
+}
+
+#[test]
+fn engine_decodes_through_pjrt_backends() {
+    // Full-stack smoke: coordinator → PJRT artifacts → Pallas-bearing HLO.
+    let Some(m) = manifest() else { return };
+    let draft = PjrtLm::load(&m, "draft_lm").unwrap();
+    let target = PjrtLm::load(&m, "target_lm").unwrap();
+    let cfg = EngineConfig {
+        num_drafts: 2,
+        block_len: 3,
+        verifier: VerifierKind::Gls,
+        target_params: SamplingParams::new(1.0, Some(50)),
+        draft_params: vec![SamplingParams::new(1.0, Some(50))],
+        max_seq_len: 96,
+        seed: 7,
+    };
+    let mut eng = SpecDecodeEngine::new(
+        cfg,
+        ModelPair::new(Box::new(draft), Box::new(target)),
+        PagedKvCache::new(256, 16),
+    );
+    let tok = ByteTokenizer::new();
+    let req = Request::new(1, tok.encode("ada buys 3 apples and then 4 more. total:"), 12);
+    let mut seq = SequenceState::from_request(&req);
+    eng.decode_sequence(&mut seq);
+    assert_eq!(seq.generated(), 12);
+    assert!(seq.block_efficiency() > 1.0, "BE {}", seq.block_efficiency());
+    let text = tok.decode(&seq.tokens);
+    assert!(!text.is_empty());
+    eprintln!("pjrt decode: BE={:.2} text={text:?}", seq.block_efficiency());
+}
+
+#[test]
+fn pjrt_vae_roundtrips() {
+    let Some(m) = manifest() else { return };
+    let vae = PjrtVae::load(&m).expect("load vae");
+    assert_eq!(vae.latent_dim(), 4);
+    let imgs = synthetic_digits(3, 77);
+    let src = right_half(&imgs[0]);
+    let (mu, var) = vae.encode(&src);
+    assert_eq!(mu.len(), 4);
+    assert!(var.iter().all(|&v| v > 0.0));
+    let feat = vae.project(&left_crop(&imgs[0], 3, 10));
+    assert_eq!(feat.len(), 32);
+    let lr = vae.estimate_logratio(&mu, &feat);
+    assert!(lr.is_finite());
+    let recon = vae.decode(&mu, &feat);
+    assert_eq!(recon.len(), 392);
+    assert!(recon.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    // Smoke-level sanity on the estimator (the *statistical*
+    // discriminativeness assertion lives in python/tests/test_vae_stats.py,
+    // where evaluating hundreds of pairs is cheap): outputs are finite and
+    // vary with the side features.
+    let (mu0, _) = vae.encode(&right_half(&imgs[0]));
+    let fa = vae.project(&left_crop(&imgs[0], 0, 0));
+    let fb = vae.project(&left_crop(&imgs[1], 7, 21));
+    let la = vae.estimate_logratio(&mu0, &fa);
+    let lb = vae.estimate_logratio(&mu0, &fb);
+    assert!(la.is_finite() && lb.is_finite());
+    assert_ne!(la, lb, "estimator ignores side features");
+}
+
+#[test]
+fn gls_select_artifact_matches_native_rust() {
+    // The L1 kernel through the full AOT path agrees with the Rust-native
+    // implementation given identical uniforms — the cross-layer contract.
+    let Some(m) = manifest() else { return };
+    use gls_serve::runtime::client::{compile_hlo_file, execute_tuple, new_client};
+    let client = new_client().unwrap();
+    let exe = compile_hlo_file(&client, &m.path("gls_select").unwrap()).unwrap();
+    let k = m.get_usize("gls_k").unwrap();
+    let n = m.get_usize("gls_n").unwrap();
+
+    use gls_serve::stats::rng::CounterRng;
+    let rng = CounterRng::new(42);
+    for trial in 0..5u64 {
+        // Build u, q, p on the Rust side.
+        let mut u = vec![0f32; k * n];
+        for kk in 0..k {
+            for i in 0..n {
+                u[kk * n + i] = rng.uniform(trial, kk as u64, i as u64) as f32;
+            }
+        }
+        let mut gen = gls_serve::stats::rng::XorShift128::new(trial ^ 0xBEE);
+        let q = gls_serve::testkit::gen_categorical(&mut gen, n);
+        let p = gls_serve::testkit::gen_categorical(&mut gen, n);
+        let qm: Vec<f32> = (0..k * n).map(|idx| q.prob(idx % n) as f32).collect();
+        let pm: Vec<f32> = (0..k * n).map(|idx| p.prob(idx % n) as f32).collect();
+
+        let lit = |data: &[f32]| {
+            xla::Literal::vec1(data).reshape(&[k as i64, n as i64]).unwrap()
+        };
+        let outs = execute_tuple(&exe, &[lit(&u), lit(&qm), lit(&pm)]).unwrap();
+        let y_artifact = outs[0].to_vec::<i32>().unwrap()[0] as usize;
+        let xs_artifact: Vec<i32> = outs[1].to_vec().unwrap();
+
+        // Native recomputation in f32 (matching the kernel's dtype) so the
+        // argmins compare exactly.
+        let mut y_best = f32::INFINITY;
+        let mut y_arg = 0usize;
+        let mut x_best = vec![f32::INFINITY; k];
+        let mut x_arg = vec![0usize; k];
+        for kk in 0..k {
+            for i in 0..n {
+                let s = -(u[kk * n + i]).ln();
+                let qv = q.prob(i) as f32;
+                let pv = p.prob(i) as f32;
+                if qv > 0.0 && s / qv < y_best {
+                    y_best = s / qv;
+                    y_arg = i;
+                }
+                if pv > 0.0 && s / pv < x_best[kk] {
+                    x_best[kk] = s / pv;
+                    x_arg[kk] = i;
+                }
+            }
+        }
+        assert_eq!(y_artifact, y_arg, "trial {trial}: Y mismatch");
+        for kk in 0..k {
+            assert_eq!(xs_artifact[kk] as usize, x_arg[kk], "trial {trial}: X{kk} mismatch");
+        }
+    }
+}
