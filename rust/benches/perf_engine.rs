@@ -2,32 +2,82 @@
 //!
 //! Measures, per layer:
 //!   L3a  verify-only: GLS / SpecInfer / SpecTr block verification on
-//!        synthetic BlockInputs (pure coordinator math, no model);
+//!        synthetic BlockInputs (pure coordinator math, no model), plus the
+//!        scalar-vs-kernel GLS comparison on top-k-50 truncated
+//!        distributions (the paper's LLM regime);
 //!   L3b  end-to-end engine blocks/s on the SimLm backend at several
 //!        batch sizes (continuous-batching efficiency);
 //!   L3c  serving stack requests/s through router + scheduler;
-//!   L1/L2 (when artifacts exist) PJRT forward latency per call and
-//!        engine blocks/s on the PJRT backend.
+//!   L1/L2 (with the `pjrt` feature and artifacts) PJRT forward latency
+//!        per call and the GLS select artifact vs native.
 //!
 //! Run before/after every optimization; EXPERIMENTS.md §Perf records the
-//! iteration log.
+//! iteration log. Every case is also appended to `BENCH_perf.json`
+//! (override the path with `BENCH_PERF_JSON`) so the perf trajectory is
+//! machine-readable — CI smoke-checks that file's shape.
 
 use std::time::Duration;
 
-use gls_serve::bench::{time_budget, Table};
+use gls_serve::bench::{time_budget, BenchResult, Table};
 use gls_serve::coordinator::engine::SpecDecodeEngine;
 use gls_serve::coordinator::kv::PagedKvCache;
 use gls_serve::coordinator::router::RoutingPolicy;
 use gls_serve::coordinator::sequence::Request;
 use gls_serve::coordinator::server::Server;
 use gls_serve::coordinator::{EngineConfig, ServerConfig};
-use gls_serve::model::backend::{LmBackend, ModelPair};
+use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
 use gls_serve::model::sim::SimLm;
-use gls_serve::spec::types::{BlockInput, Categorical, VerifierKind};
+use gls_serve::spec::gls::GlsVerifier;
 use gls_serve::spec::make_verifier;
+use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical, VerifierKind};
 use gls_serve::stats::rng::{CounterRng, XorShift128};
 use gls_serve::testkit::gen_categorical;
+
+/// Flat JSON sink for the machine-readable perf log. Hand-rolled because
+/// the environment is offline (no serde); the schema is deliberately
+/// trivial: one array of flat entries plus a summary object.
+struct PerfJson {
+    entries: Vec<String>,
+    summary: Vec<(String, f64)>,
+}
+
+impl PerfJson {
+    fn new() -> Self {
+        Self { entries: Vec::new(), summary: Vec::new() }
+    }
+
+    fn entry(&mut self, section: &str, case: &str, r: &BenchResult) {
+        let us = r.per_iter.mean * 1e6;
+        let per_s = if r.per_iter.mean > 0.0 { 1.0 / r.per_iter.mean } else { 0.0 };
+        self.entries.push(format!(
+            "{{\"section\":\"{}\",\"case\":\"{}\",\"us_per_iter\":{:.3},\"iters_per_s\":{:.3},\"iters\":{}}}",
+            section, case, us, per_s, r.iters
+        ));
+    }
+
+    fn metric(&mut self, key: &str, value: f64) {
+        self.summary.push((key.to_string(), value));
+    }
+
+    fn write(&self) {
+        let path = std::env::var("BENCH_PERF_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
+        let summary: Vec<String> = self
+            .summary
+            .iter()
+            .map(|(k, v)| format!("\"{k}\":{v:.3}"))
+            .collect();
+        let doc = format!(
+            "{{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n{}\n],\n\"summary\":{{{}}}\n}}\n",
+            self.entries.join(",\n"),
+            summary.join(",")
+        );
+        match std::fs::write(&path, doc) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
 
 fn synth_block(k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
     let mut gen = XorShift128::new(seed);
@@ -43,8 +93,30 @@ fn synth_block(k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
     BlockInput { draft_tokens, draft_dists: vec![p; k], target_dists: vec![q; k] }
 }
 
+/// Block with top-k truncated draft/target distributions — the paper's LLM
+/// post-processing (top-k 50), which is where the sparse-support kernel
+/// earns its keep on large vocabularies.
+fn synth_block_topk(k: usize, l: usize, n: usize, top_k: usize, seed: u64) -> BlockInput {
+    let mut gen = XorShift128::new(seed);
+    let mut rand_topk = |temp: f64| {
+        let logits: Vec<f32> = (0..n).map(|_| (gen.next_f64() * 8.0) as f32).collect();
+        Categorical::from_logits(&logits, temp, Some(top_k))
+    };
+    let p: Vec<Categorical> = (0..l).map(|_| rand_topk(1.0)).collect();
+    let q: Vec<Categorical> = (0..=l).map(|_| rand_topk(1.0)).collect();
+    let rng = CounterRng::new(seed);
+    let mut draft_tokens = vec![Vec::with_capacity(l); k];
+    for kk in 0..k {
+        for j in 0..l {
+            draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+        }
+    }
+    BlockInput { draft_tokens, draft_dists: vec![p; k], target_dists: vec![q; k] }
+}
+
 fn main() {
     let budget = Duration::from_millis(400);
+    let mut json = PerfJson::new();
     println!("# §Perf — serving hot-path benchmarks\n");
 
     // ---------------------------------------------------------- L3a verify
@@ -56,10 +128,12 @@ fn main() {
                 let input = synth_block(k, 4, n, 42);
                 let rng = CounterRng::new(7);
                 let mut slot = 0u64;
-                let r = time_budget(&format!("{vk:?}-K{k}-N{n}"), budget, 20, || {
+                let case = format!("{}-K{k}-N{n}", vk.name());
+                let r = time_budget(&case, budget, 20, || {
                     std::hint::black_box(v.verify_block(&input, &rng, slot));
                     slot = slot.wrapping_add(5);
                 });
+                json.entry("L3a", &case, &r);
                 t.row(&[
                     vk.name().to_string(),
                     k.to_string(),
@@ -72,6 +146,60 @@ fn main() {
         println!("## L3a — block verification (coupling math only)");
         t.print();
         println!();
+    }
+
+    // ------------------------------------- L3a' scalar vs kernel (top-k-50)
+    // The acceptance-criterion case: GLS verify_block at K=8, N=2048 with
+    // top-k-50 distributions — scalar full-alphabet baseline vs the
+    // sparse-support workspace kernel. Outcomes are bit-identical
+    // (tests/kernel_parity.rs); only the wall clock may differ.
+    {
+        let mut t = Table::new(&["path", "K", "N", "top-k", "µs/block", "blocks/s"]);
+        let (k, n, top_k, l) = (8usize, 2048usize, 50usize, 4usize);
+        let input = synth_block_topk(k, l, n, top_k, 99);
+        let rng = CounterRng::new(13);
+        let cond = GlsVerifier::conditional();
+
+        let mut slot = 0u64;
+        let r_scalar = time_budget("gls-scalar-K8-N2048-topk50", budget, 20, || {
+            std::hint::black_box(cond.verify_block_scalar(&input, &rng, slot));
+            slot = slot.wrapping_add(5);
+        });
+        let mut slot = 0u64;
+        let v = make_verifier(VerifierKind::Gls);
+        let r_kernel = time_budget("gls-kernel-K8-N2048-topk50", budget, 20, || {
+            std::hint::black_box(v.verify_block(&input, &rng, slot));
+            slot = slot.wrapping_add(5);
+        });
+
+        // Parity spot check inside the bench itself (same slot, same rng).
+        assert_eq!(
+            cond.verify_block_scalar(&input, &rng, 12345),
+            v.verify_block(&input, &rng, 12345),
+            "kernel/scalar divergence — see tests/kernel_parity.rs"
+        );
+
+        let scalar_us = r_scalar.per_iter.mean * 1e6;
+        let kernel_us = r_kernel.per_iter.mean * 1e6;
+        json.entry("L3a-kernel", "gls-scalar-K8-N2048-topk50", &r_scalar);
+        json.entry("L3a-kernel", "gls-kernel-K8-N2048-topk50", &r_kernel);
+        json.metric("scalar_us_per_block_k8_n2048_topk50", scalar_us);
+        json.metric("kernel_us_per_block_k8_n2048_topk50", kernel_us);
+        json.metric("kernel_speedup_k8_n2048_topk50", scalar_us / kernel_us);
+
+        for (name, r) in [("scalar", &r_scalar), ("kernel", &r_kernel)] {
+            t.row(&[
+                name.to_string(),
+                k.to_string(),
+                n.to_string(),
+                top_k.to_string(),
+                format!("{:.1}", r.per_iter.mean * 1e6),
+                format!("{:.0}", 1.0 / r.per_iter.mean),
+            ]);
+        }
+        println!("## L3a' — GLS verify_block, scalar vs sparse-support kernel");
+        t.print();
+        println!("speedup: {:.2}×\n", scalar_us / kernel_us);
     }
 
     // ----------------------------------------------------- L3b engine step
@@ -102,10 +230,12 @@ fn main() {
                         s
                     })
                     .collect();
-                let r = time_budget(&format!("engine-B{batch}-K{k}"), budget, 10, || {
+                let case = format!("engine-B{batch}-K{k}");
+                let r = time_budget(&case, budget, 10, || {
                     let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
                     std::hint::black_box(eng.step_blocks(&mut refs));
                 });
+                json.entry("L3b", &case, &r);
                 let blocks_per_s = batch as f64 / r.per_iter.mean;
                 let be = eng.metrics.block_efficiency();
                 t.row(&[
@@ -147,10 +277,19 @@ fn main() {
                     },
                     workload,
                 );
+                let req_s = n_req as f64 / report.wall.as_secs_f64();
+                json.entries.push(format!(
+                    "{{\"section\":\"L3c\",\"case\":\"serve-W{}-{:?}\",\"req_per_s\":{:.3},\"tok_per_s\":{:.3},\"p95_ms\":{:.3}}}",
+                    workers,
+                    policy,
+                    req_s,
+                    report.token_rate(),
+                    report.p95_latency() * 1e3
+                ));
                 t.row(&[
                     workers.to_string(),
                     format!("{policy:?}"),
-                    format!("{:.0}", n_req as f64 / report.wall.as_secs_f64()),
+                    format!("{:.0}", req_s),
                     format!("{:.0}", report.token_rate()),
                     format!("{:.1}", report.p95_latency() * 1e3),
                 ]);
@@ -162,6 +301,19 @@ fn main() {
     }
 
     // ------------------------------------------------ L1/L2 PJRT artifacts
+    pjrt_section(&mut json);
+
+    json.write();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_section(_json: &mut PerfJson) {
+    println!("## L1/L2 — skipped (built without the `pjrt` feature)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_section(json: &mut PerfJson) {
+    use gls_serve::model::backend::LmBackend;
     match gls_serve::runtime::Artifacts::discover() {
         Err(e) => println!("## L1/L2 — skipped (no artifacts: {e})"),
         Ok(m) => {
@@ -171,6 +323,7 @@ fn main() {
             let r = time_budget("pjrt-forward-B8", Duration::from_secs(2), 5, || {
                 std::hint::black_box(target.next_logits(&seqs));
             });
+            json.entry("L1L2", "pjrt-forward-B8", &r);
             let mut t = Table::new(&["op", "ms/call", "rows/s"]);
             t.row(&[
                 "target_lm forward (B=8, S=96)".into(),
@@ -192,6 +345,7 @@ fn main() {
                     execute_tuple(&exe, &[lit(&u), lit(&u), lit(&u)]).unwrap(),
                 );
             });
+            json.entry("L1L2", "pjrt-gls-select", &r);
             t.row(&[
                 format!("gls_select artifact (K={k}, N={n})"),
                 format!("{:.3}", r.per_iter.mean * 1e3),
@@ -203,6 +357,7 @@ fn main() {
             let r = time_budget("native-gls-select", Duration::from_secs(1), 10, || {
                 std::hint::black_box(gls_serve::spec::gls::sample_gls(&p, &q, k, &rng, 0));
             });
+            json.entry("L1L2", "native-gls-select", &r);
             t.row(&[
                 format!("gls_select native (K={k}, N={n})"),
                 format!("{:.3}", r.per_iter.mean * 1e3),

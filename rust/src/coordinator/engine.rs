@@ -86,22 +86,30 @@ impl SpecDecodeEngine {
                 rows.push(row);
             }
         }
+        // Per-sequence randomness lanes, split once (not once per step).
+        let seq_rngs: Vec<CounterRng> =
+            seqs.iter().map(|s| self.root_rng.split(s.rng_lane)).collect();
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
             vec![vec![Vec::with_capacity(l); k]; seqs.len()];
         let mut draft_tokens: Vec<Vec<Vec<u32>>> = vec![vec![Vec::with_capacity(l); k]; seqs.len()];
+        let mut topk_scratch: Vec<u32> = Vec::new();
         for j in 0..l {
             let logits = self.pair.draft.next_logits(&rows);
             for (s, seq) in seqs.iter().enumerate() {
-                let rng = self.root_rng.split(seq.rng_lane);
                 for lane in 0..k {
                     let idx = s * k + lane;
                     let sp = self.cfg.draft_params_for(lane);
-                    let p = Categorical::from_logits(&logits[idx], sp.temperature, sp.top_k);
+                    let p = Categorical::from_logits_with_scratch(
+                        &logits[idx],
+                        sp.temperature,
+                        sp.top_k,
+                        &mut topk_scratch,
+                    );
                     // Coupled drafting: the same (slot, lane) coordinates the
                     // verifier will use — Alg. 2 line 4.
                     let tok =
-                        p.sample_race(&rng, seq.next_slot + j as u64, lane as u64) as u32;
+                        p.sample_race(&seq_rngs[s], seq.next_slot + j as u64, lane as u64) as u32;
                     rows[idx].push(tok);
                     draft_tokens[s][lane].push(tok);
                     draft_dists[s][lane].push(p);
@@ -111,57 +119,117 @@ impl SpecDecodeEngine {
         self.metrics.draft_time += t0.elapsed();
         self.metrics.draft_steps += (l * seqs.len()) as u64;
 
-        // --- Target phase: one span pass over all lanes (L+1 positions). --
+        // --- Target phase: ONE span pass over every lane of every seq. ----
         let t1 = Instant::now();
-        let starts: Vec<usize> = seqs.iter().map(|s| s.tokens.len() + 1).collect();
-        // All lanes of a sequence share `start`; the backend API takes one
-        // start per call, so group rows by sequence (contexts differ in
-        // content but not length across lanes — a single call per sequence
-        // batch is possible because all our seqs in a batch may have
-        // different lengths; span_logits handles rows independently given
-        // per-row start, so we extend the trait contract: start is per-call,
-        // hence we chunk by equal start).
-        let mut target_logits: Vec<Vec<Vec<Vec<f32>>>> = Vec::with_capacity(seqs.len());
-        {
-            // Group consecutive sequences with equal start to minimize calls.
-            let mut i = 0;
-            while i < seqs.len() {
-                let mut jmax = i + 1;
-                while jmax < seqs.len() && starts[jmax] == starts[i] {
-                    jmax += 1;
-                }
-                let chunk: Vec<Vec<u32>> = rows[i * k..jmax * k].to_vec();
-                let out = self.pair.target.span_logits(&chunk, starts[i]);
-                for s in i..jmax {
-                    let base = (s - i) * k;
-                    target_logits.push(out[base..base + k].to_vec());
-                }
-                i = jmax;
-            }
-        }
+        // All lanes of a sequence share its start; per-row starts let the
+        // whole continuous batch go through a single backend call even when
+        // sequence lengths differ (span_logits_multi), instead of one call
+        // per distinct start.
+        let row_starts: Vec<usize> = seqs
+            .iter()
+            .flat_map(|s| std::iter::repeat(s.tokens.len() + 1).take(k))
+            .collect();
+        let span = self.pair.target.span_logits_multi(&rows, &row_starts);
+        // Regroup flat rows back into [s][lane][pos][vocab].
+        let mut span_iter = span.into_iter();
+        let target_logits: Vec<Vec<Vec<Vec<f32>>>> = (0..seqs.len())
+            .map(|_| (0..k).map(|_| span_iter.next().expect("row per lane")).collect())
+            .collect();
         self.metrics.target_time += t1.elapsed();
 
         // --- Verification phase (the coupling algorithms). ----------------
+        // Per-sequence verification is a pure function of (draft data,
+        // target logits, randomness lane), so it parallelizes across the
+        // batch with no effect on outputs; each worker thread reuses its
+        // own coupling workspace and top-k scratch.
         let t2 = Instant::now();
-        let mut outcomes = Vec::with_capacity(seqs.len());
-        for (s, seq) in seqs.iter_mut().enumerate() {
-            let tp = self.cfg.target_params;
-            let target_dists: Vec<Vec<Categorical>> = (0..k)
-                .map(|lane| {
-                    target_logits[s][lane]
+        let tp = self.cfg.target_params;
+        let root = self.root_rng;
+        let verifier: &(dyn BlockVerifier + Send + Sync) = self.verifier.as_ref();
+
+        struct VerifyJob {
+            draft_tokens: Vec<Vec<u32>>,
+            draft_dists: Vec<Vec<Categorical>>,
+            target_logits: Vec<Vec<Vec<f32>>>,
+            lane: u64,
+            slot0: u64,
+        }
+        let mut jobs: Vec<Option<VerifyJob>> = draft_tokens
+            .into_iter()
+            .zip(draft_dists)
+            .zip(target_logits)
+            .zip(seqs.iter())
+            .map(|(((dt, dd), tl), seq)| {
+                Some(VerifyJob {
+                    draft_tokens: dt,
+                    draft_dists: dd,
+                    target_logits: tl,
+                    lane: seq.rng_lane,
+                    slot0: seq.next_slot,
+                })
+            })
+            .collect();
+
+        let run = |job: VerifyJob, scratch: &mut Vec<u32>| -> BlockOutput {
+            let target_dists: Vec<Vec<Categorical>> = job
+                .target_logits
+                .iter()
+                .map(|lane_rows| {
+                    lane_rows
                         .iter()
-                        .map(|lg| Categorical::from_logits(lg, tp.temperature, tp.top_k))
+                        .map(|lg| {
+                            Categorical::from_logits_with_scratch(
+                                lg,
+                                tp.temperature,
+                                tp.top_k,
+                                scratch,
+                            )
+                        })
                         .collect()
                 })
                 .collect();
             let input = BlockInput {
-                draft_tokens: std::mem::take(&mut draft_tokens[s]),
-                draft_dists: std::mem::take(&mut draft_dists[s]),
+                draft_tokens: job.draft_tokens,
+                draft_dists: job.draft_dists,
                 target_dists,
             };
-            let rng = self.root_rng.split(seq.rng_lane);
-            let out: BlockOutput = self.verifier.verify_block(&input, &rng, seq.next_slot);
+            verifier.verify_block(&input, &root.split(job.lane), job.slot0)
+        };
 
+        // Parallelize only when the batch and the per-sequence math are big
+        // enough to amortize thread spawn (~tens of µs); the serial path is
+        // bit-identical (verification is per-sequence pure).
+        let per_seq_work = k * (l + 1) * self.pair.vocab();
+        let threads = if jobs.len() >= 2 && per_seq_work >= 8_192 {
+            std::thread::available_parallelism().map_or(1, |n| n.get()).min(jobs.len())
+        } else {
+            1
+        };
+        let mut outs: Vec<Option<BlockOutput>> = (0..jobs.len()).map(|_| None).collect();
+        if threads <= 1 {
+            let mut scratch: Vec<u32> = Vec::new();
+            for (slot, job) in outs.iter_mut().zip(jobs.iter_mut()) {
+                *slot = Some(run(job.take().expect("job unclaimed"), &mut scratch));
+            }
+        } else {
+            let chunk = jobs.len().div_ceil(threads);
+            let run = &run;
+            std::thread::scope(|scope| {
+                for (out_chunk, job_chunk) in outs.chunks_mut(chunk).zip(jobs.chunks_mut(chunk)) {
+                    scope.spawn(move || {
+                        let mut scratch: Vec<u32> = Vec::new();
+                        for (slot, job) in out_chunk.iter_mut().zip(job_chunk.iter_mut()) {
+                            *slot = Some(run(job.take().expect("job unclaimed"), &mut scratch));
+                        }
+                    });
+                }
+            });
+        }
+
+        // --- Serial epilogue: sequence state, KV commits, metrics. --------
+        let mut outcomes = Vec::with_capacity(seqs.len());
+        for (seq, out) in seqs.iter_mut().zip(outs) {
+            let out = out.expect("verify job ran");
             // Never emit beyond the request budget.
             let budget = seq.remaining();
             let emit: Vec<u32> = out.tokens.iter().copied().take(budget).collect();
@@ -210,7 +278,8 @@ impl SpecDecodeEngine {
         let mut toks = prompt.to_vec();
         let tp = self.cfg.target_params;
         for step in 0..n {
-            let logits = self.pair.target.next_logits(&[toks.clone()]);
+            // One-row batch without cloning the growing context each step.
+            let logits = self.pair.target.next_logits(std::slice::from_ref(&toks));
             let q = Categorical::from_logits(&logits[0], tp.temperature, tp.top_k);
             // Lane-0 race at the right slot: matches Alg. 2's Y selection
             // when all drafts stay active (K = 1).

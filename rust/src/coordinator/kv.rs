@@ -17,19 +17,30 @@
 
 use std::collections::HashMap;
 
-use thiserror::Error;
-
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum KvError {
-    #[error("out of KV pages (requested {requested}, free {free})")]
     OutOfPages { requested: usize, free: usize },
-    #[error("unknown sequence {0}")]
     UnknownSequence(u64),
-    #[error("sequence {0} already registered")]
     DuplicateSequence(u64),
-    #[error("commit length {commit} exceeds reservation {reserved}")]
     CommitTooLong { commit: usize, reserved: usize },
 }
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfPages { requested, free } => {
+                write!(f, "out of KV pages (requested {requested}, free {free})")
+            }
+            KvError::UnknownSequence(id) => write!(f, "unknown sequence {id}"),
+            KvError::DuplicateSequence(id) => write!(f, "sequence {id} already registered"),
+            KvError::CommitTooLong { commit, reserved } => {
+                write!(f, "commit length {commit} exceeds reservation {reserved}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
 
 #[derive(Clone, Debug)]
 struct SeqEntry {

@@ -32,6 +32,10 @@ pub mod config;
 pub mod coordinator;
 pub mod lp;
 pub mod model;
+/// PJRT bridge; needs the vendored `xla` crate — see Cargo.toml `pjrt`
+/// feature notes. The default (offline) build runs entirely on the native
+/// Rust mirror in [`model`].
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod spec;
 pub mod stats;
@@ -39,4 +43,5 @@ pub mod testkit;
 pub mod workload;
 
 pub use spec::gls::{sample_gls, sample_gls_bilateral, BilateralOutcome, GlsOutcome};
+pub use spec::kernel::CouplingWorkspace;
 pub use spec::types::{Categorical, VerifierKind};

@@ -1,16 +1,23 @@
 //! Two-phase dense simplex with Bland's rule.
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum LpError {
-    #[error("infeasible LP (phase-1 objective {0} > 0)")]
     Infeasible(f64),
-    #[error("unbounded LP")]
     Unbounded,
-    #[error("dimension mismatch: {0}")]
     Dimension(String),
 }
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Infeasible(obj) => write!(f, "infeasible LP (phase-1 objective {obj} > 0)"),
+            LpError::Unbounded => write!(f, "unbounded LP"),
+            LpError::Dimension(msg) => write!(f, "dimension mismatch: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
 
 /// Solution of max c^T x s.t. Ax = b, x ≥ 0.
 #[derive(Clone, Debug)]

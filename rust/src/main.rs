@@ -18,6 +18,7 @@ use gls_serve::coordinator::server::Server;
 use gls_serve::coordinator::{EngineConfig, ServerConfig};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
+#[cfg(feature = "pjrt")]
 use gls_serve::runtime::{Artifacts, PjrtLm};
 use gls_serve::spec::types::VerifierKind;
 use gls_serve::workload::suites::TaskSuite;
@@ -90,11 +91,19 @@ fn cmd_serve(args: &Args) -> i32 {
     };
     let server_cfg = ServerConfig { workers, ..ServerConfig::default() };
 
+    #[cfg(not(feature = "pjrt"))]
+    if use_pjrt {
+        eprintln!("error: this binary was built without the `pjrt` feature");
+        return 2;
+    }
+    #[cfg(feature = "pjrt")]
     let vocab = if use_pjrt {
         Artifacts::discover().and_then(|m| m.get_usize("vocab")).unwrap_or(64)
     } else {
         64
     };
+    #[cfg(not(feature = "pjrt"))]
+    let vocab = 64;
     let max_new = if use_pjrt { 24 } else { suite.max_new_tokens };
     let prompts = suite.prompts(requests, vocab.min(256), 42);
     let workload: Vec<(Vec<u32>, usize)> =
@@ -107,6 +116,7 @@ fn cmd_serve(args: &Args) -> i32 {
         if use_pjrt { "pjrt" } else { "sim" }
     );
 
+    #[cfg(feature = "pjrt")]
     let report = if use_pjrt {
         let manifest = Artifacts::discover().expect("run `make artifacts` first");
         Server::serve_all(
@@ -129,6 +139,14 @@ fn cmd_serve(args: &Args) -> i32 {
             workload,
         )
     };
+    #[cfg(not(feature = "pjrt"))]
+    let report = Server::serve_all(
+        &server_cfg,
+        &engine_cfg,
+        RoutingPolicy::LeastLoaded,
+        |_| suite.model_pair(vocab, 7),
+        workload,
+    );
 
     println!("{}", report.metrics.report());
     println!(
@@ -194,6 +212,7 @@ fn cmd_info() -> i32 {
     match gls_serve::config::artifacts_dir() {
         Some(dir) => {
             t.row(&["artifacts".into(), dir.display().to_string()]);
+            #[cfg(feature = "pjrt")]
             match Artifacts::discover() {
                 Ok(m) => {
                     for key in ["vocab", "lm_batch", "lm_max_seq", "vae_latent"] {
@@ -204,6 +223,8 @@ fn cmd_info() -> i32 {
                 }
                 Err(e) => t.row(&["manifest".into(), format!("error: {e}")]),
             }
+            #[cfg(not(feature = "pjrt"))]
+            t.row(&["manifest".into(), "unread (built without `pjrt`)".into()]);
         }
         None => t.row(&["artifacts".into(), "missing (run `make artifacts`)".into()]),
     }

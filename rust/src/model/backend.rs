@@ -22,6 +22,28 @@ pub trait LmBackend: Send {
     /// one call). Returns `[rows][seq.len() - start + 1][vocab]`.
     fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>>;
 
+    /// Span pass with a *per-row* start: row `i` is scored from
+    /// `starts[i]`. One engine iteration verifies every sequence of a
+    /// continuous batch in a single call through this method, rather than
+    /// one `span_logits` call per distinct start. The default groups
+    /// consecutive equal-start runs (still one call for the common
+    /// uniform-batch case); accelerator backends override it with a single
+    /// fused forward.
+    fn span_logits_multi(&mut self, seqs: &[Vec<u32>], starts: &[usize]) -> Vec<Vec<Vec<f32>>> {
+        assert_eq!(seqs.len(), starts.len(), "one start per row");
+        let mut out = Vec::with_capacity(seqs.len());
+        let mut i = 0;
+        while i < seqs.len() {
+            let mut j = i + 1;
+            while j < seqs.len() && starts[j] == starts[i] {
+                j += 1;
+            }
+            out.extend(self.span_logits(&seqs[i..j], starts[i]));
+            i = j;
+        }
+        out
+    }
+
     /// Human-readable backend identifier for metrics/logs.
     fn describe(&self) -> String {
         "lm-backend".to_string()

@@ -68,6 +68,16 @@ impl<B: LmBackend> LmBackend for TimedLm<B> {
         out
     }
 
+    fn span_logits_multi(&mut self, seqs: &[Vec<u32>], starts: &[usize]) -> Vec<Vec<Vec<f32>>> {
+        // One fused accelerator pass regardless of start mix: charge a
+        // single batched-call latency, not one per distinct start.
+        let t0 = Instant::now();
+        let out = self.inner.span_logits_multi(seqs, starts);
+        let positions = out.iter().map(|r| r.len()).max().unwrap_or(1);
+        self.pay(t0, seqs.len(), positions);
+        out
+    }
+
     fn describe(&self) -> String {
         format!(
             "timed({}, {}µs, cap {})",

@@ -127,10 +127,18 @@ impl LmBackend for PjrtLm {
     }
 
     fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>> {
+        self.span_logits_multi(seqs, &vec![start; seqs.len()])
+    }
+
+    fn span_logits_multi(&mut self, seqs: &[Vec<u32>], starts: &[usize]) -> Vec<Vec<Vec<f32>>> {
+        // One fused forward over every row regardless of start mix; the
+        // per-row start only affects host-side slicing.
+        assert_eq!(seqs.len(), starts.len(), "one start per row");
         let all = self.forward(seqs);
         seqs.iter()
+            .zip(starts)
             .zip(all)
-            .map(|(seq, per_pos)| {
+            .map(|((seq, &start), per_pos)| {
                 // Predictive distribution for prefix length P lives at
                 // logits index P-1; the span covers prefix lengths
                 // start-1 ..= len, i.e. indices start-2 ..= len-1. start ≥ 2

@@ -5,9 +5,15 @@
 //! * [`GlsVerifier`] is Algorithm 2: the drafter-invariant multi-draft
 //!   speculative-decoding block verifier, in both the conditionally
 //!   invariant (Def. 1) and strongly invariant (Def. 2 / Prop. 6) variants.
+//!
+//! The public entry points run on the zero-allocation sparse-support
+//! kernel ([`super::kernel::CouplingWorkspace`]); the `*_scalar` functions
+//! are the straightforward full-alphabet reference implementations the
+//! kernel is required (by `tests/kernel_parity.rs`) to match bit-for-bit.
 
 use crate::stats::rng::CounterRng;
 
+use super::kernel::with_workspace;
 use super::types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
 };
@@ -30,7 +36,17 @@ pub struct GlsOutcome {
 ///
 /// `Y = argmin_i min_k S_i^{(k)} / q_i`, `X^{(k)} = argmin_i S_i^{(k)} / p_i`
 /// with `S_i^{(k)} = -ln U_i^{(k)}` shared Exp(1) variates.
+///
+/// Runs on the sparse-support workspace kernel; bit-exact with
+/// [`sample_gls_scalar`].
 pub fn sample_gls(p: &Categorical, q: &Categorical, k: usize, rng: &CounterRng, slot: u64) -> GlsOutcome {
+    with_workspace(|ws| ws.sample_gls(p, q, k, rng, slot))
+}
+
+/// Scalar full-alphabet reference for [`sample_gls`] (the seed
+/// implementation): the kernel parity tests and the perf baseline both
+/// race against this.
+pub fn sample_gls_scalar(p: &Categorical, q: &Categorical, k: usize, rng: &CounterRng, slot: u64) -> GlsOutcome {
     assert_eq!(p.len(), q.len(), "alphabet mismatch");
     assert!(k >= 1);
     let n = p.len();
@@ -72,7 +88,20 @@ pub fn sample_gls(p: &Categorical, q: &Categorical, k: usize, rng: &CounterRng, 
 /// GLS with per-draft proposal distributions `p^{(k)}` (paper App. A.3,
 /// Prop. 5): each `X^{(k)} ~ p^{(k)}`, `Y ~ q`, all coupled through the same
 /// exponentials. Used by the diverse-drafts experiments (Table 2/4).
+///
+/// Runs on the sparse-support workspace kernel; bit-exact with
+/// [`sample_gls_diverse_scalar`].
 pub fn sample_gls_diverse(
+    ps: &[Categorical],
+    q: &Categorical,
+    rng: &CounterRng,
+    slot: u64,
+) -> GlsOutcome {
+    with_workspace(|ws| ws.sample_gls_diverse(ps, q, rng, slot))
+}
+
+/// Scalar full-alphabet reference for [`sample_gls_diverse`].
+pub fn sample_gls_diverse_scalar(
     ps: &[Categorical],
     q: &Categorical,
     rng: &CounterRng,
@@ -150,7 +179,22 @@ pub struct BilateralOutcome {
 /// sets); at K = M = 1 it is the Daliri et al. pairwise coupling. The
 /// tests verify marginals, the reduction, and that the intersection
 /// probability is monotone in both list lengths.
+///
+/// Runs on the sparse-support workspace kernel; bit-exact with
+/// [`sample_gls_bilateral_scalar`].
 pub fn sample_gls_bilateral(
+    p: &Categorical,
+    q: &Categorical,
+    k_a: usize,
+    k_b: usize,
+    rng: &CounterRng,
+    slot: u64,
+) -> BilateralOutcome {
+    with_workspace(|ws| ws.sample_gls_bilateral(p, q, k_a, k_b, rng, slot))
+}
+
+/// Scalar full-alphabet reference for [`sample_gls_bilateral`].
+pub fn sample_gls_bilateral_scalar(
     p: &Categorical,
     q: &Categorical,
     k_a: usize,
@@ -207,7 +251,20 @@ pub fn sample_gls_bilateral(
 /// Alg. 2 (active drafts share the accepted prefix) but we do not rely on
 /// that: the selection is written exactly as the paper states it, which is
 /// what makes the strong variant (distinct prefixes!) share this code.
+///
+/// Runs on the sparse-support workspace kernel; bit-exact with
+/// [`select_target_token_scalar`].
 pub fn select_target_token(
+    dists: &[&Categorical],
+    active: &[usize],
+    rng: &CounterRng,
+    slot: u64,
+) -> usize {
+    with_workspace(|ws| ws.select_target_token(dists, active, rng, slot))
+}
+
+/// Scalar full-alphabet reference for [`select_target_token`].
+pub fn select_target_token_scalar(
     dists: &[&Categorical],
     active: &[usize],
     rng: &CounterRng,
@@ -254,6 +311,46 @@ impl GlsVerifier {
     pub fn strong() -> Self {
         Self { strong: true }
     }
+
+    /// Scalar full-alphabet reference for
+    /// [`BlockVerifier::verify_block`] (the seed implementation, built on
+    /// [`select_target_token_scalar`]). The kernel path must match this
+    /// bit-for-bit; it is also the perf baseline in `benches/perf_engine`.
+    pub fn verify_block_scalar(
+        &self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let k = input.k();
+        let l = input.block_len();
+        let all: Vec<usize> = (0..k).collect();
+        let mut active: Vec<usize> = all.clone();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            let dists: Vec<&Categorical> = (0..k).map(|kk| &input.target_dists[kk][j]).collect();
+            let participants: &[usize] = if self.strong { &all } else { &active };
+            let yj = select_target_token_scalar(&dists, participants, rng, slot0 + j as u64) as u32;
+            tokens.push(yj);
+            active.retain(|&kk| input.draft_tokens[kk][j] == yj);
+            if active.is_empty() {
+                // All drafts diverged: Y_j was still emitted (it is a valid
+                // target sample), and the block ends here — Alg. 2 line 12.
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+
+        // Full block accepted: emit the bonus token Y_{L+1} (Alg. 2 line 13).
+        let dists: Vec<&Categorical> = (0..k).map(|kk| &input.target_dists[kk][l]).collect();
+        let participants: &[usize] = if self.strong { &all } else { &active };
+        let bonus = select_target_token_scalar(&dists, participants, rng, slot0 + l as u64) as u32;
+        tokens.push(bonus);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
 }
 
 impl BlockVerifier for GlsVerifier {
@@ -273,35 +370,11 @@ impl BlockVerifier for GlsVerifier {
         }
     }
 
+    /// Kernel-backed verification: one sparse-support panel race per block
+    /// position, zero scratch allocations in steady state. Bit-exact with
+    /// [`GlsVerifier::verify_block_scalar`].
     fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
-        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
-        let k = input.k();
-        let l = input.block_len();
-        let all: Vec<usize> = (0..k).collect();
-        let mut active: Vec<usize> = all.clone();
-        let mut tokens = Vec::with_capacity(l + 1);
-        let mut accepted = 0usize;
-
-        for j in 0..l {
-            let dists: Vec<&Categorical> = (0..k).map(|kk| &input.target_dists[kk][j]).collect();
-            let participants: &[usize] = if self.strong { &all } else { &active };
-            let yj = select_target_token(&dists, participants, rng, slot0 + j as u64) as u32;
-            tokens.push(yj);
-            active.retain(|&kk| input.draft_tokens[kk][j] == yj);
-            if active.is_empty() {
-                // All drafts diverged: Y_j was still emitted (it is a valid
-                // target sample), and the block ends here — Alg. 2 line 12.
-                return BlockOutput { tokens, accepted, surviving_draft: None };
-            }
-            accepted += 1;
-        }
-
-        // Full block accepted: emit the bonus token Y_{L+1} (Alg. 2 line 13).
-        let dists: Vec<&Categorical> = (0..k).map(|kk| &input.target_dists[kk][l]).collect();
-        let participants: &[usize] = if self.strong { &all } else { &active };
-        let bonus = select_target_token(&dists, participants, rng, slot0 + l as u64) as u32;
-        tokens.push(bonus);
-        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+        with_workspace(|ws| ws.verify_block_gls(input, rng, slot0, self.strong))
     }
 }
 

@@ -1,0 +1,556 @@
+//! Zero-allocation batched GLS coupling kernel.
+//!
+//! The scalar reference implementations in [`super::gls`] evaluate
+//! `O(N · K)` counter-RNG hashes and `ln()` calls per race, re-deriving the
+//! `(slot, draft)` hash prefix for every vocabulary item and walking the
+//! full alphabet even when the distributions are top-k truncated (the
+//! paper's LLM experiments run top-k 50 over 2048+ vocabularies, so ≥97% of
+//! the race is provably dead weight). This module is the serving hot path's
+//! answer:
+//!
+//! * [`CouplingWorkspace`] owns reusable flat scratch buffers — races make
+//!   **no heap allocations** beyond their mandated outputs once the
+//!   workspace has warmed up.
+//! * Exponentials are materialized once per race into a single row-major
+//!   **panel** (`panel[row * support_len + j]`), with the per-`(slot,
+//!   draft)` SplitMix64 prefix hoisted via [`CounterRng::lane`] so each
+//!   item costs one mix round instead of three.
+//! * Races iterate a **sparse support**: the ascending union
+//!   `supp(p) ∪ supp(q)` (resp. the union over participating drafts).
+//!   This is *exact*, not approximate — a zero-mass symbol is skipped by
+//!   the scalar `argmin` too, so it can never win — and turns `O(N · K)`
+//!   into `O(top_k · K)` for truncated distributions.
+//!
+//! Determinism is load-bearing (drafter invariance, replay audits), so the
+//! kernel is **bit-exact** with the scalar path: panel entries reproduce
+//! `CounterRng::exponential` exactly and every race visits its candidates
+//! in the scalar order (items ascending, lanes in scalar iteration order).
+//! `rust/tests/kernel_parity.rs` enforces this property.
+
+use std::cell::RefCell;
+
+use crate::stats::rng::CounterRng;
+
+use super::gls::{BilateralOutcome, GlsOutcome};
+use super::types::{BlockInput, BlockOutput, Categorical};
+
+/// Reusable scratch for one coupling race.
+struct RaceScratch {
+    /// Ascending union-of-support item indices of the current race.
+    support: Vec<u32>,
+    /// Occupancy bitset used to build `support` (one bit per item).
+    mask: Vec<u64>,
+    /// Row-major exponential panel: `panel[row * support.len() + j]` is the
+    /// Exp(1) variate of panel row `row` at item `support[j]`.
+    panel: Vec<f64>,
+    /// Per-lane running minima and argmins.
+    best: Vec<f64>,
+    arg: Vec<usize>,
+}
+
+impl RaceScratch {
+    fn new() -> Self {
+        Self {
+            support: Vec::new(),
+            mask: Vec::new(),
+            panel: Vec::new(),
+            best: Vec::new(),
+            arg: Vec::new(),
+        }
+    }
+
+    /// Rebuild `support` as the ascending union of the supports of
+    /// `dists`, over an alphabet of `n` items.
+    ///
+    /// Distributions carrying a cached support list
+    /// ([`Categorical::support`], e.g. top-k truncated ones) contribute it
+    /// directly — O(top_k) bit sets instead of an O(n) prob rescan — which
+    /// is what keeps the whole race O(top_k · K) in the paper's LLM regime.
+    /// A cached list is allowed to be a superset of the true support (the
+    /// races re-check every candidate's mass), so exactness is unaffected.
+    fn build_support<'a, I>(&mut self, n: usize, dists: I)
+    where
+        I: Iterator<Item = &'a Categorical> + Clone,
+    {
+        let words = n.div_ceil(64);
+        self.mask.clear();
+        self.mask.resize(words, 0);
+        let mut all_cached = true;
+        for d in dists.clone() {
+            debug_assert_eq!(d.len(), n);
+            match d.support() {
+                Some(sup) => {
+                    for &i in sup {
+                        self.mask[(i as usize) >> 6] |= 1u64 << (i & 63);
+                    }
+                }
+                None => {
+                    all_cached = false;
+                    break;
+                }
+            }
+        }
+        if !all_cached {
+            // At least one dense/unknown-support distribution: rescan all
+            // of them (the mask may hold partial state from the first loop).
+            self.mask.iter_mut().for_each(|w| *w = 0);
+            for d in dists {
+                debug_assert_eq!(d.len(), n);
+                for (i, &p) in d.probs().iter().enumerate() {
+                    if p > 0.0 {
+                        self.mask[i >> 6] |= 1u64 << (i & 63);
+                    }
+                }
+            }
+        }
+        self.support.clear();
+        for (w, &bits) in self.mask.iter().enumerate() {
+            let mut b = bits;
+            while b != 0 {
+                let t = b.trailing_zeros() as usize;
+                self.support.push((w * 64 + t) as u32);
+                b &= b - 1;
+            }
+        }
+    }
+
+    /// Fill `rows` panel rows of exponentials over the current support;
+    /// panel row `r` uses the draft coordinate `lane_of(r)`. Entries are
+    /// bit-exact with `rng.exponential(slot, lane_of(r), item)`.
+    fn fill_panel(
+        &mut self,
+        rng: &CounterRng,
+        slot: u64,
+        rows: usize,
+        mut lane_of: impl FnMut(usize) -> u64,
+    ) {
+        self.panel.clear();
+        self.panel.reserve(rows * self.support.len());
+        for r in 0..rows {
+            let lane = rng.lane(slot, lane_of(r));
+            for &i in &self.support {
+                self.panel.push(lane.exponential(i as u64));
+            }
+        }
+    }
+
+    /// Alg. 2 line 9/13 selection over the union support:
+    /// `argmin_i min_{k ∈ participants} S_i^{(slot,k)} / q_i^{(k)}` where
+    /// `dist_of(k)` yields draft k's target distribution. Candidate visit
+    /// order matches [`super::gls::select_target_token_scalar`] exactly.
+    fn select_with<'a, F>(
+        &mut self,
+        n: usize,
+        participants: &[usize],
+        dist_of: F,
+        rng: &CounterRng,
+        slot: u64,
+    ) -> usize
+    where
+        F: Fn(usize) -> &'a Categorical,
+    {
+        assert!(!participants.is_empty());
+        self.build_support(n, participants.iter().map(|&k| dist_of(k)));
+        self.fill_panel(rng, slot, participants.len(), |r| participants[r] as u64);
+        let s = self.support.len();
+        let mut best = f64::INFINITY;
+        let mut arg = 0usize;
+        for (j, &iu) in self.support.iter().enumerate() {
+            let i = iu as usize;
+            for (r, &k) in participants.iter().enumerate() {
+                let qi = dist_of(k).prob(i);
+                if qi <= 0.0 {
+                    continue;
+                }
+                let v = self.panel[r * s + j] / qi;
+                if v < best {
+                    best = v;
+                    arg = i;
+                }
+            }
+        }
+        arg
+    }
+}
+
+/// Reusable flat scratch buffers for the whole coupling data path.
+///
+/// One workspace per thread (see [`with_workspace`]); every race reuses the
+/// grown buffers, so steady-state verification makes no allocations beyond
+/// the `GlsOutcome` / `BlockOutput` it must return.
+pub struct CouplingWorkspace {
+    race: RaceScratch,
+    /// Alg. 2's active draft set S (conditional variant).
+    active: Vec<usize>,
+    /// The full draft set 0..K (strong variant participants).
+    all: Vec<usize>,
+    /// Reusable index scratch for `Categorical::from_logits_with_scratch`.
+    pub topk_scratch: Vec<u32>,
+}
+
+impl Default for CouplingWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CouplingWorkspace {
+    pub fn new() -> Self {
+        Self {
+            race: RaceScratch::new(),
+            active: Vec::new(),
+            all: Vec::new(),
+            topk_scratch: Vec::new(),
+        }
+    }
+
+    /// Algorithm 1 (SampleGLS) over the sparse union support — bit-exact
+    /// with [`super::gls::sample_gls_scalar`].
+    pub fn sample_gls(
+        &mut self,
+        p: &Categorical,
+        q: &Categorical,
+        k: usize,
+        rng: &CounterRng,
+        slot: u64,
+    ) -> GlsOutcome {
+        assert_eq!(p.len(), q.len(), "alphabet mismatch");
+        assert!(k >= 1);
+        let race = &mut self.race;
+        race.build_support(p.len(), [p, q].into_iter());
+        race.fill_panel(rng, slot, k, |r| r as u64);
+        let s = race.support.len();
+
+        let mut y_best = f64::INFINITY;
+        let mut y_arg = 0usize;
+        race.best.clear();
+        race.best.resize(k, f64::INFINITY);
+        race.arg.clear();
+        race.arg.resize(k, 0);
+
+        for (j, &iu) in race.support.iter().enumerate() {
+            let i = iu as usize;
+            let qi = q.prob(i);
+            let pi = p.prob(i);
+            for kk in 0..k {
+                let e = race.panel[kk * s + j];
+                if qi > 0.0 {
+                    let v = e / qi;
+                    if v < y_best {
+                        y_best = v;
+                        y_arg = i;
+                    }
+                }
+                if pi > 0.0 {
+                    let v = e / pi;
+                    if v < race.best[kk] {
+                        race.best[kk] = v;
+                        race.arg[kk] = i;
+                    }
+                }
+            }
+        }
+
+        let xs = race.arg[..k].to_vec();
+        let accept = xs.contains(&y_arg);
+        GlsOutcome { y: y_arg, xs, accept }
+    }
+
+    /// GLS with per-draft proposals (paper App. A.3, Prop. 5) — bit-exact
+    /// with [`super::gls::sample_gls_diverse_scalar`].
+    pub fn sample_gls_diverse(
+        &mut self,
+        ps: &[Categorical],
+        q: &Categorical,
+        rng: &CounterRng,
+        slot: u64,
+    ) -> GlsOutcome {
+        assert!(!ps.is_empty());
+        for p in ps {
+            assert_eq!(p.len(), q.len(), "alphabet mismatch");
+        }
+        let n = q.len();
+        let k = ps.len();
+        let race = &mut self.race;
+        race.build_support(n, ps.iter().chain(std::iter::once(q)));
+        race.fill_panel(rng, slot, k, |r| r as u64);
+        let s = race.support.len();
+
+        let mut y_best = f64::INFINITY;
+        let mut y_arg = 0usize;
+        race.best.clear();
+        race.best.resize(k, f64::INFINITY);
+        race.arg.clear();
+        race.arg.resize(k, 0);
+
+        for (j, &iu) in race.support.iter().enumerate() {
+            let i = iu as usize;
+            let qi = q.prob(i);
+            for kk in 0..k {
+                let pi = ps[kk].prob(i);
+                if qi <= 0.0 && pi <= 0.0 {
+                    continue;
+                }
+                let e = race.panel[kk * s + j];
+                if qi > 0.0 {
+                    let v = e / qi;
+                    if v < y_best {
+                        y_best = v;
+                        y_arg = i;
+                    }
+                }
+                if pi > 0.0 {
+                    let v = e / pi;
+                    if v < race.best[kk] {
+                        race.best[kk] = v;
+                        race.arg[kk] = i;
+                    }
+                }
+            }
+        }
+
+        let xs = race.arg[..k].to_vec();
+        let accept = xs.contains(&y_arg);
+        GlsOutcome { y: y_arg, xs, accept }
+    }
+
+    /// Bilateral (list-vs-list) GLS — bit-exact with
+    /// [`super::gls::sample_gls_bilateral_scalar`]. Panel rows are the
+    /// K×M grid lanes; X minima fold over m, Y minima fold over k, both
+    /// tracked in one fused pass over the union support.
+    pub fn sample_gls_bilateral(
+        &mut self,
+        p: &Categorical,
+        q: &Categorical,
+        k_a: usize,
+        k_b: usize,
+        rng: &CounterRng,
+        slot: u64,
+    ) -> BilateralOutcome {
+        assert_eq!(p.len(), q.len(), "alphabet mismatch");
+        assert!(k_a >= 1 && k_b >= 1);
+        let race = &mut self.race;
+        race.build_support(p.len(), [p, q].into_iter());
+        race.fill_panel(rng, slot, k_a * k_b, |r| r as u64);
+        let s = race.support.len();
+
+        // best/arg lanes: [0, k_a) for X, [k_a, k_a + k_b) for Y.
+        race.best.clear();
+        race.best.resize(k_a + k_b, f64::INFINITY);
+        race.arg.clear();
+        race.arg.resize(k_a + k_b, 0);
+
+        for (j, &iu) in race.support.iter().enumerate() {
+            let i = iu as usize;
+            let pi = p.prob(i);
+            let qi = q.prob(i);
+            for k in 0..k_a {
+                for m in 0..k_b {
+                    let e = race.panel[(k * k_b + m) * s + j];
+                    if pi > 0.0 {
+                        let v = e / pi;
+                        if v < race.best[k] {
+                            race.best[k] = v;
+                            race.arg[k] = i;
+                        }
+                    }
+                    if qi > 0.0 {
+                        let v = e / qi;
+                        if v < race.best[k_a + m] {
+                            race.best[k_a + m] = v;
+                            race.arg[k_a + m] = i;
+                        }
+                    }
+                }
+            }
+        }
+
+        let xs = race.arg[..k_a].to_vec();
+        let ys = race.arg[k_a..k_a + k_b].to_vec();
+        let accept = ys.iter().any(|y| xs.contains(y));
+        BilateralOutcome { xs, ys, accept }
+    }
+
+    /// Alg. 2 target-token selection — bit-exact with
+    /// [`super::gls::select_target_token_scalar`].
+    pub fn select_target_token(
+        &mut self,
+        dists: &[&Categorical],
+        active: &[usize],
+        rng: &CounterRng,
+        slot: u64,
+    ) -> usize {
+        assert!(!active.is_empty());
+        let n = dists[active[0]].len();
+        self.race.select_with(n, active, |k| dists[k], rng, slot)
+    }
+
+    /// Algorithm 2 block verification (conditional or strong variant) over
+    /// the workspace kernel — bit-exact with
+    /// [`super::gls::GlsVerifier::verify_block_scalar`].
+    pub fn verify_block_gls(
+        &mut self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+        strong: bool,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let k = input.k();
+        let l = input.block_len();
+        let n = input.target_dists[0][0].len();
+        let Self { race, active, all, .. } = self;
+        all.clear();
+        all.extend(0..k);
+        active.clear();
+        active.extend(0..k);
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            let participants: &[usize] = if strong { &all[..] } else { &active[..] };
+            let yj = race
+                .select_with(n, participants, |kk| &input.target_dists[kk][j], rng, slot0 + j as u64)
+                as u32;
+            tokens.push(yj);
+            active.retain(|&kk| input.draft_tokens[kk][j] == yj);
+            if active.is_empty() {
+                // All drafts diverged: Y_j was still emitted (it is a valid
+                // target sample), and the block ends here — Alg. 2 line 12.
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+
+        // Full block accepted: emit the bonus token Y_{L+1} (Alg. 2 line 13).
+        let participants: &[usize] = if strong { &all[..] } else { &active[..] };
+        let bonus = race
+            .select_with(n, participants, |kk| &input.target_dists[kk][l], rng, slot0 + l as u64)
+            as u32;
+        tokens.push(bonus);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+}
+
+thread_local! {
+    static WORKSPACE: RefCell<CouplingWorkspace> = RefCell::new(CouplingWorkspace::new());
+}
+
+/// Run `f` with this thread's coupling workspace. The thread-local keeps
+/// the public free-function API of [`super::gls`] allocation-free on the
+/// hot path and plays well with the engine's parallel stepping: each
+/// verification thread warms its own scratch once and reuses it forever.
+pub fn with_workspace<R>(f: impl FnOnce(&mut CouplingWorkspace) -> R) -> R {
+    WORKSPACE.with(|w| f(&mut w.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::gls;
+    use crate::stats::rng::XorShift128;
+    use crate::testkit;
+
+    #[test]
+    fn support_union_is_sorted_and_exact() {
+        let p = Categorical::new(vec![0.0, 0.5, 0.5, 0.0, 0.0]);
+        let q = Categorical::new(vec![0.5, 0.0, 0.0, 0.0, 0.5]);
+        let mut race = RaceScratch::new();
+        race.build_support(5, [&p, &q].into_iter());
+        assert_eq!(race.support, vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn support_handles_alphabets_beyond_one_word() {
+        // > 64 items exercises the multi-word bitset path.
+        let mut gen = XorShift128::new(9);
+        let p = testkit::gen_sparse_categorical(&mut gen, 150, 7);
+        let q = testkit::gen_sparse_categorical(&mut gen, 150, 5);
+        let mut race = RaceScratch::new();
+        race.build_support(150, [&p, &q].into_iter());
+        let expect: Vec<u32> = (0..150u32)
+            .filter(|&i| p.prob(i as usize) > 0.0 || q.prob(i as usize) > 0.0)
+            .collect();
+        assert_eq!(race.support, expect);
+    }
+
+    #[test]
+    fn support_union_mixes_cached_and_dense_lists() {
+        // q: top-k truncated (cached support); p: dense constructor (no
+        // cache) — the union must fall back to scanning and stay exact.
+        let logits: Vec<f32> = (0..100).map(|i| (i % 13) as f32).collect();
+        let q = Categorical::from_logits(&logits, 1.0, Some(10));
+        assert!(q.support().is_some());
+        let mut masses = vec![0.0; 100];
+        masses[3] = 0.7;
+        masses[98] = 0.3;
+        let p = Categorical::new(masses);
+        assert!(p.support().is_none());
+        let mut race = RaceScratch::new();
+        race.build_support(100, [&p, &q].into_iter());
+        let expect: Vec<u32> = (0..100u32)
+            .filter(|&i| p.prob(i as usize) > 0.0 || q.prob(i as usize) > 0.0)
+            .collect();
+        assert_eq!(race.support, expect);
+
+        // Both cached: the fast path must produce the same union.
+        let q2 = Categorical::from_logits(&logits, 1.0, Some(7));
+        race.build_support(100, [&q, &q2].into_iter());
+        let expect: Vec<u32> = (0..100u32)
+            .filter(|&i| q.prob(i as usize) > 0.0 || q2.prob(i as usize) > 0.0)
+            .collect();
+        assert_eq!(race.support, expect);
+    }
+
+    #[test]
+    fn panel_entries_match_counter_rng() {
+        let p = Categorical::new(vec![0.25; 4]);
+        let rng = CounterRng::new(3);
+        let mut race = RaceScratch::new();
+        race.build_support(4, std::iter::once(&p));
+        race.fill_panel(&rng, 11, 3, |r| r as u64);
+        for k in 0..3u64 {
+            for i in 0..4u64 {
+                assert_eq!(
+                    race.panel[(k as usize) * 4 + i as usize],
+                    rng.exponential(11, k, i)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_does_not_change_outcomes() {
+        // The same workspace must give identical results before and after
+        // being used for unrelated races (stale scratch must not leak).
+        let mut gen = XorShift128::new(21);
+        let p = testkit::gen_categorical(&mut gen, 12);
+        let q = testkit::gen_categorical(&mut gen, 12);
+        let rng = CounterRng::new(5);
+        let mut ws = CouplingWorkspace::new();
+        let fresh = ws.sample_gls(&p, &q, 4, &rng, 9);
+        // Pollute the scratch with differently-shaped races.
+        let small = testkit::gen_sparse_categorical(&mut gen, 70, 3);
+        ws.sample_gls(&small, &small, 9, &rng, 1);
+        ws.sample_gls_bilateral(&p, &q, 2, 3, &rng, 2);
+        let again = ws.sample_gls(&p, &q, 4, &rng, 9);
+        assert_eq!(fresh, again);
+    }
+
+    #[test]
+    fn kernel_matches_scalar_smoke() {
+        // Full parity lives in tests/kernel_parity.rs; this is the in-module
+        // canary so `cargo test --lib` catches drift too.
+        let mut gen = XorShift128::new(33);
+        let mut ws = CouplingWorkspace::new();
+        for seed in 0..20u64 {
+            let p = testkit::gen_categorical(&mut gen, 9);
+            let q = testkit::gen_categorical(&mut gen, 9);
+            let rng = CounterRng::new(seed);
+            assert_eq!(
+                ws.sample_gls(&p, &q, 3, &rng, seed),
+                gls::sample_gls_scalar(&p, &q, 3, &rng, seed)
+            );
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //! * [`gls`] — Algorithm 1 (`sample_gls`) and Algorithm 2 (the
 //!   conditionally drafter-invariant block verifier), plus the strongly
 //!   invariant variant of Appendix B (Prop. 6).
+//! * [`kernel`] — the zero-allocation sparse-support coupling kernel the
+//!   public GLS entry points run on (bit-exact with the scalar references).
 //! * [`lml`] — Theorem 1 / Proposition 2 bound evaluators.
 //! * [`specinfer`] — SpecInfer recursive multi-round rejection (Miao et al.).
 //! * [`spectr`] — SpecTr k-sequential-selection verification (Sun et al.).
@@ -16,6 +18,7 @@
 
 pub mod daliri;
 pub mod gls;
+pub mod kernel;
 pub mod lml;
 pub mod optimal;
 pub mod single_draft;
@@ -23,6 +26,7 @@ pub mod spectr;
 pub mod specinfer;
 pub mod types;
 
+pub use kernel::CouplingWorkspace;
 pub use types::{BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind};
 
 /// Construct a verifier by kind. `k` is the number of drafts the engine will

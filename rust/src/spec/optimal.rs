@@ -33,13 +33,15 @@ pub fn upper_bound(p: &Categorical, q: &Categorical, k: usize) -> f64 {
 /// `Σ_x⃗ π(y, x⃗) = q(y)` for every y. Objective: mass where `y ∈ x⃗`.
 /// Cost grows as N^(K+1); intended for N·K small (tests and the K ≤ 3
 /// points of Figure 6's cross-check).
-pub fn lp_optimal(p: &Categorical, q: &Categorical, k: usize) -> anyhow::Result<f64> {
+pub fn lp_optimal(p: &Categorical, q: &Categorical, k: usize) -> Result<f64, String> {
     assert_eq!(p.len(), q.len());
     assert!(k >= 1);
     let n = p.len();
     let tuples = n.pow(k as u32);
     let vars = n * tuples;
-    anyhow::ensure!(vars <= 200_000, "LP too large: {vars} variables");
+    if vars > 200_000 {
+        return Err(format!("LP too large: {vars} variables"));
+    }
 
     // Decode tuple index into component symbols.
     let decode = |mut t: usize| -> Vec<usize> {
@@ -85,7 +87,7 @@ pub fn lp_optimal(p: &Categorical, q: &Categorical, k: usize) -> anyhow::Result<
         }
     }
 
-    let sol = lp::solve(&a, &b, &c)?;
+    let sol = lp::solve(&a, &b, &c).map_err(|e| e.to_string())?;
     Ok(sol.objective.clamp(0.0, 1.0))
 }
 

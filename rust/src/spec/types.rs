@@ -8,9 +8,23 @@ use crate::stats::rng::CounterRng;
 /// coordinator — the logits arrive as f32 from the PJRT artifacts and are
 /// promoted once, which keeps acceptance decisions deterministic across
 /// batching order (important for drafter invariance audits).
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct Categorical {
     probs: Vec<f64>,
+    /// Ascending indices of the positive-mass symbols, cached when the
+    /// constructor gets it for free (top-k truncation). `None` means
+    /// "unknown / assume dense" — consumers must fall back to scanning
+    /// `probs`. The coupling kernel unions these lists instead of
+    /// rescanning N-length prob vectors per race.
+    support: Option<Vec<u32>>,
+}
+
+/// Equality is over the distribution itself; the support cache is derived
+/// metadata and must not affect comparisons.
+impl PartialEq for Categorical {
+    fn eq(&self, other: &Self) -> bool {
+        self.probs == other.probs
+    }
 }
 
 impl Categorical {
@@ -26,26 +40,42 @@ impl Categorical {
         if (total - 1.0).abs() > 1e-12 {
             probs.iter_mut().for_each(|p| *p /= total);
         }
-        Self { probs }
+        Self { probs, support: None }
     }
 
     /// Build from f32 logits with temperature and optional top-k truncation
     /// — the exact post-processing pipeline of the paper's LLM experiments
     /// (top-k 50, varying temperatures).
     pub fn from_logits(logits: &[f32], temperature: f64, top_k: Option<usize>) -> Self {
+        let mut scratch = Vec::new();
+        Self::from_logits_with_scratch(logits, temperature, top_k, &mut scratch)
+    }
+
+    /// [`Categorical::from_logits`] with a caller-provided top-k selection
+    /// buffer. The engine hot path calls this K×(L+1) times per speculative
+    /// block; reusing `scratch` (and selecting the threshold on *indices*
+    /// rather than a cloned value vector) removes the per-call scratch
+    /// allocation the seed paid.
+    pub fn from_logits_with_scratch(
+        logits: &[f32],
+        temperature: f64,
+        top_k: Option<usize>,
+        scratch: &mut Vec<u32>,
+    ) -> Self {
         assert!(!logits.is_empty());
         assert!(temperature > 0.0);
-        // Hot path (called K×(L+1) times per speculative block): one
-        // allocation, O(n) top-k via select_nth rather than a full sort.
         let inv_t = 1.0 / temperature;
         let mut w: Vec<f64> = logits.iter().map(|&l| l as f64 * inv_t).collect();
         if let Some(k) = top_k {
             if k < w.len() {
-                let mut scratch: Vec<f64> = w.clone();
-                // k-th largest = (k-1)-th in descending order.
-                let (_, thresh, _) = scratch
-                    .select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
-                let thresh = *thresh;
+                scratch.clear();
+                scratch.extend(0..w.len() as u32);
+                // k-th largest = (k-1)-th in descending order; O(n) via
+                // select_nth on the index buffer, values untouched.
+                let (_, mid, _) = scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+                    w[b as usize].partial_cmp(&w[a as usize]).unwrap()
+                });
+                let thresh = w[*mid as usize];
                 for s in w.iter_mut() {
                     if *s < thresh {
                         *s = f64::NEG_INFINITY;
@@ -61,19 +91,39 @@ impl Categorical {
         }
         let inv = 1.0 / total;
         w.iter_mut().for_each(|x| *x *= inv);
-        Self { probs: w }
+        // A truncated distribution's support is tiny (top_k of N) and known
+        // right here for the cost of one more pass — cache it so races
+        // iterate O(top_k) indices instead of rescanning all N probs.
+        let support = if top_k.is_some_and(|k| k < w.len()) {
+            Some(
+                w.iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v > 0.0)
+                    .map(|(i, _)| i as u32)
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Self { probs: w, support }
     }
 
     /// Uniform distribution on `n` symbols.
     pub fn uniform(n: usize) -> Self {
-        Self { probs: vec![1.0 / n as f64; n] }
+        Self { probs: vec![1.0 / n as f64; n], support: None }
     }
 
     /// Point mass at `i` on an alphabet of `n` symbols.
     pub fn delta(n: usize, i: usize) -> Self {
         let mut probs = vec![0.0; n];
         probs[i] = 1.0;
-        Self { probs }
+        Self { probs, support: None }
+    }
+
+    /// Cached ascending positive-mass indices, when known (see field docs).
+    #[inline]
+    pub fn support(&self) -> Option<&[u32]> {
+        self.support.as_deref()
     }
 
     #[inline]
@@ -112,16 +162,37 @@ impl Categorical {
     /// This *is* the paper's Gumbel-max sampling (eq. 1) — any party holding
     /// the same `CounterRng` coordinates reproduces the identical race.
     pub fn sample_race(&self, rng: &CounterRng, slot: u64, draft: u64) -> usize {
+        // The (slot, draft) hash prefix is constant across the race: hoist
+        // it once (CounterRng::lane), leaving one mix round per item.
+        // Bit-exact with the unhoisted rng.exponential(slot, draft, i).
+        let lane = rng.lane(slot, draft);
         let mut best = f64::INFINITY;
         let mut arg = 0;
-        for (i, &p) in self.probs.iter().enumerate() {
+        let mut race = |i: usize, p: f64| {
+            // Zero-mass symbols can never win an argmin, so skipping them
+            // (dense scan) and never visiting them (cached support) are the
+            // same race; the support cache may be a superset, hence the
+            // mass check stays in both paths.
             if p <= 0.0 {
-                continue;
+                return;
             }
-            let s = rng.exponential(slot, draft, i as u64) / p;
+            let s = lane.exponential(i as u64) / p;
             if s < best {
                 best = s;
                 arg = i;
+            }
+        };
+        match self.support.as_deref() {
+            // Top-k truncated: O(top_k) instead of an O(N) scan.
+            Some(sup) => {
+                for &i in sup {
+                    race(i as usize, self.probs[i as usize]);
+                }
+            }
+            None => {
+                for (i, &p) in self.probs.iter().enumerate() {
+                    race(i, p);
+                }
             }
         }
         arg
@@ -356,6 +427,22 @@ mod tests {
         assert_eq!(c.prob(3), 0.0);
         assert!((c.prob(0) + c.prob(1) - 1.0).abs() < 1e-12);
         assert!(c.prob(0) > c.prob(1));
+    }
+
+    #[test]
+    fn from_logits_topk_caches_exact_support() {
+        let logits: Vec<f32> = (0..200).map(|i| ((i * 7) % 31) as f32).collect();
+        let c = Categorical::from_logits(&logits, 1.0, Some(23));
+        let sup = c.support().expect("top-k must cache support");
+        let expect: Vec<u32> =
+            (0..200u32).filter(|&i| c.prob(i as usize) > 0.0).collect();
+        assert_eq!(sup, &expect[..]);
+        // Untruncated logits stay dense (no cache needed).
+        assert!(Categorical::from_logits(&logits, 1.0, None).support().is_none());
+        assert!(Categorical::from_logits(&logits, 1.0, Some(200)).support().is_none());
+        // The cache is derived metadata: equality ignores it.
+        let dense_copy = Categorical::new(c.probs().to_vec());
+        assert_eq!(c, dense_copy);
     }
 
     #[test]

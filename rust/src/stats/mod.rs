@@ -11,5 +11,5 @@ pub mod rng;
 pub mod summary;
 
 pub use dist::{box_muller, exponential, gumbel};
-pub use rng::{CounterRng, SplitMix64, XorShift128};
+pub use rng::{CounterLane, CounterRng, SplitMix64, XorShift128};
 pub use summary::{mean, sem, std_dev, OnlineStats, Summary};

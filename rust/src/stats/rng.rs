@@ -130,14 +130,27 @@ impl CounterRng {
         }
     }
 
+    /// Pre-mix the `(slot, draft)` prefix once, returning a [`CounterLane`]
+    /// that evaluates per-item variates with a *single* remaining mix round.
+    ///
+    /// The three-round `raw(slot, draft, item)` recomputes the first two
+    /// rounds for every vocabulary item even though they depend only on
+    /// `(slot, draft)`; every inner race loop in the coupling kernel hoists
+    /// them through this API. Bit-exact with the unhoisted path: the lane
+    /// applies the identical constants in the identical order.
+    #[inline]
+    pub fn lane(&self, slot: u64, draft: u64) -> CounterLane {
+        let a = SplitMix64::mix(self.key ^ slot.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+        let b = SplitMix64::mix(a ^ draft.wrapping_mul(0xCA5A_8263_95121157));
+        CounterLane { prefix: b }
+    }
+
     #[inline]
     fn raw(&self, slot: u64, draft: u64, item: u64) -> u64 {
         // Three mixing rounds with distinct domain constants; equivalent in
         // spirit to a 3-word Philox round but cheaper and sufficient for
         // simulation-grade uniformity (validated in tests by chi-square).
-        let a = SplitMix64::mix(self.key ^ slot.wrapping_mul(0xD6E8_FEB8_6659_FD93));
-        let b = SplitMix64::mix(a ^ draft.wrapping_mul(0xCA5A_8263_95121157));
-        SplitMix64::mix(b ^ item.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        self.lane(slot, draft).raw(item)
     }
 
     /// Uniform in (0, 1) at coordinates `(slot, draft, item)`.
@@ -154,15 +167,48 @@ impl CounterRng {
         -self.uniform(slot, draft, item).ln()
     }
 
-    /// Fill `out[k][i]` with Exp(1) variates for `k < drafts`, `i < items`.
-    pub fn exponential_matrix(&self, slot: u64, drafts: usize, items: usize) -> Vec<Vec<f64>> {
-        (0..drafts)
-            .map(|k| {
-                (0..items)
-                    .map(|i| self.exponential(slot, k as u64, i as u64))
-                    .collect()
-            })
-            .collect()
+    /// Row-major flat panel of Exp(1) variates: entry `[k * items + i]` is
+    /// the variate at coordinates `(slot, k, i)` for `k < drafts`,
+    /// `i < items`. One contiguous allocation instead of the former
+    /// `Vec<Vec<f64>>`, with the per-row lane prefix hoisted.
+    pub fn exponential_matrix(&self, slot: u64, drafts: usize, items: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(drafts * items);
+        for k in 0..drafts {
+            let lane = self.lane(slot, k as u64);
+            for i in 0..items {
+                out.push(lane.exponential(i as u64));
+            }
+        }
+        out
+    }
+}
+
+/// A `(slot, draft)` sub-stream of [`CounterRng`] with the first two mix
+/// rounds pre-applied. Per-item evaluation costs one SplitMix64 round.
+#[derive(Clone, Copy, Debug)]
+pub struct CounterLane {
+    prefix: u64,
+}
+
+impl CounterLane {
+    #[inline]
+    pub fn raw(&self, item: u64) -> u64 {
+        SplitMix64::mix(self.prefix ^ item.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Uniform in (0, 1) at `item` — bit-exact with
+    /// `CounterRng::uniform(slot, draft, item)`.
+    #[inline]
+    pub fn uniform(&self, item: u64) -> f64 {
+        let bits = self.raw(item) >> 11;
+        (bits as f64 + 0.5) * (1.0 / 9007199254740992.0)
+    }
+
+    /// Exponential(1) at `item` — bit-exact with
+    /// `CounterRng::exponential(slot, draft, item)`.
+    #[inline]
+    pub fn exponential(&self, item: u64) -> f64 {
+        -self.uniform(item).ln()
     }
 }
 
@@ -240,8 +286,27 @@ mod tests {
     fn exponential_matrix_shape_and_positivity() {
         let rng = CounterRng::new(5);
         let m = rng.exponential_matrix(3, 4, 10);
-        assert_eq!(m.len(), 4);
-        assert!(m.iter().all(|row| row.len() == 10));
-        assert!(m.iter().flatten().all(|&s| s > 0.0));
+        assert_eq!(m.len(), 4 * 10);
+        assert!(m.iter().all(|&s| s > 0.0));
+        // Strided entry (k, i) matches the coordinate-wise evaluation.
+        for k in 0..4u64 {
+            for i in 0..10u64 {
+                assert_eq!(m[(k * 10 + i) as usize], rng.exponential(3, k, i));
+            }
+        }
+    }
+
+    #[test]
+    fn lane_matches_full_coordinate_path() {
+        let rng = CounterRng::new(0xFEED);
+        for slot in [0u64, 1, 77] {
+            for draft in [0u64, 3, 9] {
+                let lane = rng.lane(slot, draft);
+                for item in 0..64u64 {
+                    assert_eq!(lane.uniform(item), rng.uniform(slot, draft, item));
+                    assert_eq!(lane.exponential(item), rng.exponential(slot, draft, item));
+                }
+            }
+        }
     }
 }

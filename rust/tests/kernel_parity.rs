@@ -1,0 +1,292 @@
+//! Kernel/scalar parity property tests.
+//!
+//! Determinism is load-bearing for GLS: drafter invariance (paper Def. 1/2)
+//! and the coordinator's replay audits both assume verification is a pure
+//! function of `(input, randomness)`. The sparse-support workspace kernel
+//! (`spec::kernel`) is therefore required to be **bit-exact** with the
+//! scalar full-alphabet references (`spec::gls::*_scalar`) — not merely
+//! distributionally equivalent. These properties run the two paths on
+//! random dense, sparse-support, and top-k-truncated distributions (the
+//! paper's LLM regime) and demand identical `GlsOutcome` / `BlockOutput`
+//! values.
+
+use gls_serve::spec::gls::{self, GlsVerifier};
+use gls_serve::spec::kernel::CouplingWorkspace;
+use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical};
+use gls_serve::stats::rng::{CounterRng, XorShift128};
+use gls_serve::testkit::{gen_categorical, gen_sparse_categorical};
+
+/// Top-k truncated categorical from random logits — the paper's LLM
+/// post-processing (top-k 50 at 2048-vocab in the experiments; smaller
+/// shapes here to keep the property loops snappy).
+fn gen_topk(gen: &mut XorShift128, n: usize, top_k: usize) -> Categorical {
+    let logits: Vec<f32> = (0..n).map(|_| (gen.next_f64() * 6.0) as f32).collect();
+    Categorical::from_logits(&logits, 1.0, Some(top_k))
+}
+
+/// The three distribution regimes every parity property sweeps.
+fn gen_by_regime(gen: &mut XorShift128, regime: usize, n: usize) -> Categorical {
+    match regime {
+        0 => gen_categorical(gen, n),
+        1 => gen_sparse_categorical(gen, n, (n / 7).max(2)),
+        _ => gen_topk(gen, n, (n / 10).max(2)),
+    }
+}
+
+#[test]
+fn sample_gls_parity_across_regimes() {
+    let mut gen = XorShift128::new(0xA11CE);
+    let mut ws = CouplingWorkspace::new();
+    for case in 0..120u64 {
+        let regime = (case % 3) as usize;
+        let n = [5usize, 64, 130, 300][(case as usize / 3) % 4];
+        let k = [1usize, 2, 4, 8][(case as usize) % 4];
+        let p = gen_by_regime(&mut gen, regime, n);
+        let q = gen_by_regime(&mut gen, regime, n);
+        let rng = CounterRng::new(1000 + case);
+        let scalar = gls::sample_gls_scalar(&p, &q, k, &rng, case);
+        // Public entry point (thread-local workspace) and an explicit
+        // reused workspace must both match the scalar reference exactly.
+        assert_eq!(gls::sample_gls(&p, &q, k, &rng, case), scalar, "case {case}");
+        assert_eq!(ws.sample_gls(&p, &q, k, &rng, case), scalar, "case {case} (reused ws)");
+    }
+}
+
+#[test]
+fn sample_gls_diverse_parity() {
+    let mut gen = XorShift128::new(0xD1CE);
+    let mut ws = CouplingWorkspace::new();
+    for case in 0..60u64 {
+        let regime = (case % 3) as usize;
+        let n = [9usize, 80, 200][(case as usize) % 3];
+        let k = 1 + (case as usize % 5);
+        let ps: Vec<Categorical> =
+            (0..k).map(|_| gen_by_regime(&mut gen, regime, n)).collect();
+        let q = gen_by_regime(&mut gen, regime, n);
+        let rng = CounterRng::new(77 + case);
+        let scalar = gls::sample_gls_diverse_scalar(&ps, &q, &rng, case);
+        assert_eq!(gls::sample_gls_diverse(&ps, &q, &rng, case), scalar, "case {case}");
+        assert_eq!(ws.sample_gls_diverse(&ps, &q, &rng, case), scalar, "case {case}");
+    }
+}
+
+#[test]
+fn sample_gls_bilateral_parity() {
+    let mut gen = XorShift128::new(0xB11A);
+    let mut ws = CouplingWorkspace::new();
+    for case in 0..60u64 {
+        let regime = (case % 3) as usize;
+        let n = [6usize, 70, 150][(case as usize) % 3];
+        let ka = 1 + (case as usize % 4);
+        let kb = 1 + ((case as usize / 4) % 3);
+        let p = gen_by_regime(&mut gen, regime, n);
+        let q = gen_by_regime(&mut gen, regime, n);
+        let rng = CounterRng::new(31 + case);
+        let scalar = gls::sample_gls_bilateral_scalar(&p, &q, ka, kb, &rng, case);
+        assert_eq!(gls::sample_gls_bilateral(&p, &q, ka, kb, &rng, case), scalar, "case {case}");
+        assert_eq!(ws.sample_gls_bilateral(&p, &q, ka, kb, &rng, case), scalar, "case {case}");
+    }
+}
+
+#[test]
+fn select_target_token_parity_with_random_active_sets() {
+    let mut gen = XorShift128::new(0x5E1);
+    let mut ws = CouplingWorkspace::new();
+    for case in 0..80u64 {
+        let regime = (case % 3) as usize;
+        let n = [7usize, 90, 260][(case as usize) % 3];
+        let k = 1 + (case as usize % 6);
+        let dists: Vec<Categorical> =
+            (0..k).map(|_| gen_by_regime(&mut gen, regime, n)).collect();
+        let refs: Vec<&Categorical> = dists.iter().collect();
+        // Random non-empty ascending active subset (Alg. 2's S after
+        // arbitrary divergence patterns).
+        let mut active: Vec<usize> =
+            (0..k).filter(|_| gen.next_below(2) == 1).collect();
+        if active.is_empty() {
+            active.push(gen.next_below(k as u64) as usize);
+        }
+        let rng = CounterRng::new(5000 + case);
+        let scalar = gls::select_target_token_scalar(&refs, &active, &rng, case);
+        assert_eq!(gls::select_target_token(&refs, &active, &rng, case), scalar, "case {case}");
+        assert_eq!(ws.select_target_token(&refs, &active, &rng, case), scalar, "case {case}");
+    }
+}
+
+fn random_block(gen: &mut XorShift128, regime: usize, k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
+    let p: Vec<Categorical> = (0..l).map(|_| gen_by_regime(gen, regime, n)).collect();
+    let rng = CounterRng::new(seed ^ 0xDEAD);
+    let mut draft_tokens = vec![Vec::with_capacity(l); k];
+    for kk in 0..k {
+        for j in 0..l {
+            draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+        }
+    }
+    let shared_q: Vec<Categorical> = (0..=l).map(|_| gen_by_regime(gen, regime, n)).collect();
+    BlockInput {
+        draft_dists: vec![p; k],
+        target_dists: vec![shared_q; k],
+        draft_tokens,
+    }
+}
+
+#[test]
+fn verify_block_parity_conditional_and_strong() {
+    let mut gen = XorShift128::new(0xB10C);
+    for case in 0..60u64 {
+        let regime = (case % 3) as usize;
+        let n = [6usize, 64, 300][(case as usize) % 3];
+        let k = 1 + (case as usize % 5);
+        let l = 1 + (case as usize % 4);
+        let input = random_block(&mut gen, regime, k, l, n, case);
+        let rng = CounterRng::new(case * 31 + 7);
+        for v in [GlsVerifier::conditional(), GlsVerifier::strong()] {
+            let scalar = v.verify_block_scalar(&input, &rng, case);
+            let kernel = v.verify_block(&input, &rng, case);
+            assert_eq!(kernel, scalar, "case {case} strong-variant mismatch");
+        }
+    }
+}
+
+#[test]
+fn verify_block_parity_llm_regime_k8_topk50() {
+    // The acceptance-criterion shape: K=8, N=2048, top-k-50 target
+    // distributions — exactly what benches/perf_engine.rs times.
+    let mut gen = XorShift128::new(0x2048);
+    let k = 8;
+    let l = 4;
+    let n = 2048;
+    for case in 0..6u64 {
+        let p: Vec<Categorical> = (0..l).map(|_| gen_topk(&mut gen, n, 50)).collect();
+        let rng_draft = CounterRng::new(case ^ 0xFACE);
+        let mut draft_tokens = vec![Vec::with_capacity(l); k];
+        for kk in 0..k {
+            for j in 0..l {
+                draft_tokens[kk].push(p[j].sample_race(&rng_draft, j as u64, kk as u64) as u32);
+            }
+        }
+        let q: Vec<Categorical> = (0..=l).map(|_| gen_topk(&mut gen, n, 50)).collect();
+        let input = BlockInput {
+            draft_dists: vec![p; k],
+            target_dists: vec![q; k],
+            draft_tokens,
+        };
+        let rng = CounterRng::new(900 + case);
+        let v = GlsVerifier::conditional();
+        assert_eq!(v.verify_block(&input, &rng, case * 10), v.verify_block_scalar(&input, &rng, case * 10));
+    }
+}
+
+#[test]
+fn sample_race_support_cache_is_exact() {
+    // sample_race over a cached top-k support must match the dense scan on
+    // the identical probability vector (cache stripped via Categorical::new).
+    let mut gen = XorShift128::new(0x5A7E);
+    for case in 0..40u64 {
+        let n = [60usize, 300, 2048][(case as usize) % 3];
+        let c = gen_topk(&mut gen, n, (n / 12).max(2));
+        assert!(c.support().is_some());
+        let dense = Categorical::new(c.probs().to_vec());
+        assert!(dense.support().is_none());
+        let rng = CounterRng::new(400 + case);
+        for draft in 0..3u64 {
+            assert_eq!(
+                c.sample_race(&rng, case, draft),
+                dense.sample_race(&rng, case, draft),
+                "case {case} draft {draft}"
+            );
+        }
+    }
+}
+
+#[test]
+fn from_logits_scratch_reuse_is_exact() {
+    let mut gen = XorShift128::new(0x70F);
+    let mut scratch = Vec::new();
+    for case in 0..40 {
+        let n = [3usize, 50, 333, 2048][case % 4];
+        let logits: Vec<f32> = (0..n).map(|_| (gen.next_f64() * 9.0 - 4.0) as f32).collect();
+        let top_k = match case % 3 {
+            0 => None,
+            1 => Some(1),
+            _ => Some((n / 8).max(2)),
+        };
+        let temp = 0.25 + gen.next_f64() * 3.0;
+        let fresh = Categorical::from_logits(&logits, temp, top_k);
+        let reused = Categorical::from_logits_with_scratch(&logits, temp, top_k, &mut scratch);
+        assert_eq!(fresh, reused, "case {case} (n={n}, top_k={top_k:?})");
+    }
+}
+
+#[test]
+fn exponential_matrix_flat_layout_matches_coordinates() {
+    let rng = CounterRng::new(0xE4);
+    let (drafts, items) = (5usize, 37usize);
+    let m = rng.exponential_matrix(9, drafts, items);
+    assert_eq!(m.len(), drafts * items);
+    for k in 0..drafts as u64 {
+        for i in 0..items as u64 {
+            assert_eq!(m[(k as usize) * items + i as usize], rng.exponential(9, k, i));
+        }
+    }
+}
+
+#[test]
+fn engine_parallel_batch_matches_sequential_stepping() {
+    // The parallel verification path (large vocab, batch ≥ 2) must emit
+    // exactly what per-sequence stepping emits: verification is a pure
+    // function of the per-sequence randomness lane.
+    use gls_serve::coordinator::engine::SpecDecodeEngine;
+    use gls_serve::coordinator::kv::PagedKvCache;
+    use gls_serve::coordinator::sequence::{Request, SequenceState};
+    use gls_serve::coordinator::EngineConfig;
+    use gls_serve::model::backend::ModelPair;
+    use gls_serve::model::sampling::SamplingParams;
+    use gls_serve::model::sim::SimLm;
+    use gls_serve::spec::types::VerifierKind;
+
+    let vocab = 600; // k·(l+1)·vocab clears the parallel-dispatch threshold
+    let mk_engine = || {
+        let (d, t) = SimLm::pair(vocab, 21, 2.0);
+        let cfg = EngineConfig {
+            num_drafts: 8,
+            block_len: 4,
+            verifier: VerifierKind::Gls,
+            target_params: SamplingParams::new(1.0, Some(50)),
+            draft_params: vec![SamplingParams::new(1.0, Some(50))],
+            max_seq_len: 256,
+            seed: 99,
+        };
+        SpecDecodeEngine::new(cfg, ModelPair::new(Box::new(d), Box::new(t)), PagedKvCache::new(4096, 16))
+    };
+    let n_seqs = 12u64;
+    let mk_seqs = || -> Vec<SequenceState> {
+        (0..n_seqs)
+            .map(|i| SequenceState::from_request(&Request::new(i, vec![1, 2, (i % 9) as u32], 10)))
+            .collect()
+    };
+
+    let mut eng_batch = mk_engine();
+    let mut batch_seqs = mk_seqs();
+    for s in &batch_seqs {
+        eng_batch.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
+    }
+    {
+        let mut refs: Vec<&mut SequenceState> = batch_seqs.iter_mut().collect();
+        eng_batch.step_blocks(&mut refs);
+    }
+
+    let mut eng_seq = mk_engine();
+    let mut solo_seqs = mk_seqs();
+    for s in &solo_seqs {
+        eng_seq.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
+    }
+    for s in solo_seqs.iter_mut() {
+        let mut one = [s];
+        eng_seq.step_blocks(&mut one);
+    }
+
+    for (a, b) in batch_seqs.iter().zip(&solo_seqs) {
+        assert_eq!(a.tokens, b.tokens, "seq {} diverged under batching", a.id);
+    }
+}

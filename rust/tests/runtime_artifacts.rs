@@ -2,7 +2,9 @@
 //!
 //! These tests are skipped (with a notice) when `artifacts/` is missing —
 //! run `make artifacts` first. Everything else in the suite runs without
-//! artifacts.
+//! artifacts. The whole file is compiled only with the `pjrt` feature (the
+//! PJRT bridge needs the vendored `xla` crate; see Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use gls_serve::compression::image::{left_crop, right_half, synthetic_digits, LatentCodecModel};
 use gls_serve::coordinator::engine::SpecDecodeEngine;
