@@ -28,8 +28,11 @@ use gls_serve::coordinator::{EngineConfig, ServerConfig};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
 use gls_serve::model::sim::SimLm;
+use gls_serve::spec::daliri::DaliriVerifier;
 use gls_serve::spec::gls::GlsVerifier;
 use gls_serve::spec::make_verifier;
+use gls_serve::spec::specinfer::SpecInferVerifier;
+use gls_serve::spec::spectr::SpecTrVerifier;
 use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical, VerifierKind};
 use gls_serve::stats::rng::{CounterRng, XorShift128};
 use gls_serve::testkit::gen_categorical;
@@ -200,6 +203,116 @@ fn main() {
         println!("## L3a' — GLS verify_block, scalar vs sparse-support kernel");
         t.print();
         println!("speedup: {:.2}×\n", scalar_us / kernel_us);
+    }
+
+    // ---------------------------- L3a'' ported baselines, scalar vs kernel
+    // Every ported verifier (SpecTr, SpecInfer, Daliri) carries its own
+    // scalar-vs-kernel pair at the same LLM shape (K=8, N=2048, top-k-50).
+    // Outcomes are bit-identical (tests/kernel_parity.rs per-verifier
+    // suites); CI's perf-smoke job gates each speedup at ≥3×.
+    {
+        let mut t = Table::new(&["verifier", "path", "µs/block", "blocks/s", "speedup"]);
+        let (k, n, top_k, l) = (8usize, 2048usize, 50usize, 4usize);
+        let input = synth_block_topk(k, l, n, top_k, 123);
+        let rng = CounterRng::new(29);
+        let spectr = SpecTrVerifier::new();
+        let specinfer = SpecInferVerifier::new();
+        let daliri = DaliriVerifier::new();
+
+        let bench_pair = |name: &str,
+                              json: &mut PerfJson,
+                              t: &mut Table,
+                              scalar_fn: &dyn Fn(u64),
+                              kernel_fn: &dyn Fn(u64)| {
+            let mut slot = 0u64;
+            let case_scalar = format!("{name}-scalar-K8-N2048-topk50");
+            let r_scalar = time_budget(&case_scalar, budget, 20, || {
+                scalar_fn(slot);
+                slot = slot.wrapping_add(5);
+            });
+            let mut slot = 0u64;
+            let case_kernel = format!("{name}-kernel-K8-N2048-topk50");
+            let r_kernel = time_budget(&case_kernel, budget, 20, || {
+                kernel_fn(slot);
+                slot = slot.wrapping_add(5);
+            });
+            let scalar_us = r_scalar.per_iter.mean * 1e6;
+            let kernel_us = r_kernel.per_iter.mean * 1e6;
+            json.entry("L3a-ported", &case_scalar, &r_scalar);
+            json.entry("L3a-ported", &case_kernel, &r_kernel);
+            json.metric(&format!("{name}_scalar_us_per_block_k8_n2048_topk50"), scalar_us);
+            json.metric(&format!("{name}_kernel_us_per_block_k8_n2048_topk50"), kernel_us);
+            json.metric(&format!("{name}_speedup_k8_n2048_topk50"), scalar_us / kernel_us);
+            t.row(&[
+                name.to_string(),
+                "scalar".into(),
+                format!("{scalar_us:.1}"),
+                format!("{:.0}", 1.0 / r_scalar.per_iter.mean),
+                String::new(),
+            ]);
+            t.row(&[
+                String::new(),
+                "kernel".into(),
+                format!("{kernel_us:.1}"),
+                format!("{:.0}", 1.0 / r_kernel.per_iter.mean),
+                format!("{:.2}×", scalar_us / kernel_us),
+            ]);
+        };
+
+        bench_pair(
+            "spectr",
+            &mut json,
+            &mut t,
+            &|s| {
+                std::hint::black_box(spectr.verify_block_scalar(&input, &rng, s));
+            },
+            &|s| {
+                std::hint::black_box(spectr.verify_block(&input, &rng, s));
+            },
+        );
+        bench_pair(
+            "specinfer",
+            &mut json,
+            &mut t,
+            &|s| {
+                std::hint::black_box(specinfer.verify_block_scalar(&input, &rng, s));
+            },
+            &|s| {
+                std::hint::black_box(specinfer.verify_block(&input, &rng, s));
+            },
+        );
+        bench_pair(
+            "daliri",
+            &mut json,
+            &mut t,
+            &|s| {
+                std::hint::black_box(daliri.verify_block_scalar(&input, &rng, s));
+            },
+            &|s| {
+                std::hint::black_box(daliri.verify_block(&input, &rng, s));
+            },
+        );
+
+        // Parity spot checks inside the bench itself (same slot, same rng).
+        assert_eq!(
+            spectr.verify_block_scalar(&input, &rng, 54321),
+            spectr.verify_block(&input, &rng, 54321),
+            "spectr kernel/scalar divergence — see tests/kernel_parity.rs"
+        );
+        assert_eq!(
+            specinfer.verify_block_scalar(&input, &rng, 54321),
+            specinfer.verify_block(&input, &rng, 54321),
+            "specinfer kernel/scalar divergence — see tests/kernel_parity.rs"
+        );
+        assert_eq!(
+            daliri.verify_block_scalar(&input, &rng, 54321),
+            daliri.verify_block(&input, &rng, 54321),
+            "daliri kernel/scalar divergence — see tests/kernel_parity.rs"
+        );
+
+        println!("## L3a'' — ported baselines, scalar vs workspace kernel");
+        t.print();
+        println!();
     }
 
     // ----------------------------------------------------- L3b engine step

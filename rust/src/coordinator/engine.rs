@@ -27,6 +27,13 @@ pub struct BlockOutcome {
     pub accepted: usize,
 }
 
+/// Minimum per-sequence verification work (`k · (l+1) · vocab`) before
+/// `step_blocks` fans verification out across scoped threads; below it the
+/// serial path wins (thread spawn costs ~tens of µs). Shared between the
+/// dispatch decision and the draft phase's cache-warming predicate so the
+/// two can never disagree.
+const PARALLEL_VERIFY_WORK_THRESHOLD: usize = 8_192;
+
 pub struct SpecDecodeEngine {
     pub cfg: EngineConfig,
     pair: ModelPair,
@@ -89,6 +96,20 @@ impl SpecDecodeEngine {
         // Per-sequence randomness lanes, split once (not once per step).
         let seq_rngs: Vec<CounterRng> =
             seqs.iter().map(|s| self.root_rng.split(s.rng_lane)).collect();
+        // Warm this thread's panel cache with the draft-phase exponentials
+        // only when the verification phase will (a) race exponential panels
+        // at the same (slot, lane) coordinates — the GLS family and Daliri;
+        // the rejection baselines consume uniforms at disjoint coordinates —
+        // and (b) run serially on this thread (worker threads have their
+        // own, cold, thread-local workspaces). Both race paths are
+        // bit-exact, so this predicate is a pure perf decision.
+        let parallel_verify =
+            seqs.len() >= 2 && k * (l + 1) * self.pair.vocab() >= PARALLEL_VERIFY_WORK_THRESHOLD;
+        let warm_cache = !parallel_verify
+            && matches!(
+                self.cfg.verifier,
+                VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
+            );
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
             vec![vec![Vec::with_capacity(l); k]; seqs.len()];
@@ -107,9 +128,17 @@ impl SpecDecodeEngine {
                         &mut topk_scratch,
                     );
                     // Coupled drafting: the same (slot, lane) coordinates the
-                    // verifier will use — Alg. 2 line 4.
-                    let tok =
-                        p.sample_race(&seq_rngs[s], seq.next_slot + j as u64, lane as u64) as u32;
+                    // verifier will use — Alg. 2 line 4. When the serial
+                    // GLS/Daliri verification path will re-race these cells,
+                    // route through the workspace so the exponentials land in
+                    // the panel cache; `draft_race` and `sample_race` are
+                    // bit-exact, so the choice never changes a token.
+                    let slot = seq.next_slot + j as u64;
+                    let tok = if warm_cache {
+                        spec::gls::draft_race(&p, &seq_rngs[s], slot, lane as u64) as u32
+                    } else {
+                        p.sample_race(&seq_rngs[s], slot, lane as u64) as u32
+                    };
                     rows[idx].push(tok);
                     draft_tokens[s][lane].push(tok);
                     draft_dists[s][lane].push(p);
@@ -141,7 +170,11 @@ impl SpecDecodeEngine {
         // Per-sequence verification is a pure function of (draft data,
         // target logits, randomness lane), so it parallelizes across the
         // batch with no effect on outputs; each worker thread reuses its
-        // own coupling workspace and top-k scratch.
+        // own coupling workspace and top-k scratch. The ported verifier
+        // kinds (GLS, GLS-strong, SpecTr, SpecInfer, Daliri) all run
+        // `verify_block` on the workspace kernel (single-draft remains a
+        // cheap scalar baseline), so the thread-scoped fan-out below covers
+        // every kind uniformly.
         let t2 = Instant::now();
         let tp = self.cfg.target_params;
         let root = self.root_rng;
@@ -200,7 +233,7 @@ impl SpecDecodeEngine {
         // enough to amortize thread spawn (~tens of µs); the serial path is
         // bit-identical (verification is per-sequence pure).
         let per_seq_work = k * (l + 1) * self.pair.vocab();
-        let threads = if jobs.len() >= 2 && per_seq_work >= 8_192 {
+        let threads = if jobs.len() >= 2 && per_seq_work >= PARALLEL_VERIFY_WORK_THRESHOLD {
             std::thread::available_parallelism().map_or(1, |n| n.get()).min(jobs.len())
         } else {
             1
@@ -411,35 +444,38 @@ mod tests {
     }
 
     #[test]
-    fn batched_and_sequential_stepping_agree() {
-        // Determinism: stepping two sequences in one batch produces the
-        // same tokens as stepping them separately (verification is a pure
-        // function of per-sequence randomness lanes).
-        let mk = || {
-            (
-                SequenceState::from_request(&Request::new(1, vec![1, 2], 10)),
-                SequenceState::from_request(&Request::new(2, vec![3], 10)),
-            )
-        };
-        let (mut a1, mut a2) = mk();
-        let mut eng = engine(VerifierKind::Gls, 2, 2.0, 77);
-        eng.kv.register(1, 2, 12, 5).unwrap();
-        eng.kv.register(2, 1, 11, 5).unwrap();
-        {
-            let mut batch = [&mut a1, &mut a2];
-            eng.step_blocks(&mut batch);
+    fn batched_and_sequential_stepping_agree_all_verifiers() {
+        // Determinism for every verifier kind: stepping two sequences in
+        // one batch produces the same tokens as stepping them separately
+        // (verification is a pure function of per-sequence randomness
+        // lanes, whichever kernel-backed scheme runs it).
+        for &vk in VerifierKind::all() {
+            let mk = || {
+                (
+                    SequenceState::from_request(&Request::new(1, vec![1, 2], 10)),
+                    SequenceState::from_request(&Request::new(2, vec![3], 10)),
+                )
+            };
+            let (mut a1, mut a2) = mk();
+            let mut eng = engine(vk, 2, 2.0, 77);
+            eng.kv.register(1, 2, 12, 5).unwrap();
+            eng.kv.register(2, 1, 11, 5).unwrap();
+            {
+                let mut batch = [&mut a1, &mut a2];
+                eng.step_blocks(&mut batch);
+            }
+            let (mut b1, mut b2) = mk();
+            let mut eng2 = engine(vk, 2, 2.0, 77);
+            eng2.kv.register(1, 2, 12, 5).unwrap();
+            eng2.kv.register(2, 1, 11, 5).unwrap();
+            {
+                let mut batch = [&mut b1];
+                eng2.step_blocks(&mut batch);
+                let mut batch = [&mut b2];
+                eng2.step_blocks(&mut batch);
+            }
+            assert_eq!(a1.tokens, b1.tokens, "verifier {vk:?}");
+            assert_eq!(a2.tokens, b2.tokens, "verifier {vk:?}");
         }
-        let (mut b1, mut b2) = mk();
-        let mut eng2 = engine(VerifierKind::Gls, 2, 2.0, 77);
-        eng2.kv.register(1, 2, 12, 5).unwrap();
-        eng2.kv.register(2, 1, 11, 5).unwrap();
-        {
-            let mut batch = [&mut b1];
-            eng2.step_blocks(&mut batch);
-            let mut batch = [&mut b2];
-            eng2.step_blocks(&mut batch);
-        }
-        assert_eq!(a1.tokens, b1.tokens);
-        assert_eq!(a2.tokens, b2.tokens);
     }
 }

@@ -10,7 +10,8 @@
 
 use crate::stats::rng::CounterRng;
 
-use super::gls::sample_gls;
+use super::gls::select_target_token_scalar;
+use super::kernel::with_workspace;
 use super::types::{
     BlockInput, BlockOutput, BlockVerifier, Invariance, VerifierKind,
 };
@@ -21,6 +22,41 @@ pub struct DaliriVerifier;
 impl DaliriVerifier {
     pub fn new() -> Self {
         Self
+    }
+
+    /// Scalar full-alphabet reference for [`BlockVerifier::verify_block`]:
+    /// one dense lane-0 race on the target per position. The workspace
+    /// kernel path must match this bit-for-bit (`tests/kernel_parity.rs`);
+    /// it is also the perf baseline in `benches/perf_engine`.
+    ///
+    /// `Y_j` is a function of `(q, randomness)` alone — that is the strong
+    /// drafter invariance. The drafter produced its token from the *same*
+    /// exponential cells `(slot0 + j, lane 0, ·)`, so comparing `Y_j` to
+    /// the recorded draft token is exactly the `X = Y` acceptance check
+    /// (an invariant the integration tests assert against the engine).
+    pub fn verify_block_scalar(
+        &self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok());
+        let l = input.block_len();
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+        for j in 0..l {
+            let q = &input.target_dists[0][j];
+            let yj = select_target_token_scalar(&[q], &[0], rng, slot0 + j as u64) as u32;
+            tokens.push(yj);
+            if yj != input.draft_tokens[0][j] {
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+        // Bonus token: coupled race on the target at the final position.
+        let q = &input.target_dists[0][l];
+        tokens.push(select_target_token_scalar(&[q], &[0], rng, slot0 + l as u64) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
     }
 }
 
@@ -33,33 +69,12 @@ impl BlockVerifier for DaliriVerifier {
         Invariance::Strong
     }
 
+    /// Kernel-backed coupled verification: sparse-support lane-0 races on
+    /// the thread workspace, reusing draft-phase exponentials from the
+    /// panel cache when the engine drafted on the same thread — bit-exact
+    /// with [`DaliriVerifier::verify_block_scalar`].
     fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
-        debug_assert!(input.validate().is_ok());
-        let l = input.block_len();
-        let mut tokens = Vec::with_capacity(l + 1);
-        let mut accepted = 0usize;
-        for j in 0..l {
-            // Re-run the coupled race; the drafter used the same randomness
-            // to produce its token, so X here equals the draft token
-            // whenever the engine drafted with the same (rng, slot) — an
-            // invariant the integration tests assert.
-            let out = sample_gls(
-                &input.draft_dists[0][j],
-                &input.target_dists[0][j],
-                1,
-                rng,
-                slot0 + j as u64,
-            );
-            tokens.push(out.y as u32);
-            if out.y as u32 != input.draft_tokens[0][j] {
-                return BlockOutput { tokens, accepted, surviving_draft: None };
-            }
-            accepted += 1;
-        }
-        // Bonus token: coupled race on the target at the final position.
-        let q = &input.target_dists[0][l];
-        tokens.push(q.sample_race(rng, slot0 + l as u64, 0) as u32);
-        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+        with_workspace(|ws| ws.verify_block_daliri(input, rng, slot0))
     }
 }
 

@@ -1,16 +1,20 @@
-//! Zero-allocation batched GLS coupling kernel.
+//! Zero-allocation batched coupling kernel for the serving stack's
+//! verification schemes: the GLS family, SpecTr, SpecInfer, and Daliri all
+//! run their `verify_block` here (the classic single-draft TR baseline
+//! stays scalar — it races nothing and is already cheap).
 //!
-//! The scalar reference implementations in [`super::gls`] evaluate
-//! `O(N · K)` counter-RNG hashes and `ln()` calls per race, re-deriving the
-//! `(slot, draft)` hash prefix for every vocabulary item and walking the
-//! full alphabet even when the distributions are top-k truncated (the
-//! paper's LLM experiments run top-k 50 over 2048+ vocabularies, so ≥97% of
-//! the race is provably dead weight). This module is the serving hot path's
-//! answer:
+//! The scalar reference implementations (`*_scalar` in [`super::gls`],
+//! [`super::spectr`], [`super::specinfer`], [`super::daliri`]) evaluate
+//! `O(N · K)` counter-RNG hashes / `ln()` calls / dense vector passes per
+//! race or rejection round, re-deriving the `(slot, draft)` hash prefix for
+//! every vocabulary item and walking the full alphabet even when the
+//! distributions are top-k truncated (the paper's LLM experiments run top-k
+//! 50 over 2048+ vocabularies, so ≥97% of the work is provably dead
+//! weight). This module is the serving hot path's answer:
 //!
-//! * [`CouplingWorkspace`] owns reusable flat scratch buffers — races make
-//!   **no heap allocations** beyond their mandated outputs once the
-//!   workspace has warmed up.
+//! * [`CouplingWorkspace`] owns reusable flat scratch buffers — races and
+//!   rejection cascades make **no heap allocations** beyond their mandated
+//!   outputs once the workspace has warmed up.
 //! * Exponentials are materialized once per race into a single row-major
 //!   **panel** (`panel[row * support_len + j]`), with the per-`(slot,
 //!   draft)` SplitMix64 prefix hoisted via [`CounterRng::lane`] so each
@@ -20,12 +24,89 @@
 //!   This is *exact*, not approximate — a zero-mass symbol is skipped by
 //!   the scalar `argmin` too, so it can never win — and turns `O(N · K)`
 //!   into `O(top_k · K)` for truncated distributions.
+//! * The rejection-cascade baselines (SpecInfer recursive residuals,
+//!   SpecTr K-SEQ calibration and its optimal-transport residual plan) run
+//!   on a [`ResidualScratch`]: the residual distribution lives in a dense
+//!   mass buffer tracked by an ascending support list, so residual updates
+//!   and inverse-CDF draws cost `O(|supp(q)|)` instead of `O(N)` plus a
+//!   `Categorical` allocation per rejection round.
+//! * Draft-phase races run through [`CouplingWorkspace::sample_race`],
+//!   which memoizes the evaluated exponentials in a [`PanelCache`] keyed
+//!   by the `(slot, draft)` lane prefix ([`CounterLane::key`]); a later
+//!   verification race on the same workspace at the same coordinates (the
+//!   coupled verify step — the draft/verifier coordinate overlap *is* the
+//!   paper's shared-randomness coupling) reassembles its panel from the
+//!   cache instead of re-hashing. Cache entries are keyed by exactly the
+//!   value that determines the variates, so reuse is structurally
+//!   bit-exact — a hit and a miss produce identical panels.
 //!
-//! Determinism is load-bearing (drafter invariance, replay audits), so the
-//! kernel is **bit-exact** with the scalar path: panel entries reproduce
-//! `CounterRng::exponential` exactly and every race visits its candidates
-//! in the scalar order (items ascending, lanes in scalar iteration order).
-//! `rust/tests/kernel_parity.rs` enforces this property.
+//! # Kernel contract
+//!
+//! Determinism is load-bearing (drafter invariance per paper Def. 1/2,
+//! replay audits), so every kernel path is required to be **bit-exact**
+//! with its scalar reference: equal outputs as *values* (same tokens, same
+//! accept counts, same surviving draft) for every input and every
+//! [`CounterRng`] — not merely equal in distribution. The rules that make
+//! this tractable, and that any new verifier port must follow:
+//!
+//! 1. **Same variates.** Panel entries reproduce
+//!    `rng.exponential(slot, draft, item)` exactly (the lane hoist applies
+//!    the identical mix constants in the identical order), and uniform
+//!    draws consume the identical `(slot, draft, item)` coordinates in the
+//!    identical order as the scalar path.
+//! 2. **Same visit order.** Races visit candidate items ascending and
+//!    lanes in scalar iteration order; ties are broken by strict `<`, so
+//!    the first-visited minimum wins in both paths.
+//! 3. **Exact sparsity only.** Skipping an item is allowed only when it
+//!    contributes an exact no-op in the scalar path: a zero-mass symbol
+//!    can never win an argmin, and adds an exact `+0.0` to any
+//!    nonnegative running sum (mass totals, CDF walks). Never skip based
+//!    on an approximate threshold.
+//! 4. **Replicate normalization bit-for-bit.** Residual renormalization
+//!    copies [`Categorical::new`]'s exact branch
+//!    (`if (total - 1.0).abs() > 1e-12 { divide }`) and the scalar
+//!    `residual()`/`calibrate()` thresholds (`1e-15` / `1e-12`) verbatim,
+//!    and inverse-CDF walks keep the scalar's dense fallback index
+//!    `N - 1`.
+//!
+//! # RNG coordinate map
+//!
+//! Which shared-randomness coordinates each consumer reads (`slot` is the
+//! absolute decoding position; K = number of drafts the engine runs):
+//!
+//! | consumer                  | coordinates                                             |
+//! |---------------------------|---------------------------------------------------------|
+//! | engine draft phase        | Exp at `(slot, lane, i)`, lane ∈ 0..K                   |
+//! | GLS verify (cond./strong) | Exp at `(slot, k, i)`, k ∈ active / 0..K                |
+//! | Daliri verify             | Exp at `(slot, 0, i)` (bonus token too)                 |
+//! | bilateral GLS             | Exp at `(slot, k·M + m, i)`                             |
+//! | SpecInfer / SpecTr verify | U at `(slot, K + round, 0)`, round ∈ 0..=\|active\|; bonus U at `(slot, K, 0)` |
+//! | single-draft baseline     | U at `(slot, 1, 0)` / `(slot, 2, 0)`; bonus U at `(slot, 1, 0)` |
+//!
+//! GLS/Daliri verification reads the *same* `(slot, lane)` exponential
+//! coordinates the draft phase wrote — that overlap is the coupling, and
+//! it is what the panel cache exploits. The rejection baselines
+//! deliberately consume draft coordinates `K..` so their verification
+//! uniforms never collide with drafting randomness at the same slot.
+//!
+//! # Porting a new verifier onto the workspace
+//!
+//! 1. Keep (or extract) the straightforward full-alphabet implementation
+//!    as a public `*_scalar` method — it is the parity oracle and the perf
+//!    baseline.
+//! 2. Implement the workspace method here on [`RaceScratch`] /
+//!    [`ResidualScratch`], following the contract rules above.
+//! 3. Point the `BlockVerifier::verify_block` trait impl at
+//!    [`with_workspace`].
+//! 4. Add a per-verifier bit-exactness suite to `tests/kernel_parity.rs`
+//!    (randomized `(p, q, K, L, top_k)` grids *plus* degenerate supports:
+//!    point masses, disjoint supports, `top_k ≥ vocab`).
+//! 5. The statistical conformance suite (`tests/conformance.rs`) and the
+//!    structural property suite (`tests/properties.rs`) pick the verifier
+//!    up automatically through `spec::all_verifiers()` — register the new
+//!    kind there.
+//! 6. Add a scalar-vs-kernel pair to `benches/perf_engine.rs` and gate its
+//!    speedup in `.github/workflows/ci.yml` (perf-smoke requires ≥3×).
 
 use std::cell::RefCell;
 
@@ -33,6 +114,56 @@ use crate::stats::rng::CounterRng;
 
 use super::gls::{BilateralOutcome, GlsOutcome};
 use super::types::{BlockInput, BlockOutput, Categorical};
+
+/// Capacity of the draft-phase panel cache (ring replacement). Sized to
+/// hold a few blocks' worth of `(slot, lane)` rows; eviction only costs
+/// recomputation, never correctness.
+const PANEL_CACHE_CAP: usize = 128;
+
+/// One memoized `(slot, draft)` row of exponentials: `values[j]` is the
+/// Exp(1) variate at item `items[j]` (ascending) for the lane identified
+/// by `key` ([`crate::stats::rng::CounterLane::key`]).
+struct CacheEntry {
+    key: u64,
+    items: Vec<u32>,
+    values: Vec<f64>,
+}
+
+/// Memo of recently evaluated draft-phase exponential rows, keyed by the
+/// lane prefix. Since every variate is a pure function of `(key, item)`,
+/// any entry with a matching key holds valid values for the items it
+/// lists — reuse can never change an outcome, only skip hash+`ln` work.
+struct PanelCache {
+    entries: Vec<CacheEntry>,
+    next: usize,
+}
+
+impl PanelCache {
+    fn new() -> Self {
+        Self { entries: Vec::new(), next: 0 }
+    }
+
+    fn find(&self, key: u64) -> Option<&CacheEntry> {
+        self.entries.iter().find(|e| e.key == key)
+    }
+
+    /// Claim a (possibly recycled) entry for `key`, cleared and ready to
+    /// record a race's evaluated items.
+    fn begin(&mut self, key: u64) -> &mut CacheEntry {
+        if self.entries.len() < PANEL_CACHE_CAP {
+            self.entries.push(CacheEntry { key, items: Vec::new(), values: Vec::new() });
+            self.entries.last_mut().expect("just pushed")
+        } else {
+            let pos = self.next;
+            self.next = (self.next + 1) % PANEL_CACHE_CAP;
+            let e = &mut self.entries[pos];
+            e.key = key;
+            e.items.clear();
+            e.values.clear();
+            e
+        }
+    }
+}
 
 /// Reusable scratch for one coupling race.
 struct RaceScratch {
@@ -116,20 +247,43 @@ impl RaceScratch {
 
     /// Fill `rows` panel rows of exponentials over the current support;
     /// panel row `r` uses the draft coordinate `lane_of(r)`. Entries are
-    /// bit-exact with `rng.exponential(slot, lane_of(r), item)`.
+    /// bit-exact with `rng.exponential(slot, lane_of(r), item)` — rows
+    /// whose lane prefix is memoized in `cache` (a draft-phase race at the
+    /// same coordinates) are merged from the cached values, the rest are
+    /// computed; both sources yield identical bits by construction.
     fn fill_panel(
         &mut self,
         rng: &CounterRng,
         slot: u64,
         rows: usize,
         mut lane_of: impl FnMut(usize) -> u64,
+        cache: &PanelCache,
     ) {
         self.panel.clear();
         self.panel.reserve(rows * self.support.len());
         for r in 0..rows {
             let lane = rng.lane(slot, lane_of(r));
-            for &i in &self.support {
-                self.panel.push(lane.exponential(i as u64));
+            match cache.find(lane.key()) {
+                Some(hit) => {
+                    // Two-pointer merge over two ascending item lists:
+                    // cached items are copied, the rest are evaluated.
+                    let mut ci = 0usize;
+                    for &i in &self.support {
+                        while ci < hit.items.len() && hit.items[ci] < i {
+                            ci += 1;
+                        }
+                        if ci < hit.items.len() && hit.items[ci] == i {
+                            self.panel.push(hit.values[ci]);
+                        } else {
+                            self.panel.push(lane.exponential(i as u64));
+                        }
+                    }
+                }
+                None => {
+                    for &i in &self.support {
+                        self.panel.push(lane.exponential(i as u64));
+                    }
+                }
             }
         }
     }
@@ -145,13 +299,14 @@ impl RaceScratch {
         dist_of: F,
         rng: &CounterRng,
         slot: u64,
+        cache: &PanelCache,
     ) -> usize
     where
         F: Fn(usize) -> &'a Categorical,
     {
         assert!(!participants.is_empty());
         self.build_support(n, participants.iter().map(|&k| dist_of(k)));
-        self.fill_panel(rng, slot, participants.len(), |r| participants[r] as u64);
+        self.fill_panel(rng, slot, participants.len(), |r| participants[r] as u64, cache);
         let s = self.support.len();
         let mut best = f64::INFINITY;
         let mut arg = 0usize;
@@ -173,6 +328,115 @@ impl RaceScratch {
     }
 }
 
+/// Reusable scratch for the rejection-cascade baselines: a residual (or
+/// optimal-transport residual plan) distribution stored as a dense mass
+/// buffer plus the ascending list of indices that may carry mass.
+///
+/// The support list is allowed to be a superset of the true support
+/// (entries may decay to exactly 0.0); every consumer re-checks masses, and
+/// sums over the superset are bit-identical to dense sums because the
+/// skipped/zero entries contribute an exact `+0.0`.
+struct ResidualScratch {
+    /// Ascending indices that may carry mass. Always ⊆ the initial
+    /// distribution's support (residual updates never create mass).
+    support: Vec<u32>,
+    /// Dense masses over the alphabet; exactly 0.0 outside `support`.
+    mass: Vec<f64>,
+}
+
+impl ResidualScratch {
+    fn new() -> Self {
+        Self { support: Vec::new(), mass: Vec::new() }
+    }
+
+    /// Reset to the all-zero measure over an alphabet of `n` items.
+    fn reset(&mut self, n: usize) {
+        if self.mass.len() == n {
+            // Only the tracked support can be nonzero; zero it surgically.
+            for &i in &self.support {
+                self.mass[i as usize] = 0.0;
+            }
+        } else {
+            self.mass.clear();
+            self.mass.resize(n, 0.0);
+        }
+        self.support.clear();
+    }
+
+    /// Load `d`'s masses as the residual (SpecInfer round 0: residual = q).
+    fn load(&mut self, d: &Categorical) {
+        self.reset(d.len());
+        match d.support() {
+            Some(sup) => {
+                for &i in sup {
+                    let m = d.prob(i as usize);
+                    if m > 0.0 {
+                        self.support.push(i);
+                        self.mass[i as usize] = m;
+                    }
+                }
+            }
+            None => {
+                for (i, &m) in d.probs().iter().enumerate() {
+                    if m > 0.0 {
+                        self.support.push(i as u32);
+                        self.mass[i] = m;
+                    }
+                }
+            }
+        }
+    }
+
+    /// In-place `(r − p)₊` followed by renormalization — bit-exact with
+    /// `r.residual(p)` + [`Categorical::new`] on the scalar path. Returns
+    /// `false` when the positive part is exhausted (scalar's `None`).
+    fn subtract_renormalize(&mut self, p: &Categorical) -> bool {
+        let mut total = 0.0;
+        for &i in &self.support {
+            let w = (self.mass[i as usize] - p.prob(i as usize)).max(0.0);
+            self.mass[i as usize] = w;
+            total += w;
+        }
+        if total <= 1e-15 {
+            return false;
+        }
+        // Categorical::new's exact normalization branch.
+        if (total - 1.0).abs() > 1e-12 {
+            for &i in &self.support {
+                self.mass[i as usize] /= total;
+            }
+        }
+        true
+    }
+
+    /// Inverse-CDF draw — bit-exact with the dense
+    /// [`Categorical::sample_inverse`] walk (zero entries add an exact
+    /// `+0.0` to the CDF and can never be the first index where
+    /// `u < acc` turns true), including the dense fallback `n - 1`.
+    fn sample_inverse(&self, n: usize, u: f64) -> usize {
+        let mut acc = 0.0;
+        for &i in &self.support {
+            acc += self.mass[i as usize];
+            if u < acc {
+                return i as usize;
+            }
+        }
+        n - 1
+    }
+}
+
+/// Sparse `s(γ) = Σ_i min(p_i, q_i/γ)` over a prepared union support —
+/// bit-exact with the dense sum in [`super::spectr::calibrate`]: items off
+/// the union have `p_i = q_i = 0` and contribute an exact `+0.0`.
+fn s_of_gamma_sparse(support: &[u32], p: &Categorical, q: &Categorical, gamma: f64) -> f64 {
+    let mut s = 0.0;
+    for &i in support {
+        let i = i as usize;
+        s += p.prob(i).min(q.prob(i) / gamma);
+    }
+    s
+}
+
 /// Reusable flat scratch buffers for the whole coupling data path.
 ///
 /// One workspace per thread (see [`with_workspace`]); every race reuses the
@@ -180,7 +444,10 @@ impl RaceScratch {
 /// the `GlsOutcome` / `BlockOutput` it must return.
 pub struct CouplingWorkspace {
     race: RaceScratch,
-    /// Alg. 2's active draft set S (conditional variant).
+    residual: ResidualScratch,
+    cache: PanelCache,
+    /// Alg. 2's active draft set S (conditional variant); doubles as the
+    /// rejection baselines' surviving-candidate set.
     active: Vec<usize>,
     /// The full draft set 0..K (strong variant participants).
     all: Vec<usize>,
@@ -198,10 +465,55 @@ impl CouplingWorkspace {
     pub fn new() -> Self {
         Self {
             race: RaceScratch::new(),
+            residual: ResidualScratch::new(),
+            cache: PanelCache::new(),
             active: Vec::new(),
             all: Vec::new(),
             topk_scratch: Vec::new(),
         }
+    }
+
+    /// Draft-phase Gumbel-max race — bit-exact with
+    /// [`Categorical::sample_race`] (same visit order, same strict-`<`
+    /// tie-breaking, identical variates).
+    ///
+    /// Beyond returning the sample, the evaluated exponentials are recorded
+    /// in the workspace panel cache keyed by the `(slot, draft)` lane, so a
+    /// later verification race on this workspace at the same coordinates —
+    /// the coupled verify step of GLS/Daliri, which by construction reads
+    /// the same shared-randomness cells — reuses them instead of
+    /// re-hashing (ROADMAP follow-up #2).
+    pub fn sample_race(&mut self, d: &Categorical, rng: &CounterRng, slot: u64, draft: u64) -> usize {
+        let lane = rng.lane(slot, draft);
+        let entry = self.cache.begin(lane.key());
+        let mut best = f64::INFINITY;
+        let mut arg = 0usize;
+        let mut consider = |i: usize, p: f64| {
+            if p <= 0.0 {
+                return;
+            }
+            let e = lane.exponential(i as u64);
+            entry.items.push(i as u32);
+            entry.values.push(e);
+            let v = e / p;
+            if v < best {
+                best = v;
+                arg = i;
+            }
+        };
+        match d.support() {
+            Some(sup) => {
+                for &i in sup {
+                    consider(i as usize, d.prob(i as usize));
+                }
+            }
+            None => {
+                for (i, &p) in d.probs().iter().enumerate() {
+                    consider(i, p);
+                }
+            }
+        }
+        arg
     }
 
     /// Algorithm 1 (SampleGLS) over the sparse union support — bit-exact
@@ -216,9 +528,9 @@ impl CouplingWorkspace {
     ) -> GlsOutcome {
         assert_eq!(p.len(), q.len(), "alphabet mismatch");
         assert!(k >= 1);
-        let race = &mut self.race;
+        let Self { race, cache, .. } = self;
         race.build_support(p.len(), [p, q].into_iter());
-        race.fill_panel(rng, slot, k, |r| r as u64);
+        race.fill_panel(rng, slot, k, |r| r as u64, cache);
         let s = race.support.len();
 
         let mut y_best = f64::INFINITY;
@@ -271,9 +583,9 @@ impl CouplingWorkspace {
         }
         let n = q.len();
         let k = ps.len();
-        let race = &mut self.race;
+        let Self { race, cache, .. } = self;
         race.build_support(n, ps.iter().chain(std::iter::once(q)));
-        race.fill_panel(rng, slot, k, |r| r as u64);
+        race.fill_panel(rng, slot, k, |r| r as u64, cache);
         let s = race.support.len();
 
         let mut y_best = f64::INFINITY;
@@ -329,9 +641,9 @@ impl CouplingWorkspace {
     ) -> BilateralOutcome {
         assert_eq!(p.len(), q.len(), "alphabet mismatch");
         assert!(k_a >= 1 && k_b >= 1);
-        let race = &mut self.race;
+        let Self { race, cache, .. } = self;
         race.build_support(p.len(), [p, q].into_iter());
-        race.fill_panel(rng, slot, k_a * k_b, |r| r as u64);
+        race.fill_panel(rng, slot, k_a * k_b, |r| r as u64, cache);
         let s = race.support.len();
 
         // best/arg lanes: [0, k_a) for X, [k_a, k_a + k_b) for Y.
@@ -382,7 +694,8 @@ impl CouplingWorkspace {
     ) -> usize {
         assert!(!active.is_empty());
         let n = dists[active[0]].len();
-        self.race.select_with(n, active, |k| dists[k], rng, slot)
+        let Self { race, cache, .. } = self;
+        race.select_with(n, active, |k| dists[k], rng, slot, cache)
     }
 
     /// Algorithm 2 block verification (conditional or strong variant) over
@@ -399,7 +712,7 @@ impl CouplingWorkspace {
         let k = input.k();
         let l = input.block_len();
         let n = input.target_dists[0][0].len();
-        let Self { race, active, all, .. } = self;
+        let Self { race, cache, active, all, .. } = self;
         all.clear();
         all.extend(0..k);
         active.clear();
@@ -409,9 +722,14 @@ impl CouplingWorkspace {
 
         for j in 0..l {
             let participants: &[usize] = if strong { &all[..] } else { &active[..] };
-            let yj = race
-                .select_with(n, participants, |kk| &input.target_dists[kk][j], rng, slot0 + j as u64)
-                as u32;
+            let yj = race.select_with(
+                n,
+                participants,
+                |kk| &input.target_dists[kk][j],
+                rng,
+                slot0 + j as u64,
+                cache,
+            ) as u32;
             tokens.push(yj);
             active.retain(|&kk| input.draft_tokens[kk][j] == yj);
             if active.is_empty() {
@@ -424,10 +742,265 @@ impl CouplingWorkspace {
 
         // Full block accepted: emit the bonus token Y_{L+1} (Alg. 2 line 13).
         let participants: &[usize] = if strong { &all[..] } else { &active[..] };
-        let bonus = race
-            .select_with(n, participants, |kk| &input.target_dists[kk][l], rng, slot0 + l as u64)
-            as u32;
+        let bonus = race.select_with(
+            n,
+            participants,
+            |kk| &input.target_dists[kk][l],
+            rng,
+            slot0 + l as u64,
+            cache,
+        ) as u32;
         tokens.push(bonus);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+
+    /// Daliri et al. single-draft coupled verification on the workspace
+    /// kernel — bit-exact with
+    /// [`super::daliri::DaliriVerifier::verify_block_scalar`].
+    ///
+    /// `Y_j` is a lane-0 race on the target alone (the emitted token is a
+    /// function of `(q, randomness)` only — that is the strong drafter
+    /// invariance); comparing it to the recorded draft token *is* the
+    /// `X = Y` check, because the drafter produced its token from the same
+    /// exponential cells. When the engine drafted through
+    /// [`CouplingWorkspace::sample_race`] on this workspace, those cells
+    /// are already in the panel cache and the verification panel is
+    /// assembled without re-hashing.
+    pub fn verify_block_daliri(
+        &mut self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let l = input.block_len();
+        let Self { race, cache, .. } = self;
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+        for j in 0..l {
+            let q = &input.target_dists[0][j];
+            let yj = race.select_with(q.len(), &[0], |_| q, rng, slot0 + j as u64, cache) as u32;
+            tokens.push(yj);
+            if yj != input.draft_tokens[0][j] {
+                return BlockOutput { tokens, accepted, surviving_draft: None };
+            }
+            accepted += 1;
+        }
+        // Bonus token: lane-0 coupled race on the final target distribution.
+        let q = &input.target_dists[0][l];
+        let bonus = race.select_with(q.len(), &[0], |_| q, rng, slot0 + l as u64, cache) as u32;
+        tokens.push(bonus);
+        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+    }
+
+    /// One SpecInfer multi-round rejection step on the residual scratch —
+    /// bit-exact with [`super::specinfer::SpecInferVerifier::step`], with
+    /// the running residual updated in place over `supp(q)` instead of
+    /// cloning/reallocating a `Categorical` per round.
+    fn specinfer_step(
+        residual: &mut ResidualScratch,
+        input: &BlockInput,
+        active: &[usize],
+        j: usize,
+        q: &Categorical,
+        rng: &CounterRng,
+        slot: u64,
+        k_total: usize,
+    ) -> (u32, Option<usize>) {
+        residual.load(q);
+        for (round, &kk) in active.iter().enumerate() {
+            let token = input.draft_tokens[kk][j];
+            let p_k = &input.draft_dists[kk][j];
+            let u = rng.uniform(slot, (k_total + round) as u64, 0);
+            let px = p_k.prob(token as usize);
+            let rx = residual.mass[token as usize];
+            let accept_prob = if px <= 0.0 { 1.0 } else { (rx / px).min(1.0) };
+            if u < accept_prob {
+                return (token, Some(kk));
+            }
+            if !residual.subtract_renormalize(p_k) {
+                // Residual exhausted: scalar falls back to q's argmax.
+                return (super::specinfer::argmax(q) as u32, None);
+            }
+        }
+        let u = rng.uniform(slot, (k_total + active.len()) as u64, 0);
+        (residual.sample_inverse(q.len(), u) as u32, None)
+    }
+
+    /// SpecInfer recursive multi-round rejection over the workspace —
+    /// bit-exact with
+    /// [`super::specinfer::SpecInferVerifier::verify_block_scalar`].
+    pub fn verify_block_specinfer(
+        &mut self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let k = input.k();
+        let l = input.block_len();
+        let Self { residual, active, .. } = self;
+        active.clear();
+        active.extend(0..k);
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            // All active drafts share the accepted prefix ⇒ common target q.
+            let q = &input.target_dists[active[0]][j];
+            let (tok, from_draft) =
+                Self::specinfer_step(residual, input, active, j, q, rng, slot0 + j as u64, k);
+            tokens.push(tok);
+            match from_draft {
+                Some(_) => {
+                    active.retain(|&kk| input.draft_tokens[kk][j] == tok);
+                    debug_assert!(!active.is_empty());
+                    accepted += 1;
+                }
+                None => return BlockOutput { tokens, accepted, surviving_draft: None },
+            }
+        }
+
+        // Bonus token from the target distribution after the full prefix.
+        let q = &input.target_dists[active[0]][l];
+        let u = rng.uniform(slot0 + l as u64, k as u64, 0);
+        tokens.push(q.sample_inverse(u) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+
+    /// One SpecTr K-SEQ step: γ-calibration over the sparse union support,
+    /// the candidate cascade, and (on reject-all) a draw from the
+    /// optimal-transport residual plan built in the residual scratch —
+    /// bit-exact with [`super::spectr::SpecTrVerifier::step`] +
+    /// [`super::spectr::calibrate`].
+    #[allow(clippy::too_many_arguments)]
+    fn spectr_step(
+        race: &mut RaceScratch,
+        residual: &mut ResidualScratch,
+        input: &BlockInput,
+        active: &[usize],
+        j: usize,
+        p: &Categorical,
+        q: &Categorical,
+        rng: &CounterRng,
+        slot: u64,
+        k_total: usize,
+    ) -> (u32, Option<usize>) {
+        let n = q.len();
+        let kc = active.len();
+        race.build_support(n, [p, q].into_iter());
+
+        // γ* = min{γ ∈ [1, K] : c(γ) ≤ γ}, bisected exactly as the scalar
+        // `calibrate` — only the s(γ) sum is sparse (bit-identical, see
+        // `s_of_gamma_sparse`).
+        let feasible = |gamma: f64| {
+            let s = s_of_gamma_sparse(&race.support, p, q, gamma);
+            super::spectr::c_of_s(s, kc) <= gamma + 1e-12
+        };
+        let gamma = if kc == 1 || feasible(1.0) {
+            1.0
+        } else {
+            let mut lo = 1.0;
+            let mut hi = kc as f64; // always feasible: c ≤ K
+            for _ in 0..60 {
+                let mid = 0.5 * (lo + hi);
+                if feasible(mid) {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            hi
+        };
+
+        // Candidate cascade: accept x with probability min(1, q(x)/(γ p(x)))
+        // — evaluated on demand instead of materializing the dense
+        // accept-probability vector the scalar plan carries.
+        for (round, &kk) in active.iter().enumerate() {
+            let token = input.draft_tokens[kk][j];
+            let u = rng.uniform(slot, (k_total + round) as u64, 0);
+            let pi = p.prob(token as usize);
+            let a = if pi <= 0.0 { 1.0 } else { (q.prob(token as usize) / (gamma * pi)).min(1.0) };
+            if u < a {
+                return (token, Some(kk));
+            }
+        }
+
+        // All candidates rejected: draw from the K-SEQ transport residual
+        // res(y) ∝ q(y) − c·min(p(y), q(y)/γ), assembled in the scratch.
+        let s = s_of_gamma_sparse(&race.support, p, q, gamma);
+        let c = super::spectr::c_of_s(s, kc);
+        residual.reset(n);
+        let mut total = 0.0;
+        for &i in &race.support {
+            let iu = i as usize;
+            let w = (q.prob(iu) - c * p.prob(iu).min(q.prob(iu) / gamma)).max(0.0);
+            if w > 0.0 {
+                residual.support.push(i);
+                residual.mass[iu] = w;
+            }
+            total += w;
+        }
+        let u = rng.uniform(slot, (k_total + kc) as u64, 0);
+        if total > 1e-12 {
+            // Categorical::new's exact normalization branch.
+            if (total - 1.0).abs() > 1e-12 {
+                for &i in &residual.support {
+                    residual.mass[i as usize] /= total;
+                }
+            }
+            (residual.sample_inverse(n, u) as u32, None)
+        } else {
+            (q.sample_inverse(u) as u32, None)
+        }
+    }
+
+    /// SpecTr K-SEQ verification over the workspace — bit-exact with
+    /// [`super::spectr::SpecTrVerifier::verify_block_scalar`].
+    pub fn verify_block_spectr(
+        &mut self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let k = input.k();
+        let l = input.block_len();
+        let Self { race, residual, active, .. } = self;
+        active.clear();
+        active.extend(0..k);
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+
+        for j in 0..l {
+            let q = &input.target_dists[active[0]][j];
+            // K-SEQ assumes identical proposals: use the first active
+            // draft's p (the engine only selects SpecTr for i.i.d. drafts).
+            let p = &input.draft_dists[active[0]][j];
+            let (tok, from) = Self::spectr_step(
+                race,
+                residual,
+                input,
+                active,
+                j,
+                p,
+                q,
+                rng,
+                slot0 + j as u64,
+                k,
+            );
+            tokens.push(tok);
+            match from {
+                Some(_) => {
+                    active.retain(|&kk| input.draft_tokens[kk][j] == tok);
+                    accepted += 1;
+                }
+                None => return BlockOutput { tokens, accepted, surviving_draft: None },
+            }
+        }
+        let q = &input.target_dists[active[0]][l];
+        let u = rng.uniform(slot0 + l as u64, k as u64, 0);
+        tokens.push(q.sample_inverse(u) as u32);
         BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
     }
 }
@@ -437,9 +1010,12 @@ thread_local! {
 }
 
 /// Run `f` with this thread's coupling workspace. The thread-local keeps
-/// the public free-function API of [`super::gls`] allocation-free on the
-/// hot path and plays well with the engine's parallel stepping: each
-/// verification thread warms its own scratch once and reuses it forever.
+/// the public free-function API of [`super::gls`] (and the ported
+/// baselines' `verify_block` impls) allocation-free on the hot path and
+/// plays well with the engine's parallel stepping: each verification
+/// thread warms its own scratch once and reuses it forever, and the
+/// engine's draft phase (main thread) shares its panel cache with the
+/// serial verification path.
 pub fn with_workspace<R>(f: impl FnOnce(&mut CouplingWorkspace) -> R) -> R {
     WORKSPACE.with(|w| f(&mut w.borrow_mut()))
 }
@@ -447,7 +1023,10 @@ pub fn with_workspace<R>(f: impl FnOnce(&mut CouplingWorkspace) -> R) -> R {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::daliri::DaliriVerifier;
     use crate::spec::gls;
+    use crate::spec::specinfer::SpecInferVerifier;
+    use crate::spec::spectr::SpecTrVerifier;
     use crate::stats::rng::XorShift128;
     use crate::testkit;
 
@@ -508,7 +1087,7 @@ mod tests {
         let rng = CounterRng::new(3);
         let mut race = RaceScratch::new();
         race.build_support(4, std::iter::once(&p));
-        race.fill_panel(&rng, 11, 3, |r| r as u64);
+        race.fill_panel(&rng, 11, 3, |r| r as u64, &PanelCache::new());
         for k in 0..3u64 {
             for i in 0..4u64 {
                 assert_eq!(
@@ -551,6 +1130,154 @@ mod tests {
                 ws.sample_gls(&p, &q, 3, &rng, seed),
                 gls::sample_gls_scalar(&p, &q, 3, &rng, seed)
             );
+        }
+    }
+
+    #[test]
+    fn workspace_sample_race_matches_categorical() {
+        let mut gen = XorShift128::new(61);
+        let mut ws = CouplingWorkspace::new();
+        for case in 0..40u64 {
+            let d = match case % 3 {
+                0 => testkit::gen_categorical(&mut gen, 30),
+                1 => testkit::gen_sparse_categorical(&mut gen, 90, 6),
+                _ => {
+                    let logits: Vec<f32> =
+                        (0..120).map(|_| (gen.next_f64() * 5.0) as f32).collect();
+                    Categorical::from_logits(&logits, 1.0, Some(9))
+                }
+            };
+            let rng = CounterRng::new(700 + case);
+            for draft in 0..3u64 {
+                assert_eq!(
+                    ws.sample_race(&d, &rng, case, draft),
+                    d.sample_race(&rng, case, draft),
+                    "case {case} draft {draft}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn panel_cache_reuse_is_bit_exact() {
+        // Draft through the workspace (populating the cache at the exact
+        // verification coordinates), then verify on the same workspace: the
+        // warm path must equal a cold workspace AND the scalar reference.
+        let mut gen = XorShift128::new(77);
+        for seed in 0..15u64 {
+            let n = 40;
+            let l = 4;
+            let p: Vec<Categorical> =
+                (0..l).map(|_| testkit::gen_sparse_categorical(&mut gen, n, 8)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_sparse_categorical(&mut gen, n, 8)).collect();
+            let rng = CounterRng::new(seed ^ 0xCAFE);
+            let mut warm = CouplingWorkspace::new();
+            let draft_tokens: Vec<u32> = (0..l)
+                .map(|j| warm.sample_race(&p[j], &rng, j as u64, 0) as u32)
+                .collect();
+            let input = BlockInput {
+                draft_tokens: vec![draft_tokens],
+                draft_dists: vec![p.clone()],
+                target_dists: vec![q.clone()],
+            };
+            let hot = warm.verify_block_daliri(&input, &rng, 0);
+            let cold = CouplingWorkspace::new().verify_block_daliri(&input, &rng, 0);
+            let scalar = DaliriVerifier::new().verify_block_scalar(&input, &rng, 0);
+            assert_eq!(hot, cold, "seed {seed}: cache changed the outcome");
+            assert_eq!(hot, scalar, "seed {seed}: kernel/scalar divergence");
+            // GLS verification at the same coordinates also merges from the
+            // cache — must stay bit-exact too.
+            let hot_gls = warm.verify_block_gls(&input, &rng, 0, false);
+            let cold_gls = CouplingWorkspace::new().verify_block_gls(&input, &rng, 0, false);
+            assert_eq!(hot_gls, cold_gls, "seed {seed}: gls cache divergence");
+        }
+    }
+
+    #[test]
+    fn panel_cache_ring_eviction_stays_exact() {
+        // Overflow the cache capacity, then race: stale/evicted entries
+        // must never corrupt outcomes.
+        let mut gen = XorShift128::new(91);
+        let d = testkit::gen_categorical(&mut gen, 25);
+        let rng = CounterRng::new(4);
+        let mut ws = CouplingWorkspace::new();
+        for slot in 0..(3 * PANEL_CACHE_CAP as u64) {
+            assert_eq!(ws.sample_race(&d, &rng, slot, 1), d.sample_race(&rng, slot, 1));
+        }
+        let p = testkit::gen_categorical(&mut gen, 25);
+        assert_eq!(
+            ws.sample_gls(&p, &d, 2, &rng, 5),
+            gls::sample_gls_scalar(&p, &d, 2, &rng, 5)
+        );
+    }
+
+    #[test]
+    fn ported_verifiers_match_scalar_smoke() {
+        // In-module canary for the ported baselines; the full randomized
+        // grids live in tests/kernel_parity.rs.
+        let mut gen = XorShift128::new(0x90);
+        let mut ws = CouplingWorkspace::new();
+        for seed in 0..15u64 {
+            let n = 12;
+            let k = 3;
+            let l = 3;
+            let p: Vec<Categorical> =
+                (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let rng = CounterRng::new(seed * 13 + 1);
+            let mut draft_tokens = vec![Vec::with_capacity(l); k];
+            for kk in 0..k {
+                for j in 0..l {
+                    draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+                }
+            }
+            let input = BlockInput {
+                draft_tokens,
+                draft_dists: vec![p.clone(); k],
+                target_dists: vec![q.clone(); k],
+            };
+            assert_eq!(
+                ws.verify_block_spectr(&input, &rng, seed),
+                SpecTrVerifier::new().verify_block_scalar(&input, &rng, seed),
+                "spectr seed {seed}"
+            );
+            assert_eq!(
+                ws.verify_block_specinfer(&input, &rng, seed),
+                SpecInferVerifier::new().verify_block_scalar(&input, &rng, seed),
+                "specinfer seed {seed}"
+            );
+            assert_eq!(
+                ws.verify_block_daliri(&input, &rng, seed),
+                DaliriVerifier::new().verify_block_scalar(&input, &rng, seed),
+                "daliri seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_scratch_matches_categorical_residual() {
+        let mut gen = XorShift128::new(0x4E5);
+        let mut scratch = ResidualScratch::new();
+        for case in 0..30 {
+            let n = 20;
+            let q = testkit::gen_categorical(&mut gen, n);
+            let p = testkit::gen_sparse_categorical(&mut gen, n, 5);
+            scratch.load(&q);
+            let alive = scratch.subtract_renormalize(&p);
+            match q.residual(&p) {
+                Some(r) => {
+                    assert!(alive, "case {case}");
+                    for i in 0..n {
+                        assert_eq!(scratch.mass[i], r.prob(i), "case {case} item {i}");
+                    }
+                    for u in [0.001, 0.3, 0.5, 0.77, 0.9999] {
+                        assert_eq!(scratch.sample_inverse(n, u), r.sample_inverse(u));
+                    }
+                }
+                None => assert!(!alive, "case {case}"),
+            }
         }
     }
 }

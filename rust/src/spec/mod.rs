@@ -6,7 +6,10 @@
 //!   conditionally drafter-invariant block verifier), plus the strongly
 //!   invariant variant of Appendix B (Prop. 6).
 //! * [`kernel`] — the zero-allocation sparse-support coupling kernel the
-//!   public GLS entry points run on (bit-exact with the scalar references).
+//!   GLS, GLS-strong, SpecTr, SpecInfer, and Daliri `verify_block`s run on
+//!   (bit-exact with the scalar references; see its module docs for the
+//!   kernel contract and the RNG coordinate map). The single-draft TR
+//!   baseline remains a plain scalar implementation.
 //! * [`lml`] — Theorem 1 / Proposition 2 bound evaluators.
 //! * [`specinfer`] — SpecInfer recursive multi-round rejection (Miao et al.).
 //! * [`spectr`] — SpecTr k-sequential-selection verification (Sun et al.).
@@ -39,5 +42,31 @@ pub fn make_verifier(kind: VerifierKind) -> Box<dyn BlockVerifier + Send + Sync>
         VerifierKind::SpecTr => Box::new(spectr::SpecTrVerifier::new()),
         VerifierKind::SingleDraft => Box::new(single_draft::SingleDraftVerifier::new()),
         VerifierKind::Daliri => Box::new(daliri::DaliriVerifier::new()),
+    }
+}
+
+/// The verifier registry: one constructed instance of every
+/// [`VerifierKind`], in [`VerifierKind::all`] order.
+///
+/// Property, conformance, and engine test suites iterate this instead of
+/// hand-listing kinds, so a newly added verifier cannot be silently
+/// omitted from coverage: registering the kind in [`VerifierKind::all`] /
+/// [`make_verifier`] is the single step that enrolls it everywhere.
+pub fn all_verifiers() -> Vec<Box<dyn BlockVerifier + Send + Sync>> {
+    VerifierKind::all().iter().map(|&k| make_verifier(k)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_kind_exactly_once() {
+        let kinds: Vec<VerifierKind> = all_verifiers().iter().map(|v| v.kind()).collect();
+        assert_eq!(kinds.as_slice(), VerifierKind::all());
+        // The registry relies on `make_verifier` being kind-consistent.
+        for &k in VerifierKind::all() {
+            assert_eq!(make_verifier(k).kind(), k);
+        }
     }
 }

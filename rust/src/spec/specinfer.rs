@@ -15,6 +15,7 @@
 
 use crate::stats::rng::CounterRng;
 
+use super::kernel::with_workspace;
 use super::types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
 };
@@ -67,7 +68,10 @@ impl SpecInferVerifier {
     }
 }
 
-fn argmax(c: &Categorical) -> usize {
+/// First-occurrence argmax — the reject-all fallback when the residual is
+/// numerically exhausted. Shared with the workspace kernel (`spec::kernel`),
+/// which must apply the identical scan to stay bit-exact.
+pub(crate) fn argmax(c: &Categorical) -> usize {
     let mut best = f64::NEG_INFINITY;
     let mut arg = 0;
     for (i, &p) in c.probs().iter().enumerate() {
@@ -79,16 +83,18 @@ fn argmax(c: &Categorical) -> usize {
     arg
 }
 
-impl BlockVerifier for SpecInferVerifier {
-    fn kind(&self) -> VerifierKind {
-        VerifierKind::SpecInfer
-    }
-
-    fn invariance(&self) -> Invariance {
-        Invariance::None
-    }
-
-    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+impl SpecInferVerifier {
+    /// Scalar reference for [`BlockVerifier::verify_block`] (the seed
+    /// implementation, built on [`Self::step`]'s clone-per-round residual
+    /// cascade). The workspace kernel path must match this bit-for-bit
+    /// (`tests/kernel_parity.rs`); it is also the perf baseline in
+    /// `benches/perf_engine`.
+    pub fn verify_block_scalar(
+        &self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
         debug_assert!(input.validate().is_ok());
         let k = input.k();
         let l = input.block_len();
@@ -122,6 +128,24 @@ impl BlockVerifier for SpecInferVerifier {
         let u = rng.uniform(slot0 + l as u64, k as u64, 0);
         tokens.push(q.sample_inverse(u) as u32);
         BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+}
+
+impl BlockVerifier for SpecInferVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SpecInfer
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    /// Kernel-backed recursive rejection: the running residual lives in the
+    /// thread workspace's sparse scratch (no `Categorical` clone or
+    /// reallocation per round) — bit-exact with
+    /// [`SpecInferVerifier::verify_block_scalar`].
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        with_workspace(|ws| ws.verify_block_specinfer(input, rng, slot0))
     }
 }
 

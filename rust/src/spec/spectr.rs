@@ -18,6 +18,7 @@
 
 use crate::stats::rng::CounterRng;
 
+use super::kernel::with_workspace;
 use super::types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
 };
@@ -44,7 +45,10 @@ fn s_of_gamma(p: &Categorical, q: &Categorical, gamma: f64) -> f64 {
         .sum()
 }
 
-fn c_of_s(s: f64, k: usize) -> f64 {
+/// Boost factor `c(γ) = (1-(1-s)^K)/s`. Shared with the workspace kernel's
+/// sparse calibration (`spec::kernel`), which must apply the identical
+/// arithmetic to stay bit-exact with [`calibrate`].
+pub(crate) fn c_of_s(s: f64, k: usize) -> f64 {
     if s <= 0.0 {
         return k as f64; // lim_{s->0} (1-(1-s)^K)/s = K
     }
@@ -127,16 +131,18 @@ impl SpecTrVerifier {
     }
 }
 
-impl BlockVerifier for SpecTrVerifier {
-    fn kind(&self) -> VerifierKind {
-        VerifierKind::SpecTr
-    }
-
-    fn invariance(&self) -> Invariance {
-        Invariance::None
-    }
-
-    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+impl SpecTrVerifier {
+    /// Scalar full-alphabet reference for [`BlockVerifier::verify_block`]
+    /// (the seed implementation, built on [`calibrate`] / [`Self::step`]).
+    /// The workspace kernel path must match this bit-for-bit
+    /// (`tests/kernel_parity.rs`); it is also the perf baseline in
+    /// `benches/perf_engine`.
+    pub fn verify_block_scalar(
+        &self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
         debug_assert!(input.validate().is_ok());
         let k = input.k();
         let l = input.block_len();
@@ -165,6 +171,23 @@ impl BlockVerifier for SpecTrVerifier {
         let u = rng.uniform(slot0 + l as u64, k as u64, 0);
         tokens.push(q.sample_inverse(u) as u32);
         BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
+    }
+}
+
+impl BlockVerifier for SpecTrVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SpecTr
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    /// Kernel-backed K-SEQ verification: sparse-support γ-calibration and a
+    /// zero-allocation transport-residual plan on the thread workspace —
+    /// bit-exact with [`SpecTrVerifier::verify_block_scalar`].
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        with_workspace(|ws| ws.verify_block_spectr(input, rng, slot0))
     }
 }
 

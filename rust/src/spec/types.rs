@@ -199,13 +199,32 @@ impl Categorical {
     }
 
     /// Plain inverse-CDF sample from a single uniform (used for residual
-    /// distributions in the baselines, where no coupling is required).
+    /// and bonus-token draws in the baselines, where no coupling is
+    /// required).
+    ///
+    /// Walking only the cached support is bit-exact with the dense scan:
+    /// a zero-mass symbol adds an exact `+0.0` to the running CDF, so it
+    /// can never be the first index where `u < acc` turns true; the
+    /// out-of-mass fallback stays the dense walk's last index `N - 1`.
     pub fn sample_inverse(&self, u: f64) -> usize {
         let mut acc = 0.0;
-        for (i, &p) in self.probs.iter().enumerate() {
-            acc += p;
-            if u < acc {
-                return i;
+        match self.support.as_deref() {
+            // Top-k truncated: O(top_k) instead of an O(N) walk.
+            Some(sup) => {
+                for &i in sup {
+                    acc += self.probs[i as usize];
+                    if u < acc {
+                        return i as usize;
+                    }
+                }
+            }
+            None => {
+                for (i, &p) in self.probs.iter().enumerate() {
+                    acc += p;
+                    if u < acc {
+                        return i;
+                    }
+                }
             }
         }
         self.probs.len() - 1
@@ -496,6 +515,23 @@ mod tests {
         assert_eq!(p.sample_inverse(0.0), 0);
         assert_eq!(p.sample_inverse(0.9999999), 2);
         assert_eq!(p.sample_inverse(0.3), 1);
+    }
+
+    #[test]
+    fn sample_inverse_support_cache_is_exact() {
+        // The sparse walk over a cached top-k support must agree with the
+        // dense scan on the identical probability vector at every uniform.
+        let logits: Vec<f32> = (0..300).map(|i| ((i * 11) % 37) as f32).collect();
+        let c = Categorical::from_logits(&logits, 1.0, Some(40));
+        assert!(c.support().is_some());
+        let dense = Categorical::new(c.probs().to_vec());
+        assert!(dense.support().is_none());
+        for t in 0..2000 {
+            let u = (t as f64 + 0.5) / 2000.0;
+            assert_eq!(c.sample_inverse(u), dense.sample_inverse(u), "u = {u}");
+        }
+        // Out-of-mass fallback matches the dense walk's last index.
+        assert_eq!(c.sample_inverse(1.5), dense.sample_inverse(1.5));
     }
 
     #[test]

@@ -191,6 +191,17 @@ pub struct CounterLane {
 }
 
 impl CounterLane {
+    /// Opaque identity of this lane's sub-stream. Every per-item variate is
+    /// a pure function of `(key, item)`, so two lanes with equal keys
+    /// produce identical variates for every item — regardless of which
+    /// `(rng, slot, draft)` they were derived from. The coupling kernel's
+    /// panel cache relies on exactly this to reuse draft-phase
+    /// exponentials during verification without any bit-exactness risk.
+    #[inline]
+    pub fn key(&self) -> u64 {
+        self.prefix
+    }
+
     #[inline]
     pub fn raw(&self, item: u64) -> u64 {
         SplitMix64::mix(self.prefix ^ item.wrapping_mul(0x9E37_79B9_7F4A_7C15))

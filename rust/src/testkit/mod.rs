@@ -76,6 +76,64 @@ pub fn gen_tokens(rng: &mut XorShift128, vocab: usize, max_len: usize) -> Vec<u3
     (0..len).map(|_| rng.next_below(vocab as u64) as u32).collect()
 }
 
+/// Generate a pair of categoricals with *disjoint* supports on `n ≥ 2`
+/// symbols — the coupling edge case where acceptance is impossible and
+/// every `p_i = 0 ∨ q_i = 0` branch fires.
+pub fn gen_disjoint_pair(rng: &mut XorShift128, n: usize) -> (Categorical, Categorical) {
+    assert!(n >= 2);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let cut = 1 + rng.next_below((n - 1) as u64) as usize;
+    let mut a = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    for &i in &idx[..cut] {
+        a[i] = -rng.next_f64().ln() + 1e-9;
+    }
+    for &i in &idx[cut..] {
+        b[i] = -rng.next_f64().ln() + 1e-9;
+    }
+    (Categorical::new(a), Categorical::new(b))
+}
+
+/// Chi-square goodness-of-fit statistic of empirical `counts` against the
+/// `expected` distribution over `trials` draws. Bins with expected count
+/// ≤ 4 are skipped (standard practice for the chi-square approximation);
+/// returns `(chi2, dof)` with `dof` = counted bins − 1.
+pub fn chi_square_fit(counts: &[usize], expected: &Categorical, trials: usize) -> (f64, usize) {
+    assert_eq!(counts.len(), expected.len());
+    let mut chi2 = 0.0;
+    let mut bins = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        let e = expected.prob(i) * trials as f64;
+        if e > 4.0 {
+            chi2 += (c as f64 - e).powi(2) / e;
+            bins += 1;
+        }
+    }
+    (chi2, bins.saturating_sub(1))
+}
+
+/// Generous acceptance threshold for [`chi_square_fit`] at the given
+/// degrees of freedom: mean + ~5σ + slack. Deterministic seeds make these
+/// tests repeatable, so a crossing indicates a real marginal distortion,
+/// not sampling noise.
+pub fn chi_square_limit(dof: usize) -> f64 {
+    let d = dof.max(1) as f64;
+    d + 5.0 * (2.0 * d).sqrt() + 12.0
+}
+
+/// Assert the empirical `counts` are chi-square-consistent with `expected`
+/// — the workhorse of the statistical conformance suite
+/// (`tests/conformance.rs`).
+pub fn assert_marginal(label: &str, counts: &[usize], expected: &Categorical, trials: usize) {
+    let (chi2, dof) = chi_square_fit(counts, expected, trials);
+    let limit = chi_square_limit(dof);
+    assert!(
+        chi2 <= limit,
+        "{label}: chi2 {chi2:.1} > limit {limit:.1} (dof {dof}); counts {counts:?}"
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +180,34 @@ mod tests {
             );
         });
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn gen_disjoint_pair_supports_do_not_intersect() {
+        let mut rng = XorShift128::new(6);
+        for _ in 0..50 {
+            let (a, b) = gen_disjoint_pair(&mut rng, 13);
+            for i in 0..13 {
+                assert!(
+                    !(a.prob(i) > 0.0 && b.prob(i) > 0.0),
+                    "supports intersect at {i}"
+                );
+            }
+            assert!((a.probs().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!((b.probs().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn chi_square_fit_flags_distorted_marginals_only() {
+        let q = Categorical::new(vec![0.25, 0.25, 0.25, 0.25]);
+        let trials = 10_000;
+        let good = vec![2510usize, 2470, 2530, 2490];
+        let (chi2, dof) = chi_square_fit(&good, &q, trials);
+        assert!(chi2 <= chi_square_limit(dof), "chi2 {chi2} over limit");
+        let bad = vec![4000usize, 2000, 2000, 2000];
+        let (chi2, dof) = chi_square_fit(&bad, &q, trials);
+        assert!(chi2 > chi_square_limit(dof), "distortion not flagged: {chi2}");
     }
 
     #[test]

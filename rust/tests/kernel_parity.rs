@@ -10,11 +10,14 @@
 //! paper's LLM regime) and demand identical `GlsOutcome` / `BlockOutput`
 //! values.
 
+use gls_serve::spec::daliri::DaliriVerifier;
 use gls_serve::spec::gls::{self, GlsVerifier};
 use gls_serve::spec::kernel::CouplingWorkspace;
+use gls_serve::spec::specinfer::SpecInferVerifier;
+use gls_serve::spec::spectr::SpecTrVerifier;
 use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical};
 use gls_serve::stats::rng::{CounterRng, XorShift128};
-use gls_serve::testkit::{gen_categorical, gen_sparse_categorical};
+use gls_serve::testkit::{gen_categorical, gen_disjoint_pair, gen_sparse_categorical};
 
 /// Top-k truncated categorical from random logits — the paper's LLM
 /// post-processing (top-k 50 at 2048-vocab in the experiments; smaller
@@ -177,6 +180,206 @@ fn verify_block_parity_llm_regime_k8_topk50() {
     }
 }
 
+/// Number of draft/target regimes [`random_block_ext`] sweeps. Regimes 0–2
+/// are the standard dense / sparse / top-k shapes; 3–5 are the degenerate
+/// supports the per-verifier parity suites must cover: point-mass drafts,
+/// disjoint draft/target supports, and `top_k ≥ vocab` (no truncation, no
+/// cached support).
+const EXT_REGIMES: usize = 6;
+
+/// Regime-indexed `(p, q)` generator extending [`gen_by_regime`] with the
+/// degenerate shapes.
+fn gen_pq_ext(gen: &mut XorShift128, regime: usize, n: usize) -> (Categorical, Categorical) {
+    match regime {
+        3 => (
+            Categorical::delta(n, gen.next_below(n as u64) as usize),
+            gen_categorical(gen, n),
+        ),
+        4 => gen_disjoint_pair(gen, n),
+        5 => {
+            let mut topk_ge_vocab = |extra: usize| {
+                let logits: Vec<f32> =
+                    (0..n).map(|_| (gen.next_f64() * 6.0) as f32).collect();
+                Categorical::from_logits(&logits, 1.0, Some(n + extra))
+            };
+            (topk_ge_vocab(0), topk_ge_vocab(3))
+        }
+        r => (gen_by_regime(gen, r, n), gen_by_regime(gen, r, n)),
+    }
+}
+
+/// BlockInput over the extended regimes. Draft distributions are identical
+/// across lanes (the i.i.d. shape SpecTr requires; GLS/SpecInfer/Daliri
+/// accept it too) and draft tokens come from the coupled race at the same
+/// `(slot, lane)` coordinates the engine would use.
+fn random_block_ext(
+    gen: &mut XorShift128,
+    regime: usize,
+    k: usize,
+    l: usize,
+    n: usize,
+    seed: u64,
+) -> BlockInput {
+    let mut ps = Vec::with_capacity(l);
+    let mut qs = Vec::with_capacity(l + 1);
+    for _ in 0..l {
+        let (p, q) = gen_pq_ext(gen, regime, n);
+        ps.push(p);
+        qs.push(q);
+    }
+    let (_, q_bonus) = gen_pq_ext(gen, regime, n);
+    qs.push(q_bonus);
+    let rng = CounterRng::new(seed ^ 0xDEAD);
+    let mut draft_tokens = vec![Vec::with_capacity(l); k];
+    for kk in 0..k {
+        for j in 0..l {
+            draft_tokens[kk].push(ps[j].sample_race(&rng, j as u64, kk as u64) as u32);
+        }
+    }
+    BlockInput {
+        draft_dists: vec![ps; k],
+        target_dists: vec![qs; k],
+        draft_tokens,
+    }
+}
+
+#[test]
+fn spectr_verify_block_parity() {
+    let mut gen = XorShift128::new(0x57EC);
+    let mut ws = CouplingWorkspace::new();
+    let v = SpecTrVerifier::new();
+    for case in 0..90u64 {
+        let regime = (case as usize) % EXT_REGIMES;
+        let n = [6usize, 64, 300][(case as usize / EXT_REGIMES) % 3];
+        let k = 1 + (case as usize % 5);
+        let l = 1 + (case as usize % 4);
+        let input = random_block_ext(&mut gen, regime, k, l, n, case);
+        let rng = CounterRng::new(0x7000 + case);
+        let scalar = v.verify_block_scalar(&input, &rng, case);
+        assert_eq!(v.verify_block(&input, &rng, case), scalar, "case {case} regime {regime}");
+        assert_eq!(
+            ws.verify_block_spectr(&input, &rng, case),
+            scalar,
+            "case {case} regime {regime} (reused ws)"
+        );
+    }
+}
+
+#[test]
+fn specinfer_verify_block_parity() {
+    let mut gen = XorShift128::new(0x51F3);
+    let mut ws = CouplingWorkspace::new();
+    let v = SpecInferVerifier::new();
+    for case in 0..90u64 {
+        let regime = (case as usize) % EXT_REGIMES;
+        let n = [5usize, 80, 260][(case as usize / EXT_REGIMES) % 3];
+        let k = 1 + (case as usize % 5);
+        let l = 1 + (case as usize % 4);
+        let input = random_block_ext(&mut gen, regime, k, l, n, case);
+        let rng = CounterRng::new(0x8000 + case);
+        let scalar = v.verify_block_scalar(&input, &rng, case);
+        assert_eq!(v.verify_block(&input, &rng, case), scalar, "case {case} regime {regime}");
+        assert_eq!(
+            ws.verify_block_specinfer(&input, &rng, case),
+            scalar,
+            "case {case} regime {regime} (reused ws)"
+        );
+    }
+}
+
+#[test]
+fn daliri_verify_block_parity() {
+    let mut gen = XorShift128::new(0xDA11);
+    let mut ws = CouplingWorkspace::new();
+    let v = DaliriVerifier::new();
+    for case in 0..90u64 {
+        let regime = (case as usize) % EXT_REGIMES;
+        let n = [7usize, 70, 320][(case as usize / EXT_REGIMES) % 3];
+        let l = 1 + (case as usize % 5);
+        // Daliri is single-draft; still build multi-lane inputs sometimes
+        // (the verifier must ignore lanes ≥ 1).
+        let k = 1 + (case as usize % 3);
+        let input = random_block_ext(&mut gen, regime, k, l, n, case);
+        let rng = CounterRng::new(0x9000 + case);
+        let scalar = v.verify_block_scalar(&input, &rng, case);
+        assert_eq!(v.verify_block(&input, &rng, case), scalar, "case {case} regime {regime}");
+        assert_eq!(
+            ws.verify_block_daliri(&input, &rng, case),
+            scalar,
+            "case {case} regime {regime} (reused ws)"
+        );
+    }
+}
+
+#[test]
+fn ported_verifiers_parity_llm_regime_k8_topk50() {
+    // The acceptance-criterion shape for every ported baseline: K=8,
+    // N=2048, top-k-50 — exactly what benches/perf_engine.rs times and CI
+    // gates at ≥3× per verifier.
+    let mut gen = XorShift128::new(0x4821);
+    let k = 8;
+    let l = 4;
+    let n = 2048;
+    for case in 0..4u64 {
+        let p: Vec<Categorical> = (0..l).map(|_| gen_topk(&mut gen, n, 50)).collect();
+        let rng_draft = CounterRng::new(case ^ 0xFACE);
+        let mut draft_tokens = vec![Vec::with_capacity(l); k];
+        for kk in 0..k {
+            for j in 0..l {
+                draft_tokens[kk].push(p[j].sample_race(&rng_draft, j as u64, kk as u64) as u32);
+            }
+        }
+        let q: Vec<Categorical> = (0..=l).map(|_| gen_topk(&mut gen, n, 50)).collect();
+        let input = BlockInput {
+            draft_dists: vec![p; k],
+            target_dists: vec![q; k],
+            draft_tokens,
+        };
+        let rng = CounterRng::new(1700 + case);
+        let spectr = SpecTrVerifier::new();
+        assert_eq!(
+            spectr.verify_block(&input, &rng, case * 10),
+            spectr.verify_block_scalar(&input, &rng, case * 10),
+            "spectr case {case}"
+        );
+        let specinfer = SpecInferVerifier::new();
+        assert_eq!(
+            specinfer.verify_block(&input, &rng, case * 10),
+            specinfer.verify_block_scalar(&input, &rng, case * 10),
+            "specinfer case {case}"
+        );
+        let daliri = DaliriVerifier::new();
+        assert_eq!(
+            daliri.verify_block(&input, &rng, case * 10),
+            daliri.verify_block_scalar(&input, &rng, case * 10),
+            "daliri case {case}"
+        );
+    }
+}
+
+#[test]
+fn draft_race_matches_categorical_sample_race() {
+    // The engine's draft phase goes through the workspace (panel-cache
+    // population); it must be bit-exact with the plain race.
+    let mut gen = XorShift128::new(0xD4A1);
+    for case in 0..40u64 {
+        let n = [20usize, 150, 2048][(case as usize) % 3];
+        let d = match case % 3 {
+            0 => gen_categorical(&mut gen, n),
+            1 => gen_sparse_categorical(&mut gen, n, (n / 9).max(2)),
+            _ => gen_topk(&mut gen, n, (n / 12).max(2)),
+        };
+        let rng = CounterRng::new(2200 + case);
+        for lane in 0..4u64 {
+            assert_eq!(
+                gls::draft_race(&d, &rng, case, lane),
+                d.sample_race(&rng, case, lane),
+                "case {case} lane {lane}"
+            );
+        }
+    }
+}
+
 #[test]
 fn sample_race_support_cache_is_exact() {
     // sample_race over a cached top-k support must match the dense scan on
@@ -234,8 +437,11 @@ fn exponential_matrix_flat_layout_matches_coordinates() {
 #[test]
 fn engine_parallel_batch_matches_sequential_stepping() {
     // The parallel verification path (large vocab, batch ≥ 2) must emit
-    // exactly what per-sequence stepping emits: verification is a pure
-    // function of the per-sequence randomness lane.
+    // exactly what per-sequence stepping emits, for every kernel-backed
+    // verifier kind: verification is a pure function of the per-sequence
+    // randomness lane, and the panel cache populated by the draft phase
+    // (hit by the serial path, missed by worker threads) must not change
+    // a single token.
     use gls_serve::coordinator::engine::SpecDecodeEngine;
     use gls_serve::coordinator::kv::PagedKvCache;
     use gls_serve::coordinator::sequence::{Request, SequenceState};
@@ -246,47 +452,60 @@ fn engine_parallel_batch_matches_sequential_stepping() {
     use gls_serve::spec::types::VerifierKind;
 
     let vocab = 600; // k·(l+1)·vocab clears the parallel-dispatch threshold
-    let mk_engine = || {
-        let (d, t) = SimLm::pair(vocab, 21, 2.0);
-        let cfg = EngineConfig {
-            num_drafts: 8,
-            block_len: 4,
-            verifier: VerifierKind::Gls,
-            target_params: SamplingParams::new(1.0, Some(50)),
-            draft_params: vec![SamplingParams::new(1.0, Some(50))],
-            max_seq_len: 256,
-            seed: 99,
+    for &vk in &[
+        VerifierKind::Gls,
+        VerifierKind::SpecTr,
+        VerifierKind::SpecInfer,
+        VerifierKind::Daliri,
+    ] {
+        let mk_engine = || {
+            let (d, t) = SimLm::pair(vocab, 21, 2.0);
+            let cfg = EngineConfig {
+                num_drafts: 8,
+                block_len: 4,
+                verifier: vk,
+                target_params: SamplingParams::new(1.0, Some(50)),
+                draft_params: vec![SamplingParams::new(1.0, Some(50))],
+                max_seq_len: 256,
+                seed: 99,
+            };
+            SpecDecodeEngine::new(
+                cfg,
+                ModelPair::new(Box::new(d), Box::new(t)),
+                PagedKvCache::new(4096, 16),
+            )
         };
-        SpecDecodeEngine::new(cfg, ModelPair::new(Box::new(d), Box::new(t)), PagedKvCache::new(4096, 16))
-    };
-    let n_seqs = 12u64;
-    let mk_seqs = || -> Vec<SequenceState> {
-        (0..n_seqs)
-            .map(|i| SequenceState::from_request(&Request::new(i, vec![1, 2, (i % 9) as u32], 10)))
-            .collect()
-    };
+        let n_seqs = 12u64;
+        let mk_seqs = || -> Vec<SequenceState> {
+            (0..n_seqs)
+                .map(|i| {
+                    SequenceState::from_request(&Request::new(i, vec![1, 2, (i % 9) as u32], 10))
+                })
+                .collect()
+        };
 
-    let mut eng_batch = mk_engine();
-    let mut batch_seqs = mk_seqs();
-    for s in &batch_seqs {
-        eng_batch.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
-    }
-    {
-        let mut refs: Vec<&mut SequenceState> = batch_seqs.iter_mut().collect();
-        eng_batch.step_blocks(&mut refs);
-    }
+        let mut eng_batch = mk_engine();
+        let mut batch_seqs = mk_seqs();
+        for s in &batch_seqs {
+            eng_batch.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
+        }
+        {
+            let mut refs: Vec<&mut SequenceState> = batch_seqs.iter_mut().collect();
+            eng_batch.step_blocks(&mut refs);
+        }
 
-    let mut eng_seq = mk_engine();
-    let mut solo_seqs = mk_seqs();
-    for s in &solo_seqs {
-        eng_seq.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
-    }
-    for s in solo_seqs.iter_mut() {
-        let mut one = [s];
-        eng_seq.step_blocks(&mut one);
-    }
+        let mut eng_seq = mk_engine();
+        let mut solo_seqs = mk_seqs();
+        for s in &solo_seqs {
+            eng_seq.kv.register(s.id, s.tokens.len(), s.tokens.len() + 15, 5).unwrap();
+        }
+        for s in solo_seqs.iter_mut() {
+            let mut one = [s];
+            eng_seq.step_blocks(&mut one);
+        }
 
-    for (a, b) in batch_seqs.iter().zip(&solo_seqs) {
-        assert_eq!(a.tokens, b.tokens, "seq {} diverged under batching", a.id);
+        for (a, b) in batch_seqs.iter().zip(&solo_seqs) {
+            assert_eq!(a.tokens, b.tokens, "seq {} diverged under batching ({vk:?})", a.id);
+        }
     }
 }

@@ -2,8 +2,8 @@
 //! mathematical guarantees and the coordinator's state invariants.
 
 use gls_serve::spec::gls::{sample_gls, sample_gls_diverse, GlsVerifier};
-use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical, VerifierKind};
-use gls_serve::spec::{lml, make_verifier, optimal};
+use gls_serve::spec::types::{BlockInput, BlockVerifier, Categorical};
+use gls_serve::spec::{all_verifiers, lml, optimal};
 use gls_serve::stats::rng::{CounterRng, XorShift128};
 use gls_serve::testkit::{forall, gen_categorical, gen_peaked_categorical, gen_sparse_categorical};
 
@@ -171,10 +171,12 @@ fn gen_block(rng: &mut XorShift128) -> BlockCase {
 fn prop_every_verifier_emits_valid_blocks() {
     // Structural invariants across all verifiers and random blocks:
     // τ = accepted + 1, accepted ≤ L, accepted prefix matches a draft,
-    // tokens within the alphabet, determinism.
+    // tokens within the alphabet, determinism. Iterates the registry
+    // (`spec::all_verifiers`) rather than a hand-maintained kind list, so
+    // a newly ported verifier cannot be silently omitted from coverage.
     forall(505, 40, gen_block, |case| {
-        for &vk in VerifierKind::all() {
-            let v = make_verifier(vk);
+        for v in all_verifiers() {
+            let vk = v.kind();
             let rng = CounterRng::new(case.seed);
             let out = v.verify_block(&case.input, &rng, 0);
             let out2 = v.verify_block(&case.input, &rng, 0);
