@@ -88,6 +88,7 @@ fn main() {
             draft_params: vec![SamplingParams::new(1.0, Some(50))],
             max_seq_len: if have_artifacts { 90 } else { 512 },
             seed: 0xE2E,
+            ..EngineConfig::default()
         };
 
         let start = Instant::now();

@@ -34,6 +34,7 @@ fn main() {
         draft_params: vec![SamplingParams::new(1.0, Some(50))],
         max_seq_len: 512,
         seed: 7,
+        ..EngineConfig::default()
     };
     let base_sc = ServerConfig { workers: 2, ..ServerConfig::default() };
 

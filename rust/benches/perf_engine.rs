@@ -8,6 +8,9 @@
 //!   L3b  end-to-end engine blocks/s on the SimLm backend at several
 //!        batch sizes (continuous-batching efficiency);
 //!   L3c  serving stack requests/s through router + scheduler;
+//!   L3d  persistent verify pool vs per-block scoped spawn at batch
+//!        1/4/16 (K=8, N=2048, top-k 50) — the worker-pool acceptance
+//!        pair, and the sweep behind the parallel-threshold calibration;
 //!   L1/L2 (with the `pjrt` feature and artifacts) PJRT forward latency
 //!        per call and the GLS select artifact vs native.
 //!
@@ -24,7 +27,7 @@ use gls_serve::coordinator::kv::PagedKvCache;
 use gls_serve::coordinator::router::RoutingPolicy;
 use gls_serve::coordinator::sequence::Request;
 use gls_serve::coordinator::server::Server;
-use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::coordinator::{EngineConfig, ServerConfig, VerifyBackend};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
 use gls_serve::model::sim::SimLm;
@@ -93,7 +96,7 @@ fn synth_block(k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
             draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
         }
     }
-    BlockInput { draft_tokens, draft_dists: vec![p; k], target_dists: vec![q; k] }
+    BlockInput { draft_tokens: draft_tokens.into(), draft_dists: vec![p; k], target_dists: vec![q; k] }
 }
 
 /// Block with top-k truncated draft/target distributions — the paper's LLM
@@ -114,7 +117,7 @@ fn synth_block_topk(k: usize, l: usize, n: usize, top_k: usize, seed: u64) -> Bl
             draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
         }
     }
-    BlockInput { draft_tokens, draft_dists: vec![p; k], target_dists: vec![q; k] }
+    BlockInput { draft_tokens: draft_tokens.into(), draft_dists: vec![p; k], target_dists: vec![q; k] }
 }
 
 fn main() {
@@ -329,6 +332,7 @@ fn main() {
                     draft_params: vec![SamplingParams::new(1.0, Some(50))],
                     max_seq_len: 4096,
                     seed: 3,
+                    ..EngineConfig::default()
                 };
                 let mut eng = SpecDecodeEngine::new(
                     cfg,
@@ -360,6 +364,83 @@ fn main() {
             }
         }
         println!("## L3b — engine blocks/s (SimLm backend, L = 4)");
+        t.print();
+        println!();
+    }
+
+    // ------------------------------------------- L3d pool vs scoped spawn
+    // The persistent-worker-pool acceptance case: end-to-end `step_blocks`
+    // at the LLM shape (K=8, N=2048, top-k-50) under the pooled backend vs
+    // the per-block scoped-spawn baseline it replaced. Batch 1 never fans
+    // out (both backends serialize — the no-regression control); batches 4
+    // and 16 clear the calibrated threshold, so the delta is pure thread
+    // lifecycle + panel-handoff reuse. Outputs are bit-identical
+    // (tests/kernel_parity.rs pool grid); only the wall clock may differ.
+    // The same sweep, re-run with `parallel_threshold` varied, is the
+    // calibration procedure for EngineConfig::parallel_threshold
+    // (EXPERIMENTS.md §Perf).
+    {
+        let mut t = Table::new(&["batch", "backend", "blocks/s", "pool/spawn"]);
+        let (k, l, top_k, vocab) = (8usize, 4usize, 50usize, 2048usize);
+        // Longer budget than the micro-cases: the CI gate compares the two
+        // backends' wall clocks directly, so tighter means matter more
+        // than total bench runtime here.
+        let budget = Duration::from_millis(900);
+        let mut bench_backend = |batch: usize, backend: VerifyBackend, json: &mut PerfJson| -> f64 {
+            let (d, tg) = SimLm::pair(vocab, 5, 2.0);
+            let cfg = EngineConfig {
+                num_drafts: k,
+                block_len: l,
+                verifier: VerifierKind::Gls,
+                target_params: SamplingParams::new(1.0, Some(top_k)),
+                draft_params: vec![SamplingParams::new(1.0, Some(top_k))],
+                max_seq_len: 4096,
+                seed: 3,
+                verify_backend: backend,
+                ..EngineConfig::default()
+            };
+            let mut eng = SpecDecodeEngine::new(
+                cfg,
+                ModelPair::new(Box::new(d), Box::new(tg)),
+                PagedKvCache::new(1 << 14, 16),
+            );
+            let mut seqs: Vec<_> = (0..batch)
+                .map(|i| {
+                    let req = Request::new(i as u64, vec![1, 2, 3], 3000);
+                    let s = gls_serve::coordinator::sequence::SequenceState::from_request(&req);
+                    eng.kv.register(s.id, 3, 3103, 5).unwrap();
+                    s
+                })
+                .collect();
+            let case = format!("engine-{}-B{batch}", backend.name());
+            let r = time_budget(&case, budget, 10, || {
+                let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+                std::hint::black_box(eng.step_blocks(&mut refs));
+            });
+            json.entry("L3d", &case, &r);
+            batch as f64 / r.per_iter.mean
+        };
+        for &batch in &[1usize, 4, 16] {
+            let spawn_bps = bench_backend(batch, VerifyBackend::Spawn, &mut json);
+            let pool_bps = bench_backend(batch, VerifyBackend::Pool, &mut json);
+            let speedup = pool_bps / spawn_bps;
+            json.metric(&format!("engine_spawn_blocks_per_s_b{batch}"), spawn_bps);
+            json.metric(&format!("engine_pool_blocks_per_s_b{batch}"), pool_bps);
+            json.metric(&format!("engine_pool_vs_spawn_speedup_b{batch}"), speedup);
+            t.row(&[
+                batch.to_string(),
+                "spawn".into(),
+                format!("{spawn_bps:.0}"),
+                String::new(),
+            ]);
+            t.row(&[
+                String::new(),
+                "pool".into(),
+                format!("{pool_bps:.0}"),
+                format!("{speedup:.2}×"),
+            ]);
+        }
+        println!("## L3d — engine step_blocks: persistent pool vs per-block spawn (K=8, N=2048, top-k 50)");
         t.print();
         println!();
     }

@@ -46,6 +46,7 @@ fn run_once(
         draft_params: vec![SamplingParams::new(1.0, Some(50))],
         max_seq_len: 512,
         seed,
+        ..EngineConfig::default()
     };
     let prompts = suite.prompts(requests, VOCAB, seed ^ 0x51E);
     let workload: Vec<(Vec<u32>, usize)> =

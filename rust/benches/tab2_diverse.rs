@@ -49,6 +49,7 @@ fn run_once(
             .collect(),
         max_seq_len: 512,
         seed,
+        ..EngineConfig::default()
     };
     let prompts = suite.prompts(requests, VOCAB, seed ^ 0xD1);
     let workload: Vec<(Vec<u32>, usize)> =

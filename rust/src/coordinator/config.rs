@@ -7,6 +7,50 @@
 use crate::model::sampling::SamplingParams;
 use crate::spec::types::VerifierKind;
 
+/// Default for [`EngineConfig::parallel_threshold`]: minimum per-sequence
+/// verification work `k · (l+1) · vocab` before `step_blocks` fans
+/// verification out to worker threads; below it the serial path wins.
+///
+/// This is a *measured* default, not a magic number: the calibration
+/// procedure (documented in EXPERIMENTS.md §Perf) sweeps
+/// `benches/perf_engine.rs`'s L3d engine cases across work sizes and picks
+/// the crossover where the pooled path first beats serial stepping on CI
+/// hardware. Re-run the sweep and override via the `parallel_threshold`
+/// config key when deploying on different cores.
+pub const DEFAULT_PARALLEL_THRESHOLD: usize = 8_192;
+
+/// How `step_blocks` executes the per-sequence verification jobs once the
+/// batch clears the parallelism threshold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VerifyBackend {
+    /// Always verify on the engine thread (the bit-exactness oracle).
+    Serial,
+    /// Per-block `std::thread::scope` fan-out with cold workspaces and no
+    /// draft-panel reuse — the pre-pool engine, kept faithful as the perf
+    /// baseline `benches/perf_engine.rs` compares the pool against.
+    Spawn,
+    /// Persistent worker pool: long-lived threads parked on a condvar,
+    /// each owning a `CouplingWorkspace` that persists across blocks,
+    /// with panel-slice handoff from the draft phase (the default).
+    Pool,
+}
+
+impl VerifyBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifyBackend::Serial => "serial",
+            VerifyBackend::Spawn => "spawn",
+            VerifyBackend::Pool => "pool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<VerifyBackend> {
+        [VerifyBackend::Serial, VerifyBackend::Spawn, VerifyBackend::Pool]
+            .into_iter()
+            .find(|b| b.name() == s)
+    }
+}
+
 /// Speculative-decoding engine configuration (one worker).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -25,6 +69,17 @@ pub struct EngineConfig {
     pub max_seq_len: usize,
     /// Shared-randomness root key; each request splits its own lane.
     pub seed: u64,
+    /// Minimum per-sequence verification work `k · (l+1) · vocab` before
+    /// verification fans out across threads (see
+    /// [`DEFAULT_PARALLEL_THRESHOLD`] for the calibration procedure).
+    /// `0` means "always parallel once the batch has ≥ 2 sequences".
+    pub parallel_threshold: usize,
+    /// Verify-pool size. `0` = auto: `available_parallelism`, divided by
+    /// the server's worker count when serving (the router caps it so
+    /// engines don't oversubscribe cores).
+    pub verify_workers: usize,
+    /// Parallel execution backend for verification jobs.
+    pub verify_backend: VerifyBackend,
 }
 
 impl Default for EngineConfig {
@@ -37,6 +92,9 @@ impl Default for EngineConfig {
             draft_params: vec![SamplingParams::default()],
             max_seq_len: 512,
             seed: 0xC0FFEE,
+            parallel_threshold: DEFAULT_PARALLEL_THRESHOLD,
+            verify_workers: 0,
+            verify_backend: VerifyBackend::Pool,
         }
     }
 }
@@ -172,6 +230,16 @@ pub fn parse_config(text: &str) -> Result<(EngineConfig, ServerConfig), String> 
             }
             "max_seq_len" => ec.max_seq_len = value.parse().map_err(|_| err("bad usize"))?,
             "seed" => ec.seed = value.parse().map_err(|_| err("bad u64"))?,
+            "parallel_threshold" => {
+                ec.parallel_threshold = value.parse().map_err(|_| err("bad usize"))?
+            }
+            "verify_workers" => {
+                ec.verify_workers = value.parse().map_err(|_| err("bad usize"))?
+            }
+            "verify_backend" => {
+                ec.verify_backend =
+                    VerifyBackend::parse(value).ok_or_else(|| err("unknown backend"))?
+            }
             "workers" => sc.workers = value.parse().map_err(|_| err("bad usize"))?,
             "max_batch" => sc.max_batch = value.parse().map_err(|_| err("bad usize"))?,
             "batch_deadline_ms" => {
@@ -265,5 +333,28 @@ mod tests {
     fn top_k_zero_means_disabled() {
         let (ec, _) = parse_config("top_k = 0").unwrap();
         assert_eq!(ec.target_params.top_k, None);
+    }
+
+    #[test]
+    fn parse_verify_pool_keys() {
+        let text = "parallel_threshold = 4096\nverify_workers = 3\nverify_backend = spawn";
+        let (ec, _) = parse_config(text).unwrap();
+        assert_eq!(ec.parallel_threshold, 4096);
+        assert_eq!(ec.verify_workers, 3);
+        assert_eq!(ec.verify_backend, VerifyBackend::Spawn);
+        assert!(parse_config("verify_backend = rayon").is_err());
+        // Defaults: calibrated threshold, auto-sized pool.
+        let (ec, _) = parse_config("").unwrap();
+        assert_eq!(ec.parallel_threshold, DEFAULT_PARALLEL_THRESHOLD);
+        assert_eq!(ec.verify_workers, 0);
+        assert_eq!(ec.verify_backend, VerifyBackend::Pool);
+    }
+
+    #[test]
+    fn verify_backend_roundtrip() {
+        for b in [VerifyBackend::Serial, VerifyBackend::Spawn, VerifyBackend::Pool] {
+            assert_eq!(VerifyBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(VerifyBackend::parse("nope"), None);
     }
 }

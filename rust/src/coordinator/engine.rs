@@ -8,16 +8,19 @@
 //! call — the L2 fusion that makes the CPU path tractable and the TPU path
 //! MXU-friendly.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::backend::ModelPair;
-use crate::spec::types::{BlockInput, BlockOutput, BlockVerifier, Categorical};
-use crate::spec::{self, VerifierKind};
+use crate::spec::kernel::{CouplingWorkspace, PanelSlice};
+use crate::spec::types::{Categorical, TokenMatrix};
+use crate::spec::VerifierKind;
 use crate::stats::rng::CounterRng;
 
-use super::config::EngineConfig;
+use super::config::{EngineConfig, VerifyBackend};
 use super::kv::PagedKvCache;
 use super::metrics::EngineMetrics;
+use super::pool::{VerifyJob, VerifyPool};
 use super::sequence::SequenceState;
 
 /// Outcome of one speculative block for one sequence.
@@ -27,28 +30,45 @@ pub struct BlockOutcome {
     pub accepted: usize,
 }
 
-/// Minimum per-sequence verification work (`k · (l+1) · vocab`) before
-/// `step_blocks` fans verification out across scoped threads; below it the
-/// serial path wins (thread spawn costs ~tens of µs). Shared between the
-/// dispatch decision and the draft phase's cache-warming predicate so the
-/// two can never disagree.
-const PARALLEL_VERIFY_WORK_THRESHOLD: usize = 8_192;
-
 pub struct SpecDecodeEngine {
     pub cfg: EngineConfig,
     pair: ModelPair,
-    verifier: Box<dyn BlockVerifier + Send + Sync>,
     root_rng: CounterRng,
     pub kv: PagedKvCache,
     pub metrics: EngineMetrics,
+    /// Engine-thread workspace: serial verification runs here, persisting
+    /// scratch and panel cache across blocks exactly like a pool worker.
+    ws: CouplingWorkspace,
+    /// Persistent verification pool, spawned lazily on the first batch
+    /// that clears the parallelism threshold (sized once from
+    /// `cfg.verify_workers`; serial-only engines never spawn threads).
+    pool: Option<VerifyPool>,
+    /// Verify-pool size resolved once at construction — the configured
+    /// `cfg.verify_workers`, or (at `0` = auto) `available_parallelism` —
+    /// so the per-block dispatch never repeats the syscall. Mutating
+    /// `cfg.verify_workers` after construction has no effect.
+    resolved_workers: usize,
 }
 
 impl SpecDecodeEngine {
     pub fn new(cfg: EngineConfig, pair: ModelPair, kv: PagedKvCache) -> Self {
         cfg.validate().expect("invalid engine config");
-        let verifier = spec::make_verifier(cfg.verifier);
         let root_rng = CounterRng::new(cfg.seed);
-        Self { cfg, pair, verifier, root_rng, kv, metrics: EngineMetrics::new() }
+        let resolved_workers = if cfg.verify_workers > 0 {
+            cfg.verify_workers
+        } else {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        };
+        Self {
+            cfg,
+            pair,
+            root_rng,
+            kv,
+            metrics: EngineMetrics::new(),
+            ws: CouplingWorkspace::new(),
+            pool: None,
+            resolved_workers,
+        }
     }
 
     pub fn verifier_kind(&self) -> VerifierKind {
@@ -96,24 +116,48 @@ impl SpecDecodeEngine {
         // Per-sequence randomness lanes, split once (not once per step).
         let seq_rngs: Vec<CounterRng> =
             seqs.iter().map(|s| self.root_rng.split(s.rng_lane)).collect();
-        // Warm this thread's panel cache with the draft-phase exponentials
-        // only when the verification phase will (a) race exponential panels
-        // at the same (slot, lane) coordinates — the GLS family and Daliri;
-        // the rejection baselines consume uniforms at disjoint coordinates —
-        // and (b) run serially on this thread (worker threads have their
-        // own, cold, thread-local workspaces). Both race paths are
-        // bit-exact, so this predicate is a pure perf decision.
-        let parallel_verify =
-            seqs.len() >= 2 && k * (l + 1) * self.pair.vocab() >= PARALLEL_VERIFY_WORK_THRESHOLD;
-        let warm_cache = !parallel_verify
-            && matches!(
-                self.cfg.verifier,
-                VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
-            );
+        // Dispatch decision, made up front (it also gates draft-phase
+        // recording): fan verification out only when the batch and the
+        // per-sequence math clear the calibrated threshold
+        // (`EngineConfig::parallel_threshold` — see
+        // DEFAULT_PARALLEL_THRESHOLD for the procedure). All backends are
+        // bit-identical, so this is a pure perf decision. A one-worker
+        // pool only ever loses to the serial path, so it runs solely when
+        // fan-out is forced (`parallel_threshold = 0` — how the parity
+        // grid pins the pool-of-one case).
+        let per_seq_work = k * (l + 1) * self.pair.vocab();
+        let workers = self.resolved_workers;
+        let parallel = seqs.len() >= 2
+            && per_seq_work >= self.cfg.parallel_threshold
+            && self.cfg.verify_backend != VerifyBackend::Serial
+            && (workers > 1 || self.cfg.parallel_threshold == 0);
+        // Record draft-phase exponentials into per-sequence panel slices
+        // when the verification phase will race panels at the same (slot,
+        // lane) coordinates — the GLS family and Daliri; the rejection
+        // baselines consume uniforms at disjoint coordinates. The slice is
+        // handed to whichever workspace verifies that sequence (the engine
+        // thread's or a pool worker's), so draft-exponential reuse works on
+        // serial AND parallel paths. Exception: a parallel Spawn block
+        // discards slices by design (the faithful pre-pool baseline), so
+        // don't pay for recording them. `record_race` and `sample_race`
+        // are bit-exact, so none of this ever changes a token.
+        let record_panels = matches!(
+            self.cfg.verifier,
+            VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
+        ) && !(parallel && self.cfg.verify_backend == VerifyBackend::Spawn);
+        let mut panels: Vec<PanelSlice> = if record_panels {
+            (0..seqs.len()).map(|_| PanelSlice::new()).collect()
+        } else {
+            Vec::new()
+        };
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
             vec![vec![Vec::with_capacity(l); k]; seqs.len()];
-        let mut draft_tokens: Vec<Vec<Vec<u32>>> = vec![vec![Vec::with_capacity(l); k]; seqs.len()];
+        // Flat token arena: token of (seq s, lane, pos j) lives at
+        // `(s·K + lane)·L + j`. One allocation for the whole batch; verify
+        // jobs and emission read it through `TokenMatrix` views instead of
+        // the former per-(seq, lane) `Vec<u32>` rows.
+        let mut arena: Vec<u32> = vec![0u32; seqs.len() * k * l];
         let mut topk_scratch: Vec<u32> = Vec::new();
         for j in 0..l {
             let logits = self.pair.draft.next_logits(&rows);
@@ -127,20 +171,16 @@ impl SpecDecodeEngine {
                         sp.top_k,
                         &mut topk_scratch,
                     );
-                    // Coupled drafting: the same (slot, lane) coordinates the
-                    // verifier will use — Alg. 2 line 4. When the serial
-                    // GLS/Daliri verification path will re-race these cells,
-                    // route through the workspace so the exponentials land in
-                    // the panel cache; `draft_race` and `sample_race` are
-                    // bit-exact, so the choice never changes a token.
+                    // Coupled drafting: the same (slot, lane) coordinates
+                    // the verifier will use — Alg. 2 line 4.
                     let slot = seq.next_slot + j as u64;
-                    let tok = if warm_cache {
-                        spec::gls::draft_race(&p, &seq_rngs[s], slot, lane as u64) as u32
+                    let tok = if record_panels {
+                        panels[s].record_race(&p, &seq_rngs[s], slot, lane as u64) as u32
                     } else {
                         p.sample_race(&seq_rngs[s], slot, lane as u64) as u32
                     };
                     rows[idx].push(tok);
-                    draft_tokens[s][lane].push(tok);
+                    arena[idx * l + j] = tok;
                     draft_dists[s][lane].push(p);
                 }
             }
@@ -169,116 +209,74 @@ impl SpecDecodeEngine {
         // --- Verification phase (the coupling algorithms). ----------------
         // Per-sequence verification is a pure function of (draft data,
         // target logits, randomness lane), so it parallelizes across the
-        // batch with no effect on outputs; each worker thread reuses its
-        // own coupling workspace and top-k scratch. The ported verifier
-        // kinds (GLS, GLS-strong, SpecTr, SpecInfer, Daliri) all run
-        // `verify_block` on the workspace kernel (single-draft remains a
-        // cheap scalar baseline), so the thread-scoped fan-out below covers
-        // every kind uniformly.
+        // batch with no effect on outputs. Every registered verifier kind
+        // runs `verify_block_kind` on a coupling workspace — the engine
+        // thread's for the serial path, a persistent pool worker's (or a
+        // scoped-spawn thread's) otherwise — with the sequence's draft-phase
+        // panel slice handed to whichever workspace claims the job.
         let t2 = Instant::now();
         let tp = self.cfg.target_params;
-        let root = self.root_rng;
-        let verifier: &(dyn BlockVerifier + Send + Sync) = self.verifier.as_ref();
-
-        struct VerifyJob {
-            draft_tokens: Vec<Vec<u32>>,
-            draft_dists: Vec<Vec<Categorical>>,
-            target_logits: Vec<Vec<Vec<f32>>>,
-            lane: u64,
-            slot0: u64,
-        }
-        let mut jobs: Vec<Option<VerifyJob>> = draft_tokens
+        let kind = self.cfg.verifier;
+        let arena = Arc::new(arena);
+        let mut panels = panels.into_iter();
+        let jobs: Vec<VerifyJob> = draft_dists
             .into_iter()
-            .zip(draft_dists)
             .zip(target_logits)
-            .zip(seqs.iter())
-            .map(|(((dt, dd), tl), seq)| {
-                Some(VerifyJob {
-                    draft_tokens: dt,
-                    draft_dists: dd,
-                    target_logits: tl,
-                    lane: seq.rng_lane,
-                    slot0: seq.next_slot,
-                })
+            .enumerate()
+            .map(|(s, (dd, tl))| VerifyJob {
+                kind,
+                draft_tokens: TokenMatrix::view(Arc::clone(&arena), s * k * l, k, l),
+                draft_dists: dd,
+                target_logits: tl,
+                target_params: tp,
+                rng: seq_rngs[s],
+                slot0: seqs[s].next_slot,
+                panel: panels.next().unwrap_or_default(),
             })
             .collect();
 
-        let run = |job: VerifyJob, scratch: &mut Vec<u32>| -> BlockOutput {
-            let target_dists: Vec<Vec<Categorical>> = job
-                .target_logits
-                .iter()
-                .map(|lane_rows| {
-                    lane_rows
-                        .iter()
-                        .map(|lg| {
-                            Categorical::from_logits_with_scratch(
-                                lg,
-                                tp.temperature,
-                                tp.top_k,
-                                scratch,
-                            )
-                        })
-                        .collect()
-                })
-                .collect();
-            let input = BlockInput {
-                draft_tokens: job.draft_tokens,
-                draft_dists: job.draft_dists,
-                target_dists,
-            };
-            verifier.verify_block(&input, &root.split(job.lane), job.slot0)
-        };
-
-        // Parallelize only when the batch and the per-sequence math are big
-        // enough to amortize thread spawn (~tens of µs); the serial path is
-        // bit-identical (verification is per-sequence pure).
-        let per_seq_work = k * (l + 1) * self.pair.vocab();
-        let threads = if jobs.len() >= 2 && per_seq_work >= PARALLEL_VERIFY_WORK_THRESHOLD {
-            std::thread::available_parallelism().map_or(1, |n| n.get()).min(jobs.len())
+        let (outs, cache_hits) = if !parallel {
+            let ws = &mut self.ws;
+            let outs: Vec<_> = jobs.into_iter().map(|job| job.run(ws)).collect();
+            let hits = ws.drain_panel_cache_hits();
+            (outs, hits)
         } else {
-            1
-        };
-        let mut outs: Vec<Option<BlockOutput>> = (0..jobs.len()).map(|_| None).collect();
-        if threads <= 1 {
-            let mut scratch: Vec<u32> = Vec::new();
-            for (slot, job) in outs.iter_mut().zip(jobs.iter_mut()) {
-                *slot = Some(run(job.take().expect("job unclaimed"), &mut scratch));
-            }
-        } else {
-            let chunk = jobs.len().div_ceil(threads);
-            let run = &run;
-            std::thread::scope(|scope| {
-                for (out_chunk, job_chunk) in outs.chunks_mut(chunk).zip(jobs.chunks_mut(chunk)) {
-                    scope.spawn(move || {
-                        let mut scratch: Vec<u32> = Vec::new();
-                        for (slot, job) in out_chunk.iter_mut().zip(job_chunk.iter_mut()) {
-                            *slot = Some(run(job.take().expect("job unclaimed"), &mut scratch));
-                        }
-                    });
+            match self.cfg.verify_backend {
+                VerifyBackend::Pool => {
+                    let pool =
+                        self.pool.get_or_insert_with(|| VerifyPool::new(workers));
+                    let outs = pool.run_batch(jobs);
+                    (outs, pool.drain_cache_hits())
                 }
-            });
-        }
+                VerifyBackend::Spawn => VerifyPool::run_scoped(jobs, workers),
+                VerifyBackend::Serial => unreachable!("parallel implies non-serial backend"),
+            }
+        };
+        self.metrics.panel_cache_hits += cache_hits;
 
         // --- Serial epilogue: sequence state, KV commits, metrics. --------
         let mut outcomes = Vec::with_capacity(seqs.len());
-        for (seq, out) in seqs.iter_mut().zip(outs) {
-            let out = out.expect("verify job ran");
-            // Never emit beyond the request budget.
+        for (seq, mut out) in seqs.iter_mut().zip(outs) {
+            // Never emit beyond the request budget: truncate the verifier
+            // output in place and move it straight into the sequence and
+            // the outcome — no intermediate collect.
             let budget = seq.remaining();
-            let emit: Vec<u32> = out.tokens.iter().copied().take(budget).collect();
-            let accepted = out.accepted.min(emit.len());
+            if out.tokens.len() > budget {
+                out.tokens.truncate(budget);
+            }
+            let accepted = out.accepted.min(out.tokens.len());
 
-            seq.tokens.extend_from_slice(&emit);
+            seq.tokens.extend_from_slice(&out.tokens);
             seq.next_slot += (l + 1) as u64;
             seq.target_calls += 1;
             seq.draft_steps += l;
-            self.kv.commit(seq.id, emit.len()).expect("commit within reservation");
+            self.kv.commit(seq.id, out.tokens.len()).expect("commit within reservation");
 
             self.metrics.blocks += 1;
-            self.metrics.emitted_tokens += emit.len() as u64;
+            self.metrics.emitted_tokens += out.tokens.len() as u64;
             self.metrics.accepted_tokens += accepted as u64;
 
-            outcomes.push(BlockOutcome { emitted: emit, accepted });
+            outcomes.push(BlockOutcome { emitted: out.tokens, accepted });
         }
         self.metrics.verify_time += t2.elapsed();
         outcomes
@@ -407,6 +405,7 @@ mod tests {
             draft_params: vec![SamplingParams::new(1.0, None)],
             max_seq_len: 64,
             seed: 123,
+            ..EngineConfig::default()
         };
         let mut eng = SpecDecodeEngine::new(
             cfg,
@@ -441,6 +440,82 @@ mod tests {
         a.decode_sequence(&mut sa);
         b.decode_sequence(&mut sb);
         assert_eq!(sa.tokens, sb.tokens);
+    }
+
+    #[test]
+    fn pooled_stepping_matches_serial_and_reuses_draft_panels() {
+        // One engine with the persistent pool forced on (threshold 0, two
+        // workers), one with the serial oracle backend: identical tokens,
+        // and the pooled engine's metrics must show draft-phase panels
+        // firing on the workers.
+        use super::super::config::VerifyBackend;
+        let mk = |backend: VerifyBackend, workers: usize| {
+            let (draft, target) = SimLm::pair(64, 11, 2.0);
+            let cfg = EngineConfig {
+                num_drafts: 3,
+                block_len: 4,
+                verifier: VerifierKind::Gls,
+                target_params: SamplingParams::new(1.0, Some(20)),
+                draft_params: vec![SamplingParams::new(1.0, Some(20))],
+                max_seq_len: 256,
+                seed: 5,
+                parallel_threshold: 0,
+                verify_workers: workers,
+                verify_backend: backend,
+            };
+            SpecDecodeEngine::new(
+                cfg,
+                ModelPair::new(Box::new(draft), Box::new(target)),
+                PagedKvCache::new(2048, 16),
+            )
+        };
+        let mk_seqs = || -> Vec<SequenceState> {
+            (0..5u64)
+                .map(|i| SequenceState::from_request(&Request::new(i, vec![1, (i % 7) as u32], 12)))
+                .collect()
+        };
+        let mut pooled = mk(VerifyBackend::Pool, 2);
+        let mut serial = mk(VerifyBackend::Serial, 0);
+        let mut ps = mk_seqs();
+        let mut ss = mk_seqs();
+        for s in &ps {
+            pooled.kv.register(s.id, s.tokens.len(), s.tokens.len() + 17, 5).unwrap();
+        }
+        for s in &ss {
+            serial.kv.register(s.id, s.tokens.len(), s.tokens.len() + 17, 5).unwrap();
+        }
+        for _ in 0..2 {
+            let mut pb: Vec<&mut SequenceState> = ps.iter_mut().collect();
+            pooled.step_blocks(&mut pb);
+            let mut sb: Vec<&mut SequenceState> = ss.iter_mut().collect();
+            serial.step_blocks(&mut sb);
+        }
+        for (a, b) in ps.iter().zip(&ss) {
+            assert_eq!(a.tokens, b.tokens, "seq {} diverged under pooling", a.id);
+        }
+        assert!(
+            pooled.metrics.panel_cache_hits > 0,
+            "handed-off draft panels never hit on pool workers"
+        );
+        assert!(
+            serial.metrics.panel_cache_hits > 0,
+            "draft panels never hit on the serial path"
+        );
+    }
+
+    #[test]
+    fn single_sequence_batch_never_fans_out() {
+        // A one-job batch stays on the engine thread regardless of backend
+        // or threshold — and the pool is never spawned for it.
+        use super::super::config::VerifyBackend;
+        let mut eng = engine(VerifierKind::Gls, 2, 1.5, 9);
+        eng.cfg.parallel_threshold = 0;
+        eng.cfg.verify_backend = VerifyBackend::Pool;
+        let req = Request::new(1, vec![4], 10);
+        let mut seq = SequenceState::from_request(&req);
+        eng.decode_sequence(&mut seq);
+        assert_eq!(seq.generated(), 10);
+        assert!(eng.pool.is_none(), "pool spawned for single-sequence batches");
     }
 
     #[test]

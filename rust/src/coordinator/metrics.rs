@@ -27,6 +27,9 @@ pub struct EngineMetrics {
     pub draft_time: Duration,
     /// Wall time spent in verification math (the coupling algorithms).
     pub verify_time: Duration,
+    /// Exponential-panel rows verification reused from the draft phase
+    /// (serial cache hits + pool-worker hits via the panel-slice handoff).
+    pub panel_cache_hits: u64,
 }
 
 impl Default for EngineMetrics {
@@ -48,6 +51,7 @@ impl EngineMetrics {
             target_time: Duration::ZERO,
             draft_time: Duration::ZERO,
             verify_time: Duration::ZERO,
+            panel_cache_hits: 0,
         }
     }
 
@@ -80,12 +84,14 @@ impl EngineMetrics {
         self.target_time += other.target_time;
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
+        self.panel_cache_hits += other.panel_cache_hits;
     }
 
     pub fn report(&self) -> String {
         format!(
             "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
-             p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms",
+             p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms \
+             panel-hits={}",
             self.blocks,
             self.emitted_tokens,
             self.block_efficiency(),
@@ -96,6 +102,7 @@ impl EngineMetrics {
             self.target_time.as_secs_f64() * 1e3,
             self.draft_time.as_secs_f64() * 1e3,
             self.verify_time.as_secs_f64() * 1e3,
+            self.panel_cache_hits,
         )
     }
 }

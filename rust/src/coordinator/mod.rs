@@ -20,15 +20,17 @@ pub mod config;
 pub mod engine;
 pub mod kv;
 pub mod metrics;
+pub mod pool;
 pub mod router;
 pub mod scheduler;
 pub mod sequence;
 pub mod server;
 
-pub use config::{EngineConfig, ServerConfig};
+pub use config::{EngineConfig, ServerConfig, VerifyBackend};
 pub use engine::SpecDecodeEngine;
 pub use kv::PagedKvCache;
 pub use metrics::EngineMetrics;
+pub use pool::{VerifyJob, VerifyPool};
 pub use router::{Router, RoutingPolicy};
 pub use sequence::{Request, RequestResult, SequenceState};
 pub use server::Server;

@@ -1,0 +1,459 @@
+//! Persistent verification worker pool.
+//!
+//! The pre-pool engine fanned verification out with a fresh
+//! `std::thread::scope` per speculative block: every block paid thread
+//! spawn/join (~tens of µs), every spawned worker rebuilt its
+//! [`CouplingWorkspace`] from cold, and the draft-phase exponential-panel
+//! reuse was lost entirely on the parallel path (the panel cache was
+//! thread-local to the engine thread). This module replaces that with
+//! std-only long-lived workers (rayon is unavailable offline):
+//!
+//! * **Parked threads.** `VerifyPool::new(w)` spawns `w` threads that park
+//!   on a condvar between batches; steady-state dispatch is one mutex
+//!   round-trip per claimed chunk, no spawns.
+//! * **Persistent workspaces.** Each worker owns a `CouplingWorkspace`
+//!   (race scratch + residual scratch + top-k scratch + panel cache) that
+//!   persists across blocks, so verification stays zero-allocation after
+//!   warm-up — the same property the serial path has always had.
+//! * **Chunked self-scheduling.** A batch is published as a job vector and
+//!   workers repeatedly claim the next unclaimed chunk (work-stealing
+//!   style dynamic scheduling: fast workers claim more chunks), which
+//!   balances continuous batches whose sequences have different support
+//!   sizes. Results land by job index, so outputs are order-independent.
+//! * **Panel handoff.** Each [`VerifyJob`] carries the sequence's
+//!   [`PanelSlice`] recorded by the engine's draft phase; the claiming
+//!   worker adopts it into its workspace cache before verifying, which
+//!   extends draft-exponential reuse to the parallel path (see
+//!   `spec::kernel` module docs, "Panel-slice handoff protocol").
+//!
+//! Determinism: a job's output is a pure function of the job (workspace
+//! caches are keyed by exact RNG lane prefixes, so cross-sequence reuse
+//! cannot alter values), hence pooled, scoped-spawn, and serial execution
+//! are bit-exact for every verifier — enforced by the pool grid in
+//! `tests/kernel_parity.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::model::sampling::SamplingParams;
+use crate::spec::kernel::{CouplingWorkspace, PanelSlice};
+use crate::spec::types::{BlockInput, BlockOutput, Categorical, TokenMatrix, VerifierKind};
+use crate::stats::rng::CounterRng;
+
+/// One sequence's verification work, fully owned so it can migrate to a
+/// persistent worker (`'static` + `Send`): the flat-arena token view, the
+/// draft distributions, the *raw* target logits (each worker builds its
+/// `Categorical`s with its own reusable top-k scratch), the per-sequence
+/// randomness stream, and the draft-phase panel slice to adopt.
+pub struct VerifyJob {
+    pub kind: VerifierKind,
+    pub draft_tokens: TokenMatrix,
+    pub draft_dists: Vec<Vec<Categorical>>,
+    /// `[lane][pos][vocab]` f32 logits from the target span pass.
+    pub target_logits: Vec<Vec<Vec<f32>>>,
+    pub target_params: SamplingParams,
+    /// The sequence's split randomness stream (`root.split(rng_lane)`).
+    pub rng: CounterRng,
+    pub slot0: u64,
+    /// Draft-phase exponential rows for this sequence (empty for verifier
+    /// kinds that consume disjoint RNG coordinates).
+    pub panel: PanelSlice,
+}
+
+impl VerifyJob {
+    /// Run the job on `ws`. Pure in `(self)` — the workspace only
+    /// contributes reusable scratch and value-keyed caches, never state
+    /// that can change an outcome.
+    pub fn run(mut self, ws: &mut CouplingWorkspace) -> BlockOutput {
+        if !self.panel.is_empty() {
+            ws.adopt_panel_slice(std::mem::take(&mut self.panel));
+        }
+        let tp = self.target_params;
+        let target_dists: Vec<Vec<Categorical>> = self
+            .target_logits
+            .iter()
+            .map(|lane_rows| {
+                lane_rows
+                    .iter()
+                    .map(|lg| {
+                        Categorical::from_logits_with_scratch(
+                            lg,
+                            tp.temperature,
+                            tp.top_k,
+                            &mut ws.topk_scratch,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let input = BlockInput {
+            draft_tokens: self.draft_tokens,
+            draft_dists: self.draft_dists,
+            target_dists,
+        };
+        ws.verify_block_kind(self.kind, &input, &self.rng, self.slot0)
+    }
+}
+
+struct PoolState {
+    /// Published batch; workers `take()` jobs as they claim chunks.
+    jobs: Vec<Option<VerifyJob>>,
+    outs: Vec<Option<BlockOutput>>,
+    /// Next unclaimed job index.
+    next: usize,
+    /// Claim granularity for this batch.
+    chunk: usize,
+    /// Jobs not yet completed (claimed or unclaimed).
+    pending: usize,
+    /// A job panicked on a worker; surfaced to the submitter.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between batches.
+    work: Condvar,
+    /// The submitter parks here until `pending == 0`.
+    done: Condvar,
+    /// Panel-cache hits accumulated across workers since the last drain.
+    cache_hits: AtomicU64,
+}
+
+/// Long-lived verification worker pool — see the module docs.
+pub struct VerifyPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl VerifyPool {
+    /// Spawn `workers` (≥ 1) parked worker threads.
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: Vec::new(),
+                outs: Vec::new(),
+                next: 0,
+                chunk: 1,
+                pending: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            cache_hits: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("gls-verify-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn verify worker")
+            })
+            .collect();
+        Self { shared, handles, workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Execute one batch and return the outputs in job order. Blocks the
+    /// caller until every job completes; the pool is reusable immediately
+    /// after. Takes `&mut self` so the one-batch-in-flight invariant is
+    /// compile-time enforced (a shared pool submitting concurrently would
+    /// interleave `jobs`/`outs` state).
+    pub fn run_batch(&mut self, jobs: Vec<VerifyJob>) -> Vec<BlockOutput> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            debug_assert_eq!(st.pending, 0, "one batch in flight at a time");
+            st.jobs = jobs.into_iter().map(Some).collect();
+            st.outs = (0..n).map(|_| None).collect();
+            st.next = 0;
+            // Finer than jobs/workers so fast workers rebalance stragglers;
+            // claiming costs one lock round-trip per chunk, so don't go
+            // below 1.
+            st.chunk = (n / (self.workers * 4)).max(1);
+            st.pending = n;
+            self.shared.work.notify_all();
+        }
+        let mut st = self.shared.state.lock().expect("pool lock");
+        while st.pending > 0 {
+            st = self.shared.done.wait(st).expect("pool wait");
+        }
+        assert!(!std::mem::take(&mut st.panicked), "verify pool job panicked");
+        st.jobs.clear();
+        st.outs.drain(..).map(|o| o.expect("job completed")).collect()
+    }
+
+    /// Take the panel-cache hits accumulated by the workers since the last
+    /// drain (the engine folds this into `EngineMetrics` per block).
+    pub fn drain_cache_hits(&self) -> u64 {
+        self.shared.cache_hits.swap(0, Ordering::Relaxed)
+    }
+
+    /// Scoped-spawn reference executor: the pre-pool engine behavior —
+    /// fresh threads, cold workspaces, and NO draft-phase panel reuse
+    /// (panel slices are discarded, reproducing the thread-local cache the
+    /// old parallel path could never reach; dropping them is a pure perf
+    /// difference, never a token difference). Preserved as the baseline
+    /// `benches/perf_engine.rs` races the pool against and as a config
+    /// escape hatch (`verify_backend = spawn`). Returns the outputs in job
+    /// order plus the panel-cache hits observed (~0 by construction).
+    pub fn run_scoped(jobs: Vec<VerifyJob>, threads: usize) -> (Vec<BlockOutput>, u64) {
+        let n = jobs.len();
+        let threads = threads.max(1).min(n.max(1));
+        let mut jobs: Vec<Option<VerifyJob>> = jobs
+            .into_iter()
+            .map(|mut job| {
+                job.panel = PanelSlice::new();
+                Some(job)
+            })
+            .collect();
+        let mut outs: Vec<Option<BlockOutput>> = (0..n).map(|_| None).collect();
+        let hits = AtomicU64::new(0);
+        if threads <= 1 {
+            let mut ws = CouplingWorkspace::new();
+            for (slot, job) in outs.iter_mut().zip(jobs.iter_mut()) {
+                *slot = Some(job.take().expect("job unclaimed").run(&mut ws));
+            }
+            hits.fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
+        } else {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (out_chunk, job_chunk) in outs.chunks_mut(chunk).zip(jobs.chunks_mut(chunk)) {
+                    let hits = &hits;
+                    scope.spawn(move || {
+                        let mut ws = CouplingWorkspace::new();
+                        for (slot, job) in out_chunk.iter_mut().zip(job_chunk.iter_mut()) {
+                            *slot = Some(job.take().expect("job unclaimed").run(&mut ws));
+                        }
+                        hits.fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        (
+            outs.into_iter().map(|o| o.expect("job ran")).collect(),
+            hits.into_inner(),
+        )
+    }
+}
+
+impl Drop for VerifyPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    let mut ws = CouplingWorkspace::new();
+    let mut claimed: Vec<(usize, VerifyJob)> = Vec::new();
+    loop {
+        {
+            let mut st = shared.state.lock().expect("pool lock");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.next < st.jobs.len() {
+                    break;
+                }
+                st = shared.work.wait(st).expect("pool wait");
+            }
+            let start = st.next;
+            let end = (start + st.chunk).min(st.jobs.len());
+            st.next = end;
+            claimed.extend((start..end).map(|i| (i, st.jobs[i].take().expect("job unclaimed"))));
+        }
+        // Run outside the lock; a panicking job must not hang the
+        // submitter, so it is caught, flagged, and re-raised over there.
+        let mut done: Vec<(usize, Result<BlockOutput, ()>)> = Vec::with_capacity(claimed.len());
+        for (i, job) in claimed.drain(..) {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run(&mut ws)))
+                .map_err(|_| ());
+            done.push((i, out));
+        }
+        shared
+            .cache_hits
+            .fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
+        let mut st = shared.state.lock().expect("pool lock");
+        for (i, out) in done {
+            match out {
+                Ok(out) => st.outs[i] = Some(out),
+                Err(()) => st.panicked = true,
+            }
+            st.pending -= 1;
+        }
+        if st.pending == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::types::BlockInput;
+    use crate::stats::rng::XorShift128;
+    use crate::testkit;
+
+    /// A synthetic job whose expected output can be recomputed serially.
+    fn mk_job(gen: &mut XorShift128, kind: VerifierKind, seed: u64) -> VerifyJob {
+        let (k, l, n) = (3usize, 3usize, 24usize);
+        let tp = SamplingParams::new(1.0, Some(8));
+        let p: Vec<Categorical> = (0..l).map(|_| testkit::gen_categorical(gen, n)).collect();
+        let rng = CounterRng::new(seed);
+        let mut panel = PanelSlice::new();
+        let mut flat = vec![0u32; k * l];
+        for j in 0..l {
+            for lane in 0..k {
+                flat[lane * l + j] = panel.record_race(&p[j], &rng, j as u64, lane as u64) as u32;
+            }
+        }
+        let target_logits: Vec<Vec<Vec<f32>>> = (0..k)
+            .map(|_| {
+                (0..=l)
+                    .map(|_| (0..n).map(|_| (gen.next_f64() * 6.0) as f32).collect())
+                    .collect()
+            })
+            .collect();
+        VerifyJob {
+            kind,
+            draft_tokens: TokenMatrix::view(Arc::new(flat), 0, k, l),
+            draft_dists: vec![p; k],
+            target_logits,
+            target_params: tp,
+            rng,
+            slot0: 0,
+            panel,
+        }
+    }
+
+    /// Rebuild the same job's BlockInput serially (fresh scratch) and
+    /// verify on a cold workspace — the oracle the pool must match.
+    fn expected(gen: &mut XorShift128, kind: VerifierKind, seed: u64) -> BlockOutput {
+        let job = mk_job(gen, kind, seed);
+        let rng = job.rng;
+        let slot0 = job.slot0;
+        let tp = job.target_params;
+        let mut scratch = Vec::new();
+        let target_dists: Vec<Vec<Categorical>> = job
+            .target_logits
+            .iter()
+            .map(|rows| {
+                rows.iter()
+                    .map(|lg| {
+                        Categorical::from_logits_with_scratch(
+                            lg,
+                            tp.temperature,
+                            tp.top_k,
+                            &mut scratch,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
+        let input = BlockInput {
+            draft_tokens: job.draft_tokens.clone(),
+            draft_dists: job.draft_dists.clone(),
+            target_dists,
+        };
+        CouplingWorkspace::new().verify_block_kind(kind, &input, &rng, slot0)
+    }
+
+    #[test]
+    fn pool_matches_serial_oracle_across_batches_and_sizes() {
+        for &workers in &[1usize, 2, 4] {
+            let mut pool = VerifyPool::new(workers);
+            // Several batches through the SAME pool: workspaces persist,
+            // outcomes must not.
+            for batch in 0..3u64 {
+                let kinds = [VerifierKind::Gls, VerifierKind::SpecInfer, VerifierKind::Daliri];
+                let jobs: Vec<VerifyJob> = (0..7u64)
+                    .map(|i| {
+                        let kind = kinds[(i % 3) as usize];
+                        let mut gen = XorShift128::new(100 + batch * 10 + i);
+                        mk_job(&mut gen, kind, batch * 100 + i)
+                    })
+                    .collect();
+                let outs = pool.run_batch(jobs);
+                for (i, out) in outs.iter().enumerate() {
+                    let kind = kinds[i % 3];
+                    let mut gen = XorShift128::new(100 + batch * 10 + i as u64);
+                    let want = expected(&mut gen, kind, batch * 100 + i as u64);
+                    assert_eq!(
+                        *out, want,
+                        "workers {workers} batch {batch} job {i} ({kind:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_handoff_panels_hit_on_worker_threads() {
+        let mut pool = VerifyPool::new(2);
+        let jobs: Vec<VerifyJob> = (0..6u64)
+            .map(|i| {
+                let mut gen = XorShift128::new(900 + i);
+                mk_job(&mut gen, VerifierKind::Gls, 500 + i)
+            })
+            .collect();
+        let _ = pool.run_batch(jobs);
+        assert!(
+            pool.drain_cache_hits() > 0,
+            "draft-phase panels must be reused on worker threads"
+        );
+        assert_eq!(pool.drain_cache_hits(), 0, "drain must reset");
+    }
+
+    #[test]
+    fn run_scoped_matches_pool() {
+        let mk_batch = || -> Vec<VerifyJob> {
+            (0..5u64)
+                .map(|i| {
+                    let mut gen = XorShift128::new(70 + i);
+                    mk_job(&mut gen, VerifierKind::SpecTr, 40 + i)
+                })
+                .collect()
+        };
+        let mut pool = VerifyPool::new(3);
+        let a = pool.run_batch(mk_batch());
+        let (b, _hits) = VerifyPool::run_scoped(mk_batch(), 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut pool = VerifyPool::new(2);
+        assert!(pool.run_batch(Vec::new()).is_empty());
+        // Pool still alive and usable.
+        let mut gen = XorShift128::new(1);
+        let outs = pool.run_batch(vec![mk_job(&mut gen, VerifierKind::Daliri, 9)]);
+        assert_eq!(outs.len(), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        let mut pool = VerifyPool::new(4);
+        let mut gen = XorShift128::new(2);
+        let _ = pool.run_batch(vec![mk_job(&mut gen, VerifierKind::Gls, 3)]);
+        drop(pool); // must not hang or leak parked threads
+    }
+}

@@ -122,9 +122,19 @@ fn worker_loop(
     pair: ModelPair,
 ) -> EngineMetrics {
     // Per-worker seed offset keeps randomness lanes disjoint across workers
-    // even when clients reuse request ids.
+    // even when clients reuse request ids. An auto-sized verify pool
+    // (`verify_workers = 0`) is divided by the server's worker count so W
+    // engines don't each spawn `available_parallelism` verify threads and
+    // oversubscribe the cores.
+    let verify_workers = if engine_cfg.verify_workers == 0 {
+        let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+        (cores / server_cfg.workers.max(1)).max(1)
+    } else {
+        engine_cfg.verify_workers
+    };
     let cfg = EngineConfig {
         seed: engine_cfg.seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(worker_idx as u64 + 1)),
+        verify_workers,
         ..engine_cfg
     };
     let kv = PagedKvCache::new(server_cfg.kv_pages, server_cfg.kv_page_size);

@@ -16,12 +16,21 @@ pub struct Scheduler {
     pub max_running: usize,
     queued: VecDeque<SequenceState>,
     running: Vec<SequenceState>,
+    /// Retire-pass scratch, swapped with `running` each tick so the
+    /// steady-state scheduler loop allocates nothing (the engine's verify
+    /// path is allocation-free too — see `coordinator::pool`).
+    retire_scratch: Vec<SequenceState>,
 }
 
 impl Scheduler {
     pub fn new(max_running: usize) -> Self {
         assert!(max_running >= 1);
-        Self { max_running, queued: VecDeque::new(), running: Vec::new() }
+        Self {
+            max_running,
+            queued: VecDeque::new(),
+            running: Vec::new(),
+            retire_scratch: Vec::new(),
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -95,9 +104,11 @@ impl Scheduler {
             }
         }
 
-        // Retire.
+        // Retire. `keep` is the persistent scratch (capacity retained
+        // across ticks), swapped back into `running` at the end.
         let mut results = Vec::new();
-        let mut keep = Vec::with_capacity(self.running.len());
+        let mut keep = std::mem::take(&mut self.retire_scratch);
+        keep.clear();
         for mut seq in self.running.drain(..) {
             let rejected = seq.phase == SeqPhase::Finished; // oversized
             if rejected || seq.is_done(max_len) {
@@ -116,7 +127,7 @@ impl Scheduler {
                 keep.push(seq);
             }
         }
-        self.running = keep;
+        self.retire_scratch = std::mem::replace(&mut self.running, keep);
         results
     }
 

@@ -2,7 +2,11 @@
 //!
 //! Owns a [`Router`], assigns request ids, runs a workload to completion
 //! and reports serving statistics (token rate, latency percentiles, block
-//! efficiency) — the measurements behind the paper's TR columns.
+//! efficiency) — the measurements behind the paper's TR columns. Each
+//! worker's engine verifies through the persistent pool
+//! (`coordinator::pool`), auto-sized per worker by the router;
+//! [`ServeReport::metrics`] carries the merged `panel_cache_hits`
+//! observability for the draft-exponential handoff.
 
 use std::time::Instant;
 
@@ -168,6 +172,46 @@ mod tests {
         for (i, r) in report.results.iter().enumerate() {
             assert_eq!(r.id, i as u64);
         }
+    }
+
+    #[test]
+    fn serve_all_with_forced_verify_pool_matches_serial_serving() {
+        // The full serving stack (router → scheduler → engine) with the
+        // verify pool forced on must emit exactly the tokens the serial
+        // oracle emits, and the handoff must demonstrably fire.
+        use crate::coordinator::config::VerifyBackend;
+        let (sc, ec) = cfgs();
+        let workload: Vec<(Vec<u32>, usize)> =
+            (0..10).map(|i| (vec![i as u32, 3], 14)).collect();
+        let run = |backend: VerifyBackend, workers: usize| {
+            let ec = EngineConfig {
+                parallel_threshold: 0,
+                verify_workers: workers,
+                verify_backend: backend,
+                ..ec.clone()
+            };
+            Server::serve_all(
+                &sc,
+                &ec,
+                RoutingPolicy::RoundRobin,
+                |_| {
+                    let (d, t) = SimLm::pair(32, 9, 1.5);
+                    ModelPair::new(Box::new(d), Box::new(t))
+                },
+                workload.clone(),
+            )
+        };
+        let pooled = run(VerifyBackend::Pool, 2);
+        let serial = run(VerifyBackend::Serial, 0);
+        assert_eq!(pooled.results.len(), serial.results.len());
+        for (a, b) in pooled.results.iter().zip(&serial.results) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} diverged under pooling", a.id);
+        }
+        assert!(
+            pooled.metrics.panel_cache_hits > 0,
+            "panel handoff never fired through the serving stack"
+        );
     }
 
     #[test]

@@ -88,6 +88,7 @@ fn cmd_serve(args: &Args) -> i32 {
         draft_params,
         max_seq_len: 512,
         seed: args.get_parse("seed", 0xC0FFEEu64).unwrap(),
+        ..EngineConfig::default()
     };
     let server_cfg = ServerConfig { workers, ..ServerConfig::default() };
 

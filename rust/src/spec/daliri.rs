@@ -122,7 +122,7 @@ mod tests {
             let draft_tokens: Vec<u32> =
                 (0..l).map(|j| p[j].sample_race(&rng, j as u64, 0) as u32).collect();
             let input = BlockInput {
-                draft_tokens: vec![draft_tokens.clone()],
+                draft_tokens: vec![draft_tokens.clone()].into(),
                 draft_dists: vec![p.clone()],
                 target_dists: vec![q.clone()],
             };
@@ -150,7 +150,7 @@ mod tests {
             (0..l).map(|j| p[j].sample_race(&rng, j as u64, 0) as u32).collect();
         let a = DaliriVerifier::new().verify_block(
             &BlockInput {
-                draft_tokens: vec![draft_tokens.clone()],
+                draft_tokens: vec![draft_tokens.clone()].into(),
                 draft_dists: vec![p],
                 target_dists: vec![q.clone()],
             },
@@ -159,7 +159,7 @@ mod tests {
         );
         let b = DaliriVerifier::new().verify_block(
             &BlockInput {
-                draft_tokens: vec![draft_tokens],
+                draft_tokens: vec![draft_tokens].into(),
                 draft_dists: vec![p2],
                 target_dists: vec![q],
             },

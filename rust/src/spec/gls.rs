@@ -290,21 +290,6 @@ pub fn select_target_token_scalar(
     arg
 }
 
-/// Engine draft-phase race (Alg. 2 line 4) on the thread-local workspace —
-/// bit-exact with [`Categorical::sample_race`] at the same `(rng, slot,
-/// lane)` coordinates.
-///
-/// Beyond drawing the draft token, the evaluated exponentials are memoized
-/// in the workspace panel cache: the verifier races the *same*
-/// shared-randomness cells (that overlap is the paper's coupling), so a
-/// subsequent GLS/Daliri `verify_block` on the same thread reassembles its
-/// panel from the cache instead of re-hashing (ROADMAP follow-up #2). The
-/// cache is keyed by the lane's RNG prefix — the value that fully
-/// determines the variates — so reuse cannot change any outcome.
-pub fn draft_race(p: &Categorical, rng: &CounterRng, slot: u64, lane: u64) -> usize {
-    with_workspace(|ws| ws.sample_race(p, rng, slot, lane))
-}
-
 /// Algorithm 2: drafter-invariant multi-draft block verification.
 ///
 /// Conditional variant (paper §4.2): the min in lines 9/13 ranges over the
@@ -560,7 +545,7 @@ mod tests {
             // Conditional-variant tests use equal target dists across drafts
             // (active drafts share prefixes in the engine).
             target_dists: vec![shared_q; k],
-            draft_tokens,
+            draft_tokens: draft_tokens.into(),
         }
     }
 

@@ -1,7 +1,6 @@
 //! Zero-allocation batched coupling kernel for the serving stack's
-//! verification schemes: the GLS family, SpecTr, SpecInfer, and Daliri all
-//! run their `verify_block` here (the classic single-draft TR baseline
-//! stays scalar — it races nothing and is already cheap).
+//! verification schemes: the GLS family, SpecTr, SpecInfer, Daliri, and
+//! the classic single-draft TR baseline all run their `verify_block` here.
 //!
 //! The scalar reference implementations (`*_scalar` in [`super::gls`],
 //! [`super::spectr`], [`super::specinfer`], [`super::daliri`]) evaluate
@@ -39,6 +38,46 @@
 //!   cache instead of re-hashing. Cache entries are keyed by exactly the
 //!   value that determines the variates, so reuse is structurally
 //!   bit-exact — a hit and a miss produce identical panels.
+//! * The same reuse works **across threads** via [`PanelSlice`]: the
+//!   engine's draft phase records each race's evaluated exponentials into
+//!   a per-sequence, `Send`-able slice
+//!   ([`PanelSlice::record_race`], bit-exact with
+//!   [`Categorical::sample_race`]), and whichever verify-pool worker later
+//!   verifies that sequence installs the slice into its own workspace
+//!   cache ([`CouplingWorkspace::adopt_panel_slice`]) before racing. See
+//!   "Panel-slice handoff protocol" below.
+//!
+//! # Panel-slice handoff protocol
+//!
+//! The engine's persistent verify pool (`coordinator::pool`) runs each
+//! sequence's verification on an arbitrary long-lived worker thread, so
+//! the draft-phase exponentials — evaluated on the engine thread — cannot
+//! be reused through a thread-local cache. The handoff closes that gap:
+//!
+//! 1. **Record.** For the panel-racing verifiers (GLS, GLS-strong,
+//!    Daliri), the engine drafts lane `k`'s token at slot `j` through
+//!    `PanelSlice::record_race(p, rng, slot, k)`, which appends one row
+//!    `(key = rng.lane(slot, k).key(), items = supp(p), values = Exp(1)
+//!    variates)` to the sequence's slice while returning the identical
+//!    token `Categorical::sample_race` would.
+//! 2. **Hand off.** The slice rides inside the sequence's verify job
+//!    (plain owned data — `Send` needs no synchronization because every
+//!    variate is a pure function of `(key, item)`;
+//!    `CounterLane::key` documents that contract).
+//! 3. **Install.** The worker that claims the job calls
+//!    `adopt_panel_slice` *before* verification, moving the recorded rows
+//!    into its workspace [`PanelCache`] (vector swap, no re-hash, no
+//!    copy of the variates).
+//! 4. **Reuse.** Verification races at the same `(slot, lane)`
+//!    coordinates find the rows by key and merge cached items into their
+//!    panels ([`RaceScratch::fill_panel`]), counting one panel-cache hit
+//!    per merged row — [`CouplingWorkspace::panel_cache_hits`] is the
+//!    observable the engine aggregates into its metrics and tests assert
+//!    on.
+//!
+//! A hit can never change an outcome — key equality implies variate
+//! equality — so the handoff is a pure perf transport; adversarial slices
+//! (wrong sequence, stale block) degrade to misses, not corruption.
 //!
 //! # Kernel contract
 //!
@@ -113,7 +152,7 @@ use std::cell::RefCell;
 use crate::stats::rng::CounterRng;
 
 use super::gls::{BilateralOutcome, GlsOutcome};
-use super::types::{BlockInput, BlockOutput, Categorical};
+use super::types::{BlockInput, BlockOutput, Categorical, VerifierKind};
 
 /// Capacity of the draft-phase panel cache (ring replacement). Sized to
 /// hold a few blocks' worth of `(slot, lane)` rows; eviction only costs
@@ -123,6 +162,7 @@ const PANEL_CACHE_CAP: usize = 128;
 /// One memoized `(slot, draft)` row of exponentials: `values[j]` is the
 /// Exp(1) variate at item `items[j]` (ascending) for the lane identified
 /// by `key` ([`crate::stats::rng::CounterLane::key`]).
+#[derive(Debug)]
 struct CacheEntry {
     key: u64,
     items: Vec<u32>,
@@ -136,11 +176,15 @@ struct CacheEntry {
 struct PanelCache {
     entries: Vec<CacheEntry>,
     next: usize,
+    /// Ring capacity: starts at [`PANEL_CACHE_CAP`] and grows to fit
+    /// adopted panel slices (see [`PanelCache::ensure_capacity`]) so a
+    /// big-`K·L` block's handoff is never self-evicting.
+    cap: usize,
 }
 
 impl PanelCache {
     fn new() -> Self {
-        Self { entries: Vec::new(), next: 0 }
+        Self { entries: Vec::new(), next: 0, cap: PANEL_CACHE_CAP }
     }
 
     fn find(&self, key: u64) -> Option<&CacheEntry> {
@@ -150,18 +194,123 @@ impl PanelCache {
     /// Claim a (possibly recycled) entry for `key`, cleared and ready to
     /// record a race's evaluated items.
     fn begin(&mut self, key: u64) -> &mut CacheEntry {
-        if self.entries.len() < PANEL_CACHE_CAP {
+        if self.entries.len() < self.cap {
             self.entries.push(CacheEntry { key, items: Vec::new(), values: Vec::new() });
             self.entries.last_mut().expect("just pushed")
         } else {
             let pos = self.next;
-            self.next = (self.next + 1) % PANEL_CACHE_CAP;
+            self.next = (self.next + 1) % self.cap;
             let e = &mut self.entries[pos];
             e.key = key;
             e.items.clear();
             e.values.clear();
             e
         }
+    }
+
+    /// Grow the ring so at least `rows` freshly installed entries survive
+    /// until they are read. A `K·L` panel slice larger than the default
+    /// capacity would otherwise wrap the ring during adoption and evict
+    /// its own earliest rows before verification races them — wasted
+    /// recording, never an incorrect outcome, but worth preventing.
+    fn ensure_capacity(&mut self, rows: usize) {
+        self.cap = self.cap.max(rows.saturating_add(rows / 2));
+    }
+
+    /// Install an externally recorded row (the panel-slice handoff),
+    /// swapping its buffers into a (possibly recycled) cache entry — no
+    /// re-hash, no copy of the variates.
+    fn adopt(&mut self, mut row: CacheEntry) {
+        let e = self.begin(row.key);
+        std::mem::swap(&mut e.items, &mut row.items);
+        std::mem::swap(&mut e.values, &mut row.values);
+    }
+}
+
+/// A `Send`-able record of draft-phase exponential rows for *one*
+/// sequence, keyed by the `(slot, draft)` lane prefix — the unit of the
+/// cross-thread panel-cache handoff (see the module docs, "Panel-slice
+/// handoff protocol").
+///
+/// The engine records each draft race into the sequence's slice via
+/// [`PanelSlice::record_race`]; the verify-pool worker that later claims
+/// the sequence installs the slice into its own workspace cache with
+/// [`CouplingWorkspace::adopt_panel_slice`]. Rows are plain owned data:
+/// variates are pure functions of `(key, item)`, so shipping them across
+/// threads needs no synchronization and cannot change any outcome.
+///
+/// Cost note: recording allocates one exact-sized buffer pair per `(slot,
+/// draft)` row — the same order as the `Categorical` the draft step
+/// builds anyway, but (unlike the recycled in-workspace cache buffers of
+/// [`CouplingWorkspace::sample_race`]) not reused across blocks, since
+/// adopted buffers end their life on the consuming worker. A return
+/// channel recycling spent slices to the engine is a noted ROADMAP
+/// follow-up.
+#[derive(Debug, Default)]
+pub struct PanelSlice {
+    rows: Vec<CacheEntry>,
+}
+
+impl PanelSlice {
+    pub fn new() -> Self {
+        Self { rows: Vec::new() }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Recorded `(slot, draft)` rows so far.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Draft-phase Gumbel-max race that records the evaluated exponentials
+    /// as a slice row — bit-exact with [`Categorical::sample_race`] (same
+    /// visit order, same strict-`<` tie-breaking, identical variates), and
+    /// with [`CouplingWorkspace::sample_race`] (which records into the
+    /// thread's own cache instead).
+    pub fn record_race(&mut self, d: &Categorical, rng: &CounterRng, slot: u64, draft: u64) -> usize {
+        let lane = rng.lane(slot, draft);
+        // Exact-size rows (top-k supports are known): one allocation per
+        // buffer, no push-growth realloc on the draft hot path.
+        let cap = d.support().map_or(d.len(), |s| s.len());
+        let mut row = CacheEntry {
+            key: lane.key(),
+            items: Vec::with_capacity(cap),
+            values: Vec::with_capacity(cap),
+        };
+        let mut best = f64::INFINITY;
+        let mut arg = 0usize;
+        let mut consider = |i: usize, p: f64| {
+            if p <= 0.0 {
+                return;
+            }
+            let e = lane.exponential(i as u64);
+            row.items.push(i as u32);
+            row.values.push(e);
+            let v = e / p;
+            if v < best {
+                best = v;
+                arg = i;
+            }
+        };
+        match d.support() {
+            Some(sup) => {
+                for &i in sup {
+                    consider(i as usize, d.prob(i as usize));
+                }
+            }
+            None => {
+                for (i, &p) in d.probs().iter().enumerate() {
+                    consider(i, p);
+                }
+            }
+        }
+        self.rows.push(row);
+        arg
     }
 }
 
@@ -177,6 +326,11 @@ struct RaceScratch {
     /// Per-lane running minima and argmins.
     best: Vec<f64>,
     arg: Vec<usize>,
+    /// Panel rows assembled from cache/handoff entries instead of being
+    /// re-hashed (one count per merged row). Purely observational — the
+    /// engine aggregates it into its metrics and the handoff tests assert
+    /// it fires on worker threads.
+    cache_hits: u64,
 }
 
 impl RaceScratch {
@@ -187,6 +341,7 @@ impl RaceScratch {
             panel: Vec::new(),
             best: Vec::new(),
             arg: Vec::new(),
+            cache_hits: 0,
         }
     }
 
@@ -265,6 +420,7 @@ impl RaceScratch {
             let lane = rng.lane(slot, lane_of(r));
             match cache.find(lane.key()) {
                 Some(hit) => {
+                    self.cache_hits += 1;
                     // Two-pointer merge over two ascending item lists:
                     // cached items are copied, the rest are evaluated.
                     let mut ci = 0usize;
@@ -482,7 +638,8 @@ impl CouplingWorkspace {
     /// later verification race on this workspace at the same coordinates —
     /// the coupled verify step of GLS/Daliri, which by construction reads
     /// the same shared-randomness cells — reuses them instead of
-    /// re-hashing (ROADMAP follow-up #2).
+    /// re-hashing. (The engine's cross-thread equivalent is
+    /// [`PanelSlice::record_race`] + [`CouplingWorkspace::adopt_panel_slice`].)
     pub fn sample_race(&mut self, d: &Categorical, rng: &CounterRng, slot: u64, draft: u64) -> usize {
         let lane = rng.lane(slot, draft);
         let entry = self.cache.begin(lane.key());
@@ -514,6 +671,53 @@ impl CouplingWorkspace {
             }
         }
         arg
+    }
+
+    /// Install a [`PanelSlice`] recorded by the engine's draft phase into
+    /// this workspace's panel cache — step 3 of the handoff protocol (see
+    /// module docs). Buffers are moved, not copied; subsequent races at
+    /// the recorded `(slot, lane)` coordinates merge from the cache.
+    pub fn adopt_panel_slice(&mut self, slice: PanelSlice) {
+        self.cache.ensure_capacity(slice.rows.len());
+        for row in slice.rows {
+            self.cache.adopt(row);
+        }
+    }
+
+    /// Panel rows served from the cache (draft-phase reuse) since the
+    /// workspace was created or last drained.
+    #[inline]
+    pub fn panel_cache_hits(&self) -> u64 {
+        self.race.cache_hits
+    }
+
+    /// Take and reset the hit counter (the engine/pool aggregate this into
+    /// `EngineMetrics::panel_cache_hits` once per block).
+    #[inline]
+    pub fn drain_panel_cache_hits(&mut self) -> u64 {
+        std::mem::take(&mut self.race.cache_hits)
+    }
+
+    /// Dispatch `verify_block` for any registered verifier kind onto this
+    /// workspace. This is what the engine's serial path and the verify
+    /// pool's workers run: every kind resolves to the same kernel method
+    /// its `BlockVerifier` impl uses, so pooled, scoped-spawn, and serial
+    /// execution are bit-exact by construction.
+    pub fn verify_block_kind(
+        &mut self,
+        kind: VerifierKind,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        match kind {
+            VerifierKind::Gls => self.verify_block_gls(input, rng, slot0, false),
+            VerifierKind::GlsStrong => self.verify_block_gls(input, rng, slot0, true),
+            VerifierKind::SpecInfer => self.verify_block_specinfer(input, rng, slot0),
+            VerifierKind::SpecTr => self.verify_block_spectr(input, rng, slot0),
+            VerifierKind::SingleDraft => self.verify_block_single_draft(input, rng, slot0),
+            VerifierKind::Daliri => self.verify_block_daliri(input, rng, slot0),
+        }
     }
 
     /// Algorithm 1 (SampleGLS) over the sparse union support — bit-exact
@@ -1003,6 +1207,57 @@ impl CouplingWorkspace {
         tokens.push(q.sample_inverse(u) as u32);
         BlockOutput { tokens, accepted, surviving_draft: active.first().copied() }
     }
+
+    /// Classic single-draft rejection sampling (the TR baseline) on the
+    /// residual scratch — bit-exact with
+    /// [`super::single_draft::SingleDraftVerifier::verify_block_scalar`].
+    /// On rejection, the residual `(q − p)₊` is built and renormalized in
+    /// place over `supp(q)` instead of materializing a `Categorical`
+    /// (dense residual + `Categorical::new` on the scalar path), so the TR
+    /// baseline shares the kernel residual machinery with
+    /// SpecInfer/SpecTr.
+    pub fn verify_block_single_draft(
+        &mut self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
+        debug_assert!(input.validate().is_ok(), "{:?}", input.validate());
+        let l = input.block_len();
+        let n = input.target_dists[0][0].len();
+        let Self { residual, .. } = self;
+        let mut tokens = Vec::with_capacity(l + 1);
+        let mut accepted = 0usize;
+        for j in 0..l {
+            let p = &input.draft_dists[0][j];
+            let q = &input.target_dists[0][j];
+            let token = input.draft_tokens[0][j];
+            let slot = slot0 + j as u64;
+            let u = rng.uniform(slot, 1, 0);
+            let px = p.prob(token as usize);
+            let qx = q.prob(token as usize);
+            let accept = if px <= 0.0 { true } else { u < (qx / px).min(1.0) };
+            if accept {
+                tokens.push(token);
+                accepted += 1;
+                continue;
+            }
+            let u2 = rng.uniform(slot, 2, 0);
+            residual.load(q);
+            let tok = if residual.subtract_renormalize(p) {
+                residual.sample_inverse(n, u2) as u32
+            } else {
+                // (q − p)₊ exhausted: the scalar path falls back to q.
+                q.sample_inverse(u2) as u32
+            };
+            tokens.push(tok);
+            return BlockOutput { tokens, accepted, surviving_draft: None };
+        }
+        let q = &input.target_dists[0][l];
+        let u = rng.uniform(slot0 + l as u64, 1, 0);
+        tokens.push(q.sample_inverse(u) as u32);
+        BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+    }
 }
 
 thread_local! {
@@ -1177,7 +1432,7 @@ mod tests {
                 .map(|j| warm.sample_race(&p[j], &rng, j as u64, 0) as u32)
                 .collect();
             let input = BlockInput {
-                draft_tokens: vec![draft_tokens],
+                draft_tokens: vec![draft_tokens].into(),
                 draft_dists: vec![p.clone()],
                 target_dists: vec![q.clone()],
             };
@@ -1234,7 +1489,7 @@ mod tests {
                 }
             }
             let input = BlockInput {
-                draft_tokens,
+                draft_tokens: draft_tokens.into(),
                 draft_dists: vec![p.clone(); k],
                 target_dists: vec![q.clone(); k],
             };
@@ -1252,6 +1507,176 @@ mod tests {
                 ws.verify_block_daliri(&input, &rng, seed),
                 DaliriVerifier::new().verify_block_scalar(&input, &rng, seed),
                 "daliri seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn panel_slice_record_race_matches_categorical() {
+        // Step 1 of the handoff protocol must be bit-exact with the plain
+        // race at the same coordinates.
+        let mut gen = XorShift128::new(0x511CE);
+        for case in 0..40u64 {
+            let d = match case % 3 {
+                0 => testkit::gen_categorical(&mut gen, 25),
+                1 => testkit::gen_sparse_categorical(&mut gen, 80, 5),
+                _ => {
+                    let logits: Vec<f32> =
+                        (0..100).map(|_| (gen.next_f64() * 5.0) as f32).collect();
+                    Categorical::from_logits(&logits, 1.0, Some(8))
+                }
+            };
+            let rng = CounterRng::new(3100 + case);
+            let mut slice = PanelSlice::new();
+            for draft in 0..3u64 {
+                assert_eq!(
+                    slice.record_race(&d, &rng, case, draft),
+                    d.sample_race(&rng, case, draft),
+                    "case {case} draft {draft}"
+                );
+            }
+            assert_eq!(slice.len(), 3);
+        }
+    }
+
+    #[test]
+    fn panel_slice_handoff_is_bit_exact_and_counts_hits() {
+        // Record on a "drafting" slice, adopt into a *fresh* workspace (the
+        // worker-thread scenario), verify: outcomes must equal a cold
+        // workspace and the scalar reference, and the cache-hit counter
+        // must show the adopted rows actually fired.
+        let mut gen = XorShift128::new(0xAD0B);
+        for seed in 0..15u64 {
+            let n = 50;
+            let l = 4;
+            let p: Vec<Categorical> =
+                (0..l).map(|_| testkit::gen_sparse_categorical(&mut gen, n, 7)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_sparse_categorical(&mut gen, n, 7)).collect();
+            let rng = CounterRng::new(seed ^ 0x5EED);
+            let mut slice = PanelSlice::new();
+            let draft_tokens: Vec<u32> = (0..l)
+                .map(|j| slice.record_race(&p[j], &rng, j as u64, 0) as u32)
+                .collect();
+            let input = BlockInput {
+                draft_tokens: vec![draft_tokens].into(),
+                draft_dists: vec![p.clone()],
+                target_dists: vec![q.clone()],
+            };
+            let mut worker_ws = CouplingWorkspace::new();
+            worker_ws.adopt_panel_slice(slice);
+            let adopted = worker_ws.verify_block_daliri(&input, &rng, 0);
+            assert!(
+                worker_ws.panel_cache_hits() > 0,
+                "seed {seed}: adopted panel rows never hit"
+            );
+            let cold = CouplingWorkspace::new().verify_block_daliri(&input, &rng, 0);
+            let scalar = DaliriVerifier::new().verify_block_scalar(&input, &rng, 0);
+            assert_eq!(adopted, cold, "seed {seed}: handoff changed the outcome");
+            assert_eq!(adopted, scalar, "seed {seed}: handoff/scalar divergence");
+            assert!(worker_ws.drain_panel_cache_hits() > 0);
+            assert_eq!(worker_ws.panel_cache_hits(), 0, "drain must reset");
+        }
+    }
+
+    #[test]
+    fn adopting_oversized_slice_grows_ring_and_all_rows_hit() {
+        // A slice with more rows than the default ring capacity (a big
+        // K·L block) must not evict itself during adoption: every adopted
+        // row must still be hittable afterwards.
+        let mut gen = XorShift128::new(0xB16);
+        let d = testkit::gen_sparse_categorical(&mut gen, 60, 6);
+        let rng = CounterRng::new(88);
+        let mut slice = PanelSlice::new();
+        let rows_n = PANEL_CACHE_CAP + 40;
+        let toks: Vec<usize> =
+            (0..rows_n as u64).map(|slot| slice.record_race(&d, &rng, slot, 0)).collect();
+        let mut ws = CouplingWorkspace::new();
+        ws.adopt_panel_slice(slice);
+        // Re-race every recorded coordinate: identical tokens, all from
+        // cache hits (select at lane 0 over the same distribution reads
+        // exactly the recorded cells).
+        for (slot, &tok) in toks.iter().enumerate() {
+            assert_eq!(ws.select_target_token(&[&d], &[0], &rng, slot as u64), tok);
+        }
+        assert!(
+            ws.panel_cache_hits() >= rows_n as u64,
+            "only {} of {rows_n} adopted rows hit",
+            ws.panel_cache_hits()
+        );
+    }
+
+    #[test]
+    fn verify_block_kind_matches_direct_methods() {
+        let mut gen = XorShift128::new(0xD15);
+        for seed in 0..10u64 {
+            let (n, k, l) = (14, 3, 3);
+            let p: Vec<Categorical> =
+                (0..l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let q: Vec<Categorical> =
+                (0..=l).map(|_| testkit::gen_categorical(&mut gen, n)).collect();
+            let rng = CounterRng::new(41 + seed);
+            let mut draft_tokens = vec![Vec::with_capacity(l); k];
+            for kk in 0..k {
+                for j in 0..l {
+                    draft_tokens[kk].push(p[j].sample_race(&rng, j as u64, kk as u64) as u32);
+                }
+            }
+            let input = BlockInput {
+                draft_tokens: draft_tokens.into(),
+                draft_dists: vec![p.clone(); k],
+                target_dists: vec![q.clone(); k],
+            };
+            let mut a = CouplingWorkspace::new();
+            let mut b = CouplingWorkspace::new();
+            for &kind in VerifierKind::all() {
+                let via_kind = a.verify_block_kind(kind, &input, &rng, seed);
+                let direct = match kind {
+                    VerifierKind::Gls => b.verify_block_gls(&input, &rng, seed, false),
+                    VerifierKind::GlsStrong => b.verify_block_gls(&input, &rng, seed, true),
+                    VerifierKind::SpecInfer => b.verify_block_specinfer(&input, &rng, seed),
+                    VerifierKind::SpecTr => b.verify_block_spectr(&input, &rng, seed),
+                    VerifierKind::SingleDraft => {
+                        b.verify_block_single_draft(&input, &rng, seed)
+                    }
+                    VerifierKind::Daliri => b.verify_block_daliri(&input, &rng, seed),
+                };
+                assert_eq!(via_kind, direct, "seed {seed} kind {kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_draft_kernel_matches_scalar_smoke() {
+        // Full grid in tests/kernel_parity.rs; in-module canary.
+        use crate::spec::single_draft::SingleDraftVerifier;
+        let mut gen = XorShift128::new(0x1D);
+        let mut ws = CouplingWorkspace::new();
+        for seed in 0..25u64 {
+            let n = 16;
+            let l = 4;
+            let p: Vec<Categorical> = (0..l)
+                .map(|_| match seed % 3 {
+                    0 => testkit::gen_categorical(&mut gen, n),
+                    1 => testkit::gen_sparse_categorical(&mut gen, n, 4),
+                    _ => Categorical::delta(n, (seed as usize * 5) % n),
+                })
+                .collect();
+            let q: Vec<Categorical> = (0..=l)
+                .map(|_| testkit::gen_sparse_categorical(&mut gen, n, 6))
+                .collect();
+            let rng = CounterRng::new(seed * 7 + 2);
+            let draft_tokens: Vec<u32> =
+                (0..l).map(|j| p[j].sample_race(&rng, j as u64, 0) as u32).collect();
+            let input = BlockInput {
+                draft_tokens: vec![draft_tokens].into(),
+                draft_dists: vec![p],
+                target_dists: vec![q],
+            };
+            assert_eq!(
+                ws.verify_block_single_draft(&input, &rng, seed),
+                SingleDraftVerifier::new().verify_block_scalar(&input, &rng, seed),
+                "seed {seed}"
             );
         }
     }

@@ -5,11 +5,12 @@
 //! * [`gls`] — Algorithm 1 (`sample_gls`) and Algorithm 2 (the
 //!   conditionally drafter-invariant block verifier), plus the strongly
 //!   invariant variant of Appendix B (Prop. 6).
-//! * [`kernel`] — the zero-allocation sparse-support coupling kernel the
-//!   GLS, GLS-strong, SpecTr, SpecInfer, and Daliri `verify_block`s run on
-//!   (bit-exact with the scalar references; see its module docs for the
-//!   kernel contract and the RNG coordinate map). The single-draft TR
-//!   baseline remains a plain scalar implementation.
+//! * [`kernel`] — the zero-allocation sparse-support coupling kernel every
+//!   registered `verify_block` runs on (GLS, GLS-strong, SpecTr, SpecInfer,
+//!   Daliri, and the single-draft TR baseline; bit-exact with the scalar
+//!   references — see its module docs for the kernel contract, the RNG
+//!   coordinate map, and the cross-thread panel-slice handoff protocol the
+//!   serving pool uses).
 //! * [`lml`] — Theorem 1 / Proposition 2 bound evaluators.
 //! * [`specinfer`] — SpecInfer recursive multi-round rejection (Miao et al.).
 //! * [`spectr`] — SpecTr k-sequential-selection verification (Sun et al.).
@@ -29,8 +30,10 @@ pub mod spectr;
 pub mod specinfer;
 pub mod types;
 
-pub use kernel::CouplingWorkspace;
-pub use types::{BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind};
+pub use kernel::{CouplingWorkspace, PanelSlice};
+pub use types::{
+    BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, TokenMatrix, VerifierKind,
+};
 
 /// Construct a verifier by kind. `k` is the number of drafts the engine will
 /// run; single-draft kinds ignore all but the first draft.

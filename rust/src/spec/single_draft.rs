@@ -6,6 +6,7 @@
 
 use crate::stats::rng::CounterRng;
 
+use super::kernel::with_workspace;
 use super::types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, VerifierKind,
 };
@@ -41,18 +42,17 @@ impl SingleDraftVerifier {
             }
         }
     }
-}
 
-impl BlockVerifier for SingleDraftVerifier {
-    fn kind(&self) -> VerifierKind {
-        VerifierKind::SingleDraft
-    }
-
-    fn invariance(&self) -> Invariance {
-        Invariance::None
-    }
-
-    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+    /// Scalar reference for [`BlockVerifier::verify_block`] (the seed
+    /// implementation, built on [`Self::step`]'s dense residual +
+    /// `Categorical::new` allocation per rejection). The workspace kernel
+    /// path must match this bit-for-bit (`tests/kernel_parity.rs`).
+    pub fn verify_block_scalar(
+        &self,
+        input: &BlockInput,
+        rng: &CounterRng,
+        slot0: u64,
+    ) -> BlockOutput {
         debug_assert!(input.validate().is_ok());
         let l = input.block_len();
         let mut tokens = Vec::with_capacity(l + 1);
@@ -75,6 +75,24 @@ impl BlockVerifier for SingleDraftVerifier {
         let u = rng.uniform(slot0 + l as u64, 1, 0);
         tokens.push(q.sample_inverse(u) as u32);
         BlockOutput { tokens, accepted, surviving_draft: Some(0) }
+    }
+}
+
+impl BlockVerifier for SingleDraftVerifier {
+    fn kind(&self) -> VerifierKind {
+        VerifierKind::SingleDraft
+    }
+
+    fn invariance(&self) -> Invariance {
+        Invariance::None
+    }
+
+    /// Kernel-backed rejection sampling: the residual `(q − p)₊` is built
+    /// and renormalized in the thread workspace's sparse scratch (no
+    /// `Categorical` allocation per rejection) — bit-exact with
+    /// [`SingleDraftVerifier::verify_block_scalar`].
+    fn verify_block(&self, input: &BlockInput, rng: &CounterRng, slot0: u64) -> BlockOutput {
+        with_workspace(|ws| ws.verify_block_single_draft(input, rng, slot0))
     }
 }
 

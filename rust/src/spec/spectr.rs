@@ -316,7 +316,7 @@ mod tests {
                 }
             }
             let input = BlockInput {
-                draft_tokens,
+                draft_tokens: draft_tokens.into(),
                 draft_dists: vec![p.clone(); k],
                 target_dists: vec![q.clone(); k],
             };

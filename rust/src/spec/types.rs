@@ -1,5 +1,8 @@
 //! Core types for distribution coupling and block verification.
 
+use std::ops::{Index, IndexMut};
+use std::sync::Arc;
+
 use crate::stats::rng::CounterRng;
 
 /// A discrete probability distribution on the alphabet `{0, .., N-1}`.
@@ -309,6 +312,109 @@ impl VerifierKind {
     }
 }
 
+/// Draft tokens of one speculative block as a row-major view into a flat
+/// token arena: row `k` (one per draft lane) is the `L` tokens
+/// `X_1^{(k)}, …, X_L^{(k)}`, stored contiguously at
+/// `flat[offset + k·L ..]`.
+///
+/// The engine drafts *all* sequences of a continuous batch into one shared
+/// `Arc<Vec<u32>>` arena and hands each verification job a zero-copy
+/// `(offset, K, L)` view of it — replacing the former per-block
+/// `Vec<Vec<Vec<u32>>>` nest (one heap row per `(seq, lane)`) with a single
+/// allocation per batch. Views are cheap to clone and `Send`, which is what
+/// lets jobs migrate to persistent verify-pool workers without copying
+/// tokens.
+///
+/// `Index` yields the per-lane token row as a slice, so verifier code reads
+/// `draft_tokens[k][j]` exactly as it did against the nested representation.
+#[derive(Clone, Debug)]
+pub struct TokenMatrix {
+    flat: Arc<Vec<u32>>,
+    offset: usize,
+    rows: usize,
+    cols: usize,
+}
+
+impl TokenMatrix {
+    /// Build from nested per-lane rows (tests and one-off callers). All
+    /// rows must have equal length — `BlockInput` requires rectangular
+    /// drafts and the arena layout makes raggedness unrepresentable.
+    pub fn from_rows(rows: Vec<Vec<u32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |row| row.len());
+        let mut flat = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged draft-token rows");
+            flat.extend_from_slice(row);
+        }
+        Self { flat: Arc::new(flat), offset: 0, rows: r, cols: c }
+    }
+
+    /// A `(rows × cols)` window of a shared flat arena starting at
+    /// `offset` — the engine's per-sequence view of the batch arena.
+    pub fn view(flat: Arc<Vec<u32>>, offset: usize, rows: usize, cols: usize) -> Self {
+        assert!(
+            offset + rows * cols <= flat.len(),
+            "token-arena view out of bounds: {} + {}x{} > {}",
+            offset,
+            rows,
+            cols,
+            flat.len()
+        );
+        Self { flat, offset, rows, cols }
+    }
+
+    /// Number of draft lanes (K).
+    #[inline]
+    pub fn num_rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Tokens per lane (L).
+    #[inline]
+    pub fn row_len(&self) -> usize {
+        self.cols
+    }
+
+    /// Lane `r`'s tokens as a slice of the arena. Bounds-checked against
+    /// *this view's* rows — an out-of-range lane on a mid-arena view would
+    /// otherwise land inside a neighboring sequence's region and read its
+    /// tokens as if they were valid.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        assert!(r < self.rows, "lane {r} out of range (K = {})", self.rows);
+        let start = self.offset + r * self.cols;
+        &self.flat[start..start + self.cols]
+    }
+}
+
+impl From<Vec<Vec<u32>>> for TokenMatrix {
+    fn from(rows: Vec<Vec<u32>>) -> Self {
+        Self::from_rows(rows)
+    }
+}
+
+impl Index<usize> for TokenMatrix {
+    type Output = [u32];
+
+    #[inline]
+    fn index(&self, r: usize) -> &[u32] {
+        self.row(r)
+    }
+}
+
+/// Mutation is copy-on-write (tests edit draft tokens to probe invariance);
+/// the hot path never writes through a view.
+impl IndexMut<usize> for TokenMatrix {
+    fn index_mut(&mut self, r: usize) -> &mut [u32] {
+        assert!(r < self.rows, "lane {r} out of range");
+        let start = self.offset + r * self.cols;
+        let cols = self.cols;
+        let flat = Arc::make_mut(&mut self.flat);
+        &mut flat[start..start + cols]
+    }
+}
+
 /// Input to block verification: everything the target-side verifier knows
 /// after the parallel target pass of one speculative block.
 ///
@@ -320,22 +426,29 @@ impl VerifierKind {
 /// position).
 #[derive(Clone, Debug)]
 pub struct BlockInput {
-    pub draft_tokens: Vec<Vec<u32>>,
+    /// Flat-arena view of the K×L draft tokens (see [`TokenMatrix`]).
+    pub draft_tokens: TokenMatrix,
     pub draft_dists: Vec<Vec<Categorical>>,
     pub target_dists: Vec<Vec<Categorical>>,
 }
 
 impl BlockInput {
     pub fn k(&self) -> usize {
-        self.draft_tokens.len()
+        self.draft_tokens.num_rows()
     }
 
     pub fn block_len(&self) -> usize {
-        self.draft_tokens.first().map_or(0, |d| d.len())
+        if self.draft_tokens.num_rows() == 0 {
+            0
+        } else {
+            self.draft_tokens.row_len()
+        }
     }
 
     /// Structural sanity: K ≥ 1, all drafts the same length L ≥ 1, dists
     /// shaped [K][L] (draft) and [K][L+1] (target), consistent alphabets.
+    /// (Rectangularity of the token rows is a [`TokenMatrix`] construction
+    /// invariant and needs no re-check here.)
     pub fn validate(&self) -> Result<(), String> {
         let k = self.k();
         if k == 0 {
@@ -350,9 +463,6 @@ impl BlockInput {
         }
         let n = self.target_dists[0][0].len();
         for kk in 0..k {
-            if self.draft_tokens[kk].len() != l {
-                return Err(format!("draft {kk} length != {l}"));
-            }
             if self.draft_dists[kk].len() != l {
                 return Err(format!("draft {kk} dists length != {l}"));
             }
@@ -549,23 +659,70 @@ mod tests {
         let n = 4;
         let q = Categorical::uniform(n);
         let good = BlockInput {
-            draft_tokens: vec![vec![0, 1]],
+            draft_tokens: vec![vec![0, 1]].into(),
             draft_dists: vec![vec![q.clone(), q.clone()]],
             target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
         };
         assert!(good.validate().is_ok());
         let bad = BlockInput {
-            draft_tokens: vec![vec![0, 1]],
+            draft_tokens: vec![vec![0, 1]].into(),
             draft_dists: vec![vec![q.clone()]],
             target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
         };
         assert!(bad.validate().is_err());
         let bad_tok = BlockInput {
-            draft_tokens: vec![vec![0, 9]],
+            draft_tokens: vec![vec![0, 9]].into(),
             draft_dists: vec![vec![q.clone(), q.clone()]],
             target_dists: vec![vec![q.clone(), q.clone(), q.clone()]],
         };
         assert!(bad_tok.validate().is_err());
+    }
+
+    #[test]
+    fn token_matrix_roundtrips_nested_rows() {
+        let rows = vec![vec![1u32, 2, 3], vec![4, 5, 6], vec![7, 8, 9]];
+        let m = TokenMatrix::from_rows(rows.clone());
+        assert_eq!(m.num_rows(), 3);
+        assert_eq!(m.row_len(), 3);
+        for (k, row) in rows.iter().enumerate() {
+            assert_eq!(&m[k], row.as_slice());
+            for (j, &t) in row.iter().enumerate() {
+                assert_eq!(m[k][j], t);
+            }
+        }
+    }
+
+    #[test]
+    fn token_matrix_views_share_one_arena() {
+        // The engine layout: [seq][lane][pos] flattened, one view per seq.
+        let (seqs, k, l) = (3usize, 2usize, 4usize);
+        let arena: Arc<Vec<u32>> = Arc::new((0..(seqs * k * l) as u32).collect());
+        for s in 0..seqs {
+            let v = TokenMatrix::view(Arc::clone(&arena), s * k * l, k, l);
+            for lane in 0..k {
+                for j in 0..l {
+                    assert_eq!(v[lane][j], ((s * k + lane) * l + j) as u32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn token_matrix_mutation_is_copy_on_write() {
+        let arena: Arc<Vec<u32>> = Arc::new(vec![0; 8]);
+        let mut a = TokenMatrix::view(Arc::clone(&arena), 0, 2, 2);
+        let b = TokenMatrix::view(Arc::clone(&arena), 4, 2, 2);
+        a[0][1] = 42;
+        assert_eq!(a[0][1], 42);
+        // The shared arena (and every other view of it) is untouched.
+        assert!(arena.iter().all(|&t| t == 0));
+        assert_eq!(b[0][1], 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn token_matrix_rejects_ragged_rows() {
+        TokenMatrix::from_rows(vec![vec![1, 2], vec![3]]);
     }
 
     #[test]

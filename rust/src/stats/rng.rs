@@ -145,6 +145,19 @@ impl CounterRng {
         CounterLane { prefix: b }
     }
 
+    /// The lane's opaque sub-stream key — shorthand for
+    /// `self.lane(slot, draft).key()`.
+    ///
+    /// This key is the identity the coupling kernel's panel cache (and the
+    /// engine's cross-thread `PanelSlice` handoff) indexes by: it is a pure
+    /// *value*, so exponentials recorded under it on one thread are valid
+    /// for any other thread holding an equal key — per-item variates depend
+    /// on nothing but `(key, item)`.
+    #[inline]
+    pub fn lane_key(&self, slot: u64, draft: u64) -> u64 {
+        self.lane(slot, draft).key()
+    }
+
     #[inline]
     fn raw(&self, slot: u64, draft: u64, item: u64) -> u64 {
         // Three mixing rounds with distinct domain constants; equivalent in
@@ -305,6 +318,21 @@ mod tests {
                 assert_eq!(m[(k * 10 + i) as usize], rng.exponential(3, k, i));
             }
         }
+    }
+
+    #[test]
+    fn lane_key_is_a_pure_value_identity() {
+        // Two lanes with equal keys produce identical variates for every
+        // item, independently of which thread derives them — the soundness
+        // premise of the panel-slice handoff.
+        let rng = CounterRng::new(0xBEEF).split(7);
+        assert_eq!(rng.lane_key(3, 1), rng.lane(3, 1).key());
+        assert_ne!(rng.lane_key(3, 1), rng.lane_key(3, 2));
+        assert_ne!(rng.lane_key(3, 1), rng.lane_key(4, 1));
+        let key_here = rng.lane_key(9, 0);
+        let key_there =
+            std::thread::spawn(move || rng.lane_key(9, 0)).join().expect("thread");
+        assert_eq!(key_here, key_there);
     }
 
     #[test]

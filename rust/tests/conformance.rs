@@ -44,7 +44,7 @@ fn coupled_block(
         }
     }
     BlockInput {
-        draft_tokens,
+        draft_tokens: draft_tokens.into(),
         draft_dists: vec![p.to_vec(); k],
         target_dists: vec![q.to_vec(); k],
     }

@@ -41,6 +41,7 @@ fn mk_engine(
         draft_params,
         max_seq_len: 512,
         seed,
+        ..EngineConfig::default()
     };
     SpecDecodeEngine::new(
         cfg,
@@ -161,6 +162,7 @@ fn sequence_correctness_chi_square_all_multi_draft_verifiers() {
             draft_params: vec![SamplingParams::new(1.0, None)],
             max_seq_len: 64,
             seed: 1234,
+            ..EngineConfig::default()
         };
         let mut eng = SpecDecodeEngine::new(
             cfg,
@@ -265,6 +267,7 @@ fn suite_difficulty_ordering_holds() {
                 draft_params: vec![SamplingParams::new(1.0, Some(50))],
                 max_seq_len: 512,
                 seed: 17,
+                ..EngineConfig::default()
             };
             let mut eng = SpecDecodeEngine::new(cfg, pair, PagedKvCache::new(4096, 16));
             (be_of(&mut eng, 10, 40), s.name)

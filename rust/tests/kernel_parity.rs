@@ -129,7 +129,7 @@ fn random_block(gen: &mut XorShift128, regime: usize, k: usize, l: usize, n: usi
     BlockInput {
         draft_dists: vec![p; k],
         target_dists: vec![shared_q; k],
-        draft_tokens,
+        draft_tokens: draft_tokens.into(),
     }
 }
 
@@ -172,7 +172,7 @@ fn verify_block_parity_llm_regime_k8_topk50() {
         let input = BlockInput {
             draft_dists: vec![p; k],
             target_dists: vec![q; k],
-            draft_tokens,
+            draft_tokens: draft_tokens.into(),
         };
         let rng = CounterRng::new(900 + case);
         let v = GlsVerifier::conditional();
@@ -239,7 +239,7 @@ fn random_block_ext(
     BlockInput {
         draft_dists: vec![ps; k],
         target_dists: vec![qs; k],
-        draft_tokens,
+        draft_tokens: draft_tokens.into(),
     }
 }
 
@@ -333,7 +333,7 @@ fn ported_verifiers_parity_llm_regime_k8_topk50() {
         let input = BlockInput {
             draft_dists: vec![p; k],
             target_dists: vec![q; k],
-            draft_tokens,
+            draft_tokens: draft_tokens.into(),
         };
         let rng = CounterRng::new(1700 + case);
         let spectr = SpecTrVerifier::new();
@@ -358,9 +358,11 @@ fn ported_verifiers_parity_llm_regime_k8_topk50() {
 }
 
 #[test]
-fn draft_race_matches_categorical_sample_race() {
-    // The engine's draft phase goes through the workspace (panel-cache
-    // population); it must be bit-exact with the plain race.
+fn panel_slice_record_race_matches_categorical_sample_race() {
+    // The engine's draft phase records races into per-sequence panel
+    // slices (the cross-thread handoff); recording must be bit-exact with
+    // the plain race, and the slice must grow one row per race.
+    use gls_serve::spec::PanelSlice;
     let mut gen = XorShift128::new(0xD4A1);
     for case in 0..40u64 {
         let n = [20usize, 150, 2048][(case as usize) % 3];
@@ -370,13 +372,15 @@ fn draft_race_matches_categorical_sample_race() {
             _ => gen_topk(&mut gen, n, (n / 12).max(2)),
         };
         let rng = CounterRng::new(2200 + case);
+        let mut slice = PanelSlice::new();
         for lane in 0..4u64 {
             assert_eq!(
-                gls::draft_race(&d, &rng, case, lane),
+                slice.record_race(&d, &rng, case, lane),
                 d.sample_race(&rng, case, lane),
                 "case {case} lane {lane}"
             );
         }
+        assert_eq!(slice.len(), 4);
     }
 }
 
@@ -439,9 +443,8 @@ fn engine_parallel_batch_matches_sequential_stepping() {
     // The parallel verification path (large vocab, batch ≥ 2) must emit
     // exactly what per-sequence stepping emits, for every kernel-backed
     // verifier kind: verification is a pure function of the per-sequence
-    // randomness lane, and the panel cache populated by the draft phase
-    // (hit by the serial path, missed by worker threads) must not change
-    // a single token.
+    // randomness lane, and the panel slices handed from the draft phase to
+    // the pool workers must not change a single token.
     use gls_serve::coordinator::engine::SpecDecodeEngine;
     use gls_serve::coordinator::kv::PagedKvCache;
     use gls_serve::coordinator::sequence::{Request, SequenceState};
@@ -468,6 +471,7 @@ fn engine_parallel_batch_matches_sequential_stepping() {
                 draft_params: vec![SamplingParams::new(1.0, Some(50))],
                 max_seq_len: 256,
                 seed: 99,
+                ..EngineConfig::default()
             };
             SpecDecodeEngine::new(
                 cfg,
@@ -506,6 +510,186 @@ fn engine_parallel_batch_matches_sequential_stepping() {
 
         for (a, b) in batch_seqs.iter().zip(&solo_seqs) {
             assert_eq!(a.tokens, b.tokens, "seq {} diverged under batching ({vk:?})", a.id);
+        }
+    }
+}
+
+/// Single-draft TR baseline: kernel residual path vs the scalar reference,
+/// across the extended regimes (incl. point mass / disjoint / top_k ≥
+/// vocab) — the last verifier ported onto `ResidualScratch`.
+#[test]
+fn single_draft_verify_block_parity() {
+    use gls_serve::spec::single_draft::SingleDraftVerifier;
+    let mut gen = XorShift128::new(0x51D7);
+    let mut ws = CouplingWorkspace::new();
+    let v = SingleDraftVerifier::new();
+    for case in 0..90u64 {
+        let regime = (case as usize) % EXT_REGIMES;
+        let n = [5usize, 60, 280][(case as usize / EXT_REGIMES) % 3];
+        let l = 1 + (case as usize % 5);
+        // Single-draft ignores extra lanes; still build a few sometimes.
+        let k = 1 + (case as usize % 2);
+        let input = random_block_ext(&mut gen, regime, k, l, n, case);
+        let rng = CounterRng::new(0xA000 + case);
+        let scalar = v.verify_block_scalar(&input, &rng, case);
+        assert_eq!(v.verify_block(&input, &rng, case), scalar, "case {case} regime {regime}");
+        assert_eq!(
+            ws.verify_block_single_draft(&input, &rng, case),
+            scalar,
+            "case {case} regime {regime} (reused ws)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pool-vs-serial engine grid (the persistent-worker-pool acceptance bar).
+// ---------------------------------------------------------------------------
+
+mod pool_grid {
+    use gls_serve::coordinator::config::VerifyBackend;
+    use gls_serve::coordinator::engine::SpecDecodeEngine;
+    use gls_serve::coordinator::kv::PagedKvCache;
+    use gls_serve::coordinator::sequence::{Request, SequenceState};
+    use gls_serve::coordinator::EngineConfig;
+    use gls_serve::model::backend::ModelPair;
+    use gls_serve::model::sampling::SamplingParams;
+    use gls_serve::model::sim::SimLm;
+    use gls_serve::spec::types::VerifierKind;
+
+    /// One adversarial engine shape for the grid.
+    struct Shape {
+        label: &'static str,
+        vocab: usize,
+        top_k: Option<usize>,
+        n_seqs: u64,
+        /// Work threshold: 0 forces fan-out even below the calibrated
+        /// default; `usize::MAX` would force serial (covered by the
+        /// Serial-backend oracle itself).
+        parallel_threshold: usize,
+    }
+
+    const SHAPES: &[Shape] = &[
+        // Single-sequence batch: must never fan out, must still match.
+        Shape { label: "single-seq", vocab: 600, top_k: Some(50), n_seqs: 1, parallel_threshold: 0 },
+        // Below the calibrated threshold but fan-out forced.
+        Shape { label: "below-threshold", vocab: 40, top_k: Some(13), n_seqs: 6, parallel_threshold: 0 },
+        // Above the calibrated threshold (natural dispatch decision).
+        Shape { label: "above-threshold", vocab: 600, top_k: Some(50), n_seqs: 9, parallel_threshold: 8192 },
+        // Point-mass targets (top-k 1): exact deltas through the races.
+        Shape { label: "point-mass", vocab: 600, top_k: Some(1), n_seqs: 6, parallel_threshold: 0 },
+    ];
+
+    fn build(
+        vk: VerifierKind,
+        shape: &Shape,
+        backend: VerifyBackend,
+        workers: usize,
+    ) -> SpecDecodeEngine {
+        let (d, t) = SimLm::pair(shape.vocab, 23, 2.0);
+        let cfg = EngineConfig {
+            num_drafts: 4,
+            block_len: 3,
+            verifier: vk,
+            target_params: SamplingParams::new(1.0, shape.top_k),
+            draft_params: vec![SamplingParams::new(1.0, shape.top_k)],
+            max_seq_len: 256,
+            seed: 31,
+            parallel_threshold: shape.parallel_threshold,
+            verify_workers: workers,
+            verify_backend: backend,
+        };
+        SpecDecodeEngine::new(
+            cfg,
+            ModelPair::new(Box::new(d), Box::new(t)),
+            PagedKvCache::new(8192, 16),
+        )
+    }
+
+    fn run(vk: VerifierKind, shape: &Shape, backend: VerifyBackend, workers: usize) -> Vec<Vec<u32>> {
+        let mut eng = build(vk, shape, backend, workers);
+        let mut seqs: Vec<SequenceState> = (0..shape.n_seqs)
+            .map(|i| SequenceState::from_request(&Request::new(i, vec![1, (i % 5) as u32], 9)))
+            .collect();
+        for s in &seqs {
+            eng.kv.register(s.id, s.tokens.len(), s.tokens.len() + 14, 4).unwrap();
+        }
+        // Two rounds so pool workspaces (and their caches) carry state
+        // across blocks, like production steady state.
+        for _ in 0..2 {
+            let mut refs: Vec<&mut SequenceState> = seqs.iter_mut().collect();
+            eng.step_blocks(&mut refs);
+        }
+        seqs.into_iter().map(|s| s.tokens).collect()
+    }
+
+    /// Pool sizes {1, 2, 4} × adversarial shapes × every registered
+    /// verifier: the pooled engine must be bit-exact with the serial
+    /// oracle everywhere. (The scoped-spawn baseline is covered at one
+    /// pool size to keep the grid affordable — it shares the job/run code
+    /// with the pool, differing only in thread lifecycle.)
+    #[test]
+    fn pool_is_bit_exact_with_serial_for_every_verifier() {
+        for &vk in VerifierKind::all() {
+            for shape in SHAPES {
+                let serial = run(vk, shape, VerifyBackend::Serial, 0);
+                for &workers in &[1usize, 2, 4] {
+                    let pooled = run(vk, shape, VerifyBackend::Pool, workers);
+                    assert_eq!(
+                        pooled, serial,
+                        "{vk:?} / {} / pool({workers}) diverged from serial",
+                        shape.label
+                    );
+                }
+                let spawned = run(vk, shape, VerifyBackend::Spawn, 2);
+                assert_eq!(
+                    spawned, serial,
+                    "{vk:?} / {} / spawn diverged from serial",
+                    shape.label
+                );
+            }
+        }
+    }
+
+    /// Cache-handoff acceptance: worker-verified panels must match
+    /// serially-verified ones AND the pooled engine must report draft-phase
+    /// panel reuse actually firing on its workers (the counter the
+    /// `PanelSlice` protocol exists for).
+    #[test]
+    fn pool_handoff_matches_serial_and_hits() {
+        for &vk in &[VerifierKind::Gls, VerifierKind::GlsStrong, VerifierKind::Daliri] {
+            let shape = &SHAPES[2]; // above-threshold, the production shape
+            let mut serial_eng = build(vk, shape, VerifyBackend::Serial, 0);
+            let mut pooled_eng = build(vk, shape, VerifyBackend::Pool, 2);
+            let mk = || -> Vec<SequenceState> {
+                (0..shape.n_seqs)
+                    .map(|i| SequenceState::from_request(&Request::new(i, vec![2, (i % 3) as u32], 9)))
+                    .collect()
+            };
+            let mut ss = mk();
+            let mut ps = mk();
+            for s in &ss {
+                serial_eng.kv.register(s.id, s.tokens.len(), s.tokens.len() + 14, 4).unwrap();
+            }
+            for s in &ps {
+                pooled_eng.kv.register(s.id, s.tokens.len(), s.tokens.len() + 14, 4).unwrap();
+            }
+            for _ in 0..2 {
+                let mut refs: Vec<&mut SequenceState> = ss.iter_mut().collect();
+                serial_eng.step_blocks(&mut refs);
+                let mut refs: Vec<&mut SequenceState> = ps.iter_mut().collect();
+                pooled_eng.step_blocks(&mut refs);
+            }
+            for (a, b) in ps.iter().zip(&ss) {
+                assert_eq!(a.tokens, b.tokens, "{vk:?}: worker-verified panel diverged");
+            }
+            assert!(
+                pooled_eng.metrics.panel_cache_hits > 0,
+                "{vk:?}: draft-phase panel reuse never fired on pool workers"
+            );
+            assert!(
+                serial_eng.metrics.panel_cache_hits > 0,
+                "{vk:?}: draft-phase panel reuse never fired serially"
+            );
         }
     }
 }

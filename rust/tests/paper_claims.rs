@@ -130,7 +130,7 @@ fn gls_block_emits_y_even_on_total_rejection() {
     let q = Categorical::delta(n, 0); // target insists on symbol 0
     let p = Categorical::delta(n, 1); // drafts insist on symbol 1
     let input = BlockInput {
-        draft_tokens: vec![vec![1, 1]; 3],
+        draft_tokens: vec![vec![1, 1]; 3].into(),
         draft_dists: vec![vec![p.clone(), p.clone()]; 3],
         target_dists: vec![vec![q.clone(), q.clone(), q.clone()]; 3],
     };

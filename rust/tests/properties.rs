@@ -159,7 +159,7 @@ fn gen_block(rng: &mut XorShift128) -> BlockCase {
     }
     BlockCase {
         input: BlockInput {
-            draft_tokens,
+            draft_tokens: draft_tokens.into(),
             draft_dists: vec![p; k],
             target_dists: vec![q; k],
         },

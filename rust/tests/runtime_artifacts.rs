@@ -100,6 +100,7 @@ fn engine_decodes_through_pjrt_backends() {
         draft_params: vec![SamplingParams::new(1.0, Some(50))],
         max_seq_len: 96,
         seed: 7,
+        ..EngineConfig::default()
     };
     let mut eng = SpecDecodeEngine::new(
         cfg,
