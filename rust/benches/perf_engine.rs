@@ -11,6 +11,11 @@
 //!   L3d  persistent verify pool vs per-block scoped spawn at batch
 //!        1/4/16 (K=8, N=2048, top-k 50) — the worker-pool acceptance
 //!        pair, and the sweep behind the parallel-threshold calibration;
+//!   L3e  server-global shared verify pool vs per-engine pools at
+//!        workers ∈ {2, 4} (full serving stack): throughput AND live
+//!        thread census — the shared pool must match or beat per-engine
+//!        pooling while holding verify-thread count independent of the
+//!        worker count;
 //!   L1/L2 (with the `pjrt` feature and artifacts) PJRT forward latency
 //!        per call and the GLS select artifact vs native.
 //!
@@ -24,10 +29,10 @@ use std::time::Duration;
 use gls_serve::bench::{time_budget, BenchResult, Table};
 use gls_serve::coordinator::engine::SpecDecodeEngine;
 use gls_serve::coordinator::kv::PagedKvCache;
-use gls_serve::coordinator::router::RoutingPolicy;
+use gls_serve::coordinator::router::{Router, RoutingPolicy};
 use gls_serve::coordinator::sequence::Request;
 use gls_serve::coordinator::server::Server;
-use gls_serve::coordinator::{EngineConfig, ServerConfig, VerifyBackend};
+use gls_serve::coordinator::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
 use gls_serve::model::sim::SimLm;
@@ -490,6 +495,102 @@ fn main() {
             }
         }
         println!("## L3c — serving stack throughput");
+        t.print();
+        println!();
+    }
+
+    // ---------------------------------- L3e shared vs per-engine verify pool
+    // The server-global pool acceptance case: the full serving stack
+    // (router → scheduler → engine) at workers ∈ {2, 4}, verify pool
+    // forced hot (`parallel_threshold = 0`, explicit pool size), under
+    // `pool_scope = server` (ONE pool, epoch-tagged tickets) vs
+    // `pool_scope = engine` (one pool per worker — the PR 4 topology).
+    // Tokens are bit-identical (tests/pool_shared.rs); the deltas are
+    // wall clock and the live thread census, which CI gates: shared
+    // throughput ≥ per-engine at every worker count, shared thread count
+    // ≤ per-engine. Batch-1 has no analogue here (single-sequence batches
+    // never fan out); the L3d B1 case remains the no-regression control.
+    {
+        let mut t = Table::new(&["workers", "pool scope", "gen tok/s", "threads", "shared/engine"]);
+        // Shared helper with tests/pool_shared.rs; -1 = census unavailable
+        // (non-Linux), which the CI gate treats as "skip the thread check".
+        let thread_census =
+            || -> f64 { gls_serve::testkit::thread_census().map_or(-1.0, |n| n as f64) };
+        let verify_workers = 4usize;
+        let mut serve = |workers: usize, scope: PoolScope| -> (f64, f64) {
+            let sc = ServerConfig {
+                workers,
+                max_batch: 8,
+                batch_deadline: Duration::from_millis(1),
+                max_running: 16,
+                kv_pages: 1 << 14,
+                kv_page_size: 16,
+                pool_scope: scope,
+            };
+            let ec = EngineConfig {
+                num_drafts: 4,
+                block_len: 4,
+                verifier: VerifierKind::Gls,
+                target_params: SamplingParams::new(1.0, Some(50)),
+                draft_params: vec![SamplingParams::new(1.0, Some(50))],
+                max_seq_len: 512,
+                seed: 3,
+                parallel_threshold: 0,
+                verify_workers,
+                verify_backend: VerifyBackend::Pool,
+            };
+            let n_req = 12 * workers as u64;
+            let max_new = 40usize;
+            let t0 = std::time::Instant::now();
+            let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, |_| {
+                let (d, tg) = SimLm::pair(512, 5, 2.0);
+                ModelPair::new(Box::new(d), Box::new(tg))
+            });
+            for i in 0..n_req {
+                router.submit(Request::new(i, vec![1, 2, (i % 7) as u32], max_new));
+            }
+            let mut generated = 0usize;
+            let mut threads = thread_census();
+            for _ in 0..n_req {
+                let res = router.results_rx.recv().expect("worker alive");
+                generated += res.tokens.len() - 3;
+                threads = threads.max(thread_census());
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            router.shutdown();
+            (generated as f64 / wall, threads)
+        };
+        for &workers in &[2usize, 4] {
+            let (shared_tps, shared_threads) = serve(workers, PoolScope::Server);
+            let (engine_tps, engine_threads) = serve(workers, PoolScope::Engine);
+            let ratio = shared_tps / engine_tps;
+            json.entries.push(format!(
+                "{{\"section\":\"L3e\",\"case\":\"serve-shared-pool-W{workers}\",\"tok_per_s\":{shared_tps:.3},\"threads\":{shared_threads}}}"
+            ));
+            json.entries.push(format!(
+                "{{\"section\":\"L3e\",\"case\":\"serve-engine-pool-W{workers}\",\"tok_per_s\":{engine_tps:.3},\"threads\":{engine_threads}}}"
+            ));
+            json.metric(&format!("serve_shared_pool_tok_per_s_w{workers}"), shared_tps);
+            json.metric(&format!("serve_engine_pool_tok_per_s_w{workers}"), engine_tps);
+            json.metric(&format!("serve_shared_vs_engine_pool_ratio_w{workers}"), ratio);
+            json.metric(&format!("serve_shared_pool_threads_w{workers}"), shared_threads);
+            json.metric(&format!("serve_engine_pool_threads_w{workers}"), engine_threads);
+            t.row(&[
+                workers.to_string(),
+                "server (shared)".into(),
+                format!("{shared_tps:.0}"),
+                format!("{shared_threads:.0}"),
+                format!("{ratio:.2}×"),
+            ]);
+            t.row(&[
+                String::new(),
+                "engine (per-worker)".into(),
+                format!("{engine_tps:.0}"),
+                format!("{engine_threads:.0}"),
+                String::new(),
+            ]);
+        }
+        println!("## L3e — serving stack: server-global shared pool vs per-engine pools");
         t.print();
         println!();
     }

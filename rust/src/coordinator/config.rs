@@ -51,6 +51,33 @@ impl VerifyBackend {
     }
 }
 
+/// Who owns the verify pool when serving (`verify_backend = pool`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolScope {
+    /// One pool per worker engine (the PR 4 design): steady-state verify
+    /// threads scale as `workers × verify_workers`. Kept as the
+    /// isolation-first escape hatch and the L3e comparison baseline.
+    Engine,
+    /// One server-global pool shared by every router worker (the
+    /// default): verify-thread count equals the pool size, independent of
+    /// the server worker count. Engines submit concurrently through
+    /// epoch-tagged tickets (`coordinator::pool` module docs).
+    Server,
+}
+
+impl PoolScope {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoolScope::Engine => "engine",
+            PoolScope::Server => "server",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PoolScope> {
+        [PoolScope::Engine, PoolScope::Server].into_iter().find(|p| p.name() == s)
+    }
+}
+
 /// Speculative-decoding engine configuration (one worker).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -74,9 +101,11 @@ pub struct EngineConfig {
     /// [`DEFAULT_PARALLEL_THRESHOLD`] for the calibration procedure).
     /// `0` means "always parallel once the batch has ≥ 2 sequences".
     pub parallel_threshold: usize,
-    /// Verify-pool size. `0` = auto: `available_parallelism`, divided by
-    /// the server's worker count when serving (the router caps it so
-    /// engines don't oversubscribe cores).
+    /// Verify-pool size. `0` = auto: `available_parallelism`. Under
+    /// `pool_scope = engine` the router divides the auto size by the
+    /// server's worker count (so W per-engine pools don't oversubscribe
+    /// cores); under the server-global pool there is exactly one pool, so
+    /// auto uses the full parallelism undivided.
     pub verify_workers: usize,
     /// Parallel execution backend for verification jobs.
     pub verify_backend: VerifyBackend,
@@ -157,6 +186,10 @@ pub struct ServerConfig {
     pub kv_pages: usize,
     /// Tokens per KV page.
     pub kv_page_size: usize,
+    /// Verify-pool ownership: one server-global shared pool (default) or
+    /// one pool per worker engine. Only meaningful with
+    /// `verify_backend = pool`.
+    pub pool_scope: PoolScope,
 }
 
 impl Default for ServerConfig {
@@ -168,6 +201,7 @@ impl Default for ServerConfig {
             max_running: 16,
             kv_pages: 4096,
             kv_page_size: 16,
+            pool_scope: PoolScope::Server,
         }
     }
 }
@@ -249,6 +283,9 @@ pub fn parse_config(text: &str) -> Result<(EngineConfig, ServerConfig), String> 
             "max_running" => sc.max_running = value.parse().map_err(|_| err("bad usize"))?,
             "kv_pages" => sc.kv_pages = value.parse().map_err(|_| err("bad usize"))?,
             "kv_page_size" => sc.kv_page_size = value.parse().map_err(|_| err("bad usize"))?,
+            "pool_scope" => {
+                sc.pool_scope = PoolScope::parse(value).ok_or_else(|| err("unknown pool scope"))?
+            }
             _ => return Err(format!("line {}: unknown key '{key}'", lineno + 1)),
         }
     }
@@ -356,5 +393,20 @@ mod tests {
             assert_eq!(VerifyBackend::parse(b.name()), Some(b));
         }
         assert_eq!(VerifyBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_pool_scope_key() {
+        let (_, sc) = parse_config("pool_scope = engine").unwrap();
+        assert_eq!(sc.pool_scope, PoolScope::Engine);
+        let (_, sc) = parse_config("pool_scope = server").unwrap();
+        assert_eq!(sc.pool_scope, PoolScope::Server);
+        assert!(parse_config("pool_scope = global").is_err());
+        // Default: the server-global shared pool.
+        let (_, sc) = parse_config("").unwrap();
+        assert_eq!(sc.pool_scope, PoolScope::Server);
+        for p in [PoolScope::Engine, PoolScope::Server] {
+            assert_eq!(PoolScope::parse(p.name()), Some(p));
+        }
     }
 }

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::backend::ModelPair;
-use crate::spec::kernel::{CouplingWorkspace, PanelSlice};
+use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceRecycler};
 use crate::spec::types::{Categorical, TokenMatrix};
 use crate::spec::VerifierKind;
 use crate::stats::rng::CounterRng;
@@ -20,14 +20,18 @@ use crate::stats::rng::CounterRng;
 use super::config::{EngineConfig, VerifyBackend};
 use super::kv::PagedKvCache;
 use super::metrics::EngineMetrics;
-use super::pool::{VerifyJob, VerifyPool};
-use super::sequence::SequenceState;
+use super::pool::{PoolError, VerifyJob, VerifyPool};
+use super::sequence::{SeqPhase, SequenceState};
 
 /// Outcome of one speculative block for one sequence.
 #[derive(Clone, Debug)]
 pub struct BlockOutcome {
     pub emitted: Vec<u32>,
     pub accepted: usize,
+    /// The sequence's verify job panicked: nothing was emitted, the KV
+    /// reservation was rolled back, and the sequence is now
+    /// `SeqPhase::Failed` (the scheduler retires it with an error result).
+    pub failed: bool,
 }
 
 pub struct SpecDecodeEngine {
@@ -39,15 +43,26 @@ pub struct SpecDecodeEngine {
     /// Engine-thread workspace: serial verification runs here, persisting
     /// scratch and panel cache across blocks exactly like a pool worker.
     ws: CouplingWorkspace,
-    /// Persistent verification pool, spawned lazily on the first batch
-    /// that clears the parallelism threshold (sized once from
+    /// Persistent verification pool. Either the server-global shared pool
+    /// injected via [`SpecDecodeEngine::attach_shared_pool`]
+    /// (`pool_scope = server` — the router owns it, every worker engine
+    /// holds the same `Arc`), or a per-engine pool spawned lazily on the
+    /// first batch that clears the parallelism threshold (sized once from
     /// `cfg.verify_workers`; serial-only engines never spawn threads).
-    pool: Option<VerifyPool>,
+    pool: Option<Arc<VerifyPool>>,
+    /// Tag identifying this engine on a shared pool (per-engine metric
+    /// attribution; the router passes the worker index).
+    engine_tag: u64,
     /// Verify-pool size resolved once at construction — the configured
     /// `cfg.verify_workers`, or (at `0` = auto) `available_parallelism` —
     /// so the per-block dispatch never repeats the syscall. Mutating
-    /// `cfg.verify_workers` after construction has no effect.
+    /// `cfg.verify_workers` after construction has no effect;
+    /// `attach_shared_pool` overrides it with the shared pool's size.
     resolved_workers: usize,
+    /// Lease/return endpoint of the panel-slice recycling channel: every
+    /// verify job ships its spent slice back here, so steady-state draft
+    /// recording is allocation-free (spec::kernel handoff protocol step 5).
+    recycler: SliceRecycler,
 }
 
 impl SpecDecodeEngine {
@@ -67,8 +82,19 @@ impl SpecDecodeEngine {
             metrics: EngineMetrics::new(),
             ws: CouplingWorkspace::new(),
             pool: None,
+            engine_tag: 0,
             resolved_workers,
+            recycler: SliceRecycler::new(),
         }
+    }
+
+    /// Use a server-global shared verify pool instead of a lazily spawned
+    /// per-engine one. `tag` identifies this engine's submissions for the
+    /// pool's per-engine stats (the router passes the worker index).
+    pub fn attach_shared_pool(&mut self, pool: Arc<VerifyPool>, tag: u64) {
+        self.resolved_workers = pool.workers();
+        self.pool = Some(pool);
+        self.engine_tag = tag;
     }
 
     pub fn verifier_kind(&self) -> VerifierKind {
@@ -146,10 +172,14 @@ impl SpecDecodeEngine {
             VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
         ) && !(parallel && self.cfg.verify_backend == VerifyBackend::Spawn);
         let mut panels: Vec<PanelSlice> = if record_panels {
-            (0..seqs.len()).map(|_| PanelSlice::new()).collect()
+            // Leased from the recycler: spent slices return from whichever
+            // workspace consumed them, so steady-state recording reuses
+            // their buffers instead of allocating.
+            (0..seqs.len()).map(|_| self.recycler.lease()).collect()
         } else {
             Vec::new()
         };
+        self.metrics.panel_slices_recycled += self.recycler.drain_recycled();
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
             vec![vec![Vec::with_capacity(l); k]; seqs.len()];
@@ -218,6 +248,7 @@ impl SpecDecodeEngine {
         let tp = self.cfg.target_params;
         let kind = self.cfg.verifier;
         let arena = Arc::new(arena);
+        let recycle_tx = if record_panels { Some(self.recycler.return_sender()) } else { None };
         let mut panels = panels.into_iter();
         let jobs: Vec<VerifyJob> = draft_dists
             .into_iter()
@@ -232,23 +263,54 @@ impl SpecDecodeEngine {
                 rng: seq_rngs[s],
                 slot0: seqs[s].next_slot,
                 panel: panels.next().unwrap_or_default(),
+                recycle: recycle_tx.clone(),
             })
             .collect();
 
-        let (outs, cache_hits) = if !parallel {
-            let ws = &mut self.ws;
-            let outs: Vec<_> = jobs.into_iter().map(|job| job.run(ws)).collect();
-            let hits = ws.drain_panel_cache_hits();
+        // Every path yields one `Option<BlockOutput>` per sequence: `None`
+        // marks a job whose verifier panicked (contained — the sequence
+        // fails, the engine and pool survive).
+        let (outs, cache_hits): (Vec<Option<_>>, u64) = if !parallel {
+            let mut outs = Vec::with_capacity(seqs.len());
+            let mut hits = 0u64;
+            for job in jobs {
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    job.run(&mut self.ws)
+                }));
+                match res {
+                    Ok(out) => outs.push(Some(out)),
+                    Err(_) => {
+                        // Scratch state after an unwind is unspecified;
+                        // caches are value-keyed, so a fresh workspace
+                        // only costs warm-up.
+                        hits += self.ws.drain_panel_cache_hits();
+                        self.ws = CouplingWorkspace::new();
+                        outs.push(None);
+                    }
+                }
+            }
+            hits += self.ws.drain_panel_cache_hits();
             (outs, hits)
         } else {
             match self.cfg.verify_backend {
                 VerifyBackend::Pool => {
-                    let pool =
-                        self.pool.get_or_insert_with(|| VerifyPool::new(workers));
-                    let outs = pool.run_batch(jobs);
-                    (outs, pool.drain_cache_hits())
+                    let tag = self.engine_tag;
+                    let pool = self
+                        .pool
+                        .get_or_insert_with(|| Arc::new(VerifyPool::new(workers)));
+                    match pool.run_batch(tag, jobs) {
+                        Ok(batch) => {
+                            (batch.outputs.into_iter().map(Some).collect(), batch.cache_hits)
+                        }
+                        Err(PoolError::JobsPanicked { completed, cache_hits, .. }) => {
+                            (completed, cache_hits)
+                        }
+                    }
                 }
-                VerifyBackend::Spawn => VerifyPool::run_scoped(jobs, workers),
+                VerifyBackend::Spawn => {
+                    let (outs, hits) = VerifyPool::run_scoped(jobs, workers);
+                    (outs.into_iter().map(Some).collect(), hits)
+                }
                 VerifyBackend::Serial => unreachable!("parallel implies non-serial backend"),
             }
         };
@@ -256,7 +318,17 @@ impl SpecDecodeEngine {
 
         // --- Serial epilogue: sequence state, KV commits, metrics. --------
         let mut outcomes = Vec::with_capacity(seqs.len());
-        for (seq, mut out) in seqs.iter_mut().zip(outs) {
+        for (seq, out) in seqs.iter_mut().zip(outs) {
+            let Some(mut out) = out else {
+                // Verification fault: emit nothing, roll the block's KV
+                // reservation back, and mark the sequence failed so the
+                // scheduler retires it instead of spinning on it forever.
+                self.kv.commit(seq.id, 0).expect("rollback within reservation");
+                seq.phase = SeqPhase::Failed;
+                self.metrics.verify_faults += 1;
+                outcomes.push(BlockOutcome { emitted: Vec::new(), accepted: 0, failed: true });
+                continue;
+            };
             // Never emit beyond the request budget: truncate the verifier
             // output in place and move it straight into the sequence and
             // the outcome — no intermediate collect.
@@ -276,7 +348,7 @@ impl SpecDecodeEngine {
             self.metrics.emitted_tokens += out.tokens.len() as u64;
             self.metrics.accepted_tokens += accepted as u64;
 
-            outcomes.push(BlockOutcome { emitted: out.tokens, accepted });
+            outcomes.push(BlockOutcome { emitted: out.tokens, accepted, failed: false });
         }
         self.metrics.verify_time += t2.elapsed();
         outcomes
@@ -289,12 +361,14 @@ impl SpecDecodeEngine {
         self.kv
             .register(seq.id, seq.tokens.len(), seq.tokens.len() + seq.remaining(), self.cfg.block_len + 1)
             .expect("kv admit");
-        seq.phase = super::sequence::SeqPhase::Running;
-        while !seq.is_done(self.cfg.max_seq_len) {
+        seq.phase = SeqPhase::Running;
+        while seq.phase == SeqPhase::Running && !seq.is_done(self.cfg.max_seq_len) {
             let mut batch = [&mut *seq];
             self.step_blocks(&mut batch);
         }
-        seq.phase = super::sequence::SeqPhase::Finished;
+        if seq.phase != SeqPhase::Failed {
+            seq.phase = SeqPhase::Finished;
+        }
         self.kv.release(seq.id).expect("kv release");
         self.metrics.completed += 1;
         self.metrics.be.push(seq.block_efficiency());
@@ -501,6 +575,16 @@ mod tests {
             serial.metrics.panel_cache_hits > 0,
             "draft panels never hit on the serial path"
         );
+        // Block 2's draft phase must lease slices recycled from block 1's
+        // consumers — on both the pooled and serial paths.
+        assert!(
+            pooled.metrics.panel_slices_recycled > 0,
+            "spent slices never recycled back from pool workers"
+        );
+        assert!(
+            serial.metrics.panel_slices_recycled > 0,
+            "spent slices never recycled on the serial path"
+        );
     }
 
     #[test]
@@ -516,6 +600,83 @@ mod tests {
         eng.decode_sequence(&mut seq);
         assert_eq!(seq.generated(), 10);
         assert!(eng.pool.is_none(), "pool spawned for single-sequence batches");
+    }
+
+    use crate::testkit::PoisonDraft;
+
+    fn poisoned_engine(backend: VerifyBackend, workers: usize, trigger: u32) -> SpecDecodeEngine {
+        let (draft, target) = SimLm::pair(32, 13, 1.5);
+        let cfg = EngineConfig {
+            num_drafts: 2,
+            block_len: 4,
+            verifier: VerifierKind::FaultInjection,
+            target_params: SamplingParams::new(1.0, None),
+            draft_params: vec![SamplingParams::new(1.0, None)],
+            max_seq_len: 128,
+            seed: 21,
+            parallel_threshold: 0,
+            verify_workers: workers,
+            verify_backend: backend,
+        };
+        SpecDecodeEngine::new(
+            cfg,
+            ModelPair::new(Box::new(PoisonDraft { inner: draft, trigger }), Box::new(target)),
+            PagedKvCache::new(1024, 16),
+        )
+    }
+
+    #[test]
+    fn verify_fault_fails_one_sequence_not_the_engine() {
+        // One poisoned request among honest ones, driven through the
+        // scheduler on BOTH the serial path and the shared-worker pool:
+        // the poisoned sequence retires with `failed`, everyone else
+        // completes normally, KV drains to zero, and the engine keeps
+        // serving afterwards.
+        use crate::coordinator::scheduler::Scheduler;
+        use crate::coordinator::sequence::Request;
+        // Out-of-vocab marker: only a prompt can carry it (SimLm hashes
+        // arbitrary token values), so honest sequences can never start
+        // containing it mid-decode.
+        let trigger = 999u32;
+        for (backend, workers) in [(VerifyBackend::Serial, 0), (VerifyBackend::Pool, 2)] {
+            let mut eng = poisoned_engine(backend, workers, trigger);
+            let mut sched = Scheduler::new(8);
+            for i in 0..3u64 {
+                sched.submit(Request::new(i, vec![1, 2 + i as u32], 12));
+            }
+            sched.submit(Request::new(3, vec![trigger], 12)); // poisoned
+            let results = sched.run_to_completion(&mut eng);
+            assert_eq!(results.len(), 4, "{backend:?}: every request must retire");
+            for r in &results {
+                if r.id == 3 {
+                    assert!(r.failed, "{backend:?}: poisoned request must fail");
+                    assert_eq!(r.tokens, vec![trigger], "{backend:?}: no tokens past the fault");
+                } else {
+                    assert!(!r.failed, "{backend:?}: honest request {} failed", r.id);
+                    assert_eq!(r.tokens.len(), 2 + 12, "{backend:?}: request {}", r.id);
+                }
+            }
+            assert_eq!(eng.kv.used_pages(), 0, "{backend:?}: KV leak after fault");
+            assert!(eng.metrics.verify_faults >= 1, "{backend:?}: fault not counted");
+            // The engine (and its pool) must still serve new work.
+            let mut sched2 = Scheduler::new(8);
+            sched2.submit(Request::new(10, vec![4, 5], 8));
+            let after = sched2.run_to_completion(&mut eng);
+            assert_eq!(after.len(), 1);
+            assert!(!after[0].failed, "{backend:?}: engine wedged after fault");
+            assert_eq!(after[0].tokens.len(), 2 + 8);
+        }
+    }
+
+    #[test]
+    fn decode_sequence_terminates_on_fault() {
+        let mut eng = poisoned_engine(VerifyBackend::Serial, 0, 999);
+        let req = Request::new(1, vec![999], 16);
+        let mut seq = SequenceState::from_request(&req);
+        eng.decode_sequence(&mut seq); // must not loop forever
+        assert_eq!(seq.phase, SeqPhase::Failed);
+        assert_eq!(seq.generated(), 0);
+        assert_eq!(eng.kv.used_pages(), 0);
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub enum KvError {
     UnknownSequence(u64),
     DuplicateSequence(u64),
     CommitTooLong { commit: usize, reserved: usize },
+    /// `reserve_block` called while a reservation was already in flight
+    /// (the engine must commit or rollback first). Formerly a
+    /// `debug_assert` that vanished in release builds, letting an
+    /// unbalanced reserve/commit cycle silently corrupt page accounting.
+    UnbalancedReserve { seq_id: u64, reserved: usize },
 }
 
 impl std::fmt::Display for KvError {
@@ -35,6 +40,13 @@ impl std::fmt::Display for KvError {
             KvError::DuplicateSequence(id) => write!(f, "sequence {id} already registered"),
             KvError::CommitTooLong { commit, reserved } => {
                 write!(f, "commit length {commit} exceeds reservation {reserved}")
+            }
+            KvError::UnbalancedReserve { seq_id, reserved } => {
+                write!(
+                    f,
+                    "sequence {seq_id} already holds a {reserved}-token reservation \
+                     (commit or rollback before reserving again)"
+                )
             }
         }
     }
@@ -111,17 +123,33 @@ impl PagedKvCache {
         self.seqs.len()
     }
 
-    /// Whether a new sequence whose lifetime worst case is `max_tokens`
-    /// committed plus one in-flight block of `block` tokens can be admitted
-    /// *and* guaranteed to run to completion: checks the budget ledger, not
-    /// instantaneous free pages.
-    pub fn can_admit(&self, max_tokens: usize, block: usize) -> bool {
-        let budget = self.pages_for(max_tokens + block);
+    /// Worst-case page budget for a sequence: its lifetime committed
+    /// length (`max_tokens`, floored at `prompt_len` — a prompt longer
+    /// than the declared cap still occupies its pages) plus one in-flight
+    /// speculative block. The **single** formula both [`Self::can_admit`]
+    /// and [`Self::register`] use: they previously disagreed
+    /// (`can_admit` ignored `prompt_len`), so a prompt longer than
+    /// `max_tokens` could pass admission and then fail — or over-debit —
+    /// at registration.
+    fn budget_pages(&self, prompt_len: usize, max_tokens: usize, block: usize) -> usize {
+        self.pages_for(max_tokens.max(prompt_len) + block)
+    }
+
+    /// Whether a new sequence (prompt `prompt_len`, lifetime worst case
+    /// `max_tokens` committed, one in-flight block of `block` tokens) can
+    /// be admitted *and* guaranteed to run to completion: checks the
+    /// budget ledger, not instantaneous free pages. Admission granted here
+    /// is binding — [`Self::register`] debits the identical
+    /// [`Self::budget_pages`] figure, so it cannot fail after a true
+    /// `can_admit`.
+    pub fn can_admit(&self, prompt_len: usize, max_tokens: usize, block: usize) -> bool {
+        let budget = self.budget_pages(prompt_len, max_tokens, block);
         self.budgeted_pages + budget <= self.total_pages
     }
 
     /// Register a sequence: allocate pages for the prompt and debit its
-    /// worst-case budget (`max_tokens` committed + `block` in flight).
+    /// worst-case budget (`max_tokens` committed + `block` in flight) —
+    /// the same [`Self::budget_pages`] formula admission checked.
     pub fn register(
         &mut self,
         seq_id: u64,
@@ -132,7 +160,7 @@ impl PagedKvCache {
         if self.seqs.contains_key(&seq_id) {
             return Err(KvError::DuplicateSequence(seq_id));
         }
-        let budget_pages = self.pages_for(max_tokens.max(prompt_len) + block);
+        let budget_pages = self.budget_pages(prompt_len, max_tokens, block);
         if self.budgeted_pages + budget_pages > self.total_pages {
             return Err(KvError::OutOfPages {
                 requested: budget_pages,
@@ -154,7 +182,13 @@ impl PagedKvCache {
     /// must commit or rollback before reserving again.
     pub fn reserve_block(&mut self, seq_id: u64, tokens: usize) -> Result<(), KvError> {
         let entry = self.seqs.get(&seq_id).ok_or(KvError::UnknownSequence(seq_id))?;
-        debug_assert_eq!(entry.reserved, 0, "unbalanced reserve/commit");
+        if entry.reserved != 0 {
+            // A real error, not a debug_assert: in release builds the
+            // assert vanished and a double reserve silently corrupted the
+            // page accounting (reserved overwritten, pages double-counted
+            // against the budget).
+            return Err(KvError::UnbalancedReserve { seq_id, reserved: entry.reserved });
+        }
         let have = entry.pages.len();
         let need_total = self.pages_for(entry.committed + tokens);
         // Budget enforcement: a sequence may never outgrow what admission
@@ -295,9 +329,53 @@ mod tests {
         kv.register(1, 8, 8, 0).unwrap(); // both pages
         let err = kv.register(2, 1, 1, 0).unwrap_err();
         assert!(matches!(err, KvError::OutOfPages { .. }));
-        assert!(!kv.can_admit(1, 1));
+        assert!(!kv.can_admit(1, 1, 1));
         kv.release(1).unwrap();
-        assert!(kv.can_admit(1, 1));
+        assert!(kv.can_admit(1, 1, 1));
+    }
+
+    #[test]
+    fn admission_and_registration_agree_when_prompt_exceeds_max_tokens() {
+        // Regression: `can_admit` used to budget `pages_for(max_tokens +
+        // block)` while `register` budgeted with the prompt floor, so a
+        // prompt longer than `max_tokens` passed admission and then failed
+        // (or over-debited) at registration. The shared formula makes a
+        // true `can_admit` binding.
+        let mut kv = PagedKvCache::new(4, 4); // 16-token capacity
+        // prompt 10 > max_tokens 4: budget = pages_for(max(4, 10) + 5) = 4.
+        assert!(kv.can_admit(10, 4, 5));
+        kv.register(1, 10, 4, 5).expect("admission must be binding");
+        kv.check_invariants().unwrap();
+        // The ledger is now full: the old can_admit formula (prompt
+        // ignored) would claim a second such sequence fits.
+        assert!(!kv.can_admit(10, 4, 5));
+        assert_eq!(kv.register(2, 10, 4, 5).unwrap_err(), KvError::OutOfPages { requested: 4, free: 0 });
+        kv.release(1).unwrap();
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn double_reserve_is_a_typed_error_not_corruption() {
+        let mut kv = PagedKvCache::new(10, 4);
+        kv.register(1, 6, 11, 5).unwrap();
+        kv.reserve_block(1, 5).unwrap();
+        let used = kv.used_pages();
+        // Second reserve without an intervening commit/rollback: typed
+        // error (previously a release-mode silent corruption), accounting
+        // untouched.
+        assert_eq!(
+            kv.reserve_block(1, 5).unwrap_err(),
+            KvError::UnbalancedReserve { seq_id: 1, reserved: 5 }
+        );
+        assert_eq!(kv.used_pages(), used, "failed reserve must not move pages");
+        kv.check_invariants().unwrap();
+        // The cycle still completes normally afterwards.
+        kv.commit(1, 2).unwrap();
+        kv.reserve_block(1, 5).unwrap();
+        kv.commit(1, 0).unwrap();
+        kv.check_invariants().unwrap();
+        kv.release(1).unwrap();
+        assert_eq!(kv.used_pages(), 0);
     }
 
     #[test]

@@ -30,6 +30,13 @@ pub struct EngineMetrics {
     /// Exponential-panel rows verification reused from the draft phase
     /// (serial cache hits + pool-worker hits via the panel-slice handoff).
     pub panel_cache_hits: u64,
+    /// Draft-phase panel-slice leases served from the recycling channel
+    /// (spent buffers returned by consuming workspaces) rather than fresh
+    /// allocation — the observable of the slice lease/return protocol.
+    pub panel_slices_recycled: u64,
+    /// Verify jobs that panicked and were contained (the sequence failed,
+    /// the engine and pool survived).
+    pub verify_faults: u64,
 }
 
 impl Default for EngineMetrics {
@@ -52,6 +59,8 @@ impl EngineMetrics {
             draft_time: Duration::ZERO,
             verify_time: Duration::ZERO,
             panel_cache_hits: 0,
+            panel_slices_recycled: 0,
+            verify_faults: 0,
         }
     }
 
@@ -85,13 +94,15 @@ impl EngineMetrics {
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.panel_cache_hits += other.panel_cache_hits;
+        self.panel_slices_recycled += other.panel_slices_recycled;
+        self.verify_faults += other.verify_faults;
     }
 
     pub fn report(&self) -> String {
         format!(
             "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
              p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms \
-             panel-hits={}",
+             panel-hits={} slices-recycled={} faults={}",
             self.blocks,
             self.emitted_tokens,
             self.block_efficiency(),
@@ -103,6 +114,8 @@ impl EngineMetrics {
             self.draft_time.as_secs_f64() * 1e3,
             self.verify_time.as_secs_f64() * 1e3,
             self.panel_cache_hits,
+            self.panel_slices_recycled,
+            self.verify_faults,
         )
     }
 }

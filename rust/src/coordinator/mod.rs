@@ -26,11 +26,11 @@ pub mod scheduler;
 pub mod sequence;
 pub mod server;
 
-pub use config::{EngineConfig, ServerConfig, VerifyBackend};
+pub use config::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
 pub use engine::SpecDecodeEngine;
 pub use kv::PagedKvCache;
 pub use metrics::EngineMetrics;
-pub use pool::{VerifyJob, VerifyPool};
+pub use pool::{BatchOutput, PoolEngineStats, PoolError, VerifyJob, VerifyPool};
 pub use router::{Router, RoutingPolicy};
 pub use sequence::{Request, RequestResult, SequenceState};
 pub use server::Server;

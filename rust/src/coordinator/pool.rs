@@ -1,4 +1,4 @@
-//! Persistent verification worker pool.
+//! Persistent verification worker pool, shareable server-wide.
 //!
 //! The pre-pool engine fanned verification out with a fresh
 //! `std::thread::scope` per speculative block: every block paid thread
@@ -20,11 +20,54 @@
 //!   style dynamic scheduling: fast workers claim more chunks), which
 //!   balances continuous batches whose sequences have different support
 //!   sizes. Results land by job index, so outputs are order-independent.
-//! * **Panel handoff.** Each [`VerifyJob`] carries the sequence's
-//!   [`PanelSlice`] recorded by the engine's draft phase; the claiming
-//!   worker adopts it into its workspace cache before verifying, which
-//!   extends draft-exponential reuse to the parallel path (see
-//!   `spec::kernel` module docs, "Panel-slice handoff protocol").
+//! * **Panel handoff + recycling.** Each [`VerifyJob`] carries the
+//!   sequence's [`PanelSlice`] recorded by the engine's draft phase; the
+//!   claiming worker adopts it into its workspace cache before verifying
+//!   and ships the spent buffers back through the job's return channel,
+//!   which keeps draft-phase recording allocation-free in steady state
+//!   (see `spec::kernel` module docs, "Panel-slice handoff protocol").
+//!
+//! # Ticket protocol (server-global sharing)
+//!
+//! One pool serves *every* engine of a server: `run_batch` takes `&self`,
+//! so router workers submit concurrently through a shared `Arc<VerifyPool>`
+//! and steady-state verify-thread count is the pool size — independent of
+//! how many server workers exist (previously each engine owned a pool, so
+//! a W-worker server parked `W × verify_workers` threads).
+//!
+//! Each submission becomes a **ticket**: an epoch-tagged (`id` from a
+//! monotonic counter) batch record holding the job vector, the output
+//! slots, a claim cursor, and the submitting engine's tag. Workers scan
+//! tickets in epoch order and claim chunks from the first ticket with
+//! unclaimed jobs, so concurrent batches interleave FIFO without ever
+//! mixing state: claims, outputs, and the panel-cache-hit count all live
+//! on the ticket they came from, which is what keeps per-engine metrics
+//! (`EngineMetrics::panel_cache_hits`, [`VerifyPool::engine_stats`])
+//! attributable under sharing. The submitter parks on a condvar until its
+//! ticket's `pending` hits zero, then removes the ticket and takes the
+//! outputs — tickets never outlive their submitter's call.
+//!
+//! # Panic containment
+//!
+//! A verify job that panics must never poison the pool or wedge another
+//! engine (one bad request, one failed request — nothing more):
+//!
+//! * every job runs under `catch_unwind`; a panic marks that job index
+//!   failed on its ticket and the worker replaces its workspace (scratch
+//!   state after an unwind is unspecified; caches are value-keyed so this
+//!   only costs warm-up) and keeps serving;
+//! * pool state transitions never execute code that can panic while
+//!   holding the state mutex, and every lock acquisition goes through a
+//!   poison-recovering helper, so even an unexpected unwind cannot turn
+//!   into a permanently poisoned mutex;
+//! * a claim guard decrements `pending` for any chunk a dying worker
+//!   failed to publish, so the submitter always wakes; `run_batch`
+//!   additionally respawns any worker thread that died since the last
+//!   submission;
+//! * the submitter surfaces failures as [`PoolError::JobsPanicked`] — a
+//!   typed error carrying the failed indices *and* the successful outputs,
+//!   so the engine can fail exactly the affected sequences — and the pool
+//!   is immediately reusable (its ticket is gone, no residual state).
 //!
 //! Determinism: a job's output is a pure function of the job (workspace
 //! caches are keyed by exact RNG lane prefixes, so cross-sequence reuse
@@ -32,8 +75,8 @@
 //! are bit-exact for every verifier — enforced by the pool grid in
 //! `tests/kernel_parity.rs`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 
 use crate::model::sampling::SamplingParams;
@@ -59,6 +102,11 @@ pub struct VerifyJob {
     /// Draft-phase exponential rows for this sequence (empty for verifier
     /// kinds that consume disjoint RNG coordinates).
     pub panel: PanelSlice,
+    /// Return channel for the spent panel slice (step 5 of the handoff
+    /// protocol): the consuming workspace ships the displaced buffers back
+    /// to the recording engine's `SliceRecycler`. `None` disables
+    /// recycling (e.g. the faithful scoped-spawn baseline).
+    pub recycle: Option<std::sync::mpsc::Sender<PanelSlice>>,
 }
 
 impl VerifyJob {
@@ -67,7 +115,12 @@ impl VerifyJob {
     /// that can change an outcome.
     pub fn run(mut self, ws: &mut CouplingWorkspace) -> BlockOutput {
         if !self.panel.is_empty() {
-            ws.adopt_panel_slice(std::mem::take(&mut self.panel));
+            let spent = ws.adopt_panel_slice(std::mem::take(&mut self.panel));
+            if let Some(tx) = self.recycle.take() {
+                // Best-effort: a dropped engine-side receiver only costs
+                // the next lease a fresh allocation.
+                let _ = tx.send(spent);
+            }
         }
         let tp = self.target_params;
         let target_dists: Vec<Vec<Categorical>> = self
@@ -96,36 +149,165 @@ impl VerifyJob {
     }
 }
 
-struct PoolState {
-    /// Published batch; workers `take()` jobs as they claim chunks.
+/// Outputs of one successfully verified batch, in job order, plus the
+/// panel-cache hits the workers observed while running exactly this
+/// batch's jobs (per-ticket attribution — see the module docs).
+#[derive(Debug)]
+pub struct BatchOutput {
+    pub outputs: Vec<BlockOutput>,
+    pub cache_hits: u64,
+}
+
+/// Typed failure surface of [`VerifyPool::run_batch`].
+#[derive(Debug)]
+pub enum PoolError {
+    /// One or more jobs panicked on a worker. `failed` holds their job
+    /// indices (ascending); `completed[i]` holds the output of every job
+    /// that did finish, so the submitter can fail exactly the affected
+    /// sequences and keep the rest. The pool itself has already recovered
+    /// and is reusable.
+    JobsPanicked {
+        failed: Vec<usize>,
+        completed: Vec<Option<BlockOutput>>,
+        cache_hits: u64,
+    },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PoolError::JobsPanicked { failed, completed, .. } => write!(
+                f,
+                "{} of {} verify jobs panicked (indices {:?})",
+                failed.len(),
+                completed.len(),
+                failed
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Per-engine accounting of a shared pool (keyed by the engine tag passed
+/// to [`VerifyPool::run_batch`]) — the observability that keeps metrics
+/// attributable when many engines share one pool.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolEngineStats {
+    /// Batches this engine submitted.
+    pub batches: u64,
+    /// Jobs across those batches.
+    pub jobs: u64,
+    /// Panel-cache hits attributed to this engine's jobs.
+    pub cache_hits: u64,
+    /// Jobs that panicked.
+    pub faults: u64,
+}
+
+/// One submitted batch (see "Ticket protocol" in the module docs).
+struct Ticket {
+    /// Epoch tag: monotonically increasing submission id.
+    id: u64,
+    /// Submitting engine's tag (metrics attribution).
+    engine: u64,
+    /// Published jobs; workers `take()` them as they claim chunks.
     jobs: Vec<Option<VerifyJob>>,
     outs: Vec<Option<BlockOutput>>,
+    /// Job indices that panicked.
+    failed: Vec<usize>,
     /// Next unclaimed job index.
     next: usize,
-    /// Claim granularity for this batch.
+    /// Claim granularity for this ticket.
     chunk: usize,
     /// Jobs not yet completed (claimed or unclaimed).
     pending: usize,
-    /// A job panicked on a worker; surfaced to the submitter.
-    panicked: bool,
+    /// Panel-cache hits observed while running this ticket's jobs.
+    cache_hits: u64,
+}
+
+struct PoolState {
+    /// Live tickets in epoch order; workers claim from the first one with
+    /// unclaimed jobs, submitters remove their own on completion.
+    tickets: Vec<Ticket>,
+    next_ticket: u64,
+    /// Per-engine accounting, folded in at ticket collection.
+    stats: Vec<(u64, PoolEngineStats)>,
     shutdown: bool,
+}
+
+impl PoolState {
+    fn ticket_mut(&mut self, id: u64) -> Option<&mut Ticket> {
+        self.tickets.iter_mut().find(|t| t.id == id)
+    }
+
+    fn stats_mut(&mut self, engine: u64) -> &mut PoolEngineStats {
+        if let Some(pos) = self.stats.iter().position(|(e, _)| *e == engine) {
+            &mut self.stats[pos].1
+        } else {
+            self.stats.push((engine, PoolEngineStats::default()));
+            &mut self.stats.last_mut().expect("just pushed").1
+        }
+    }
 }
 
 struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers park here between batches.
     work: Condvar,
-    /// The submitter parks here until `pending == 0`.
+    /// Submitters park here until their ticket's `pending == 0`.
     done: Condvar,
-    /// Panel-cache hits accumulated across workers since the last drain.
-    cache_hits: AtomicU64,
 }
 
-/// Long-lived verification worker pool — see the module docs.
+impl PoolShared {
+    /// Poison-recovering lock: a panic on another thread while it held the
+    /// mutex must not cascade (state transitions are written to be
+    /// panic-free under the lock, so recovered state is always coherent).
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait<'a>(&self, cv: &Condvar, g: MutexGuard<'a, PoolState>) -> MutexGuard<'a, PoolState> {
+        cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Marks a claimed-but-unpublished chunk failed if the owning worker dies
+/// mid-run, so `pending` always reaches zero and the submitter always
+/// wakes (the last line of the panic-containment defense; per-job
+/// `catch_unwind` means it normally never fires).
+struct ClaimGuard<'a> {
+    shared: &'a PoolShared,
+    ticket: u64,
+    unpublished: Vec<usize>,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if self.unpublished.is_empty() {
+            return;
+        }
+        let mut st = self.shared.lock();
+        if let Some(t) = st.ticket_mut(self.ticket) {
+            for &i in &self.unpublished {
+                t.failed.push(i);
+                t.pending -= 1;
+            }
+            if t.pending == 0 {
+                self.shared.done.notify_all();
+            }
+        }
+    }
+}
+
+/// Long-lived verification worker pool — see the module docs. Shareable:
+/// all methods take `&self`, so one `Arc<VerifyPool>` can serve every
+/// engine of a server concurrently.
 pub struct VerifyPool {
     shared: Arc<PoolShared>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
     workers: usize,
+    /// Total workers ever spawned (names for respawned replacements).
+    spawned: AtomicUsize,
 }
 
 impl VerifyPool {
@@ -134,80 +316,137 @@ impl VerifyPool {
         let workers = workers.max(1);
         let shared = Arc::new(PoolShared {
             state: Mutex::new(PoolState {
-                jobs: Vec::new(),
-                outs: Vec::new(),
-                next: 0,
-                chunk: 1,
-                pending: 0,
-                panicked: false,
+                tickets: Vec::new(),
+                next_ticket: 0,
+                stats: Vec::new(),
                 shutdown: false,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
-            cache_hits: AtomicU64::new(0),
         });
-        let handles = (0..workers)
-            .map(|i| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("gls-verify-{i}"))
-                    .spawn(move || worker_loop(sh))
-                    .expect("spawn verify worker")
-            })
-            .collect();
-        Self { shared, handles, workers }
+        let handles = (0..workers).map(|i| spawn_worker(&shared, i)).collect();
+        Self {
+            shared,
+            handles: Mutex::new(handles),
+            workers,
+            spawned: AtomicUsize::new(workers),
+        }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
-    /// Execute one batch and return the outputs in job order. Blocks the
-    /// caller until every job completes; the pool is reusable immediately
-    /// after. Takes `&mut self` so the one-batch-in-flight invariant is
-    /// compile-time enforced (a shared pool submitting concurrently would
-    /// interleave `jobs`/`outs` state).
-    pub fn run_batch(&mut self, jobs: Vec<VerifyJob>) -> Vec<BlockOutput> {
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
+    /// Join any dead worker threads and respawn replacements so the pool
+    /// holds its configured size even after an unexpected worker unwind
+    /// (per-job `catch_unwind` makes that near-impossible, but a shared
+    /// service must not erode). Called on every submission; the common
+    /// path is `workers` cheap `is_finished` loads.
+    fn ensure_workers(&self) {
+        let mut hs = self.handles.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut i = 0;
+        while i < hs.len() {
+            if hs[i].is_finished() {
+                let _ = hs.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
         }
-        {
-            let mut st = self.shared.state.lock().expect("pool lock");
-            debug_assert_eq!(st.pending, 0, "one batch in flight at a time");
-            st.jobs = jobs.into_iter().map(Some).collect();
-            st.outs = (0..n).map(|_| None).collect();
-            st.next = 0;
-            // Finer than jobs/workers so fast workers rebalance stragglers;
-            // claiming costs one lock round-trip per chunk, so don't go
-            // below 1.
-            st.chunk = (n / (self.workers * 4)).max(1);
-            st.pending = n;
-            self.shared.work.notify_all();
+        while hs.len() < self.workers {
+            let n = self.spawned.fetch_add(1, Ordering::Relaxed);
+            hs.push(spawn_worker(&self.shared, n));
         }
-        let mut st = self.shared.state.lock().expect("pool lock");
-        while st.pending > 0 {
-            st = self.shared.done.wait(st).expect("pool wait");
-        }
-        assert!(!std::mem::take(&mut st.panicked), "verify pool job panicked");
-        st.jobs.clear();
-        st.outs.drain(..).map(|o| o.expect("job completed")).collect()
     }
 
-    /// Take the panel-cache hits accumulated by the workers since the last
-    /// drain (the engine folds this into `EngineMetrics` per block).
-    pub fn drain_cache_hits(&self) -> u64 {
-        self.shared.cache_hits.swap(0, Ordering::Relaxed)
+    /// Submit one batch as an epoch-tagged ticket and block until every
+    /// job completes. `engine` tags the ticket for metrics attribution
+    /// ([`VerifyPool::engine_stats`]). Concurrent callers are fine —
+    /// tickets are independent — and the pool is reusable immediately
+    /// after, including after an error.
+    pub fn run_batch(&self, engine: u64, jobs: Vec<VerifyJob>) -> Result<BatchOutput, PoolError> {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(BatchOutput { outputs: Vec::new(), cache_hits: 0 });
+        }
+        self.ensure_workers();
+        let id = {
+            let mut st = self.shared.lock();
+            let id = st.next_ticket;
+            st.next_ticket += 1;
+            st.tickets.push(Ticket {
+                id,
+                engine,
+                jobs: jobs.into_iter().map(Some).collect(),
+                outs: (0..n).map(|_| None).collect(),
+                failed: Vec::new(),
+                next: 0,
+                // Finer than jobs/workers so fast workers rebalance
+                // stragglers; claiming costs one lock round-trip per
+                // chunk, so don't go below 1.
+                chunk: (n / (self.workers * 4)).max(1),
+                pending: n,
+                cache_hits: 0,
+            });
+            self.shared.work.notify_all();
+            id
+        };
+        // ---- Park until this ticket completes, then collect it. ----
+        let mut st = self.shared.lock();
+        loop {
+            let pos = st
+                .tickets
+                .iter()
+                .position(|t| t.id == id)
+                .expect("submitted ticket present until collected");
+            if st.tickets[pos].pending == 0 {
+                let mut t = st.tickets.remove(pos);
+                let s = st.stats_mut(t.engine);
+                s.batches += 1;
+                s.jobs += n as u64;
+                s.cache_hits += t.cache_hits;
+                s.faults += t.failed.len() as u64;
+                drop(st);
+                return if t.failed.is_empty() {
+                    Ok(BatchOutput {
+                        outputs: t
+                            .outs
+                            .into_iter()
+                            .map(|o| o.expect("job completed"))
+                            .collect(),
+                        cache_hits: t.cache_hits,
+                    })
+                } else {
+                    t.failed.sort_unstable();
+                    Err(PoolError::JobsPanicked {
+                        failed: t.failed,
+                        completed: t.outs,
+                        cache_hits: t.cache_hits,
+                    })
+                };
+            }
+            st = self.shared.wait(&self.shared.done, st);
+        }
+    }
+
+    /// Per-engine accounting (zero if the tag never submitted).
+    pub fn engine_stats(&self, engine: u64) -> PoolEngineStats {
+        let st = self.shared.lock();
+        st.stats
+            .iter()
+            .find(|(e, _)| *e == engine)
+            .map(|(_, s)| *s)
+            .unwrap_or_default()
     }
 
     /// Scoped-spawn reference executor: the pre-pool engine behavior —
-    /// fresh threads, cold workspaces, and NO draft-phase panel reuse
-    /// (panel slices are discarded, reproducing the thread-local cache the
-    /// old parallel path could never reach; dropping them is a pure perf
-    /// difference, never a token difference). Preserved as the baseline
-    /// `benches/perf_engine.rs` races the pool against and as a config
-    /// escape hatch (`verify_backend = spawn`). Returns the outputs in job
-    /// order plus the panel-cache hits observed (~0 by construction).
+    /// fresh threads, cold workspaces, and NO draft-phase panel reuse or
+    /// recycling (panel slices are discarded, reproducing the thread-local
+    /// cache the old parallel path could never reach; dropping them is a
+    /// pure perf difference, never a token difference). Preserved as the
+    /// baseline `benches/perf_engine.rs` races the pool against and as a
+    /// config escape hatch (`verify_backend = spawn`). Returns the outputs
+    /// in job order plus the panel-cache hits observed (~0 by
+    /// construction).
     pub fn run_scoped(jobs: Vec<VerifyJob>, threads: usize) -> (Vec<BlockOutput>, u64) {
         let n = jobs.len();
         let threads = threads.max(1).min(n.max(1));
@@ -215,6 +454,7 @@ impl VerifyPool {
             .into_iter()
             .map(|mut job| {
                 job.panel = PanelSlice::new();
+                job.recycle = None;
                 Some(job)
             })
             .collect();
@@ -251,65 +491,97 @@ impl VerifyPool {
 impl Drop for VerifyPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().expect("pool lock");
+            let mut st = self.shared.lock();
             st.shutdown = true;
             self.shared.work.notify_all();
         }
-        for h in self.handles.drain(..) {
+        let handles = std::mem::take(
+            self.handles.get_mut().unwrap_or_else(PoisonError::into_inner),
+        );
+        for h in handles {
             let _ = h.join();
         }
     }
 }
 
+fn spawn_worker(shared: &Arc<PoolShared>, idx: usize) -> JoinHandle<()> {
+    let sh = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("gls-verify-{idx}"))
+        .spawn(move || worker_loop(sh))
+        .expect("spawn verify worker")
+}
+
 fn worker_loop(shared: Arc<PoolShared>) {
     let mut ws = CouplingWorkspace::new();
-    let mut claimed: Vec<(usize, VerifyJob)> = Vec::new();
     loop {
-        {
-            let mut st = shared.state.lock().expect("pool lock");
-            loop {
+        // ---- Claim a chunk from the first ticket with unclaimed jobs. ----
+        let (ticket_id, claimed) = {
+            let mut st = shared.lock();
+            'claim: loop {
                 if st.shutdown {
                     return;
                 }
-                if st.next < st.jobs.len() {
-                    break;
+                for t in st.tickets.iter_mut() {
+                    if t.next < t.jobs.len() {
+                        let start = t.next;
+                        let end = (start + t.chunk).min(t.jobs.len());
+                        t.next = end;
+                        let mut claimed = Vec::with_capacity(end - start);
+                        for i in start..end {
+                            claimed.push((i, t.jobs[i].take().expect("unclaimed job present")));
+                        }
+                        break 'claim (t.id, claimed);
+                    }
                 }
-                st = shared.work.wait(st).expect("pool wait");
+                st = shared.wait(&shared.work, st);
             }
-            let start = st.next;
-            let end = (start + st.chunk).min(st.jobs.len());
-            st.next = end;
-            claimed.extend((start..end).map(|i| (i, st.jobs[i].take().expect("job unclaimed"))));
-        }
-        // Run outside the lock; a panicking job must not hang the
-        // submitter, so it is caught, flagged, and re-raised over there.
-        let mut done: Vec<(usize, Result<BlockOutput, ()>)> = Vec::with_capacity(claimed.len());
-        for (i, job) in claimed.drain(..) {
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run(&mut ws)))
-                .map_err(|_| ());
+        };
+        let mut guard = ClaimGuard {
+            shared: &*shared,
+            ticket: ticket_id,
+            unpublished: claimed.iter().map(|(i, _)| *i).collect(),
+        };
+        // ---- Run outside the lock; each job individually contained. ----
+        let mut done: Vec<(usize, Option<BlockOutput>)> = Vec::with_capacity(claimed.len());
+        let mut hits = 0u64;
+        for (i, job) in claimed {
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run(&mut ws))).ok();
+            if out.is_none() {
+                // Scratch state after an unwind is unspecified; caches are
+                // value-keyed, so a fresh workspace only costs warm-up.
+                hits += ws.drain_panel_cache_hits();
+                ws = CouplingWorkspace::new();
+            }
             done.push((i, out));
         }
-        shared
-            .cache_hits
-            .fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
-        let mut st = shared.state.lock().expect("pool lock");
-        for (i, out) in done {
-            match out {
-                Ok(out) => st.outs[i] = Some(out),
-                Err(()) => st.panicked = true,
+        hits += ws.drain_panel_cache_hits();
+        // ---- Publish results on the ticket (panic-free under lock). ----
+        let mut st = shared.lock();
+        if let Some(t) = st.ticket_mut(ticket_id) {
+            t.cache_hits += hits;
+            for (i, out) in done {
+                match out {
+                    Some(o) => t.outs[i] = Some(o),
+                    None => t.failed.push(i),
+                }
+                t.pending -= 1;
             }
-            st.pending -= 1;
+            if t.pending == 0 {
+                shared.done.notify_all();
+            }
         }
-        if st.pending == 0 {
-            shared.done.notify_all();
-        }
+        guard.unpublished.clear();
+        drop(st);
+        drop(guard);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::spec::types::BlockInput;
+    use crate::spec::types::{BlockInput, FAULT_MARKER_TOKEN};
     use crate::stats::rng::XorShift128;
     use crate::testkit;
 
@@ -342,7 +614,18 @@ mod tests {
             rng,
             slot0: 0,
             panel,
+            recycle: None,
         }
+    }
+
+    /// A job rigged to trip the FaultInjection verifier: every draft token
+    /// is the marker, so `run` panics on whichever worker claims it.
+    fn mk_fault_job(gen: &mut XorShift128, seed: u64) -> VerifyJob {
+        let mut job = mk_job(gen, VerifierKind::FaultInjection, seed);
+        let (k, l) = (job.draft_dists.len(), job.draft_dists[0].len());
+        job.panel = PanelSlice::new(); // recorded rows are irrelevant here
+        job.draft_tokens = TokenMatrix::view(Arc::new(vec![FAULT_MARKER_TOKEN; k * l]), 0, k, l);
+        job
     }
 
     /// Rebuild the same job's BlockInput serially (fresh scratch) and
@@ -380,7 +663,7 @@ mod tests {
     #[test]
     fn pool_matches_serial_oracle_across_batches_and_sizes() {
         for &workers in &[1usize, 2, 4] {
-            let mut pool = VerifyPool::new(workers);
+            let pool = VerifyPool::new(workers);
             // Several batches through the SAME pool: workspaces persist,
             // outcomes must not.
             for batch in 0..3u64 {
@@ -392,7 +675,7 @@ mod tests {
                         mk_job(&mut gen, kind, batch * 100 + i)
                     })
                     .collect();
-                let outs = pool.run_batch(jobs);
+                let outs = pool.run_batch(0, jobs).expect("no faults").outputs;
                 for (i, out) in outs.iter().enumerate() {
                     let kind = kinds[i % 3];
                     let mut gen = XorShift128::new(100 + batch * 10 + i as u64);
@@ -407,20 +690,153 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_submitters_share_one_pool() {
+        // The ticket protocol: several "engines" submit interleaved
+        // batches through ONE pool from their own threads; every output
+        // must match its serial oracle, and per-engine stats must
+        // attribute exactly the jobs each engine submitted.
+        let pool = Arc::new(VerifyPool::new(2));
+        let n_engines = 3u64;
+        let batches = 4u64;
+        let per_batch = 5u64;
+        std::thread::scope(|scope| {
+            for e in 0..n_engines {
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || {
+                    for b in 0..batches {
+                        let jobs: Vec<VerifyJob> = (0..per_batch)
+                            .map(|i| {
+                                let seed = e * 1000 + b * 10 + i;
+                                let mut gen = XorShift128::new(7 + seed);
+                                mk_job(&mut gen, VerifierKind::Gls, seed)
+                            })
+                            .collect();
+                        let outs = pool.run_batch(e, jobs).expect("no faults").outputs;
+                        for (i, out) in outs.iter().enumerate() {
+                            let seed = e * 1000 + b * 10 + i as u64;
+                            let mut gen = XorShift128::new(7 + seed);
+                            let want = expected(&mut gen, VerifierKind::Gls, seed);
+                            assert_eq!(*out, want, "engine {e} batch {b} job {i}");
+                        }
+                    }
+                });
+            }
+        });
+        for e in 0..n_engines {
+            let s = pool.engine_stats(e);
+            assert_eq!(s.batches, batches, "engine {e} batch count");
+            assert_eq!(s.jobs, batches * per_batch, "engine {e} job count");
+            assert_eq!(s.faults, 0, "engine {e} fault count");
+        }
+        assert_eq!(pool.engine_stats(99), PoolEngineStats::default());
+    }
+
+    #[test]
+    fn panicking_job_surfaces_typed_error_and_spares_the_rest() {
+        let pool = VerifyPool::new(2);
+        let mut gen = XorShift128::new(0xFA);
+        let jobs = vec![
+            mk_job(&mut gen, VerifierKind::Gls, 1),
+            mk_fault_job(&mut gen, 2),
+            mk_job(&mut gen, VerifierKind::Daliri, 3),
+        ];
+        let err = pool.run_batch(7, jobs).expect_err("fault job must fail the batch");
+        let PoolError::JobsPanicked { failed, completed, .. } = err;
+        assert_eq!(failed, vec![1], "exactly the fault job fails");
+        assert_eq!(completed.len(), 3);
+        assert!(completed[1].is_none());
+        let mut gen = XorShift128::new(0xFA);
+        let want0 = expected(&mut gen, VerifierKind::Gls, 1);
+        let _ = mk_fault_job(&mut gen, 2); // advance the generator identically
+        let want2 = expected(&mut gen, VerifierKind::Daliri, 3);
+        assert_eq!(completed[0].as_ref(), Some(&want0), "good job 0 must complete");
+        assert_eq!(completed[2].as_ref(), Some(&want2), "good job 2 must complete");
+        assert_eq!(pool.engine_stats(7).faults, 1);
+    }
+
+    #[test]
+    fn pool_is_reusable_after_panics_without_poisoning() {
+        // Repeated fault storms followed by clean batches: no deadlock, no
+        // poisoned locks, no residual ticket state, bit-exact outputs.
+        let pool = VerifyPool::new(3);
+        for round in 0..3u64 {
+            let mut gen = XorShift128::new(200 + round);
+            let all_bad: Vec<VerifyJob> = (0..6).map(|i| mk_fault_job(&mut gen, i)).collect();
+            match pool.run_batch(0, all_bad) {
+                Err(PoolError::JobsPanicked { failed, completed, .. }) => {
+                    assert_eq!(failed, (0..6).collect::<Vec<_>>());
+                    assert!(completed.iter().all(|o| o.is_none()));
+                }
+                Ok(_) => panic!("round {round}: all-fault batch reported success"),
+            }
+            // The same pool must serve a clean batch correctly right after.
+            let mut gen = XorShift128::new(300 + round);
+            let jobs: Vec<VerifyJob> =
+                (0..5u64).map(|i| mk_job(&mut gen, VerifierKind::SpecTr, 40 + i)).collect();
+            let outs = pool.run_batch(0, jobs).expect("clean batch after faults").outputs;
+            for (i, out) in outs.iter().enumerate() {
+                let mut gen = XorShift128::new(300 + round);
+                for _ in 0..i {
+                    let _ = mk_job(&mut gen, VerifierKind::SpecTr, 0); // advance generator
+                }
+                let want = expected(&mut gen, VerifierKind::SpecTr, 40 + i as u64);
+                assert_eq!(*out, want, "round {round} job {i} after fault storm");
+            }
+        }
+        assert_eq!(pool.engine_stats(0).faults, 18);
+    }
+
+    #[test]
     fn pool_handoff_panels_hit_on_worker_threads() {
-        let mut pool = VerifyPool::new(2);
+        let pool = VerifyPool::new(2);
         let jobs: Vec<VerifyJob> = (0..6u64)
             .map(|i| {
                 let mut gen = XorShift128::new(900 + i);
                 mk_job(&mut gen, VerifierKind::Gls, 500 + i)
             })
             .collect();
-        let _ = pool.run_batch(jobs);
+        let out = pool.run_batch(4, jobs).expect("no faults");
         assert!(
-            pool.drain_cache_hits() > 0,
+            out.cache_hits > 0,
             "draft-phase panels must be reused on worker threads"
         );
-        assert_eq!(pool.drain_cache_hits(), 0, "drain must reset");
+        assert_eq!(
+            pool.engine_stats(4).cache_hits,
+            out.cache_hits,
+            "per-engine stats must attribute the same hits"
+        );
+    }
+
+    #[test]
+    fn spent_slices_return_through_job_recycle_channel() {
+        let pool = VerifyPool::new(2);
+        let recycler = crate::spec::kernel::SliceRecycler::new();
+        let n = 6u64;
+        let jobs: Vec<VerifyJob> = (0..n)
+            .map(|i| {
+                let mut gen = XorShift128::new(70 + i);
+                let mut job = mk_job(&mut gen, VerifierKind::Gls, 60 + i);
+                job.recycle = Some(recycler.return_sender());
+                job
+            })
+            .collect();
+        let recorded = jobs[0].panel.len();
+        assert!(recorded > 0);
+        let _ = pool.run_batch(0, jobs).expect("no faults");
+        // Every job's spent slice must have come back with one spare
+        // buffer pair per adopted row (run_batch returning means all jobs
+        // finished, so all sends have happened).
+        let mut recycler = recycler;
+        let mut returned = 0;
+        for _ in 0..n {
+            let slice = recycler.lease();
+            if slice.spare_len() > 0 {
+                assert_eq!(slice.spare_len(), recorded);
+                returned += 1;
+            }
+        }
+        assert_eq!(returned, n, "every spent slice returns to the engine");
+        assert_eq!(recycler.drain_recycled(), n);
     }
 
     #[test]
@@ -433,27 +849,30 @@ mod tests {
                 })
                 .collect()
         };
-        let mut pool = VerifyPool::new(3);
-        let a = pool.run_batch(mk_batch());
+        let pool = VerifyPool::new(3);
+        let a = pool.run_batch(0, mk_batch()).expect("no faults").outputs;
         let (b, _hits) = VerifyPool::run_scoped(mk_batch(), 3);
         assert_eq!(a, b);
     }
 
     #[test]
     fn empty_batch_is_a_noop() {
-        let mut pool = VerifyPool::new(2);
-        assert!(pool.run_batch(Vec::new()).is_empty());
+        let pool = VerifyPool::new(2);
+        assert!(pool.run_batch(0, Vec::new()).expect("empty ok").outputs.is_empty());
         // Pool still alive and usable.
         let mut gen = XorShift128::new(1);
-        let outs = pool.run_batch(vec![mk_job(&mut gen, VerifierKind::Daliri, 9)]);
+        let outs = pool
+            .run_batch(0, vec![mk_job(&mut gen, VerifierKind::Daliri, 9)])
+            .expect("no faults")
+            .outputs;
         assert_eq!(outs.len(), 1);
     }
 
     #[test]
     fn drop_joins_workers_cleanly() {
-        let mut pool = VerifyPool::new(4);
+        let pool = VerifyPool::new(4);
         let mut gen = XorShift128::new(2);
-        let _ = pool.run_batch(vec![mk_job(&mut gen, VerifierKind::Gls, 3)]);
+        let _ = pool.run_batch(0, vec![mk_job(&mut gen, VerifierKind::Gls, 3)]).unwrap();
         drop(pool); // must not hang or leak parked threads
     }
 }

@@ -1,6 +1,11 @@
 //! Request router over a pool of worker threads, each owning a private
 //! engine (model pair + KV cache + scheduler). Mirrors the vLLM router
 //! architecture: stateless routing in front, stateful workers behind.
+//!
+//! With `pool_scope = server` (the default) the router also owns the one
+//! server-global [`VerifyPool`] every worker engine verifies through —
+//! steady-state verify-thread count is the pool size, independent of the
+//! worker count (see `coordinator::pool`, "Ticket protocol").
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -8,10 +13,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::batcher::DynamicBatcher;
-use super::config::{EngineConfig, ServerConfig};
+use super::config::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
 use super::engine::SpecDecodeEngine;
 use super::kv::PagedKvCache;
 use super::metrics::EngineMetrics;
+use super::pool::VerifyPool;
 use super::scheduler::Scheduler;
 use super::sequence::{Request, RequestResult};
 use crate::model::backend::ModelPair;
@@ -37,6 +43,9 @@ pub struct Router {
     policy: RoutingPolicy,
     next_rr: usize,
     pub results_rx: Receiver<RequestResult>,
+    /// The server-global verify pool (`pool_scope = server` with the pool
+    /// backend); `None` under per-engine pooling or non-pool backends.
+    shared_pool: Option<Arc<VerifyPool>>,
 }
 
 impl Router {
@@ -54,6 +63,23 @@ impl Router {
     {
         server_cfg.validate().expect("server config");
         engine_cfg.validate().expect("engine config");
+        // One server-global verify pool shared by all workers: spawned
+        // eagerly (workers park until batches arrive), sized by
+        // `verify_workers` — auto (0) uses the machine's full parallelism
+        // *undivided*, since there is exactly one pool no matter how many
+        // workers submit to it.
+        let shared_pool = if engine_cfg.verify_backend == VerifyBackend::Pool
+            && server_cfg.pool_scope == PoolScope::Server
+        {
+            let size = if engine_cfg.verify_workers > 0 {
+                engine_cfg.verify_workers
+            } else {
+                std::thread::available_parallelism().map_or(1, |n| n.get())
+            };
+            Some(Arc::new(VerifyPool::new(size)))
+        } else {
+            None
+        };
         let (results_tx, results_rx) = mpsc::channel();
         let mut workers = Vec::with_capacity(server_cfg.workers);
         for w in 0..server_cfg.workers {
@@ -64,17 +90,24 @@ impl Router {
             let results = results_tx.clone();
             let ec = engine_cfg.clone();
             let sc = server_cfg.clone();
+            let pool = shared_pool.clone();
             let join = std::thread::Builder::new()
                 .name(format!("gls-worker-{w}"))
-                .spawn(move || worker_loop(w, rx, results, load_w, ec, sc, pair))
+                .spawn(move || worker_loop(w, rx, results, load_w, ec, sc, pool, pair))
                 .expect("spawn worker");
             workers.push(WorkerHandle { tx, load, join });
         }
-        Self { workers, policy, next_rr: 0, results_rx }
+        Self { workers, policy, next_rr: 0, results_rx, shared_pool }
     }
 
     pub fn num_workers(&self) -> usize {
         self.workers.len()
+    }
+
+    /// The server-global verify pool, when one exists (observability:
+    /// per-engine stats, thread-census tests, benches).
+    pub fn verify_pool(&self) -> Option<&Arc<VerifyPool>> {
+        self.shared_pool.as_ref()
     }
 
     /// Route one request. Returns the worker index chosen.
@@ -112,6 +145,15 @@ impl Router {
     }
 }
 
+/// Credit completed work back to the router-visible load counter without
+/// ever underflowing (saturating subtraction on the atomic).
+fn credit_load(load: &AtomicUsize, amount: usize) {
+    let _ = load.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(amount))
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_idx: usize,
     rx: Receiver<Request>,
@@ -119,14 +161,16 @@ fn worker_loop(
     load: Arc<AtomicUsize>,
     engine_cfg: EngineConfig,
     server_cfg: ServerConfig,
+    shared_pool: Option<Arc<VerifyPool>>,
     pair: ModelPair,
 ) -> EngineMetrics {
     // Per-worker seed offset keeps randomness lanes disjoint across workers
-    // even when clients reuse request ids. An auto-sized verify pool
-    // (`verify_workers = 0`) is divided by the server's worker count so W
-    // engines don't each spawn `available_parallelism` verify threads and
-    // oversubscribe the cores.
-    let verify_workers = if engine_cfg.verify_workers == 0 {
+    // even when clients reuse request ids. Under *per-engine* pooling an
+    // auto-sized pool (`verify_workers = 0`) is divided by the server's
+    // worker count so W engines don't each spawn `available_parallelism`
+    // verify threads and oversubscribe the cores; the server-global pool
+    // was sized once by the router instead.
+    let verify_workers = if engine_cfg.verify_workers == 0 && shared_pool.is_none() {
         let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
         (cores / server_cfg.workers.max(1)).max(1)
     } else {
@@ -139,6 +183,9 @@ fn worker_loop(
     };
     let kv = PagedKvCache::new(server_cfg.kv_pages, server_cfg.kv_page_size);
     let mut engine = SpecDecodeEngine::new(cfg, pair, kv);
+    if let Some(pool) = shared_pool {
+        engine.attach_shared_pool(pool, worker_idx as u64);
+    }
     let mut sched = Scheduler::new(server_cfg.max_running);
     let batcher = DynamicBatcher::new(server_cfg.max_batch, server_cfg.batch_deadline);
 
@@ -154,12 +201,17 @@ fn worker_loop(
                 sched.submit(req);
             }
             for res in sched.tick(&mut engine) {
+                // The load signal is strictly additive: the router charged
+                // `max_new_tokens` at submission; completion credits the
+                // identical amount. (The old `load.store(sched.load())`
+                // overwrote the counter each tick, erasing the charge for
+                // requests still queued in this worker's channel — a burst
+                // would dogpile whichever worker last stored a stale low
+                // value.)
+                credit_load(&load, res.max_new_tokens);
                 let _ = results.send(res);
             }
-            // Refresh the router-visible load signal (outstanding tokens).
-            load.store(sched.load(), Ordering::Relaxed);
         }
-        load.store(0, Ordering::Relaxed);
     }
     engine.metrics.clone()
 }
@@ -179,6 +231,7 @@ mod tests {
             max_running: 8,
             kv_pages: 512,
             kv_page_size: 16,
+            ..ServerConfig::default()
         };
         let ec = EngineConfig {
             verifier: VerifierKind::Gls,
@@ -245,6 +298,72 @@ mod tests {
             router.results_rx.recv().unwrap();
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_burst_spreads_before_any_completion() {
+        // Regression for the stale-load bug: the old worker loop stored
+        // `sched.load()` each tick, erasing the router's in-advance charge
+        // for requests still queued in a worker's channel, so a burst
+        // dogpiled whichever worker last looked idle. With the additive
+        // signal, a burst of equal requests must spread evenly regardless
+        // of worker timing: each submission charges the chosen worker
+        // before the next one picks.
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::LeastLoaded, sim_pair);
+        // Two long anchors occupy both workers symmetrically.
+        router.submit(Request::new(0, vec![1], 60));
+        router.submit(Request::new(1, vec![1], 60));
+        // Burst: submitted back-to-back, far faster than 60-token decodes
+        // complete; the additive signal alone must balance them.
+        let mut counts = vec![0usize; router.num_workers()];
+        let burst = 6;
+        for i in 0..burst {
+            counts[router.submit(Request::new(2 + i as u64, vec![1], 8))] += 1;
+        }
+        assert!(
+            counts.iter().all(|&c| c >= burst / 2 - 1 && c <= burst / 2 + 1),
+            "burst dogpiled: {counts:?}"
+        );
+        for _ in 0..(2 + burst) {
+            router.results_rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn server_scope_creates_one_shared_pool_and_attributes_engines() {
+        use crate::coordinator::config::{PoolScope, VerifyBackend};
+        let (sc, ec) = small_cfgs();
+        let sc = ServerConfig { pool_scope: PoolScope::Server, ..sc };
+        let ec = EngineConfig {
+            parallel_threshold: 0,
+            verify_workers: 2,
+            verify_backend: VerifyBackend::Pool,
+            ..ec
+        };
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let pool = Arc::clone(router.verify_pool().expect("server-global pool exists"));
+        assert_eq!(pool.workers(), 2);
+        let n = 12;
+        for i in 0..n {
+            router.submit(Request::new(i, vec![1, 2], 10));
+        }
+        for _ in 0..n {
+            router.results_rx.recv().unwrap();
+        }
+        router.shutdown();
+        // Both workers verified through the one pool, tagged separately.
+        let s0 = pool.engine_stats(0);
+        let s1 = pool.engine_stats(1);
+        assert!(s0.jobs > 0, "worker 0 never submitted to the shared pool");
+        assert!(s1.jobs > 0, "worker 1 never submitted to the shared pool");
+        assert_eq!(s0.faults + s1.faults, 0);
+        // Per-engine pooling must NOT create a router-owned pool.
+        let sc_engine = ServerConfig { pool_scope: PoolScope::Engine, ..sc };
+        let router2 = Router::start(&sc_engine, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        assert!(router2.verify_pool().is_none());
+        router2.shutdown();
     }
 
     #[test]

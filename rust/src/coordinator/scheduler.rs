@@ -49,7 +49,11 @@ impl Scheduler {
         !self.queued.is_empty() || !self.running.is_empty()
     }
 
-    /// Total tokens queued+running — the "load" signal the router reads.
+    /// Total tokens queued+running. Observability only: the router's
+    /// `LeastLoaded` signal is additive (charged at submission, credited
+    /// at completion) and no longer reads this — a stored snapshot missed
+    /// requests still queued in the worker's channel, which is exactly the
+    /// staleness the additive signal fixed.
     pub fn load(&self) -> usize {
         self.queued.iter().map(|s| s.max_new_tokens).sum::<usize>()
             + self.running.iter().map(|s| s.remaining()).sum::<usize>()
@@ -73,7 +77,13 @@ impl Scheduler {
             // can never dead-lock on KV mid-flight. Real deployments would
             // preempt instead; FIFO + worst-case admission keeps the engine
             // invariant (`reserve_block` never fails) simple and auditable.
-            if !engine.kv.can_admit(head.tokens.len() + head.max_new_tokens, block) {
+            // `can_admit` and `register` now share one budget formula, so a
+            // true answer here is binding even when prompt > max_tokens.
+            if !engine.kv.can_admit(
+                head.tokens.len(),
+                head.tokens.len() + head.max_new_tokens,
+                block,
+            ) {
                 break;
             }
             let mut seq = self.queued.pop_front().unwrap();
@@ -111,11 +121,17 @@ impl Scheduler {
         keep.clear();
         for mut seq in self.running.drain(..) {
             let rejected = seq.phase == SeqPhase::Finished; // oversized
-            if rejected || seq.is_done(max_len) {
+            // A verification fault (panicking verify job) retires the
+            // sequence like a completion — with `RequestResult::failed`
+            // set — rather than wedging the worker's pipeline.
+            let failed = seq.phase == SeqPhase::Failed;
+            if rejected || failed || seq.is_done(max_len) {
                 if !rejected {
                     engine.kv.release(seq.id).expect("release running seq");
                 }
-                seq.phase = SeqPhase::Finished;
+                if !failed {
+                    seq.phase = SeqPhase::Finished;
+                }
                 engine.metrics.completed += 1;
                 engine.metrics.be.push(seq.block_efficiency());
                 engine
@@ -206,6 +222,34 @@ mod tests {
         assert_eq!(results.len(), 6);
         assert_eq!(eng.kv.used_pages(), 0);
         assert!(eng.kv.peak_used() <= 8);
+    }
+
+    #[test]
+    fn long_prompt_short_budget_admission_is_binding() {
+        // Regression for the can_admit/register budget mismatch: requests
+        // whose prompts dwarf their generation budgets, driven through the
+        // scheduler's admission path on a KV sized so the budget formula
+        // decides everything. Admission and registration share one formula
+        // now, so `register` can never fail after `can_admit`, and the
+        // tight cache forces the second request to wait for the first.
+        let mut eng = engine_with_kv(4); // 64 tokens of KV, page 16
+        let mut sched = Scheduler::new(8);
+        for i in 0..2 {
+            // prompt 40 ≫ max_new 4: budget = pages(max(44, 40) + 5) = 4
+            // pages — exactly the whole cache, one sequence at a time.
+            sched.submit(Request::new(i, vec![0; 40], 4));
+        }
+        sched.tick(&mut eng);
+        assert_eq!(sched.running_len(), 1, "tight budget must serialize admission");
+        eng.kv.check_invariants().unwrap();
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert!(!r.failed);
+            assert_eq!(r.tokens.len(), 44, "request {}", r.id);
+        }
+        assert_eq!(eng.kv.used_pages(), 0);
+        eng.kv.check_invariants().unwrap();
     }
 
     #[test]

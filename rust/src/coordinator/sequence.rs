@@ -32,6 +32,14 @@ pub struct RequestResult {
     pub block_efficiency: f64,
     /// Wall-clock latency from submission to completion.
     pub latency: std::time::Duration,
+    /// The request's declared generation budget — what the router charged
+    /// the worker's load counter at submission, so completion can credit
+    /// the identical amount back (the `LeastLoaded` signal is additive).
+    pub max_new_tokens: usize,
+    /// The sequence failed mid-decode (a verification fault): `tokens`
+    /// holds whatever was emitted before the failure. A failed request
+    /// never takes down its worker — it is retired like any completion.
+    pub failed: bool,
 }
 
 /// Lifecycle of a sequence inside one worker.
@@ -43,6 +51,10 @@ pub enum SeqPhase {
     Running,
     /// Hit max_new_tokens or max_seq_len.
     Finished,
+    /// A verification fault (panicking verify job) killed this sequence;
+    /// the scheduler retires it with `RequestResult::failed = true`
+    /// instead of letting it wedge the engine.
+    Failed,
 }
 
 /// Scheduler-side state of an in-flight sequence.
@@ -107,6 +119,8 @@ impl SequenceState {
             draft_steps: self.draft_steps,
             block_efficiency: be,
             latency: self.submitted_at.elapsed(),
+            max_new_tokens: self.max_new_tokens,
+            failed: self.phase == SeqPhase::Failed,
         }
     }
 }

@@ -69,6 +69,13 @@ impl Server {
         Self { router: Router::start(server_cfg, engine_cfg, policy, make_pair), next_id: 0, submitted: 0 }
     }
 
+    /// The server-global verify pool when `pool_scope = server` (the
+    /// default with the pool backend) — observability for stats, benches
+    /// and thread-census tests.
+    pub fn verify_pool(&self) -> Option<&std::sync::Arc<super::pool::VerifyPool>> {
+        self.router.verify_pool()
+    }
+
     /// Submit a prompt; returns the assigned request id.
     pub fn submit(&mut self, prompt: Vec<u32>, max_new_tokens: usize) -> u64 {
         let id = self.next_id;
@@ -137,6 +144,7 @@ mod tests {
                 max_running: 8,
                 kv_pages: 1024,
                 kv_page_size: 16,
+                ..ServerConfig::default()
             },
             EngineConfig {
                 verifier: VerifierKind::Gls,
@@ -211,6 +219,48 @@ mod tests {
         assert!(
             pooled.metrics.panel_cache_hits > 0,
             "panel handoff never fired through the serving stack"
+        );
+    }
+
+    #[test]
+    fn shared_and_per_engine_pool_scopes_serve_identical_tokens() {
+        // The server-global pool is a pure execution-topology change:
+        // every request's tokens must be bit-identical across
+        // pool_scope = server / engine and the serial oracle.
+        use crate::coordinator::config::{PoolScope, VerifyBackend};
+        let (sc, ec) = cfgs();
+        let workload: Vec<(Vec<u32>, usize)> =
+            (0..12).map(|i| (vec![i as u32, 5], 14)).collect();
+        let run = |scope: PoolScope, backend: VerifyBackend| {
+            let sc = ServerConfig { pool_scope: scope, ..sc.clone() };
+            let ec = EngineConfig {
+                parallel_threshold: 0,
+                verify_workers: 2,
+                verify_backend: backend,
+                ..ec.clone()
+            };
+            Server::serve_all(
+                &sc,
+                &ec,
+                RoutingPolicy::RoundRobin,
+                |_| {
+                    let (d, t) = SimLm::pair(32, 17, 1.5);
+                    ModelPair::new(Box::new(d), Box::new(t))
+                },
+                workload.clone(),
+            )
+        };
+        let shared = run(PoolScope::Server, VerifyBackend::Pool);
+        let per_engine = run(PoolScope::Engine, VerifyBackend::Pool);
+        let serial = run(PoolScope::Server, VerifyBackend::Serial);
+        for ((a, b), c) in shared.results.iter().zip(&per_engine.results).zip(&serial.results) {
+            assert_eq!(a.tokens, b.tokens, "request {} diverged across pool scopes", a.id);
+            assert_eq!(a.tokens, c.tokens, "request {} diverged from serial", a.id);
+            assert!(!a.failed);
+        }
+        assert!(
+            shared.metrics.panel_cache_hits > 0,
+            "panel handoff never fired through the shared pool"
         );
     }
 

@@ -74,6 +74,18 @@
 //!    per merged row — [`CouplingWorkspace::panel_cache_hits`] is the
 //!    observable the engine aggregates into its metrics and tests assert
 //!    on.
+//! 5. **Recycle.** `adopt_panel_slice` hands the spent container back:
+//!    the recorded rows move into the cache and the buffers they displace
+//!    come back inside the same [`PanelSlice`] as *spare* row capacity.
+//!    The consumer ships the spent slice to the recording engine's
+//!    [`SliceRecycler`] (an mpsc return channel; each verify job carries
+//!    the sender), where the next block's [`SliceRecycler::lease`] hands
+//!    it back to the draft phase. [`PanelSlice::record_race`] pops spare
+//!    rows before allocating, so steady-state draft-phase recording makes
+//!    **no heap allocations** — the cross-thread equivalent of the old
+//!    in-workspace warm path. Recycling moves only buffer *capacity*,
+//!    never recorded values; a lost or late return degrades to a fresh
+//!    allocation, not a wrong panel.
 //!
 //! A hit can never change an outcome — key equality implies variate
 //! equality — so the handoff is a pure perf transport; adversarial slices
@@ -152,7 +164,7 @@ use std::cell::RefCell;
 use crate::stats::rng::CounterRng;
 
 use super::gls::{BilateralOutcome, GlsOutcome};
-use super::types::{BlockInput, BlockOutput, Categorical, VerifierKind};
+use super::types::{BlockInput, BlockOutput, Categorical, VerifierKind, FAULT_MARKER_TOKEN};
 
 /// Capacity of the draft-phase panel cache (ring replacement). Sized to
 /// hold a few blocks' worth of `(slot, lane)` rows; eviction only costs
@@ -162,7 +174,7 @@ const PANEL_CACHE_CAP: usize = 128;
 /// One memoized `(slot, draft)` row of exponentials: `values[j]` is the
 /// Exp(1) variate at item `items[j]` (ascending) for the lane identified
 /// by `key` ([`crate::stats::rng::CounterLane::key`]).
-#[derive(Debug)]
+#[derive(Debug, Default)]
 struct CacheEntry {
     key: u64,
     items: Vec<u32>,
@@ -219,11 +231,14 @@ impl PanelCache {
 
     /// Install an externally recorded row (the panel-slice handoff),
     /// swapping its buffers into a (possibly recycled) cache entry — no
-    /// re-hash, no copy of the variates.
-    fn adopt(&mut self, mut row: CacheEntry) {
+    /// re-hash, no copy of the variates. Returns the displaced buffers
+    /// (the entry's previous allocation, or empty on a cold entry) so the
+    /// caller can recycle them back to the recording side.
+    fn adopt(&mut self, mut row: CacheEntry) -> CacheEntry {
         let e = self.begin(row.key);
         std::mem::swap(&mut e.items, &mut row.items);
         std::mem::swap(&mut e.values, &mut row.values);
+        row
     }
 }
 
@@ -239,21 +254,25 @@ impl PanelCache {
 /// variates are pure functions of `(key, item)`, so shipping them across
 /// threads needs no synchronization and cannot change any outcome.
 ///
-/// Cost note: recording allocates one exact-sized buffer pair per `(slot,
-/// draft)` row — the same order as the `Categorical` the draft step
-/// builds anyway, but (unlike the recycled in-workspace cache buffers of
-/// [`CouplingWorkspace::sample_race`]) not reused across blocks, since
-/// adopted buffers end their life on the consuming worker. A return
-/// channel recycling spent slices to the engine is a noted ROADMAP
-/// follow-up.
+/// Cost note: recording pops a *spare* row (buffers recycled through the
+/// [`SliceRecycler`] return channel — see the module docs, step 5 of the
+/// handoff protocol) before allocating, so once returns flow, draft-phase
+/// recording is allocation-free in steady state like the in-workspace warm
+/// path of [`CouplingWorkspace::sample_race`]. A cold slice (no spares
+/// yet) allocates one exact-sized buffer pair per `(slot, draft)` row —
+/// the same order as the `Categorical` the draft step builds anyway.
 #[derive(Debug, Default)]
 pub struct PanelSlice {
+    /// Recorded `(slot, draft)` rows awaiting adoption.
     rows: Vec<CacheEntry>,
+    /// Recycled row buffers (cleared-but-capacitated) awaiting reuse by
+    /// [`PanelSlice::record_race`].
+    spare: Vec<CacheEntry>,
 }
 
 impl PanelSlice {
     pub fn new() -> Self {
-        Self { rows: Vec::new() }
+        Self { rows: Vec::new(), spare: Vec::new() }
     }
 
     #[inline]
@@ -267,6 +286,22 @@ impl PanelSlice {
         self.rows.len()
     }
 
+    /// Spare (recycled) row buffers available for reuse — observability
+    /// for the recycling channel; correctness never depends on it.
+    #[inline]
+    pub fn spare_len(&self) -> usize {
+        self.spare.len()
+    }
+
+    /// Demote any recorded rows to spares (dropping their contents but
+    /// keeping the buffers). Called when a leased slice is reused before
+    /// its rows were adopted — recorded values are only ever consumed via
+    /// [`CouplingWorkspace::adopt_panel_slice`], so this cannot lose data
+    /// a verifier still needs.
+    fn recycle_rows(&mut self) {
+        self.spare.append(&mut self.rows);
+    }
+
     /// Draft-phase Gumbel-max race that records the evaluated exponentials
     /// as a slice row — bit-exact with [`Categorical::sample_race`] (same
     /// visit order, same strict-`<` tie-breaking, identical variates), and
@@ -274,14 +309,16 @@ impl PanelSlice {
     /// thread's own cache instead).
     pub fn record_race(&mut self, d: &Categorical, rng: &CounterRng, slot: u64, draft: u64) -> usize {
         let lane = rng.lane(slot, draft);
-        // Exact-size rows (top-k supports are known): one allocation per
-        // buffer, no push-growth realloc on the draft hot path.
+        // Exact-size rows (top-k supports are known): reuse a recycled
+        // buffer pair when one is spare, else one allocation per buffer —
+        // no push-growth realloc on the draft hot path either way.
         let cap = d.support().map_or(d.len(), |s| s.len());
-        let mut row = CacheEntry {
-            key: lane.key(),
-            items: Vec::with_capacity(cap),
-            values: Vec::with_capacity(cap),
-        };
+        let mut row = self.spare.pop().unwrap_or_default();
+        row.key = lane.key();
+        row.items.clear();
+        row.values.clear();
+        row.items.reserve(cap);
+        row.values.reserve(cap);
         let mut best = f64::INFINITY;
         let mut arg = 0usize;
         let mut consider = |i: usize, p: f64| {
@@ -311,6 +348,64 @@ impl PanelSlice {
         }
         self.rows.push(row);
         arg
+    }
+}
+
+/// Engine-side lease/return endpoint of the panel-slice recycling channel
+/// (step 5 of the handoff protocol — see the module docs).
+///
+/// The recording engine owns one recycler. Per block it [`lease`]s one
+/// slice per sequence; every verify job carries a [`return_sender`] clone,
+/// and whichever workspace consumes the job (engine thread or pool worker)
+/// sends the spent slice back after [`CouplingWorkspace::adopt_panel_slice`].
+/// Returns are best-effort by design: a dropped receiver or an unreturned
+/// slice only costs a fresh allocation on the next lease.
+///
+/// [`lease`]: SliceRecycler::lease
+/// [`return_sender`]: SliceRecycler::return_sender
+pub struct SliceRecycler {
+    tx: std::sync::mpsc::Sender<PanelSlice>,
+    rx: std::sync::mpsc::Receiver<PanelSlice>,
+    /// Leases served from returned slices since the last drain.
+    recycled: u64,
+}
+
+impl Default for SliceRecycler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SliceRecycler {
+    pub fn new() -> Self {
+        let (tx, rx) = std::sync::mpsc::channel();
+        Self { tx, rx, recycled: 0 }
+    }
+
+    /// Hand out a slice for draft-phase recording: a returned (spent) one
+    /// when available — its spare buffers make `record_race`
+    /// allocation-free — else a fresh empty slice.
+    pub fn lease(&mut self) -> PanelSlice {
+        match self.rx.try_recv() {
+            Ok(mut slice) => {
+                slice.recycle_rows();
+                self.recycled += 1;
+                slice
+            }
+            Err(_) => PanelSlice::new(),
+        }
+    }
+
+    /// A return-channel handle for a verify job to ship its spent slice
+    /// back on (cheap clone; sends from any thread).
+    pub fn return_sender(&self) -> std::sync::mpsc::Sender<PanelSlice> {
+        self.tx.clone()
+    }
+
+    /// Take and reset the recycled-lease counter (the engine aggregates it
+    /// into `EngineMetrics::panel_slices_recycled` once per block).
+    pub fn drain_recycled(&mut self) -> u64 {
+        std::mem::take(&mut self.recycled)
     }
 }
 
@@ -677,11 +772,18 @@ impl CouplingWorkspace {
     /// this workspace's panel cache — step 3 of the handoff protocol (see
     /// module docs). Buffers are moved, not copied; subsequent races at
     /// the recorded `(slot, lane)` coordinates merge from the cache.
-    pub fn adopt_panel_slice(&mut self, slice: PanelSlice) {
+    ///
+    /// Returns the spent container: its recorded rows have moved into the
+    /// cache, and the buffers they displaced ride back as spare capacity —
+    /// ship it to the recording engine's [`SliceRecycler`] (step 5) so the
+    /// next block's draft-phase recording reuses the allocations.
+    pub fn adopt_panel_slice(&mut self, mut slice: PanelSlice) -> PanelSlice {
         self.cache.ensure_capacity(slice.rows.len());
-        for row in slice.rows {
-            self.cache.adopt(row);
+        for row in slice.rows.drain(..) {
+            let displaced = self.cache.adopt(row);
+            slice.spare.push(displaced);
         }
+        slice
     }
 
     /// Panel rows served from the cache (draft-phase reuse) since the
@@ -717,6 +819,20 @@ impl CouplingWorkspace {
             VerifierKind::SpecTr => self.verify_block_spectr(input, rng, slot0),
             VerifierKind::SingleDraft => self.verify_block_single_draft(input, rng, slot0),
             VerifierKind::Daliri => self.verify_block_daliri(input, rng, slot0),
+            VerifierKind::FaultInjection => {
+                // Test-only: panic when the whole block is the marker token
+                // (the panic-injection suites rig a point-mass draft model
+                // to produce exactly that), else behave as GLS. The marker
+                // condition requires EVERY drafted position so an honest
+                // model can't trip it by chance.
+                let all_marker = input.draft_dists.iter().enumerate().all(|(lane, dd)| {
+                    (0..dd.len()).all(|j| input.draft_tokens[lane][j] == FAULT_MARKER_TOKEN)
+                });
+                if all_marker {
+                    panic!("injected verification fault (VerifierKind::FaultInjection marker block)");
+                }
+                self.verify_block_gls(input, rng, slot0, false)
+            }
         }
     }
 
@@ -1607,6 +1723,42 @@ mod tests {
     }
 
     #[test]
+    fn slice_recycling_round_trip_is_bit_exact_and_reuses_buffers() {
+        // Step 5 of the handoff protocol: lease → record → adopt → return
+        // → lease again. Recycled-buffer recording must stay bit-exact
+        // with a fresh slice AND with the plain race, and the second lease
+        // must actually come from the return channel with spare capacity.
+        let mut gen = XorShift128::new(0x4EC1);
+        let mut recycler = SliceRecycler::new();
+        let mut ws = CouplingWorkspace::new();
+        let rng = CounterRng::new(0x715);
+        let l = 5usize;
+        for round in 0..4u64 {
+            let p: Vec<Categorical> =
+                (0..l).map(|_| testkit::gen_sparse_categorical(&mut gen, 60, 8)).collect();
+            let mut slice = recycler.lease();
+            if round > 0 {
+                assert!(
+                    slice.spare_len() >= l,
+                    "round {round}: leased slice carries no recycled buffers"
+                );
+            }
+            for (j, d) in p.iter().enumerate() {
+                let slot = round * l as u64 + j as u64;
+                let tok = slice.record_race(d, &rng, slot, 0);
+                assert_eq!(tok, d.sample_race(&rng, slot, 0), "round {round} slot {slot}");
+            }
+            assert_eq!(slice.len(), l);
+            let spent = ws.adopt_panel_slice(slice);
+            assert!(spent.is_empty(), "adopt must consume every recorded row");
+            assert_eq!(spent.spare_len(), l, "one displaced buffer pair per adopted row");
+            recycler.return_sender().send(spent).expect("receiver alive");
+        }
+        assert_eq!(recycler.drain_recycled(), 3, "rounds 1..=3 lease recycled slices");
+        assert_eq!(recycler.drain_recycled(), 0, "drain must reset");
+    }
+
+    #[test]
     fn verify_block_kind_matches_direct_methods() {
         let mut gen = XorShift128::new(0xD15);
         for seed in 0..10u64 {
@@ -1640,6 +1792,9 @@ mod tests {
                         b.verify_block_single_draft(&input, &rng, seed)
                     }
                     VerifierKind::Daliri => b.verify_block_daliri(&input, &rng, seed),
+                    VerifierKind::FaultInjection => {
+                        unreachable!("test-only kind is not in VerifierKind::all()")
+                    }
                 };
                 assert_eq!(via_kind, direct, "seed {seed} kind {kind:?}");
             }

@@ -30,7 +30,7 @@ pub mod spectr;
 pub mod specinfer;
 pub mod types;
 
-pub use kernel::{CouplingWorkspace, PanelSlice};
+pub use kernel::{CouplingWorkspace, PanelSlice, SliceRecycler};
 pub use types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, TokenMatrix, VerifierKind,
 };
@@ -45,6 +45,10 @@ pub fn make_verifier(kind: VerifierKind) -> Box<dyn BlockVerifier + Send + Sync>
         VerifierKind::SpecTr => Box::new(spectr::SpecTrVerifier::new()),
         VerifierKind::SingleDraft => Box::new(single_draft::SingleDraftVerifier::new()),
         VerifierKind::Daliri => Box::new(daliri::DaliriVerifier::new()),
+        VerifierKind::FaultInjection => panic!(
+            "FaultInjection is test-only and runs exclusively through \
+             CouplingWorkspace::verify_block_kind (it has no production verifier)"
+        ),
     }
 }
 

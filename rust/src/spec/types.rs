@@ -277,7 +277,26 @@ pub enum VerifierKind {
     SingleDraft,
     /// Daliri et al. single-draft Gumbel-max coupling.
     Daliri,
+    /// Test-only fault injector for the serving runtime's panic-recovery
+    /// suites: behaves as [`VerifierKind::Gls`] unless *every* draft token
+    /// of the block equals [`FAULT_MARKER_TOKEN`], in which case
+    /// verification panics. Deliberately excluded from
+    /// [`VerifierKind::all`] (and therefore from the config parser and the
+    /// conformance/parity registries) — production code can never select
+    /// it by accident.
+    FaultInjection,
 }
+
+/// Draft-token value that arms [`VerifierKind::FaultInjection`] when a
+/// block consists of nothing else. Tests rig a point-mass draft model on
+/// this token (`testkit::PoisonDraft`); requiring *every* one of the
+/// block's `K × L` drafted positions keeps stochastic models from tripping
+/// it by chance. Caveat: `0` is an ordinary, legitimate token id, so a
+/// degenerate draft model that deterministically emits token 0 (a point
+/// mass or near-zero temperature favoring it) WILL arm the fault — only
+/// pair `FaultInjection` with models whose token-0 probability is
+/// unexceptional, or rig the marker deliberately as `PoisonDraft` does.
+pub const FAULT_MARKER_TOKEN: u32 = 0;
 
 impl VerifierKind {
     pub fn all() -> &'static [VerifierKind] {
@@ -299,6 +318,7 @@ impl VerifierKind {
             VerifierKind::SpecTr => "spectr",
             VerifierKind::SingleDraft => "single-draft",
             VerifierKind::Daliri => "daliri",
+            VerifierKind::FaultInjection => "fault-injection",
         }
     }
 

@@ -7,6 +7,7 @@
 //! reports the failing seed for reproduction. No shrinking — failures print
 //! the full case, which is small for our domains.
 
+use crate::model::backend::LmBackend;
 use crate::spec::types::Categorical;
 use crate::stats::rng::XorShift128;
 
@@ -219,4 +220,57 @@ mod tests {
             assert!(toks.iter().all(|&t| (t as usize) < 64));
         }
     }
+}
+
+/// Draft backend that emits a point mass on [`FAULT_MARKER_TOKEN`] for any
+/// context containing an (ideally out-of-vocab) `trigger` token, and the
+/// wrapped [`SimLm`] otherwise — the standard rig for driving
+/// `VerifierKind::FaultInjection` through engines, schedulers, and servers:
+/// poisoned *requests* (prompt carries the trigger) panic their verify
+/// jobs while every other request drafts honestly.
+///
+/// [`FAULT_MARKER_TOKEN`]: crate::spec::types::FAULT_MARKER_TOKEN
+/// [`SimLm`]: crate::model::sim::SimLm
+pub struct PoisonDraft {
+    pub inner: crate::model::sim::SimLm,
+    pub trigger: u32,
+}
+
+impl LmBackend for PoisonDraft {
+    fn vocab(&self) -> usize {
+        self.inner.vocab()
+    }
+
+    fn next_logits(&mut self, seqs: &[Vec<u32>]) -> Vec<Vec<f32>> {
+        let base = self.inner.next_logits(seqs);
+        seqs.iter()
+            .zip(base)
+            .map(|(s, row)| {
+                if s.contains(&self.trigger) {
+                    let mut l = vec![-1e9f32; row.len()];
+                    l[crate::spec::types::FAULT_MARKER_TOKEN as usize] = 0.0;
+                    l
+                } else {
+                    row
+                }
+            })
+            .collect()
+    }
+
+    fn span_logits(&mut self, seqs: &[Vec<u32>], start: usize) -> Vec<Vec<Vec<f32>>> {
+        self.inner.span_logits(seqs, start)
+    }
+}
+
+/// Live thread count of this process from `/proc/self/status` (Linux — the
+/// CI and container platform). `None` elsewhere or on parse failure; census
+/// consumers (the `tests/pool_shared.rs` suite, the `perf_engine` L3e
+/// bench, and CI's gate on its JSON output) must treat `None`/sentinel as
+/// "skip the census assertion", never as zero threads.
+pub fn thread_census() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
 }

@@ -650,6 +650,68 @@ mod pool_grid {
         }
     }
 
+    /// Server-global pool extension of the grid: several engines sharing
+    /// ONE `VerifyPool` (the `pool_scope = server` topology), each stepped
+    /// across blocks, must every one be bit-exact with its own serial
+    /// twin — ticket isolation means sharing can never mix or alter
+    /// outcomes, for every registered verifier.
+    #[test]
+    fn shared_pool_across_engines_is_bit_exact_with_serial() {
+        use gls_serve::coordinator::VerifyPool;
+        use std::sync::Arc;
+        for &vk in VerifierKind::all() {
+            let shape = &SHAPES[1]; // multi-seq, fan-out forced
+            let pool = Arc::new(VerifyPool::new(2));
+            let n_engines = 3usize;
+            let mut shared_out: Vec<Vec<Vec<u32>>> = Vec::new();
+            for e in 0..n_engines {
+                // Distinct seeds per engine (the config seed is fixed, so
+                // vary the request ids → randomness lanes).
+                let mut eng = build(vk, shape, VerifyBackend::Pool, 2);
+                eng.attach_shared_pool(Arc::clone(&pool), e as u64);
+                let mut seqs: Vec<SequenceState> = (0..shape.n_seqs)
+                    .map(|i| {
+                        let id = e as u64 * 100 + i;
+                        SequenceState::from_request(&Request::new(id, vec![1, (i % 5) as u32], 9))
+                    })
+                    .collect();
+                for s in &seqs {
+                    eng.kv.register(s.id, s.tokens.len(), s.tokens.len() + 14, 4).unwrap();
+                }
+                for _ in 0..2 {
+                    let mut refs: Vec<&mut SequenceState> = seqs.iter_mut().collect();
+                    eng.step_blocks(&mut refs);
+                }
+                shared_out.push(seqs.into_iter().map(|s| s.tokens).collect());
+            }
+            for (e, shared) in shared_out.iter().enumerate() {
+                let mut eng = build(vk, shape, VerifyBackend::Serial, 0);
+                let mut seqs: Vec<SequenceState> = (0..shape.n_seqs)
+                    .map(|i| {
+                        let id = e as u64 * 100 + i;
+                        SequenceState::from_request(&Request::new(id, vec![1, (i % 5) as u32], 9))
+                    })
+                    .collect();
+                for s in &seqs {
+                    eng.kv.register(s.id, s.tokens.len(), s.tokens.len() + 14, 4).unwrap();
+                }
+                for _ in 0..2 {
+                    let mut refs: Vec<&mut SequenceState> = seqs.iter_mut().collect();
+                    eng.step_blocks(&mut refs);
+                }
+                let serial: Vec<Vec<u32>> = seqs.into_iter().map(|s| s.tokens).collect();
+                assert_eq!(
+                    *shared, serial,
+                    "{vk:?}: engine {e} diverged on the shared pool"
+                );
+            }
+            // Every engine's submissions were attributed to its own tag.
+            for e in 0..n_engines {
+                assert!(pool.engine_stats(e as u64).jobs > 0, "{vk:?}: engine {e} untracked");
+            }
+        }
+    }
+
     /// Cache-handoff acceptance: worker-verified panels must match
     /// serially-verified ones AND the pooled engine must report draft-phase
     /// panel reuse actually firing on its workers (the counter the

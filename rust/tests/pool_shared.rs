@@ -1,0 +1,206 @@
+//! Server-global verify-pool integration suite: many router workers
+//! submitting concurrent batches through ONE shared `VerifyPool` for many
+//! blocks must (a) emit bit-exactly the tokens the serial oracle emits,
+//! (b) keep the process's thread count flat — verify threads scale with
+//! the pool size, not `workers × verify_workers` — and (c) contain
+//! verification faults to the offending request.
+
+use std::sync::Arc;
+
+use gls_serve::coordinator::config::{PoolScope, VerifyBackend};
+use gls_serve::coordinator::router::{Router, RoutingPolicy};
+use gls_serve::coordinator::sequence::{Request, RequestResult};
+use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::model::backend::ModelPair;
+use gls_serve::model::sim::SimLm;
+use gls_serve::spec::types::VerifierKind;
+// Census (None off-Linux → assertions skipped, bit-exactness ones never
+// are) and the poisoned draft rig are shared with the unit suites and the
+// perf bench through testkit.
+use gls_serve::testkit::{thread_census, PoisonDraft};
+
+const WORKERS: usize = 4;
+const VERIFY_WORKERS: usize = 3;
+
+fn serve_cfgs(scope: PoolScope, backend: VerifyBackend) -> (ServerConfig, EngineConfig) {
+    let sc = ServerConfig {
+        workers: WORKERS,
+        max_batch: 8,
+        batch_deadline: std::time::Duration::from_millis(1),
+        max_running: 16,
+        kv_pages: 4096,
+        kv_page_size: 16,
+        pool_scope: scope,
+    };
+    let ec = EngineConfig {
+        verifier: VerifierKind::Gls,
+        num_drafts: 3,
+        block_len: 4,
+        max_seq_len: 256,
+        // Force fan-out on every multi-sequence batch so the pools (shared
+        // or per-engine) actually carry the verification load.
+        parallel_threshold: 0,
+        verify_workers: VERIFY_WORKERS,
+        verify_backend: backend,
+        ..EngineConfig::default()
+    };
+    (sc, ec)
+}
+
+fn sim_pair(_w: usize) -> ModelPair {
+    let (d, t) = SimLm::pair(64, 41, 2.0);
+    ModelPair::new(Box::new(d), Box::new(t))
+}
+
+/// Run a workload through a router, sampling the thread census while the
+/// run is in flight. Returns (results sorted by id, max census observed).
+fn serve_with_census(
+    sc: &ServerConfig,
+    ec: &EngineConfig,
+    n_requests: u64,
+    max_new: usize,
+) -> (Vec<RequestResult>, Option<usize>) {
+    let mut router = Router::start(sc, ec, RoutingPolicy::RoundRobin, sim_pair);
+    for i in 0..n_requests {
+        router.submit(Request::new(i, vec![1, (i % 7) as u32], max_new));
+    }
+    let mut results = Vec::with_capacity(n_requests as usize);
+    let mut peak = thread_census();
+    while results.len() < n_requests as usize {
+        match router.results_rx.recv_timeout(std::time::Duration::from_millis(5)) {
+            Ok(res) => results.push(res),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(e) => panic!("worker dropped: {e}"),
+        }
+        if let (Some(p), Some(now)) = (peak, thread_census()) {
+            peak = Some(p.max(now));
+        }
+    }
+    router.shutdown();
+    results.sort_by_key(|r| r.id);
+    (results, peak)
+}
+
+#[test]
+fn shared_pool_stress_bit_exact_and_thread_flat() {
+    let n_requests = 32u64;
+    let max_new = 40; // ~8 blocks per sequence: many blocks per worker
+    let baseline = thread_census();
+
+    // --- Server-global shared pool. ---------------------------------------
+    let (sc_shared, ec_pool) = serve_cfgs(PoolScope::Server, VerifyBackend::Pool);
+    let (shared, shared_peak) = serve_with_census(&sc_shared, &ec_pool, n_requests, max_new);
+
+    // --- Per-engine pools (the PR 4 topology). ----------------------------
+    let mid = thread_census();
+    let (sc_engine, _) = serve_cfgs(PoolScope::Engine, VerifyBackend::Pool);
+    let (per_engine, engine_peak) = serve_with_census(&sc_engine, &ec_pool, n_requests, max_new);
+
+    // --- Serial oracle. ---------------------------------------------------
+    let (sc_serial, ec_serial) = serve_cfgs(PoolScope::Server, VerifyBackend::Serial);
+    let (serial, _) = serve_with_census(&sc_serial, &ec_serial, n_requests, max_new);
+
+    // Bit-exactness across execution topologies: RoundRobin gives every
+    // run the identical request→worker assignment, and verification is a
+    // pure function of the per-sequence randomness lane.
+    assert_eq!(shared.len(), serial.len());
+    for ((a, b), c) in shared.iter().zip(&per_engine).zip(&serial) {
+        assert_eq!(a.id, c.id);
+        assert!(!a.failed && !b.failed && !c.failed);
+        assert_eq!(a.tokens, c.tokens, "request {}: shared pool diverged from serial", a.id);
+        assert_eq!(b.tokens, c.tokens, "request {}: per-engine pool diverged from serial", b.id);
+    }
+
+    // Thread census (Linux): the shared-pool server runs on
+    // `workers + pool` threads; per-engine pooling spawns a pool per
+    // worker. The margin (workers × verify − verify = 8 threads at this
+    // shape) dwarfs harness noise from concurrently running tests.
+    if let (Some(base), Some(sp), Some(m), Some(ep)) = (baseline, shared_peak, mid, engine_peak) {
+        let shared_delta = sp.saturating_sub(base);
+        let engine_delta = ep.saturating_sub(m);
+        assert!(
+            shared_delta <= WORKERS + VERIFY_WORKERS + 8,
+            "shared-pool serving grew {shared_delta} threads (> workers {WORKERS} + pool {VERIFY_WORKERS} + slack)"
+        );
+        assert!(
+            engine_delta >= shared_delta + 2,
+            "per-engine pools ({engine_delta} new threads) should exceed the \
+             shared pool ({shared_delta}) by at least the de-duplicated pool threads"
+        );
+    }
+}
+
+#[test]
+fn shared_pool_has_no_thread_growth_across_blocks() {
+    // The shared pool spawns eagerly at Router::start; decoding many
+    // blocks afterwards must not create any further threads (the old
+    // scoped-spawn path spawned per block).
+    let (sc, ec) = serve_cfgs(PoolScope::Server, VerifyBackend::Pool);
+    let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+    let after_start = thread_census();
+    for i in 0..24u64 {
+        router.submit(Request::new(i, vec![2, (i % 5) as u32], 30));
+    }
+    let mut peak = thread_census();
+    for _ in 0..24 {
+        let res = router.results_rx.recv().expect("worker alive");
+        assert!(!res.failed);
+        if let (Some(p), Some(now)) = (peak, thread_census()) {
+            peak = Some(p.max(now));
+        }
+    }
+    let pool = Arc::clone(router.verify_pool().expect("server-global pool"));
+    router.shutdown();
+    if let (Some(start), Some(p)) = (after_start, peak) {
+        assert!(
+            p <= start + 2,
+            "thread count grew from {start} to {p} while serving (should be flat)"
+        );
+    }
+    // All four workers verified through the one pool.
+    let active: usize = (0..WORKERS as u64)
+        .filter(|&w| pool.engine_stats(w).jobs > 0)
+        .count();
+    assert_eq!(active, WORKERS, "not every router worker used the shared pool");
+}
+
+#[test]
+fn faulting_requests_fail_alone_through_the_shared_pool() {
+    // Poisoned requests panic their verify jobs on the shared pool's
+    // workers; the pool and every honest request (including ones from the
+    // same worker's batches) must be unaffected.
+    let trigger = 9_999u32;
+    let (sc, mut ec) = serve_cfgs(PoolScope::Server, VerifyBackend::Pool);
+    ec.verifier = VerifierKind::FaultInjection; // GLS + marker-triggered panic
+    let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, |_| {
+        let (d, t) = SimLm::pair(64, 41, 2.0);
+        ModelPair::new(Box::new(PoisonDraft { inner: d, trigger }), Box::new(t))
+    });
+    let n = 12u64;
+    let poisoned = [3u64, 7u64];
+    for i in 0..n {
+        let prompt = if poisoned.contains(&i) { vec![trigger] } else { vec![1, (i % 7) as u32] };
+        router.submit(Request::new(i, prompt, 16));
+    }
+    let mut results: Vec<RequestResult> = (0..n)
+        .map(|_| router.results_rx.recv().expect("a fault must never kill a worker"))
+        .collect();
+    let pool = Arc::clone(router.verify_pool().expect("server-global pool"));
+    let metrics = router.shutdown();
+    results.sort_by_key(|r| r.id);
+    for r in &results {
+        if poisoned.contains(&r.id) {
+            assert!(r.failed, "poisoned request {} did not fail", r.id);
+            assert_eq!(r.tokens, vec![trigger], "request {} emitted past the fault", r.id);
+        } else {
+            assert!(!r.failed, "honest request {} failed", r.id);
+            assert_eq!(r.tokens.len(), 2 + 16, "honest request {} truncated", r.id);
+        }
+    }
+    // Exactly one contained fault per poisoned request (counted on
+    // whichever path — pool worker or engine-thread serial fallback for a
+    // one-sequence batch — ran the job).
+    assert_eq!(metrics.verify_faults, poisoned.len() as u64, "engine fault accounting");
+    let pool_faults: u64 = (0..WORKERS as u64).map(|w| pool.engine_stats(w).faults).sum();
+    assert!(pool_faults <= poisoned.len() as u64, "pool fault over-count");
+}
