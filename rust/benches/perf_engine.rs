@@ -538,6 +538,7 @@ fn main() {
                 parallel_threshold: 0,
                 verify_workers,
                 verify_backend: VerifyBackend::Pool,
+                ..EngineConfig::default()
             };
             let n_req = 12 * workers as u64;
             let max_new = 40usize;

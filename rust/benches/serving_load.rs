@@ -1,0 +1,157 @@
+//! Serving-load bench: replay the `workload::drills` scenarios against
+//! the full serving stack and report goodput, per-token latency
+//! quantiles (p95/p99) and TTFT (p50/p95) per scenario.
+//!
+//! Results land in `BENCH_perf.json` (override with `BENCH_PERF_JSON`)
+//! under `"section":"serving-load"` entries plus `serving_load_*` summary
+//! keys; CI's serving-load job gates the no-fault goodput baseline, the
+//! quantile ordering, the scripted failure counts, and the flat thread
+//! census. The writer merges into an existing `BENCH_perf.json` (e.g.
+//! one `perf_engine` just wrote), replacing only its own stale
+//! serving-load entries, so the two benches can share one perf log.
+//!
+//! `GLS_BENCH_QUICK=1` shrinks every drill to 16 requests.
+
+use gls_serve::bench::Table;
+use gls_serve::workload::{Drill, Scenario};
+
+/// Merging JSON sink: same trivial schema as the `perf_engine` writer
+/// (hand-rolled — no serde offline), but it first re-reads the log and
+/// keeps every entry / summary key that is not ours.
+struct MergingPerfJson {
+    path: String,
+    entries: Vec<String>,
+    /// Raw `"key":value` summary items (kept raw to avoid reparsing
+    /// floats written by the other bench).
+    summary: Vec<String>,
+}
+
+const ENTRIES_MARK: &str = "\"entries\":[\n";
+const SUMMARY_MARK: &str = "\n],\n\"summary\":{";
+
+impl MergingPerfJson {
+    fn load() -> Self {
+        let path = std::env::var("BENCH_PERF_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
+        let mut entries = Vec::new();
+        let mut summary = Vec::new();
+        if let Ok(doc) = std::fs::read_to_string(&path) {
+            if let (Some(es), Some(ss)) = (doc.find(ENTRIES_MARK), doc.find(SUMMARY_MARK)) {
+                let body = &doc[es + ENTRIES_MARK.len()..ss];
+                entries.extend(
+                    body.split(",\n")
+                        .map(str::trim)
+                        .filter(|e| !e.is_empty())
+                        .filter(|e| !e.contains("\"section\":\"serving-load\""))
+                        .map(String::from),
+                );
+                let rest = &doc[ss + SUMMARY_MARK.len()..];
+                if let Some(end) = rest.find('}') {
+                    summary.extend(
+                        rest[..end]
+                            .split(',')
+                            .map(str::trim)
+                            .filter(|s| !s.is_empty())
+                            .filter(|s| !s.starts_with("\"serving_load_"))
+                            .map(String::from),
+                    );
+                }
+            }
+        }
+        Self { path, entries, summary }
+    }
+
+    fn metric(&mut self, key: &str, value: f64) {
+        self.summary.push(format!("\"{key}\":{value:.3}"));
+    }
+
+    fn write(&self) {
+        let doc = format!(
+            "{{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n{}\n],\n\"summary\":{{{}}}\n}}\n",
+            self.entries.join(",\n"),
+            self.summary.join(",")
+        );
+        match std::fs::write(&self.path, doc) {
+            Ok(()) => println!("\nwrote {}", self.path),
+            Err(e) => eprintln!("\nfailed to write {}: {e}", self.path),
+        }
+    }
+}
+
+fn main() {
+    let quick = std::env::var("GLS_BENCH_QUICK").is_ok();
+    let seed = 0xD811u64;
+    let mut json = MergingPerfJson::load();
+    let mut table = Table::new(&[
+        "scenario", "goodput tok/s", "p95 tok ms", "p99 tok ms", "ttft p50 ms", "ttft p95 ms",
+        "failed", "threads",
+    ]);
+    println!(
+        "# Serving-load drills (seed {seed:#x}, {} requests/drill)\n",
+        if quick { 16 } else { 48 }
+    );
+    let mut goodput_no_fault = 0.0f64;
+    let mut goodput_storm = 0.0f64;
+    for sc in [Scenario::NoFault, Scenario::Bursty, Scenario::PanicStorm, Scenario::Straggler] {
+        let mut drill = Drill::new(sc, seed);
+        if quick {
+            drill.trace.requests.truncate(16);
+            drill.poisoned.retain(|&id| id < 16);
+        }
+        let out = drill.run();
+        let rep = &out.report;
+        let goodput = rep.goodput();
+        let p95_tok = rep.p95_token_latency() * 1e3;
+        let p99_tok = rep.p99_token_latency() * 1e3;
+        let ttft_p50 = rep.p50_ttft() * 1e3;
+        let ttft_p95 = rep.p95_ttft() * 1e3;
+        let failed = out.failed_ids().len();
+        let completed = rep.results.len();
+        // -1.0 = census unavailable (non-Linux); the CI gate skips then.
+        let threads = out.census_delta().map_or(-1.0, |d| d as f64);
+        match sc {
+            Scenario::NoFault => goodput_no_fault = goodput,
+            Scenario::PanicStorm => goodput_storm = goodput,
+            _ => {}
+        }
+        table.row(&[
+            sc.name().to_string(),
+            format!("{goodput:.0}"),
+            format!("{p95_tok:.2}"),
+            format!("{p99_tok:.2}"),
+            format!("{ttft_p50:.2}"),
+            format!("{ttft_p95:.2}"),
+            format!("{failed}"),
+            format!("{threads:.0}"),
+        ]);
+        json.entries.push(format!(
+            "{{\"section\":\"serving-load\",\"case\":\"{}\",\"goodput_tok_per_s\":{:.3},\
+             \"p95_token_ms\":{:.3},\"p99_token_ms\":{:.3},\"ttft_p50_ms\":{:.3},\
+             \"ttft_p95_ms\":{:.3},\"failed\":{},\"completed\":{},\"threads\":{:.0}}}",
+            sc.name(),
+            goodput,
+            p95_tok,
+            p99_tok,
+            ttft_p50,
+            ttft_p95,
+            failed,
+            completed,
+            threads
+        ));
+        let slug = sc.name().replace('-', "_");
+        json.metric(&format!("serving_load_goodput_tok_per_s_{slug}"), goodput);
+        json.metric(&format!("serving_load_p95_token_latency_ms_{slug}"), p95_tok);
+        json.metric(&format!("serving_load_p99_token_latency_ms_{slug}"), p99_tok);
+        json.metric(&format!("serving_load_ttft_p50_ms_{slug}"), ttft_p50);
+        json.metric(&format!("serving_load_ttft_p95_ms_{slug}"), ttft_p95);
+        json.metric(&format!("serving_load_failed_{slug}"), failed as f64);
+        json.metric(&format!("serving_load_threads_{slug}"), threads);
+    }
+    table.print();
+    if goodput_no_fault > 0.0 {
+        json.metric(
+            "serving_load_goodput_ratio_storm_vs_nofault",
+            goodput_storm / goodput_no_fault,
+        );
+    }
+    json.write();
+}

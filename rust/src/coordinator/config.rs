@@ -109,6 +109,15 @@ pub struct EngineConfig {
     pub verify_workers: usize,
     /// Parallel execution backend for verification jobs.
     pub verify_backend: VerifyBackend,
+    /// Resubmit verify jobs that fail on the pool once before failing
+    /// the sequence. Retries target *transient* faults — a worker dying
+    /// mid-ticket — where resubmission succeeds; a deterministic
+    /// verifier panic simply fails again and the sequence retires
+    /// `Failed` exactly as before (one extra contained pool fault, same
+    /// engine-side accounting). Off by default: the retry spares are
+    /// cloned job inputs on every pooled dispatch, so serving configs
+    /// opt in explicitly.
+    pub retry_transient_faults: bool,
 }
 
 impl Default for EngineConfig {
@@ -124,6 +133,7 @@ impl Default for EngineConfig {
             parallel_threshold: DEFAULT_PARALLEL_THRESHOLD,
             verify_workers: 0,
             verify_backend: VerifyBackend::Pool,
+            retry_transient_faults: false,
         }
     }
 }
@@ -274,6 +284,9 @@ pub fn parse_config(text: &str) -> Result<(EngineConfig, ServerConfig), String> 
                 ec.verify_backend =
                     VerifyBackend::parse(value).ok_or_else(|| err("unknown backend"))?
             }
+            "retry_transient_faults" => {
+                ec.retry_transient_faults = value.parse().map_err(|_| err("bad bool"))?
+            }
             "workers" => sc.workers = value.parse().map_err(|_| err("bad usize"))?,
             "max_batch" => sc.max_batch = value.parse().map_err(|_| err("bad usize"))?,
             "batch_deadline_ms" => {
@@ -385,6 +398,16 @@ mod tests {
         assert_eq!(ec.parallel_threshold, DEFAULT_PARALLEL_THRESHOLD);
         assert_eq!(ec.verify_workers, 0);
         assert_eq!(ec.verify_backend, VerifyBackend::Pool);
+    }
+
+    #[test]
+    fn parse_retry_transient_faults_key() {
+        let (ec, _) = parse_config("retry_transient_faults = true").unwrap();
+        assert!(ec.retry_transient_faults);
+        assert!(parse_config("retry_transient_faults = maybe").is_err());
+        // Default: off (retry spares cost clones on the hot path).
+        let (ec, _) = parse_config("").unwrap();
+        assert!(!ec.retry_transient_faults);
     }
 
     #[test]

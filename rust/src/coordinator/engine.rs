@@ -167,18 +167,36 @@ impl SpecDecodeEngine {
         // discards slices by design (the faithful pre-pool baseline), so
         // don't pay for recording them. `record_race` and `sample_race`
         // are bit-exact, so none of this ever changes a token.
-        let record_panels = matches!(
-            self.cfg.verifier,
-            VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
-        ) && !(parallel && self.cfg.verify_backend == VerifyBackend::Spawn);
-        let mut panels: Vec<PanelSlice> = if record_panels {
-            // Leased from the recycler: spent slices return from whichever
-            // workspace consumed them, so steady-state recording reuses
-            // their buffers instead of allocating.
-            (0..seqs.len()).map(|_| self.recycler.lease()).collect()
-        } else {
-            Vec::new()
-        };
+        // Per-sequence verifier kinds: a request override (mixed-verifier
+        // traces) or the engine default. Drafting stays batch-wide at the
+        // engine's effective K — kinds that consume fewer lanes ignore the
+        // extras, bit-exactly matching a dedicated engine at the same K.
+        let spawn_discard = parallel && self.cfg.verify_backend == VerifyBackend::Spawn;
+        let seq_kinds: Vec<VerifierKind> =
+            seqs.iter().map(|s| s.verifier.unwrap_or(self.cfg.verifier)).collect();
+        let records: Vec<bool> = seq_kinds
+            .iter()
+            .map(|kd| {
+                matches!(
+                    kd,
+                    VerifierKind::Gls | VerifierKind::GlsStrong | VerifierKind::Daliri
+                ) && !spawn_discard
+            })
+            .collect();
+        let any_record = records.iter().any(|&r| r);
+        let mut panels: Vec<PanelSlice> = records
+            .iter()
+            .map(|&r| {
+                if r {
+                    // Leased from the recycler: spent slices return from
+                    // whichever workspace consumed them, so steady-state
+                    // recording reuses their buffers instead of allocating.
+                    self.recycler.lease()
+                } else {
+                    PanelSlice::default()
+                }
+            })
+            .collect();
         self.metrics.panel_slices_recycled += self.recycler.drain_recycled();
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
@@ -204,7 +222,7 @@ impl SpecDecodeEngine {
                     // Coupled drafting: the same (slot, lane) coordinates
                     // the verifier will use — Alg. 2 line 4.
                     let slot = seq.next_slot + j as u64;
-                    let tok = if record_panels {
+                    let tok = if records[s] {
                         panels[s].record_race(&p, &seq_rngs[s], slot, lane as u64) as u32
                     } else {
                         p.sample_race(&seq_rngs[s], slot, lane as u64) as u32
@@ -246,16 +264,15 @@ impl SpecDecodeEngine {
         // panel slice handed to whichever workspace claims the job.
         let t2 = Instant::now();
         let tp = self.cfg.target_params;
-        let kind = self.cfg.verifier;
         let arena = Arc::new(arena);
-        let recycle_tx = if record_panels { Some(self.recycler.return_sender()) } else { None };
+        let recycle_tx = if any_record { Some(self.recycler.return_sender()) } else { None };
         let mut panels = panels.into_iter();
         let jobs: Vec<VerifyJob> = draft_dists
             .into_iter()
             .zip(target_logits)
             .enumerate()
             .map(|(s, (dd, tl))| VerifyJob {
-                kind,
+                kind: seq_kinds[s],
                 draft_tokens: TokenMatrix::view(Arc::clone(&arena), s * k * l, k, l),
                 draft_dists: dd,
                 target_logits: tl,
@@ -263,7 +280,7 @@ impl SpecDecodeEngine {
                 rng: seq_rngs[s],
                 slot0: seqs[s].next_slot,
                 panel: panels.next().unwrap_or_default(),
-                recycle: recycle_tx.clone(),
+                recycle: if records[s] { recycle_tx.clone() } else { None },
             })
             .collect();
 
@@ -295,6 +312,16 @@ impl SpecDecodeEngine {
             match self.cfg.verify_backend {
                 VerifyBackend::Pool => {
                     let tag = self.engine_tag;
+                    let retry = self.cfg.retry_transient_faults;
+                    // Retry spares are cloned *before* submission (the
+                    // originals are consumed by the pool); panel-free
+                    // clones are bit-exact, just cold. Cost is why the
+                    // policy is opt-in.
+                    let spares: Vec<VerifyJob> = if retry {
+                        jobs.iter().map(VerifyJob::clone_for_retry).collect()
+                    } else {
+                        Vec::new()
+                    };
                     let pool = self
                         .pool
                         .get_or_insert_with(|| Arc::new(VerifyPool::new(workers)));
@@ -302,7 +329,44 @@ impl SpecDecodeEngine {
                         Ok(batch) => {
                             (batch.outputs.into_iter().map(Some).collect(), batch.cache_hits)
                         }
-                        Err(PoolError::JobsPanicked { completed, cache_hits, .. }) => {
+                        Err(PoolError::JobsPanicked { failed, mut completed, mut cache_hits }) => {
+                            if retry && !failed.is_empty() {
+                                // Retry-once: resubmit exactly the failed
+                                // jobs. Transient faults (a worker dying
+                                // mid-ticket) succeed on the spare;
+                                // deterministic verifier panics fail again
+                                // and the sequence retires Failed as
+                                // before.
+                                let mut spares: Vec<Option<VerifyJob>> =
+                                    spares.into_iter().map(Some).collect();
+                                let retry_jobs: Vec<VerifyJob> = failed
+                                    .iter()
+                                    .map(|&i| spares[i].take().expect("spare per job"))
+                                    .collect();
+                                self.metrics.verify_retries += retry_jobs.len() as u64;
+                                match pool.run_batch(tag, retry_jobs) {
+                                    Ok(batch) => {
+                                        cache_hits += batch.cache_hits;
+                                        for (&i, out) in failed.iter().zip(batch.outputs) {
+                                            self.metrics.verify_retries_recovered += 1;
+                                            completed[i] = Some(out);
+                                        }
+                                    }
+                                    Err(PoolError::JobsPanicked {
+                                        completed: retried,
+                                        cache_hits: h2,
+                                        ..
+                                    }) => {
+                                        cache_hits += h2;
+                                        for (&i, out) in failed.iter().zip(retried) {
+                                            if out.is_some() {
+                                                self.metrics.verify_retries_recovered += 1;
+                                            }
+                                            completed[i] = out;
+                                        }
+                                    }
+                                }
+                            }
                             (completed, cache_hits)
                         }
                     }
@@ -338,6 +402,10 @@ impl SpecDecodeEngine {
             }
             let accepted = out.accepted.min(out.tokens.len());
 
+            if seq.generated() == 0 && !out.tokens.is_empty() {
+                // First generated token for this sequence: stamp TTFT.
+                seq.first_token_at = Some(seq.submitted_at.elapsed());
+            }
             seq.tokens.extend_from_slice(&out.tokens);
             seq.next_slot += (l + 1) as u64;
             seq.target_calls += 1;
@@ -373,6 +441,15 @@ impl SpecDecodeEngine {
         self.metrics.completed += 1;
         self.metrics.be.push(seq.block_efficiency());
         self.metrics.latency.record(seq.submitted_at.elapsed().as_secs_f64());
+        if let Some(t) = seq.first_token_at {
+            self.metrics.ttft.record(t.as_secs_f64());
+        }
+        let gen = seq.generated();
+        if gen > 0 {
+            self.metrics
+                .token_latency
+                .record(seq.submitted_at.elapsed().as_secs_f64() / gen as f64);
+        }
     }
 
     /// Direct autoregressive decoding from the target model (no drafts) —
@@ -487,7 +564,7 @@ mod tests {
             PagedKvCache::new(4096, 16),
         );
         for lane in 0..trials {
-            let req = Request { id: lane, prompt: vec![2, 7], max_new_tokens: 1, rng_lane: lane };
+            let req = Request::new(lane, vec![2, 7], 1);
             let mut seq = SequenceState::from_request(&req);
             eng.decode_sequence(&mut seq);
             counts_spec[seq.tokens[2] as usize] += 1;
@@ -536,6 +613,7 @@ mod tests {
                 parallel_threshold: 0,
                 verify_workers: workers,
                 verify_backend: backend,
+                ..EngineConfig::default()
             };
             SpecDecodeEngine::new(
                 cfg,
@@ -617,6 +695,7 @@ mod tests {
             parallel_threshold: 0,
             verify_workers: workers,
             verify_backend: backend,
+            ..EngineConfig::default()
         };
         SpecDecodeEngine::new(
             cfg,
@@ -677,6 +756,94 @@ mod tests {
         assert_eq!(seq.phase, SeqPhase::Failed);
         assert_eq!(seq.generated(), 0);
         assert_eq!(eng.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn per_request_verifier_override_matches_dedicated_engine() {
+        // A request-level override on a Gls engine must decode
+        // bit-identically to a dedicated engine of that kind with the
+        // same num_drafts: drafting is batch-wide at the host's K,
+        // single-draft kinds read only lane 0, and record_race /
+        // sample_race are bit-exact.
+        for vk in [
+            VerifierKind::SpecInfer,
+            VerifierKind::SpecTr,
+            VerifierKind::SingleDraft,
+            VerifierKind::Daliri,
+        ] {
+            let mut host = engine(VerifierKind::Gls, 3, 2.0, 7);
+            let req = Request::new(1, vec![1, 2, 3], 15).with_verifier(Some(vk));
+            let mut sa = SequenceState::from_request(&req);
+            host.decode_sequence(&mut sa);
+
+            let mut dedicated = engine(vk, 3, 2.0, 7);
+            let req = Request::new(1, vec![1, 2, 3], 15);
+            let mut sb = SequenceState::from_request(&req);
+            dedicated.decode_sequence(&mut sb);
+            assert_eq!(sa.tokens, sb.tokens, "override {vk:?} diverged from dedicated engine");
+            // And a None override is exactly the engine default.
+            let mut plain = engine(vk, 3, 2.0, 7);
+            let req = Request::new(1, vec![1, 2, 3], 15).with_verifier(None);
+            let mut sc = SequenceState::from_request(&req);
+            plain.decode_sequence(&mut sc);
+            assert_eq!(sb.tokens, sc.tokens, "None override must be the default path");
+        }
+    }
+
+    #[test]
+    fn transient_pool_fault_retries_once_and_recovers() {
+        use super::super::pool::VerifyPool;
+        use crate::coordinator::scheduler::Scheduler;
+
+        let mk_eng = |retry: bool| {
+            let mut eng = engine(VerifierKind::Gls, 3, 2.0, 17);
+            eng.cfg.parallel_threshold = 0;
+            eng.cfg.verify_backend = VerifyBackend::Pool;
+            eng.cfg.retry_transient_faults = retry;
+            // Attach the pool explicitly so the fuse can be armed before
+            // the first batch.
+            let pool = Arc::new(VerifyPool::new(2));
+            eng.attach_shared_pool(Arc::clone(&pool), 0);
+            (eng, pool)
+        };
+        let submit = |sched: &mut Scheduler| {
+            for i in 0..3u64 {
+                sched.submit(Request::new(i, vec![1, 2 + i as u32], 12));
+            }
+        };
+        // Clean baseline (no fault, retry irrelevant).
+        let (mut clean, _pool) = mk_eng(false);
+        let mut sched = Scheduler::new(8);
+        submit(&mut sched);
+        let mut baseline = sched.run_to_completion(&mut clean);
+        baseline.sort_by_key(|r| r.id);
+
+        // Retry on + one armed transient fault: no sequence fails, tokens
+        // are bit-identical to the clean run, and the retry counters tick.
+        let (mut eng, pool) = mk_eng(true);
+        pool.inject_transient_faults(1);
+        let mut sched = Scheduler::new(8);
+        submit(&mut sched);
+        let mut results = sched.run_to_completion(&mut eng);
+        results.sort_by_key(|r| r.id);
+        assert!(results.iter().all(|r| !r.failed), "retry must absorb the transient fault");
+        for (a, b) in results.iter().zip(&baseline) {
+            assert_eq!(a.tokens, b.tokens, "request {} diverged through retry", a.id);
+        }
+        assert_eq!(eng.metrics.verify_retries, 1);
+        assert_eq!(eng.metrics.verify_retries_recovered, 1);
+        assert_eq!(eng.metrics.verify_faults, 0, "recovered fault must not count");
+
+        // Control: the same fault with retry off fails exactly one
+        // sequence — the pre-retry behavior.
+        let (mut eng, pool) = mk_eng(false);
+        pool.inject_transient_faults(1);
+        let mut sched = Scheduler::new(8);
+        submit(&mut sched);
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.iter().filter(|r| r.failed).count(), 1);
+        assert_eq!(eng.metrics.verify_faults, 1);
+        assert_eq!(eng.metrics.verify_retries, 0);
     }
 
     #[test]

@@ -37,6 +37,18 @@ pub struct EngineMetrics {
     /// Verify jobs that panicked and were contained (the sequence failed,
     /// the engine and pool survived).
     pub verify_faults: u64,
+    /// Time-to-first-token histogram (seconds from submission to the
+    /// first generated token), recorded as sequences retire.
+    pub ttft: Histogram,
+    /// Per-token latency histogram (seconds per generated token,
+    /// request latency / generated count), recorded as sequences retire.
+    pub token_latency: Histogram,
+    /// Verify jobs resubmitted after a transient pool fault
+    /// (`EngineConfig::retry_transient_faults`).
+    pub verify_retries: u64,
+    /// Resubmitted jobs that then completed — sequences the retry-once
+    /// policy saved from `SeqPhase::Failed`.
+    pub verify_retries_recovered: u64,
 }
 
 impl Default for EngineMetrics {
@@ -61,6 +73,10 @@ impl EngineMetrics {
             panel_cache_hits: 0,
             panel_slices_recycled: 0,
             verify_faults: 0,
+            ttft: Histogram::latency(),
+            token_latency: Histogram::latency(),
+            verify_retries: 0,
+            verify_retries_recovered: 0,
         }
     }
 
@@ -96,13 +112,18 @@ impl EngineMetrics {
         self.panel_cache_hits += other.panel_cache_hits;
         self.panel_slices_recycled += other.panel_slices_recycled;
         self.verify_faults += other.verify_faults;
+        self.ttft.merge(&other.ttft);
+        self.token_latency.merge(&other.token_latency);
+        self.verify_retries += other.verify_retries;
+        self.verify_retries_recovered += other.verify_retries_recovered;
     }
 
     pub fn report(&self) -> String {
         format!(
             "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
              p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms \
-             panel-hits={} slices-recycled={} faults={}",
+             panel-hits={} slices-recycled={} faults={} \
+             ttft-p50={:.1}ms tok-p95={:.2}ms retries={}/{}",
             self.blocks,
             self.emitted_tokens,
             self.block_efficiency(),
@@ -116,6 +137,10 @@ impl EngineMetrics {
             self.panel_cache_hits,
             self.panel_slices_recycled,
             self.verify_faults,
+            self.ttft.quantile(0.5) * 1e3,
+            self.token_latency.quantile(0.95) * 1e3,
+            self.verify_retries_recovered,
+            self.verify_retries,
         )
     }
 }
@@ -147,6 +172,26 @@ mod tests {
         assert_eq!(a.blocks, 5);
         assert_eq!(a.emitted_tokens, 20);
         assert_eq!(a.completed, 1);
+    }
+
+    #[test]
+    fn merge_accumulates_latency_and_retry_counters() {
+        let mut a = EngineMetrics::new();
+        a.ttft.record(0.010);
+        a.token_latency.record(0.002);
+        a.verify_retries = 2;
+        a.verify_retries_recovered = 1;
+        let mut b = EngineMetrics::new();
+        b.ttft.record(0.020);
+        b.token_latency.record(0.004);
+        b.verify_retries = 1;
+        b.verify_retries_recovered = 1;
+        a.merge(&b);
+        assert_eq!(a.ttft.count(), 2);
+        assert_eq!(a.token_latency.count(), 2);
+        assert_eq!(a.verify_retries, 3);
+        assert_eq!(a.verify_retries_recovered, 2);
+        assert!(a.ttft.quantile(0.95) >= a.ttft.quantile(0.5));
     }
 
     #[test]

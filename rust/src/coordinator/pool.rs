@@ -110,6 +110,26 @@ pub struct VerifyJob {
 }
 
 impl VerifyJob {
+    /// Clone the job's inputs for a retry spare (the engine's
+    /// retry-once policy on transient pool faults). The panel slice and
+    /// recycle channel are deliberately dropped: panel handoff is a pure
+    /// perf optimization — verification re-derives the exponential rows
+    /// from the RNG coordinates — so the spare is bit-exact with the
+    /// original, just cold.
+    pub fn clone_for_retry(&self) -> VerifyJob {
+        VerifyJob {
+            kind: self.kind,
+            draft_tokens: self.draft_tokens.clone(),
+            draft_dists: self.draft_dists.clone(),
+            target_logits: self.target_logits.clone(),
+            target_params: self.target_params,
+            rng: self.rng,
+            slot0: self.slot0,
+            panel: PanelSlice::default(),
+            recycle: None,
+        }
+    }
+
     /// Run the job on `ws`. Pure in `(self)` — the workspace only
     /// contributes reusable scratch and value-keyed caches, never state
     /// that can change an outcome.
@@ -256,9 +276,25 @@ struct PoolShared {
     work: Condvar,
     /// Submitters park here until their ticket's `pending == 0`.
     done: Condvar,
+    /// Armed transient-fault budget (testkit): while positive, each job
+    /// execution decrements it and panics *before* running the job, so a
+    /// resubmitted clone succeeds — the workload drills' model of a
+    /// worker dying mid-ticket.
+    fault_fuse: AtomicUsize,
 }
 
 impl PoolShared {
+    /// Burn one armed fault if any remain; fires inside the per-job
+    /// `catch_unwind`, so it is contained exactly like a verifier panic.
+    fn trip_injected_fault(&self) {
+        if self
+            .fault_fuse
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+            .is_ok()
+        {
+            panic!("injected transient pool fault (testkit)");
+        }
+    }
     /// Poison-recovering lock: a panic on another thread while it held the
     /// mutex must not cascade (state transitions are written to be
     /// panic-free under the lock, so recovered state is always coherent).
@@ -323,6 +359,7 @@ impl VerifyPool {
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            fault_fuse: AtomicUsize::new(0),
         });
         let handles = (0..workers).map(|i| spawn_worker(&shared, i)).collect();
         Self {
@@ -426,6 +463,15 @@ impl VerifyPool {
             }
             st = self.shared.wait(&self.shared.done, st);
         }
+    }
+
+    /// Arm `n` transient faults: the next `n` job executions (on
+    /// whichever workers claim them) panic before running their job, as
+    /// if the worker died mid-ticket. The jobs themselves are untouched,
+    /// so resubmitting them succeeds — the failure mode the engine's
+    /// retry-once policy targets. Testkit-facing; never fires unarmed.
+    pub fn inject_transient_faults(&self, n: usize) {
+        self.shared.fault_fuse.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Per-engine accounting (zero if the tag never submitted).
@@ -546,8 +592,11 @@ fn worker_loop(shared: Arc<PoolShared>) {
         let mut done: Vec<(usize, Option<BlockOutput>)> = Vec::with_capacity(claimed.len());
         let mut hits = 0u64;
         for (i, job) in claimed {
-            let out =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run(&mut ws))).ok();
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                shared.trip_injected_fault();
+                job.run(&mut ws)
+            }))
+            .ok();
             if out.is_none() {
                 // Scratch state after an unwind is unspecified; caches are
                 // value-keyed, so a fresh workspace only costs warm-up.
@@ -853,6 +902,41 @@ mod tests {
         let a = pool.run_batch(0, mk_batch()).expect("no faults").outputs;
         let (b, _hits) = VerifyPool::run_scoped(mk_batch(), 3);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn injected_transient_fault_fails_job_once_then_resubmission_succeeds() {
+        let pool = VerifyPool::new(2);
+        pool.inject_transient_faults(1);
+        let mk_batch = || -> Vec<VerifyJob> {
+            (0..4u64)
+                .map(|i| {
+                    let mut gen = XorShift128::new(40 + i);
+                    mk_job(&mut gen, VerifierKind::Gls, 80 + i)
+                })
+                .collect()
+        };
+        // Spares cloned up front, the way the engine's retry path does it.
+        let jobs = mk_batch();
+        let spares: Vec<VerifyJob> = jobs.iter().map(VerifyJob::clone_for_retry).collect();
+        let err = pool.run_batch(0, jobs).expect_err("armed fault must fail one job");
+        let PoolError::JobsPanicked { failed, completed, .. } = err;
+        assert_eq!(failed.len(), 1, "exactly one armed fault fires: {failed:?}");
+        let idx = failed[0];
+        assert!(completed[idx].is_none());
+        // The fault was transient (it fired before the job ran):
+        // resubmitting the spare for the same job must now succeed and
+        // match the serial oracle bit-exactly.
+        let mut spares: Vec<Option<VerifyJob>> = spares.into_iter().map(Some).collect();
+        let retry = vec![spares[idx].take().expect("spare per job")];
+        let outs = pool.run_batch(0, retry).expect("resubmission succeeds").outputs;
+        let mut gen = XorShift128::new(40 + idx as u64);
+        let want = expected(&mut gen, VerifierKind::Gls, 80 + idx as u64);
+        assert_eq!(outs[0], want, "retried job {idx} diverged from oracle");
+        // Fuse exhausted: a fresh batch is clean.
+        let outs = pool.run_batch(0, mk_batch()).expect("fuse exhausted").outputs;
+        assert_eq!(outs.len(), 4);
+        assert_eq!(pool.engine_stats(0).faults, 1);
     }
 
     #[test]

@@ -21,6 +21,27 @@ use super::pool::VerifyPool;
 use super::scheduler::Scheduler;
 use super::sequence::{Request, RequestResult};
 use crate::model::backend::ModelPair;
+use crate::spec::types::VerifierKind;
+
+/// Cost a request contributes to a worker's `LeastLoaded` load signal.
+///
+/// Charged at submission and credited back identically at completion
+/// (the signal is strictly additive — see `worker_loop`), so charge and
+/// credit MUST be computed from fields preserved on both `Request` and
+/// `RequestResult`. The model: every budgeted token costs one weighted
+/// unit — two for multi-draft verifiers (K draft lanes + a batched
+/// target span per block) versus one for single-draft kinds — plus a
+/// prompt-length term for the prefill and per-block span cost heavy
+/// prompts keep paying. A declared-budget-only signal dogpiles workers
+/// under heavy-tailed prompts: two 8-token requests look identical even
+/// when one carries a 96-token prompt.
+pub fn routing_cost(prompt_len: usize, max_new_tokens: usize, verifier: Option<VerifierKind>) -> usize {
+    let lane_weight = match verifier {
+        Some(k) if k.is_single_draft() => 1,
+        _ => 2,
+    };
+    max_new_tokens * lane_weight + prompt_len / 4
+}
 
 /// How the router picks a worker for each request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,7 +147,8 @@ impl Router {
                 .map(|(i, _)| i)
                 .unwrap(),
         };
-        self.workers[idx].load.fetch_add(req.max_new_tokens, Ordering::Relaxed);
+        let cost = routing_cost(req.prompt.len(), req.max_new_tokens, req.verifier);
+        self.workers[idx].load.fetch_add(cost, Ordering::Relaxed);
         self.workers[idx].tx.send(req).expect("worker alive");
         idx
     }
@@ -202,13 +224,14 @@ fn worker_loop(
             }
             for res in sched.tick(&mut engine) {
                 // The load signal is strictly additive: the router charged
-                // `max_new_tokens` at submission; completion credits the
-                // identical amount. (The old `load.store(sched.load())`
+                // `routing_cost(..)` at submission; completion recomputes
+                // and credits the identical amount from the fields the
+                // result preserves. (The old `load.store(sched.load())`
                 // overwrote the counter each tick, erasing the charge for
                 // requests still queued in this worker's channel — a burst
                 // would dogpile whichever worker last stored a stale low
                 // value.)
-                credit_load(&load, res.max_new_tokens);
+                credit_load(&load, routing_cost(res.prompt_len, res.max_new_tokens, res.verifier));
                 let _ = results.send(res);
             }
         }
@@ -329,6 +352,49 @@ mod tests {
             router.results_rx.recv().unwrap();
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_spreads_heavy_tailed_prompt_mass() {
+        // Cost-weighted routing: two heavy-prompt requests with the same
+        // declared budget as tiny ones must land on different workers.
+        // Under the old budget-only charge all four tie, min_by_key
+        // breaks ties toward worker 0, and both heavy prompts dogpile it.
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::LeastLoaded, sim_pair);
+        let huge = |id: u64| Request::new(id, vec![1u32; 96], 16);
+        let tiny = |id: u64| Request::new(id, vec![1, 2], 16);
+        let w_huge1 = router.submit(huge(0));
+        let _ = router.submit(tiny(1));
+        let w_huge2 = router.submit(huge(2));
+        let _ = router.submit(tiny(3));
+        assert_ne!(
+            w_huge1, w_huge2,
+            "heavy-tailed prompt mass dogpiled one worker"
+        );
+        for _ in 0..4 {
+            router.results_rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn routing_cost_weighs_prompts_and_verifier_kind() {
+        // Multi-draft (or default) kinds charge double per budgeted token.
+        assert_eq!(routing_cost(0, 10, None), 20);
+        assert_eq!(routing_cost(0, 10, Some(VerifierKind::SpecInfer)), 20);
+        assert_eq!(routing_cost(0, 10, Some(VerifierKind::Daliri)), 10);
+        assert_eq!(routing_cost(0, 10, Some(VerifierKind::SingleDraft)), 10);
+        // Prompt mass contributes: a 96-token prompt outweighs a tiny one.
+        assert!(routing_cost(96, 16, None) > routing_cost(2, 16, None));
+        // Charge == credit: the result-side fields reconstruct the charge.
+        let req = Request::new(1, vec![7; 33], 12).with_verifier(Some(VerifierKind::Gls));
+        let charged = routing_cost(req.prompt.len(), req.max_new_tokens, req.verifier);
+        let res = crate::coordinator::sequence::SequenceState::from_request(&req).into_result();
+        assert_eq!(
+            charged,
+            routing_cost(res.prompt_len, res.max_new_tokens, res.verifier)
+        );
     }
 
     #[test]

@@ -138,6 +138,16 @@ impl Scheduler {
                     .metrics
                     .latency
                     .record(seq.submitted_at.elapsed().as_secs_f64());
+                if let Some(t) = seq.first_token_at {
+                    engine.metrics.ttft.record(t.as_secs_f64());
+                }
+                let gen = seq.generated();
+                if gen > 0 {
+                    engine
+                        .metrics
+                        .token_latency
+                        .record(seq.submitted_at.elapsed().as_secs_f64() / gen as f64);
+                }
                 results.push(seq.into_result());
             } else {
                 keep.push(seq);
@@ -273,6 +283,37 @@ mod tests {
         sched.submit(Request::new(1, vec![0], 25));
         sched.submit(Request::new(2, vec![0], 10));
         assert_eq!(sched.load(), 35);
+    }
+
+    #[test]
+    fn ttft_and_token_latency_accounting() {
+        // Every retired generating sequence records exactly one TTFT and
+        // one per-token latency sample; counters are monotone across
+        // batches, TTFT never exceeds total latency, and quantiles are
+        // monotone in q.
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(8);
+        for i in 0..5 {
+            sched.submit(Request::new(i, vec![1, 2], 10));
+        }
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 5);
+        assert_eq!(eng.metrics.ttft.count(), 5);
+        assert_eq!(eng.metrics.token_latency.count(), 5);
+        for r in &results {
+            let ttft = r.ttft.expect("generating sequence must stamp TTFT");
+            assert!(ttft <= r.latency, "request {}: TTFT {ttft:?} > latency {:?}", r.id, r.latency);
+        }
+        assert!(eng.metrics.ttft.quantile(0.99) >= eng.metrics.ttft.quantile(0.5));
+        assert!(
+            eng.metrics.token_latency.quantile(0.99) >= eng.metrics.token_latency.quantile(0.5)
+        );
+        // Monotone counters: one more request, counts advance by one.
+        let mut sched2 = Scheduler::new(8);
+        sched2.submit(Request::new(10, vec![3], 6));
+        sched2.run_to_completion(&mut eng);
+        assert_eq!(eng.metrics.ttft.count(), 6);
+        assert_eq!(eng.metrics.token_latency.count(), 6);
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Request and sequence state tracked by the scheduler/engine.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use crate::spec::types::VerifierKind;
 
 /// An inference request as submitted by a client.
 #[derive(Clone, Debug)]
@@ -11,11 +13,24 @@ pub struct Request {
     /// Per-request randomness lane; the engine splits the shared root key
     /// with this so concurrent requests have independent coupling streams.
     pub rng_lane: u64,
+    /// Per-request verification-scheme override; `None` uses the engine's
+    /// configured verifier. This is how mixed-verifier traces run through
+    /// one engine (drafting stays batch-wide; kinds that consume fewer
+    /// lanes ignore the extras bit-exactly) and how the workload drills
+    /// arm `VerifierKind::FaultInjection` on exactly the scripted
+    /// requests.
+    pub verifier: Option<VerifierKind>,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, rng_lane: id }
+        Self { id, prompt, max_new_tokens, rng_lane: id, verifier: None }
+    }
+
+    /// Builder-style verifier override (`None` = engine default).
+    pub fn with_verifier(mut self, verifier: Option<VerifierKind>) -> Self {
+        self.verifier = verifier;
+        self
     }
 }
 
@@ -32,10 +47,21 @@ pub struct RequestResult {
     pub block_efficiency: f64,
     /// Wall-clock latency from submission to completion.
     pub latency: std::time::Duration,
-    /// The request's declared generation budget — what the router charged
-    /// the worker's load counter at submission, so completion can credit
-    /// the identical amount back (the `LeastLoaded` signal is additive).
+    /// Wall-clock time from submission to the first generated token
+    /// (`None` if the sequence produced nothing before retiring).
+    pub ttft: Option<Duration>,
+    /// The request's declared generation budget. Together with
+    /// `prompt_len` and `verifier` this reconstructs the exact
+    /// `routing_cost` the router charged the worker's load counter at
+    /// submission, so completion credits the identical amount back
+    /// (the `LeastLoaded` signal is additive).
     pub max_new_tokens: usize,
+    /// Prompt length of the originating request (for routing-cost credit
+    /// and per-token goodput accounting).
+    pub prompt_len: usize,
+    /// The request's verifier override, echoed back for routing-cost
+    /// credit symmetry.
+    pub verifier: Option<VerifierKind>,
     /// The sequence failed mid-decode (a verification fault): `tokens`
     /// holds whatever was emitted before the failure. A failed request
     /// never takes down its worker — it is retired like any completion.
@@ -72,6 +98,10 @@ pub struct SequenceState {
     pub target_calls: usize,
     pub draft_steps: usize,
     pub submitted_at: Instant,
+    /// Per-sequence verifier override carried from the request.
+    pub verifier: Option<VerifierKind>,
+    /// Stamped by the engine when the first generated token lands.
+    pub first_token_at: Option<Duration>,
 }
 
 impl SequenceState {
@@ -87,6 +117,8 @@ impl SequenceState {
             target_calls: 0,
             draft_steps: 0,
             submitted_at: Instant::now(),
+            verifier: req.verifier,
+            first_token_at: None,
         }
     }
 
@@ -119,7 +151,10 @@ impl SequenceState {
             draft_steps: self.draft_steps,
             block_efficiency: be,
             latency: self.submitted_at.elapsed(),
+            ttft: self.first_token_at,
             max_new_tokens: self.max_new_tokens,
+            prompt_len: self.prompt_len,
+            verifier: self.verifier,
             failed: self.phase == SeqPhase::Failed,
         }
     }

@@ -48,6 +48,43 @@ impl ServeReport {
     pub fn p95_latency(&self) -> f64 {
         self.metrics.latency.quantile(0.95)
     }
+
+    pub fn p99_latency(&self) -> f64 {
+        self.metrics.latency.quantile(0.99)
+    }
+
+    /// Per-token latency quantiles (request latency / generated tokens),
+    /// recorded at retire time by the scheduler.
+    pub fn p95_token_latency(&self) -> f64 {
+        self.metrics.token_latency.quantile(0.95)
+    }
+
+    pub fn p99_token_latency(&self) -> f64 {
+        self.metrics.token_latency.quantile(0.99)
+    }
+
+    /// Time-to-first-token quantiles (submission to first emitted token).
+    pub fn p50_ttft(&self) -> f64 {
+        self.metrics.ttft.quantile(0.5)
+    }
+
+    pub fn p95_ttft(&self) -> f64 {
+        self.metrics.ttft.quantile(0.95)
+    }
+
+    /// Generated tokens per wall-clock second counting only sequences
+    /// that completed without a fault — the harness's goodput measure.
+    /// Failed sequences' partial output is real work but not useful
+    /// output, so it is excluded; `token_rate` keeps the raw number.
+    pub fn goodput(&self) -> f64 {
+        let toks: usize = self
+            .results
+            .iter()
+            .filter(|r| !r.failed)
+            .map(|r| r.tokens.len().saturating_sub(r.prompt_len))
+            .sum();
+        toks as f64 / self.wall.as_secs_f64()
+    }
 }
 
 pub struct Server {
@@ -176,6 +213,19 @@ mod tests {
         let be = report.mean_block_efficiency();
         assert!(be > 1.0 && be <= 5.0, "BE {be}");
         assert!(report.p95_latency() >= report.p50_latency());
+        assert!(report.p99_latency() >= report.p95_latency());
+        // Every request emitted a first token, so TTFT and per-token
+        // latency are populated and their quantiles ordered.
+        assert_eq!(report.metrics.ttft.count(), 12);
+        assert_eq!(report.metrics.token_latency.count(), 12);
+        assert!(report.p95_ttft() >= report.p50_ttft());
+        assert!(report.p99_token_latency() >= report.p95_token_latency());
+        assert!(report.goodput() > 0.0);
+        // No faults here, so goodput counts exactly the generated tokens.
+        let gen: usize =
+            report.results.iter().map(|r| r.tokens.len() - r.prompt_len).sum();
+        let expected = gen as f64 / report.wall.as_secs_f64();
+        assert!((report.goodput() - expected).abs() < 1e-9);
         // Results sorted by id.
         for (i, r) in report.results.iter().enumerate() {
             assert_eq!(r.id, i as u64);

@@ -1,0 +1,330 @@
+//! Failure-mode drills: scripted heavy-traffic scenarios for the serving
+//! stack.
+//!
+//! A [`Drill`] composes a deterministic [`RequestTrace`] (bursty arrivals,
+//! heavy-tailed lengths, mixed verifier kinds) with a fault script —
+//! panic storms via `VerifierKind::FaultInjection` + the
+//! [`PoisonDraft`] rig, KV-pressure spikes via a tiny page pool,
+//! slow-backend stragglers via [`TimedLm`], and engine death (every
+//! ticket on one worker faulting mid-flight) — and replays it against a
+//! multi-worker router with the server-global verify pool. The outcome
+//! carries the full [`ServeReport`] plus a thread census, so tests and
+//! benches can gate goodput, latency quantiles, loss/duplication, KV
+//! leaks, and thread-pool growth per scenario.
+//!
+//! Everything is a pure function of `(scenario, seed)`: two drills built
+//! from the same pair replay bit-identically, and scenarios share the
+//! base trace per seed so honest requests' tokens are comparable across
+//! the no-fault and faulting runs (round-robin routing plus per-sequence
+//! verification randomness make them bit-identical).
+
+use std::time::{Duration, Instant};
+
+use super::trace::{ArrivalProcess, LengthModel, RequestTrace, TraceSpec};
+use crate::coordinator::config::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
+use crate::coordinator::router::{Router, RoutingPolicy};
+use crate::coordinator::sequence::Request;
+use crate::coordinator::server::ServeReport;
+use crate::model::backend::ModelPair;
+use crate::model::sim::SimLm;
+use crate::model::timed::TimedLm;
+use crate::spec::types::VerifierKind;
+use crate::testkit::{thread_census, PoisonDraft};
+
+/// The drill catalog.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// Baseline: the trace with no fault script.
+    NoFault,
+    /// Same requests, MMPP (calm/burst) arrivals replayed in real time.
+    Bursty,
+    /// Every 5th request is poisoned: its verify jobs panic on the shared
+    /// pool's workers.
+    PanicStorm,
+    /// KV page pool shrunk so admission constantly defers and recycles.
+    KvPressure,
+    /// Worker 0's backends pay an accelerator latency per forward call.
+    Straggler,
+    /// Every ticket routed to worker 0 faults — the worker's engine keeps
+    /// dying mid-ticket while worker 1 must stay healthy.
+    EngineDeath,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 6] {
+        [
+            Scenario::NoFault,
+            Scenario::Bursty,
+            Scenario::PanicStorm,
+            Scenario::KvPressure,
+            Scenario::Straggler,
+            Scenario::EngineDeath,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::NoFault => "no-fault",
+            Scenario::Bursty => "bursty",
+            Scenario::PanicStorm => "panic-storm",
+            Scenario::KvPressure => "kv-pressure",
+            Scenario::Straggler => "straggler",
+            Scenario::EngineDeath => "engine-death",
+        }
+    }
+}
+
+/// A fully specified drill: configs + trace + fault script. Fields are
+/// public so tests can scale the shape (e.g. shrink `trace` or toggle
+/// `engine_cfg.retry_transient_faults`) before [`Drill::run`].
+pub struct Drill {
+    pub scenario: Scenario,
+    pub seed: u64,
+    pub server_cfg: ServerConfig,
+    pub engine_cfg: EngineConfig,
+    pub trace: RequestTrace,
+    /// Request ids whose prompts carry the fault trigger.
+    pub poisoned: Vec<u64>,
+    /// `(worker, base_latency)` for the straggler's [`TimedLm`] wrap.
+    pub straggler: Option<(usize, Duration)>,
+    /// Transient pool faults to arm before replay (retry-once drills).
+    pub inject_transient_faults: usize,
+    pub vocab: usize,
+    /// Out-of-vocab token that arms [`PoisonDraft`].
+    pub trigger: u32,
+    /// 0.0 replays as fast as possible; 1.0 honors trace arrival times.
+    pub time_scale: f64,
+}
+
+impl Drill {
+    pub fn new(scenario: Scenario, seed: u64) -> Self {
+        let server_cfg = ServerConfig {
+            workers: 2,
+            max_batch: 8,
+            batch_deadline: Duration::from_millis(1),
+            max_running: 16,
+            kv_pages: 4096,
+            kv_page_size: 16,
+            pool_scope: PoolScope::Server,
+        };
+        let engine_cfg = EngineConfig {
+            verifier: VerifierKind::Gls,
+            num_drafts: 3,
+            block_len: 4,
+            max_seq_len: 256,
+            // Force pool fan-out on every multi-sequence batch so the
+            // shared pool actually carries the drill's verification load.
+            parallel_threshold: 0,
+            verify_workers: 3,
+            verify_backend: VerifyBackend::Pool,
+            ..EngineConfig::default()
+        };
+        // All scenarios share this base spec per seed: the prompt /
+        // output / kind sub-streams are salted independently of the
+        // arrival process, so even the bursty overlay keeps per-request
+        // payloads identical to the no-fault run.
+        let mut spec = TraceSpec {
+            arrivals: ArrivalProcess::Poisson { rate: 600.0 },
+            n: 48,
+            // mu = ln 12: median prompt ≈ 12 tokens, tail to 96.
+            prompt_len: LengthModel::LogNormal { mu: 2.485, sigma: 0.6, min: 2, max: 96 },
+            output_len: LengthModel::Zipf { s: 0.9, min: 4, max: 40 },
+            verifier_mix: vec![
+                (VerifierKind::Gls, 0.55),
+                (VerifierKind::SpecInfer, 0.2),
+                (VerifierKind::SpecTr, 0.1),
+                (VerifierKind::Daliri, 0.15),
+            ],
+            seed,
+        };
+        let mut drill = Drill {
+            scenario,
+            seed,
+            server_cfg,
+            engine_cfg,
+            trace: RequestTrace { requests: Vec::new() },
+            poisoned: Vec::new(),
+            straggler: None,
+            inject_transient_faults: 0,
+            vocab: 64,
+            trigger: 9_999,
+            time_scale: 0.0,
+        };
+        match scenario {
+            Scenario::NoFault => {}
+            Scenario::Bursty => {
+                spec.arrivals = ArrivalProcess::Mmpp {
+                    calm_rate: 120.0,
+                    burst_rate: 3000.0,
+                    calm_dwell_s: 0.04,
+                    burst_dwell_s: 0.01,
+                };
+                drill.time_scale = 1.0;
+            }
+            Scenario::PanicStorm => {
+                drill.poisoned = (0..spec.n as u64).filter(|i| i % 5 == 0).collect();
+            }
+            Scenario::KvPressure => {
+                // ~3 concurrent worst-case sequences' worth of pages:
+                // admission must defer and recycle constantly.
+                drill.server_cfg.kv_pages = 32;
+            }
+            Scenario::Straggler => {
+                drill.straggler = Some((0, Duration::from_micros(400)));
+            }
+            Scenario::EngineDeath => {
+                // RoundRobin sends id % workers to worker id % workers:
+                // poisoning the even ids keeps killing worker 0's engine
+                // mid-ticket for the whole run.
+                let w = drill.server_cfg.workers as u64;
+                drill.poisoned = (0..spec.n as u64).filter(|i| i % w == 0).collect();
+            }
+        }
+        drill.trace = RequestTrace::generate(&spec);
+        drill
+    }
+
+    /// The request for trace index `idx` (`id == idx`). Poisoned ids get
+    /// the trigger prompt plus `FaultInjection`; everyone else gets the
+    /// trace's deterministic prompt, budget and verifier kind.
+    pub fn request(&self, idx: usize) -> Request {
+        let id = idx as u64;
+        let tr = &self.trace.requests[idx];
+        if self.poisoned.contains(&id) {
+            Request::new(id, vec![self.trigger], tr.max_new_tokens)
+                .with_verifier(Some(VerifierKind::FaultInjection))
+        } else {
+            Request::new(id, self.trace.prompt_tokens(idx, self.vocab, self.seed), tr.max_new_tokens)
+                .with_verifier(tr.verifier)
+        }
+    }
+
+    /// Backend factory: the draft is always [`PoisonDraft`]-wrapped (it
+    /// passes honest rows through untouched, so tokens stay bit-identical
+    /// to an unwrapped run); the straggler worker's pair additionally
+    /// pays a [`TimedLm`] latency per forward call (value-preserving).
+    fn make_pair(&self) -> impl Fn(usize) -> ModelPair + '_ {
+        let (vocab, seed, trigger, straggler) = (self.vocab, self.seed, self.trigger, self.straggler);
+        move |w| {
+            let (d, t) = SimLm::pair(vocab, seed, 2.0);
+            let d = PoisonDraft { inner: d, trigger };
+            match straggler {
+                Some((sw, lat)) if sw == w => ModelPair::new(
+                    Box::new(TimedLm::new(d, lat, 64)),
+                    Box::new(TimedLm::new(t, lat, 64)),
+                ),
+                _ => ModelPair::new(Box::new(d), Box::new(t)),
+            }
+        }
+    }
+
+    /// Replay the drill to completion. RoundRobin routing keeps the
+    /// request→worker assignment identical across scenarios, which is
+    /// what makes honest tokens comparable against the no-fault run.
+    pub fn run(&self) -> DrillOutcome {
+        let baseline_census = thread_census();
+        let mut router =
+            Router::start(&self.server_cfg, &self.engine_cfg, RoutingPolicy::RoundRobin, self.make_pair());
+        if self.inject_transient_faults > 0 {
+            router
+                .verify_pool()
+                .expect("drills run with the server-global pool")
+                .inject_transient_faults(self.inject_transient_faults);
+        }
+        let n = self.trace.requests.len();
+        let start = Instant::now();
+        let mut submitted = 0usize;
+        let mut results = Vec::with_capacity(n);
+        let mut peak_census = thread_census();
+        while results.len() < n {
+            while submitted < n {
+                let due = self.trace.requests[submitted].at.mul_f64(self.time_scale);
+                if start.elapsed() >= due {
+                    router.submit(self.request(submitted));
+                    submitted += 1;
+                } else {
+                    break;
+                }
+            }
+            match router.results_rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(res) => results.push(res),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(e) => panic!("worker dropped mid-drill: {e}"),
+            }
+            if let (Some(p), Some(now)) = (peak_census, thread_census()) {
+                peak_census = Some(p.max(now));
+            }
+        }
+        let wall = start.elapsed();
+        let metrics = router.shutdown();
+        results.sort_by_key(|r| r.id);
+        DrillOutcome {
+            report: ServeReport { results, metrics, wall },
+            baseline_census,
+            peak_census,
+        }
+    }
+}
+
+/// Result of one drill replay: the serving report plus the thread census
+/// bracketing the run (None off-Linux → census gates must skip, never
+/// treat as zero).
+pub struct DrillOutcome {
+    pub report: ServeReport,
+    pub baseline_census: Option<usize>,
+    pub peak_census: Option<usize>,
+}
+
+impl DrillOutcome {
+    /// Ids of sequences that failed (fault-rolled-back).
+    pub fn failed_ids(&self) -> Vec<u64> {
+        self.report.results.iter().filter(|r| r.failed).map(|r| r.id).collect()
+    }
+
+    /// Peak thread growth over the run's baseline, when measurable.
+    pub fn census_delta(&self) -> Option<usize> {
+        match (self.baseline_census, self.peak_census) {
+            (Some(b), Some(p)) => Some(p.saturating_sub(b)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_is_stable() {
+        let names: Vec<&str> = Scenario::all().iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["no-fault", "bursty", "panic-storm", "kv-pressure", "straggler", "engine-death"]
+        );
+    }
+
+    #[test]
+    fn scenarios_share_payloads_and_script_their_faults() {
+        let base = Drill::new(Scenario::NoFault, 5);
+        let storm = Drill::new(Scenario::PanicStorm, 5);
+        // Same base trace per seed: payload sub-streams are identical.
+        assert_eq!(base.trace, storm.trace);
+        assert_eq!(storm.poisoned.len(), 10);
+        // Poisoned requests carry the trigger prompt + FaultInjection;
+        // honest ones keep the trace's deterministic payload.
+        let p = storm.request(0);
+        assert_eq!(p.prompt, vec![storm.trigger]);
+        assert_eq!(p.verifier, Some(VerifierKind::FaultInjection));
+        let h = storm.request(1);
+        assert_eq!(h.prompt, base.request(1).prompt);
+        assert_eq!(h.verifier, base.trace.requests[1].verifier);
+        assert!(h.prompt.iter().all(|&t| (t as usize) < storm.vocab));
+        // Bursty only perturbs arrival times, not payloads.
+        let bursty = Drill::new(Scenario::Bursty, 5);
+        for (a, b) in base.trace.requests.iter().zip(&bursty.trace.requests) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.verifier, b.verifier);
+        }
+    }
+}

@@ -7,8 +7,12 @@
 //! efficiencies span the paper's observed spectrum (BE ≈ 4.2 on the
 //! easiest suite down to ≈ 3.0 on the hardest, L = 4).
 
+pub mod drills;
 pub mod suites;
 pub mod trace;
 
+pub use drills::{Drill, DrillOutcome, Scenario};
 pub use suites::{TaskSuite, SUITES};
-pub use trace::{PoissonTrace, TraceEvent};
+pub use trace::{
+    ArrivalProcess, LengthModel, PoissonTrace, RequestTrace, TraceEvent, TraceRequest, TraceSpec,
+};

@@ -1,7 +1,12 @@
 //! Open-loop request traces: Poisson arrivals for latency-under-load
-//! experiments (the serving benches and the e2e example).
+//! experiments (the serving benches and the e2e example), plus the
+//! trace-driven load harness — bursty (Markov-modulated Poisson)
+//! arrivals, heavy-tailed (log-normal / Zipf) prompt and output
+//! lengths, and per-request `VerifierKind` mixes — all deterministic
+//! per seed so drills replay bit-identically.
 
-use crate::stats::rng::XorShift128;
+use crate::spec::types::VerifierKind;
+use crate::stats::rng::{SplitMix64, XorShift128};
 
 /// One scheduled request arrival.
 #[derive(Clone, Debug)]
@@ -51,6 +56,219 @@ impl PoissonTrace {
     }
 }
 
+/// Arrival-process family for the load harness.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Two-state Markov-modulated Poisson process (a doubly-stochastic
+    /// Poisson process): arrivals alternate between a calm and a burst
+    /// intensity, with exponentially distributed dwell times in each
+    /// state. The inter-arrival coefficient of variation exceeds 1
+    /// (Poisson's CV) whenever the two rates differ — the over-dispersed
+    /// regime real serving traffic lives in.
+    Mmpp {
+        calm_rate: f64,
+        burst_rate: f64,
+        /// Mean dwell time in the calm state, seconds.
+        calm_dwell_s: f64,
+        /// Mean dwell time in the burst state, seconds.
+        burst_dwell_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Sample `n` sorted arrival offsets (seconds).
+    fn sample_arrivals(&self, n: usize, rng: &mut XorShift128) -> Vec<f64> {
+        match *self {
+            ArrivalProcess::Poisson { rate } => {
+                assert!(rate > 0.0, "Poisson rate must be positive");
+                let mut t = 0.0f64;
+                (0..n).map(|_| { t += exp_sample(rng, rate); t }).collect()
+            }
+            ArrivalProcess::Mmpp { calm_rate, burst_rate, calm_dwell_s, burst_dwell_s } => {
+                assert!(
+                    calm_rate > 0.0 && burst_rate > 0.0 && calm_dwell_s > 0.0 && burst_dwell_s > 0.0,
+                    "MMPP rates and dwells must be positive"
+                );
+                let mut out = Vec::with_capacity(n);
+                let mut t = 0.0f64;
+                let mut burst = false;
+                // Remaining time before the modulating chain switches state.
+                let mut dwell = exp_sample(rng, 1.0 / calm_dwell_s);
+                while out.len() < n {
+                    let rate = if burst { burst_rate } else { calm_rate };
+                    let x = exp_sample(rng, rate);
+                    if x <= dwell {
+                        t += x;
+                        dwell -= x;
+                        out.push(t);
+                    } else {
+                        // No arrival before the switch: advance to the
+                        // boundary and toggle. Memorylessness of the
+                        // exponential justifies resampling the
+                        // inter-arrival from scratch in the new state.
+                        t += dwell;
+                        burst = !burst;
+                        let mean = if burst { burst_dwell_s } else { calm_dwell_s };
+                        dwell = exp_sample(rng, 1.0 / mean);
+                    }
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Exp(rate) sample via inverse CDF (guarding ln(0)).
+fn exp_sample(rng: &mut XorShift128, rate: f64) -> f64 {
+    -rng.next_f64().max(f64::MIN_POSITIVE).ln() / rate
+}
+
+/// Length distribution for prompt and output sizes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LengthModel {
+    Fixed(usize),
+    /// `exp(Normal(mu, sigma))` rounded and clamped to `[min, max]` —
+    /// the classic heavy-tailed prompt-length model.
+    LogNormal { mu: f64, sigma: f64, min: usize, max: usize },
+    /// Zipf over the integer support `[min, max]` with exponent `s`
+    /// (weight `k^-s`): small lengths dominate, the tail decays
+    /// polynomially.
+    Zipf { s: f64, min: usize, max: usize },
+}
+
+impl LengthModel {
+    pub fn sample(&self, rng: &mut XorShift128) -> usize {
+        match *self {
+            LengthModel::Fixed(n) => n,
+            LengthModel::LogNormal { mu, sigma, min, max } => {
+                assert!(min <= max && min > 0, "LogNormal support must be non-empty and positive");
+                // Box-Muller.
+                let u1 = rng.next_f64().max(f64::MIN_POSITIVE);
+                let u2 = rng.next_f64();
+                let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                let x = (mu + sigma * z).exp();
+                (x.round() as usize).clamp(min, max)
+            }
+            LengthModel::Zipf { s, min, max } => {
+                assert!(min >= 1 && min <= max, "Zipf support must be non-empty with min >= 1");
+                // Inverse CDF over the finite support; O(max - min) per
+                // draw, fine at drill scale.
+                let total: f64 = (min..=max).map(|k| (k as f64).powf(-s)).sum();
+                let mut u = rng.next_f64() * total;
+                for k in min..=max {
+                    u -= (k as f64).powf(-s);
+                    if u <= 0.0 {
+                        return k;
+                    }
+                }
+                max
+            }
+        }
+    }
+}
+
+/// Full specification of a load trace. Every field feeds a dedicated
+/// sub-RNG derived from `seed`, so changing (say) the verifier mix does
+/// not perturb the arrival times.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub arrivals: ArrivalProcess,
+    /// Number of requests.
+    pub n: usize,
+    pub prompt_len: LengthModel,
+    pub output_len: LengthModel,
+    /// Per-request verifier assignment as (kind, weight) pairs sampled
+    /// proportionally; empty means every request uses the engine default
+    /// (`verifier: None`).
+    pub verifier_mix: Vec<(VerifierKind, f64)>,
+    pub seed: u64,
+}
+
+/// One request in a generated load trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceRequest {
+    /// Offset from trace start.
+    pub at: std::time::Duration,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    /// `None` = engine-default verifier.
+    pub verifier: Option<VerifierKind>,
+}
+
+/// A fully materialized request trace (sorted by arrival time).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl RequestTrace {
+    /// Deterministically expand a spec into a trace. Identical specs
+    /// (including seed) produce bit-identical traces; each aspect
+    /// (arrivals / prompt lengths / output lengths / verifier kinds)
+    /// draws from its own salted sub-stream so marginals are stable
+    /// under changes to the others.
+    pub fn generate(spec: &TraceSpec) -> Self {
+        let mut arrival_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(1));
+        let mut prompt_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(2));
+        let mut output_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(3));
+        let mut kind_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(4));
+        let total_weight: f64 = spec.verifier_mix.iter().map(|(_, w)| w).sum();
+        let arrivals = spec.arrivals.sample_arrivals(spec.n, &mut arrival_rng);
+        let requests = arrivals
+            .into_iter()
+            .map(|t| {
+                let verifier = if spec.verifier_mix.is_empty() || total_weight <= 0.0 {
+                    None
+                } else {
+                    let mut u = kind_rng.next_f64() * total_weight;
+                    let mut pick = spec.verifier_mix.last().map(|(k, _)| *k);
+                    for &(k, w) in &spec.verifier_mix {
+                        u -= w;
+                        if u <= 0.0 {
+                            pick = Some(k);
+                            break;
+                        }
+                    }
+                    pick
+                };
+                TraceRequest {
+                    at: std::time::Duration::from_secs_f64(t),
+                    prompt_len: spec.prompt_len.sample(&mut prompt_rng).max(1),
+                    max_new_tokens: spec.output_len.sample(&mut output_rng).max(1),
+                    verifier,
+                }
+            })
+            .collect();
+        Self { requests }
+    }
+
+    pub fn duration(&self) -> std::time::Duration {
+        self.requests.last().map(|r| r.at).unwrap_or_default()
+    }
+
+    /// Empirical arrival rate (requests per second over the span);
+    /// 0.0 for empty or zero-span traces.
+    pub fn empirical_rate(&self) -> f64 {
+        let d = self.duration().as_secs_f64();
+        if d <= 0.0 {
+            0.0
+        } else {
+            self.requests.len() as f64 / d
+        }
+    }
+
+    /// Deterministic prompt tokens for request `idx`: a fixed function
+    /// of (trace seed, idx) so replays hand the engine bit-identical
+    /// prompts regardless of generation order.
+    pub fn prompt_tokens(&self, idx: usize, vocab: usize, seed: u64) -> Vec<u32> {
+        let len = self.requests[idx].prompt_len;
+        let mut rng = XorShift128::new(seed ^ SplitMix64::mix(0x70_0000 + idx as u64));
+        (0..len).map(|_| rng.next_below(vocab as u64) as u32).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -79,5 +297,153 @@ mod tests {
         let a = PoissonTrace::generate(50.0, 100, 5, 9);
         let b = PoissonTrace::generate(50.0, 100, 5, 9);
         assert_eq!(a.duration(), b.duration());
+    }
+
+    #[test]
+    fn poisson_trace_edge_cases_do_not_panic() {
+        let empty = PoissonTrace::generate(10.0, 0, 3, 1);
+        assert_eq!(empty.events.len(), 0);
+        assert_eq!(empty.duration(), std::time::Duration::ZERO);
+        assert_eq!(empty.empirical_rate(), 0.0);
+        let one = PoissonTrace::generate(10.0, 1, 3, 1);
+        assert_eq!(one.events.len(), 1);
+        assert!(one.duration() > std::time::Duration::ZERO);
+        assert!(one.empirical_rate().is_finite());
+    }
+
+    fn mixed_spec(seed: u64) -> TraceSpec {
+        TraceSpec {
+            arrivals: ArrivalProcess::Poisson { rate: 200.0 },
+            n: 2000,
+            prompt_len: LengthModel::LogNormal { mu: 2.5, sigma: 0.6, min: 2, max: 96 },
+            output_len: LengthModel::Zipf { s: 0.9, min: 4, max: 40 },
+            verifier_mix: vec![(VerifierKind::Gls, 0.5), (VerifierKind::SpecInfer, 0.5)],
+            seed,
+        }
+    }
+
+    #[test]
+    fn request_trace_is_bit_identical_per_seed() {
+        let spec = mixed_spec(77);
+        let a = RequestTrace::generate(&spec);
+        let b = RequestTrace::generate(&spec);
+        assert_eq!(a, b, "identical specs must replay bit-identically");
+        assert_eq!(a.prompt_tokens(5, 64, spec.seed), b.prompt_tokens(5, 64, spec.seed));
+        let c = RequestTrace::generate(&mixed_spec(78));
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn request_trace_is_sorted_and_edge_cases_hold() {
+        let tr = RequestTrace::generate(&mixed_spec(3));
+        for w in tr.requests.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let mut spec = mixed_spec(3);
+        spec.n = 0;
+        let empty = RequestTrace::generate(&spec);
+        assert_eq!(empty.requests.len(), 0);
+        assert_eq!(empty.empirical_rate(), 0.0);
+        assert_eq!(empty.duration(), std::time::Duration::ZERO);
+        spec.n = 1;
+        let one = RequestTrace::generate(&spec);
+        assert_eq!(one.requests.len(), 1);
+        assert!(one.empirical_rate().is_finite());
+    }
+
+    #[test]
+    fn mmpp_arrivals_are_overdispersed_vs_poisson() {
+        // Extreme rate separation: the inter-arrival CV must clearly
+        // exceed the Poisson value of 1.
+        let spec = TraceSpec {
+            arrivals: ArrivalProcess::Mmpp {
+                calm_rate: 5.0,
+                burst_rate: 2000.0,
+                calm_dwell_s: 0.5,
+                burst_dwell_s: 0.05,
+            },
+            n: 2000,
+            prompt_len: LengthModel::Fixed(4),
+            output_len: LengthModel::Fixed(8),
+            verifier_mix: vec![],
+            seed: 11,
+        };
+        let tr = RequestTrace::generate(&spec);
+        assert_eq!(tr.requests.len(), 2000);
+        for w in tr.requests.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        let gaps: Vec<f64> = tr
+            .requests
+            .windows(2)
+            .map(|w| (w[1].at - w[0].at).as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.2, "MMPP inter-arrival CV {cv} not over-dispersed");
+        // Poisson control at the same empirical rate stays near CV = 1.
+        let rate = tr.empirical_rate();
+        let ctl = RequestTrace::generate(&TraceSpec {
+            arrivals: ArrivalProcess::Poisson { rate },
+            ..spec.clone()
+        });
+        let cgaps: Vec<f64> = ctl
+            .requests
+            .windows(2)
+            .map(|w| (w[1].at - w[0].at).as_secs_f64())
+            .collect();
+        let cmean = cgaps.iter().sum::<f64>() / cgaps.len() as f64;
+        let cvar = cgaps.iter().map(|g| (g - cmean).powi(2)).sum::<f64>() / cgaps.len() as f64;
+        let ccv = cvar.sqrt() / cmean;
+        assert!(ccv < 1.15, "Poisson control CV {ccv} unexpectedly high");
+    }
+
+    #[test]
+    fn length_models_match_their_shapes() {
+        let mut rng = XorShift128::new(5);
+        // Log-normal: median near exp(mu), support clamped.
+        let ln = LengthModel::LogNormal { mu: 2.5, sigma: 0.6, min: 2, max: 96 };
+        let mut xs: Vec<usize> = (0..4000).map(|_| ln.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (2..=96).contains(&x)));
+        xs.sort_unstable();
+        let median = xs[xs.len() / 2] as f64;
+        let want = (2.5f64).exp(); // ≈ 12.18
+        assert!((median - want).abs() < 4.0, "log-normal median {median} vs {want}");
+        // Zipf: the smallest length is sampled more often than the largest.
+        let zf = LengthModel::Zipf { s: 0.9, min: 4, max: 40 };
+        let zs: Vec<usize> = (0..4000).map(|_| zf.sample(&mut rng)).collect();
+        let at_min = zs.iter().filter(|&&x| x == 4).count();
+        let at_max = zs.iter().filter(|&&x| x == 40).count();
+        assert!(zs.iter().all(|&x| (4..=40).contains(&x)));
+        assert!(at_min > at_max * 2, "Zipf head {at_min} not heavier than tail {at_max}");
+        assert_eq!(LengthModel::Fixed(7).sample(&mut rng), 7);
+    }
+
+    #[test]
+    fn verifier_mix_marginals_are_proportional() {
+        let tr = RequestTrace::generate(&mixed_spec(21));
+        let gls = tr
+            .requests
+            .iter()
+            .filter(|r| r.verifier == Some(VerifierKind::Gls))
+            .count();
+        let spec_inf = tr
+            .requests
+            .iter()
+            .filter(|r| r.verifier == Some(VerifierKind::SpecInfer))
+            .count();
+        assert_eq!(gls + spec_inf, 2000, "every request must get a kind from the mix");
+        assert!((800..=1200).contains(&gls), "Gls share {gls} outside 40–60%");
+        // Empty mix → engine-default verifier on every request.
+        let mut spec = mixed_spec(21);
+        spec.verifier_mix.clear();
+        let plain = RequestTrace::generate(&spec);
+        assert!(plain.requests.iter().all(|r| r.verifier.is_none()));
+        // Arrival times are unperturbed by the mix change (salted
+        // sub-streams).
+        for (a, b) in tr.requests.iter().zip(&plain.requests) {
+            assert_eq!(a.at, b.at);
+        }
     }
 }

@@ -171,7 +171,7 @@ fn sequence_correctness_chi_square_all_multi_draft_verifiers() {
         );
         let mut counts = vec![0usize; vocab];
         for lane in 0..trials {
-            let req = Request { id: lane, prompt: vec![2, 7], max_new_tokens: 1, rng_lane: lane };
+            let req = Request::new(lane, vec![2, 7], 1);
             let mut seq = SequenceState::from_request(&req);
             eng.decode_sequence(&mut seq);
             counts[seq.tokens[2] as usize] += 1;

@@ -597,6 +597,7 @@ mod pool_grid {
             parallel_threshold: shape.parallel_threshold,
             verify_workers: workers,
             verify_backend: backend,
+            ..EngineConfig::default()
         };
         SpecDecodeEngine::new(
             cfg,

@@ -1,0 +1,316 @@
+//! Trace-driven serving-load drills: scaled-down failure-mode scenarios
+//! from `workload::drills` replayed against the multi-worker router with
+//! the server-global verify pool. Invariants gated here:
+//!
+//! - no lost or duplicated sequences under any scenario;
+//! - failed sequences roll KV back to zero leak;
+//! - the pool thread census stays flat while drills run;
+//! - unaffected sequences' tokens are *bit-identical* to the no-fault
+//!   run (round-robin routing + per-sequence verification randomness),
+//!   so fault goodput can be compared honestly;
+//! - the retry-once policy turns an injected transient pool fault into a
+//!   bit-exact recovery;
+//! - TTFT / per-token latency accounting matches a hand-computed oracle
+//!   on a `TimedLm`-scripted trace.
+//!
+//! Server-spawning tests serialize on a lock so the thread census is
+//! meaningful even under the default parallel test runner (CI runs this
+//! binary with `--test-threads=1` regardless).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use gls_serve::coordinator::config::{EngineConfig, VerifyBackend};
+use gls_serve::coordinator::scheduler::Scheduler;
+use gls_serve::coordinator::sequence::Request;
+use gls_serve::coordinator::{PagedKvCache, SpecDecodeEngine};
+use gls_serve::model::backend::ModelPair;
+use gls_serve::model::sim::SimLm;
+use gls_serve::model::TimedLm;
+use gls_serve::spec::types::VerifierKind;
+use gls_serve::testkit::PoisonDraft;
+use gls_serve::workload::{Drill, DrillOutcome, Scenario};
+
+const SEED: u64 = 0xA11CE;
+/// Census slack: drill servers run 2 workers + 3 pool threads, plus
+/// generous headroom for harness noise (matches `tests/pool_shared.rs`).
+const CENSUS_SLACK: usize = 2 + 3 + 8;
+
+static SERVE_LOCK: Mutex<()> = Mutex::new(());
+
+fn serve_guard() -> std::sync::MutexGuard<'static, ()> {
+    SERVE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every trace id present exactly once (sorted by `Drill::run`), nothing
+/// failed, every sequence filled its full generation budget.
+fn assert_complete(drill: &Drill, out: &DrillOutcome) {
+    let n = drill.trace.requests.len();
+    let name = drill.scenario.name();
+    assert_eq!(out.report.results.len(), n, "{name}: lost or duplicated sequences");
+    for (i, r) in out.report.results.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "{name}: id sequence has a hole or duplicate");
+        assert!(!r.failed, "{name}: request {} failed", r.id);
+        assert_eq!(
+            r.tokens.len(),
+            r.prompt_len + r.max_new_tokens,
+            "{name}: request {} truncated",
+            r.id
+        );
+    }
+}
+
+#[test]
+fn drill_schedules_are_deterministic() {
+    for sc in Scenario::all() {
+        let a = Drill::new(sc, 9);
+        let b = Drill::new(sc, 9);
+        assert_eq!(a.trace, b.trace, "{}: trace not replayable", sc.name());
+        assert_eq!(a.poisoned, b.poisoned, "{}: fault script not replayable", sc.name());
+        for idx in [0usize, 7, 31] {
+            let (ra, rb) = (a.request(idx), b.request(idx));
+            assert_eq!(ra.prompt, rb.prompt);
+            assert_eq!(ra.max_new_tokens, rb.max_new_tokens);
+            assert_eq!(ra.verifier, rb.verifier);
+        }
+        let c = Drill::new(sc, 10);
+        assert_ne!(a.trace, c.trace, "{}: seed must matter", sc.name());
+    }
+}
+
+#[test]
+fn fault_free_scenarios_lose_nothing_and_agree_bit_exactly() {
+    let _g = serve_guard();
+    let base = Drill::new(Scenario::NoFault, SEED);
+    let base_out = base.run();
+    assert_complete(&base, &base_out);
+    assert!(base_out.report.goodput() > 0.0);
+    if let Some(d) = base_out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "no-fault drill grew {d} threads");
+    }
+    // Bursty arrivals, KV pressure and a straggling backend change *when*
+    // work happens, never *what* is decoded: payload sub-streams are
+    // arrival-independent, round-robin keeps the request→worker map, and
+    // verification is a pure function of the per-sequence rng lane.
+    for sc in [Scenario::Bursty, Scenario::KvPressure, Scenario::Straggler] {
+        let drill = Drill::new(sc, SEED);
+        let out = drill.run();
+        assert_complete(&drill, &out);
+        if let Some(d) = out.census_delta() {
+            assert!(d <= CENSUS_SLACK, "{}: drill grew {d} threads", sc.name());
+        }
+        for (a, b) in out.report.results.iter().zip(&base_out.report.results) {
+            assert_eq!(
+                a.tokens,
+                b.tokens,
+                "{}: request {} diverged from the no-fault run",
+                sc.name(),
+                a.id
+            );
+        }
+    }
+}
+
+#[test]
+fn panic_storm_contains_faults_and_keeps_honest_goodput() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let storm = Drill::new(Scenario::PanicStorm, SEED);
+    let out = storm.run();
+    assert_eq!(out.report.results.len(), storm.trace.requests.len());
+    for r in &out.report.results {
+        if storm.poisoned.contains(&r.id) {
+            assert!(r.failed, "poisoned request {} did not fail", r.id);
+            assert_eq!(r.tokens, vec![storm.trigger], "request {} emitted past the fault", r.id);
+        } else {
+            assert!(!r.failed, "honest request {} failed in the storm", r.id);
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "honest request {} diverged under the storm",
+                r.id
+            );
+        }
+    }
+    assert_eq!(out.failed_ids(), storm.poisoned, "failure set is exactly the script");
+    assert_eq!(
+        out.report.metrics.verify_faults,
+        storm.poisoned.len() as u64,
+        "one contained fault per poisoned request"
+    );
+    // Honest tokens are identical, so goodput may only fall through wall
+    // time; a collapse means the storm stalled unaffected sequences.
+    let ratio = out.report.goodput() / base_out.report.goodput();
+    assert!(ratio >= 0.3, "storm goodput ratio {ratio:.3} vs no-fault");
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "panic storm grew {d} threads (pool must stay flat)");
+    }
+}
+
+#[test]
+fn engine_death_on_one_worker_leaves_the_other_healthy() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let death = Drill::new(Scenario::EngineDeath, SEED);
+    let out = death.run();
+    assert_eq!(out.report.results.len(), death.trace.requests.len());
+    // RoundRobin puts the even ids on worker 0 — all of them scripted to
+    // die — while worker 1's odd ids must be untouched.
+    for r in &out.report.results {
+        if r.id % 2 == 0 {
+            assert!(r.failed, "worker-0 ticket {} should have died", r.id);
+        } else {
+            assert!(!r.failed, "worker-1 request {} caught the death", r.id);
+            assert_eq!(r.tokens.len(), r.prompt_len + r.max_new_tokens);
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "healthy request {} diverged",
+                r.id
+            );
+        }
+    }
+    assert_eq!(out.report.metrics.verify_faults, death.poisoned.len() as u64);
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "engine death grew {d} threads");
+    }
+}
+
+#[test]
+fn failed_sequences_roll_kv_back_to_zero_leak() {
+    // Engine-level drill: drive the scheduler directly so the KV cache is
+    // inspectable after a storm of contained verification faults.
+    let _g = serve_guard();
+    let trigger = 9_999u32;
+    let (d, t) = SimLm::pair(64, 41, 2.0);
+    let cfg = EngineConfig {
+        verifier: VerifierKind::Gls,
+        num_drafts: 3,
+        block_len: 4,
+        max_seq_len: 256,
+        parallel_threshold: 0,
+        verify_workers: 2,
+        verify_backend: VerifyBackend::Pool,
+        ..EngineConfig::default()
+    };
+    let mut eng = SpecDecodeEngine::new(
+        cfg,
+        ModelPair::new(Box::new(PoisonDraft { inner: d, trigger }), Box::new(t)),
+        PagedKvCache::new(64, 16),
+    );
+    let mut sched = Scheduler::new(8);
+    let poisoned = [2u64, 5, 8];
+    for i in 0..12u64 {
+        let req = if poisoned.contains(&i) {
+            Request::new(i, vec![trigger], 10).with_verifier(Some(VerifierKind::FaultInjection))
+        } else {
+            Request::new(i, vec![1, (i % 7) as u32], 10)
+        };
+        sched.submit(req);
+    }
+    let mut results = sched.run_to_completion(&mut eng);
+    results.sort_by_key(|r| r.id);
+    assert_eq!(results.len(), 12);
+    for r in &results {
+        if poisoned.contains(&r.id) {
+            assert!(r.failed);
+            assert_eq!(r.tokens, vec![trigger]);
+        } else {
+            assert!(!r.failed);
+            assert_eq!(r.tokens.len(), 2 + 10);
+        }
+    }
+    assert_eq!(eng.kv.used_pages(), 0, "failed sequences leaked KV pages");
+    eng.kv.check_invariants().expect("KV invariants after fault storm");
+    assert_eq!(eng.metrics.verify_faults, poisoned.len() as u64);
+}
+
+#[test]
+fn retry_once_drill_recovers_a_transient_fault_bit_exactly() {
+    let _g = serve_guard();
+    let baseline = Drill::new(Scenario::NoFault, SEED).run();
+
+    // Retry on + one armed transient fault: the batch recovers and the
+    // whole run is bit-identical to the clean baseline.
+    let mut drill = Drill::new(Scenario::NoFault, SEED);
+    drill.engine_cfg.retry_transient_faults = true;
+    drill.inject_transient_faults = 1;
+    let recovered = drill.run();
+    assert_complete(&drill, &recovered);
+    for (a, b) in recovered.report.results.iter().zip(&baseline.report.results) {
+        assert_eq!(a.tokens, b.tokens, "request {} not recovered bit-exactly", a.id);
+    }
+    assert_eq!(recovered.report.metrics.verify_retries, 1, "exactly one retry submitted");
+    assert_eq!(recovered.report.metrics.verify_retries_recovered, 1);
+    assert_eq!(recovered.report.metrics.verify_faults, 0, "recovery must not count a fault");
+
+    // Control: same fault with the policy off fails exactly one sequence.
+    let mut control = Drill::new(Scenario::NoFault, SEED);
+    control.inject_transient_faults = 1;
+    let broken = control.run();
+    assert_eq!(broken.failed_ids().len(), 1, "one transient fault, one failed sequence");
+    assert_eq!(broken.report.metrics.verify_faults, 1);
+    assert_eq!(broken.report.metrics.verify_retries, 0);
+}
+
+#[test]
+fn latency_accounting_matches_timed_backend_oracle() {
+    // TimedLm makes wall time predictable: every target forward costs at
+    // least 3ms, every draft forward at least 200µs, so TTFT and
+    // per-token latency have hand-computable lower bounds.
+    let _g = serve_guard();
+    let target_lat = Duration::from_millis(3);
+    let (d, t) = SimLm::pair(32, 5, 1.5);
+    let cfg = EngineConfig {
+        verifier: VerifierKind::Gls,
+        num_drafts: 2,
+        block_len: 4,
+        max_seq_len: 128,
+        ..EngineConfig::default()
+    };
+    let mut eng = SpecDecodeEngine::new(
+        cfg,
+        ModelPair::new(
+            Box::new(TimedLm::new(d, Duration::from_micros(200), 64)),
+            Box::new(TimedLm::new(t, target_lat, 64)),
+        ),
+        PagedKvCache::new(1024, 16),
+    );
+    let mut sched = Scheduler::new(4);
+    sched.submit(Request::new(0, vec![1, 2], 8));
+    sched.submit(Request::new(1, vec![3, 4], 8));
+    let results = sched.run_to_completion(&mut eng);
+    assert_eq!(results.len(), 2);
+    let mut max_tok = 0.0f64;
+    for r in &results {
+        let ttft = r.ttft.expect("generating sequence must stamp TTFT");
+        // The first token cannot land before one target verification call.
+        assert!(ttft >= target_lat, "request {}: TTFT {ttft:?} beat the oracle", r.id);
+        assert!(ttft <= r.latency);
+        assert!(
+            r.latency >= target_lat * r.target_calls as u32,
+            "request {}: latency {:?} < {} target calls x {target_lat:?}",
+            r.id,
+            r.latency,
+            r.target_calls
+        );
+        let gen = r.tokens.len() - r.prompt_len;
+        assert_eq!(gen, 8);
+        max_tok = max_tok.max(r.latency.as_secs_f64() / gen as f64);
+    }
+    assert_eq!(eng.metrics.ttft.count(), 2);
+    assert_eq!(eng.metrics.token_latency.count(), 2);
+    // The histogram's max per-token sample sits within bucket resolution
+    // of the slowest request's latency/generated ratio.
+    let q = eng.metrics.token_latency.quantile(1.0);
+    assert!(
+        q >= 0.9 * max_tok && q <= 1.3 * max_tok,
+        "token-latency histogram {q} vs oracle {max_tok}"
+    );
+    // Counters are monotone across a second batch on the same engine.
+    let mut sched2 = Scheduler::new(4);
+    sched2.submit(Request::new(10, vec![5], 6));
+    sched2.run_to_completion(&mut eng);
+    assert_eq!(eng.metrics.ttft.count(), 3);
+    assert_eq!(eng.metrics.token_latency.count(), 3);
+}
