@@ -526,6 +526,7 @@ fn main() {
                 kv_pages: 1 << 14,
                 kv_page_size: 16,
                 pool_scope: scope,
+                ..ServerConfig::default()
             };
             let ec = EngineConfig {
                 num_drafts: 4,

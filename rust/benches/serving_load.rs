@@ -83,7 +83,7 @@ fn main() {
     let mut json = MergingPerfJson::load();
     let mut table = Table::new(&[
         "scenario", "goodput tok/s", "p95 tok ms", "p99 tok ms", "ttft p50 ms", "ttft p95 ms",
-        "failed", "threads",
+        "failed", "cancelled", "shed", "threads",
     ]);
     println!(
         "# Serving-load drills (seed {seed:#x}, {} requests/drill)\n",
@@ -91,12 +91,33 @@ fn main() {
     );
     let mut goodput_no_fault = 0.0f64;
     let mut goodput_storm = 0.0f64;
-    for sc in [Scenario::NoFault, Scenario::Bursty, Scenario::PanicStorm, Scenario::Straggler] {
+    for sc in [
+        Scenario::NoFault,
+        Scenario::Bursty,
+        Scenario::PanicStorm,
+        Scenario::Straggler,
+        Scenario::DeadlineStorm,
+        Scenario::CancelFlood,
+        Scenario::OverloadShed,
+        Scenario::DrainUnderStorm,
+        Scenario::ComposedFault,
+    ] {
         let mut drill = Drill::new(sc, seed);
         if quick {
             drill.trace.requests.truncate(16);
             drill.poisoned.retain(|&id| id < 16);
+            drill.deadline_zero.retain(|&id| id < 16);
+            drill.cancel_at_submit.retain(|&id| id < 16);
+            if let Some(d) = drill.drain_after.as_mut() {
+                *d = (*d).min(8);
+            }
         }
+        // Scripted expectations, emitted alongside the measured counters
+        // so the CI gate can assert counter == script per scenario.
+        let expected_timed_out = drill.deadline_zero.len();
+        let expected_cancelled = drill.cancel_at_submit.len();
+        let admit_bound = drill.server_cfg.admit_queue;
+        let submitted = drill.drain_after.unwrap_or(drill.trace.requests.len());
         let out = drill.run();
         let rep = &out.report;
         let goodput = rep.goodput();
@@ -106,6 +127,10 @@ fn main() {
         let ttft_p95 = rep.p95_ttft() * 1e3;
         let failed = out.failed_ids().len();
         let completed = rep.results.len();
+        let cancelled = rep.metrics.cancelled;
+        let timed_out = rep.metrics.timed_out;
+        let shed = rep.metrics.shed_full + rep.metrics.shed_expired;
+        let queue_peak = rep.metrics.queue_peak;
         // -1.0 = census unavailable (non-Linux); the CI gate skips then.
         let threads = out.census_delta().map_or(-1.0, |d| d as f64);
         match sc {
@@ -121,12 +146,17 @@ fn main() {
             format!("{ttft_p50:.2}"),
             format!("{ttft_p95:.2}"),
             format!("{failed}"),
+            format!("{}", cancelled + timed_out),
+            format!("{shed}"),
             format!("{threads:.0}"),
         ]);
         json.entries.push(format!(
             "{{\"section\":\"serving-load\",\"case\":\"{}\",\"goodput_tok_per_s\":{:.3},\
              \"p95_token_ms\":{:.3},\"p99_token_ms\":{:.3},\"ttft_p50_ms\":{:.3},\
-             \"ttft_p95_ms\":{:.3},\"failed\":{},\"completed\":{},\"threads\":{:.0}}}",
+             \"ttft_p95_ms\":{:.3},\"failed\":{},\"completed\":{},\"threads\":{:.0},\
+             \"cancelled\":{},\"timed_out\":{},\"shed\":{},\"shed_recorded\":{},\
+             \"queue_peak\":{},\"expected_timed_out\":{},\"expected_cancelled\":{},\
+             \"admit_bound\":{},\"submitted\":{}}}",
             sc.name(),
             goodput,
             p95_tok,
@@ -135,7 +165,16 @@ fn main() {
             ttft_p95,
             failed,
             completed,
-            threads
+            threads,
+            cancelled,
+            timed_out,
+            shed,
+            out.shed_ids.len(),
+            queue_peak,
+            expected_timed_out,
+            expected_cancelled,
+            admit_bound,
+            submitted
         ));
         let slug = sc.name().replace('-', "_");
         json.metric(&format!("serving_load_goodput_tok_per_s_{slug}"), goodput);
@@ -145,6 +184,10 @@ fn main() {
         json.metric(&format!("serving_load_ttft_p95_ms_{slug}"), ttft_p95);
         json.metric(&format!("serving_load_failed_{slug}"), failed as f64);
         json.metric(&format!("serving_load_threads_{slug}"), threads);
+        json.metric(&format!("serving_load_cancelled_{slug}"), cancelled as f64);
+        json.metric(&format!("serving_load_timed_out_{slug}"), timed_out as f64);
+        json.metric(&format!("serving_load_shed_{slug}"), shed as f64);
+        json.metric(&format!("serving_load_queue_peak_{slug}"), queue_peak as f64);
     }
     table.print();
     if goodput_no_fault > 0.0 {

@@ -200,6 +200,15 @@ pub struct ServerConfig {
     /// one pool per worker engine. Only meaningful with
     /// `verify_backend = pool`.
     pub pool_scope: PoolScope,
+    /// Admission bound: maximum requests in flight (admitted but not yet
+    /// retired) across all workers before `try_submit` sheds with
+    /// `AdmitError::QueueFull`. `0` = unbounded (the default, preserving
+    /// pre-lifecycle behavior where `submit` never refuses work).
+    pub admit_queue: usize,
+    /// Shed requests whose deadline has already expired at admission
+    /// time (`AdmitError::DeadlineExpired`) instead of admitting them
+    /// just to cancel them at the first block boundary. Off by default.
+    pub shed_expired: bool,
 }
 
 impl Default for ServerConfig {
@@ -212,6 +221,8 @@ impl Default for ServerConfig {
             kv_pages: 4096,
             kv_page_size: 16,
             pool_scope: PoolScope::Server,
+            admit_queue: 0,
+            shed_expired: false,
         }
     }
 }
@@ -299,6 +310,8 @@ pub fn parse_config(text: &str) -> Result<(EngineConfig, ServerConfig), String> 
             "pool_scope" => {
                 sc.pool_scope = PoolScope::parse(value).ok_or_else(|| err("unknown pool scope"))?
             }
+            "admit_queue" => sc.admit_queue = value.parse().map_err(|_| err("bad usize"))?,
+            "shed_expired" => sc.shed_expired = value.parse().map_err(|_| err("bad bool"))?,
             _ => return Err(format!("line {}: unknown key '{key}'", lineno + 1)),
         }
     }
@@ -416,6 +429,20 @@ mod tests {
             assert_eq!(VerifyBackend::parse(b.name()), Some(b));
         }
         assert_eq!(VerifyBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_admission_keys() {
+        let (_, sc) = parse_config("admit_queue = 32\nshed_expired = true").unwrap();
+        assert_eq!(sc.admit_queue, 32);
+        assert!(sc.shed_expired);
+        assert!(parse_config("admit_queue = lots").is_err());
+        assert!(parse_config("shed_expired = sometimes").is_err());
+        // Defaults: unbounded admission, no expiry shedding — submission
+        // behavior is byte-identical to the pre-lifecycle server.
+        let (_, sc) = parse_config("").unwrap();
+        assert_eq!(sc.admit_queue, 0);
+        assert!(!sc.shed_expired);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::backend::ModelPair;
-use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceRecycler};
+use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceBank, SliceRecycler};
 use crate::spec::types::{Categorical, TokenMatrix};
 use crate::spec::VerifierKind;
 use crate::stats::rng::CounterRng;
@@ -20,8 +20,8 @@ use crate::stats::rng::CounterRng;
 use super::config::{EngineConfig, VerifyBackend};
 use super::kv::PagedKvCache;
 use super::metrics::EngineMetrics;
-use super::pool::{PoolError, VerifyJob, VerifyPool};
-use super::sequence::{SeqPhase, SequenceState};
+use super::pool::{JobCut, PoolError, VerifyJob, VerifyPool};
+use super::sequence::{CancelCause, SeqPhase, SequenceState};
 
 /// Outcome of one speculative block for one sequence.
 #[derive(Clone, Debug)]
@@ -63,6 +63,13 @@ pub struct SpecDecodeEngine {
     /// verify job ships its spent slice back here, so steady-state draft
     /// recording is allocation-free (spec::kernel handoff protocol step 5).
     recycler: SliceRecycler,
+    /// Pool-level spare-slice bank (set by [`attach_shared_pool`]): leases
+    /// fall back here when the local recycler runs dry, and surplus local
+    /// returns are deposited for other engines — recycling capacity
+    /// follows load across engines instead of stranding per-engine.
+    ///
+    /// [`attach_shared_pool`]: SpecDecodeEngine::attach_shared_pool
+    bank: Option<Arc<SliceBank>>,
 }
 
 impl SpecDecodeEngine {
@@ -85,14 +92,18 @@ impl SpecDecodeEngine {
             engine_tag: 0,
             resolved_workers,
             recycler: SliceRecycler::new(),
+            bank: None,
         }
     }
 
     /// Use a server-global shared verify pool instead of a lazily spawned
     /// per-engine one. `tag` identifies this engine's submissions for the
-    /// pool's per-engine stats (the router passes the worker index).
+    /// pool's per-engine stats (the router passes the worker index). Also
+    /// joins the pool's shared [`SliceBank`] so panel-slice recycling
+    /// capacity moves across the pool's engines.
     pub fn attach_shared_pool(&mut self, pool: Arc<VerifyPool>, tag: u64) {
         self.resolved_workers = pool.workers();
+        self.bank = Some(pool.slice_bank());
         self.pool = Some(pool);
         self.engine_tag = tag;
     }
@@ -184,20 +195,33 @@ impl SpecDecodeEngine {
             })
             .collect();
         let any_record = records.iter().any(|&r| r);
-        let mut panels: Vec<PanelSlice> = records
-            .iter()
-            .map(|&r| {
-                if r {
-                    // Leased from the recycler: spent slices return from
-                    // whichever workspace consumed them, so steady-state
-                    // recording reuses their buffers instead of allocating.
-                    self.recycler.lease()
-                } else {
-                    PanelSlice::default()
-                }
-            })
-            .collect();
+        let mut panels: Vec<PanelSlice> = Vec::with_capacity(records.len());
+        for &r in &records {
+            if r {
+                // Leased from the recycler: spent slices return from
+                // whichever workspace consumed them, so steady-state
+                // recording reuses their buffers instead of allocating.
+                // When the local channel is dry, fall back to the pool's
+                // shared bank (capacity donated by sibling engines)
+                // before allocating fresh.
+                let slice = self
+                    .recycler
+                    .try_lease()
+                    .or_else(|| self.bank.as_ref().and_then(|b| b.lease(self.engine_tag)))
+                    .unwrap_or_default();
+                panels.push(slice);
+            } else {
+                panels.push(PanelSlice::default());
+            }
+        }
         self.metrics.panel_slices_recycled += self.recycler.drain_recycled();
+        // Local returns beyond what this block leased would strand in the
+        // channel (this engine's batches shrank); bank them for siblings.
+        if let Some(bank) = &self.bank {
+            for s in self.recycler.drain_surplus() {
+                bank.deposit(self.engine_tag, s);
+            }
+        }
         // draft_dists[s][lane][j]
         let mut draft_dists: Vec<Vec<Vec<Categorical>>> =
             vec![vec![Vec::with_capacity(l); k]; seqs.len()];
@@ -281,6 +305,15 @@ impl SpecDecodeEngine {
                 slot0: seqs[s].next_slot,
                 panel: panels.next().unwrap_or_default(),
                 recycle: if records[s] { recycle_tx.clone() } else { None },
+                // Claim-time lifecycle checkpoint: a worker claiming a
+                // job whose sequence is already cut skips verification
+                // and returns an empty output; the epilogue below
+                // re-checks the same monotone signals, so that empty
+                // output is never committed as real tokens.
+                cut: Some(JobCut {
+                    cancel: seqs[s].cancel.clone(),
+                    deadline_at: seqs[s].deadline_at,
+                }),
             })
             .collect();
 
@@ -383,6 +416,26 @@ impl SpecDecodeEngine {
         // --- Serial epilogue: sequence state, KV commits, metrics. --------
         let mut outcomes = Vec::with_capacity(seqs.len());
         for (seq, out) in seqs.iter_mut().zip(outs) {
+            // Lifecycle cut at the block boundary (checked BEFORE the
+            // output is committed): roll the block's reservation back and
+            // retire the sequence `Cancelled` — the same template the
+            // `Failed` path below uses. Monotonicity of the cut signals
+            // guarantees this check fires whenever the claim-time check
+            // in `VerifyJob::run` did, so a worker's empty cut output is
+            // never mistaken for real tokens. Checking cut before the
+            // fault branch means a cancel wins over a concurrent panic
+            // (the client no longer wants the result either way).
+            if let Some(cause) = seq.cut_now() {
+                self.kv.commit(seq.id, 0).expect("rollback within reservation");
+                seq.phase = SeqPhase::Cancelled;
+                seq.cancelled = Some(cause);
+                match cause {
+                    CancelCause::Explicit => self.metrics.cancelled += 1,
+                    CancelCause::DeadlineExpired => self.metrics.timed_out += 1,
+                }
+                outcomes.push(BlockOutcome { emitted: Vec::new(), accepted: 0, failed: false });
+                continue;
+            }
             let Some(mut out) = out else {
                 // Verification fault: emit nothing, roll the block's KV
                 // reservation back, and mark the sequence failed so the
@@ -434,7 +487,7 @@ impl SpecDecodeEngine {
             let mut batch = [&mut *seq];
             self.step_blocks(&mut batch);
         }
-        if seq.phase != SeqPhase::Failed {
+        if seq.phase == SeqPhase::Running {
             seq.phase = SeqPhase::Finished;
         }
         self.kv.release(seq.id).expect("kv release");
@@ -844,6 +897,83 @@ mod tests {
         assert_eq!(results.iter().filter(|r| r.failed).count(), 1);
         assert_eq!(eng.metrics.verify_faults, 1);
         assert_eq!(eng.metrics.verify_retries, 0);
+    }
+
+    #[test]
+    fn cancelled_sequence_rolls_kv_back_and_counts() {
+        use crate::coordinator::sequence::CancelCause;
+        let mut eng = engine(VerifierKind::Gls, 2, 1.5, 31);
+        let req = Request::new(1, vec![1, 2], 20);
+        req.cancel.cancel();
+        let mut seq = SequenceState::from_request(&req);
+        eng.decode_sequence(&mut seq); // must cut at the first block boundary
+        assert_eq!(seq.phase, SeqPhase::Cancelled);
+        assert_eq!(seq.generated(), 0, "cut before any commit emits nothing");
+        assert_eq!(eng.kv.used_pages(), 0, "cancel must roll KV back to zero");
+        assert_eq!(eng.metrics.cancelled, 1);
+        assert_eq!(eng.metrics.timed_out, 0);
+        let res = seq.into_result();
+        assert_eq!(res.cancelled, Some(CancelCause::Explicit));
+        assert!(!res.failed);
+        assert!(!res.ok());
+    }
+
+    #[test]
+    fn expired_deadline_times_out_at_the_block_boundary() {
+        use crate::coordinator::sequence::CancelCause;
+        let mut eng = engine(VerifierKind::Gls, 2, 1.5, 31);
+        let req = Request::new(2, vec![1, 2], 20).with_deadline(std::time::Duration::ZERO);
+        let mut seq = SequenceState::from_request(&req);
+        eng.decode_sequence(&mut seq);
+        assert_eq!(seq.phase, SeqPhase::Cancelled);
+        assert_eq!(seq.generated(), 0);
+        assert_eq!(eng.kv.used_pages(), 0);
+        assert_eq!(eng.metrics.timed_out, 1);
+        assert_eq!(eng.metrics.cancelled, 0);
+        assert_eq!(seq.into_result().cancelled, Some(CancelCause::DeadlineExpired));
+    }
+
+    #[test]
+    fn mid_decode_cancel_keeps_emitted_prefix_bit_exact() {
+        // Cancel after two blocks: the partial output must be the exact
+        // prefix the uncancelled run produced at the same block boundary,
+        // and the cut must not disturb a co-batched honest sequence.
+        let mk_seqs = || {
+            (
+                SequenceState::from_request(&Request::new(1, vec![1, 2], 40)),
+                SequenceState::from_request(&Request::new(2, vec![3], 40)),
+            )
+        };
+        let run = |cancel_after: Option<usize>| -> (Vec<u32>, Vec<u32>) {
+            let mut eng = engine(VerifierKind::Gls, 2, 2.0, 55);
+            let (mut a, mut b) = mk_seqs();
+            eng.kv.register(1, 2, 42, 5).unwrap();
+            eng.kv.register(2, 1, 41, 5).unwrap();
+            a.phase = SeqPhase::Running;
+            b.phase = SeqPhase::Running;
+            for block in 0..4 {
+                if cancel_after == Some(block) {
+                    a.cancel.cancel();
+                }
+                if a.phase == SeqPhase::Running {
+                    let mut batch = [&mut a, &mut b];
+                    eng.step_blocks(&mut batch);
+                } else {
+                    let mut batch = [&mut b];
+                    eng.step_blocks(&mut batch);
+                }
+            }
+            if a.phase == SeqPhase::Cancelled {
+                eng.kv.release(1).unwrap();
+                assert_eq!(eng.kv.num_sequences(), 1, "only the honest seq holds KV");
+            }
+            (a.tokens, b.tokens)
+        };
+        let (full_a, full_b) = run(None);
+        let (cut_a, cut_b) = run(Some(2));
+        assert!(cut_a.len() < full_a.len(), "cancel must cut generation short");
+        assert_eq!(cut_a[..], full_a[..cut_a.len()], "partial output is an exact prefix");
+        assert_eq!(cut_b, full_b, "co-batched honest sequence perturbed by a cancel");
     }
 
     #[test]

@@ -49,6 +49,19 @@ pub struct EngineMetrics {
     /// Resubmitted jobs that then completed — sequences the retry-once
     /// policy saved from `SeqPhase::Failed`.
     pub verify_retries_recovered: u64,
+    /// Sequences cut by an explicit client cancel (`CancelToken`); their
+    /// KV pages rolled back like failed sequences.
+    pub cancelled: u64,
+    /// Sequences cut by deadline expiry.
+    pub timed_out: u64,
+    /// Submissions refused with `AdmitError::QueueFull` (router-side;
+    /// folded into the merged view at shutdown/drain).
+    pub shed_full: u64,
+    /// Submissions refused with `AdmitError::DeadlineExpired`.
+    pub shed_expired: u64,
+    /// High-water mark of in-flight admitted requests (router-side).
+    /// Merged with `max`, not `+`: workers share one admission queue.
+    pub queue_peak: u64,
 }
 
 impl Default for EngineMetrics {
@@ -77,6 +90,11 @@ impl EngineMetrics {
             token_latency: Histogram::latency(),
             verify_retries: 0,
             verify_retries_recovered: 0,
+            cancelled: 0,
+            timed_out: 0,
+            shed_full: 0,
+            shed_expired: 0,
+            queue_peak: 0,
         }
     }
 
@@ -116,6 +134,11 @@ impl EngineMetrics {
         self.token_latency.merge(&other.token_latency);
         self.verify_retries += other.verify_retries;
         self.verify_retries_recovered += other.verify_retries_recovered;
+        self.cancelled += other.cancelled;
+        self.timed_out += other.timed_out;
+        self.shed_full += other.shed_full;
+        self.shed_expired += other.shed_expired;
+        self.queue_peak = self.queue_peak.max(other.queue_peak);
     }
 
     pub fn report(&self) -> String {
@@ -123,7 +146,8 @@ impl EngineMetrics {
             "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
              p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms \
              panel-hits={} slices-recycled={} faults={} \
-             ttft-p50={:.1}ms tok-p95={:.2}ms retries={}/{}",
+             ttft-p50={:.1}ms tok-p95={:.2}ms retries={}/{} \
+             cancelled={} timed-out={} shed={}/{} queue-peak={}",
             self.blocks,
             self.emitted_tokens,
             self.block_efficiency(),
@@ -141,6 +165,11 @@ impl EngineMetrics {
             self.token_latency.quantile(0.95) * 1e3,
             self.verify_retries_recovered,
             self.verify_retries,
+            self.cancelled,
+            self.timed_out,
+            self.shed_full,
+            self.shed_expired,
+            self.queue_peak,
         )
     }
 }
@@ -192,6 +221,29 @@ mod tests {
         assert_eq!(a.verify_retries, 3);
         assert_eq!(a.verify_retries_recovered, 2);
         assert!(a.ttft.quantile(0.95) >= a.ttft.quantile(0.5));
+    }
+
+    #[test]
+    fn merge_lifecycle_counters_add_and_queue_peak_maxes() {
+        let mut a = EngineMetrics::new();
+        a.cancelled = 2;
+        a.timed_out = 1;
+        a.shed_full = 3;
+        a.shed_expired = 1;
+        a.queue_peak = 7;
+        let mut b = EngineMetrics::new();
+        b.cancelled = 1;
+        b.timed_out = 4;
+        b.shed_full = 2;
+        b.shed_expired = 2;
+        b.queue_peak = 5;
+        a.merge(&b);
+        assert_eq!(a.cancelled, 3);
+        assert_eq!(a.timed_out, 5);
+        assert_eq!(a.shed_full, 5);
+        assert_eq!(a.shed_expired, 3);
+        // High-water mark takes the max — the workers shared one queue.
+        assert_eq!(a.queue_peak, 7);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub use config::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
 pub use engine::SpecDecodeEngine;
 pub use kv::PagedKvCache;
 pub use metrics::EngineMetrics;
-pub use pool::{BatchOutput, PoolEngineStats, PoolError, VerifyJob, VerifyPool};
-pub use router::{Router, RoutingPolicy};
-pub use sequence::{Request, RequestResult, SequenceState};
+pub use pool::{BatchOutput, JobCut, PoolEngineStats, PoolError, VerifyJob, VerifyPool};
+pub use router::{AdmitError, DrainPolicy, Router, RoutingPolicy};
+pub use sequence::{CancelCause, CancelToken, Request, RequestResult, SeqPhase, SequenceState};
 pub use server::Server;

@@ -78,11 +78,33 @@
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
+use super::sequence::CancelToken;
 use crate::model::sampling::SamplingParams;
-use crate::spec::kernel::{CouplingWorkspace, PanelSlice};
+use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceBank};
 use crate::spec::types::{BlockInput, BlockOutput, Categorical, TokenMatrix, VerifierKind};
 use crate::stats::rng::CounterRng;
+
+/// Cancellation checkpoint a job carries to its claiming worker: the
+/// request's `CancelToken` plus its precomputed absolute deadline. Both
+/// signals are monotone (a flipped token never unflips; an expired
+/// instant stays expired), so the engine epilogue re-checking the same
+/// handle is guaranteed to see any cut the worker saw — the claim-time
+/// shortcut below can never leak a half-processed block as real tokens.
+#[derive(Clone, Debug, Default)]
+pub struct JobCut {
+    pub cancel: CancelToken,
+    pub deadline_at: Option<Instant>,
+}
+
+impl JobCut {
+    /// Is the owning sequence cut as of now?
+    pub fn is_cut(&self) -> bool {
+        self.cancel.is_cancelled()
+            || self.deadline_at.is_some_and(|at| Instant::now() >= at)
+    }
+}
 
 /// One sequence's verification work, fully owned so it can migrate to a
 /// persistent worker (`'static` + `Send`): the flat-arena token view, the
@@ -107,6 +129,13 @@ pub struct VerifyJob {
     /// to the recording engine's `SliceRecycler`. `None` disables
     /// recycling (e.g. the faithful scoped-spawn baseline).
     pub recycle: Option<std::sync::mpsc::Sender<PanelSlice>>,
+    /// Lifecycle checkpoint: when set and already cut at claim time, the
+    /// worker skips verification entirely and returns an empty output —
+    /// the engine epilogue (which re-checks the same monotone handle)
+    /// discards it and retires the sequence `Cancelled`. `None` (parity
+    /// suites, benches) keeps the job bit-identical to the pre-lifecycle
+    /// pool.
+    pub cut: Option<JobCut>,
 }
 
 impl VerifyJob {
@@ -127,13 +156,25 @@ impl VerifyJob {
             slot0: self.slot0,
             panel: PanelSlice::default(),
             recycle: None,
+            cut: self.cut.clone(),
         }
     }
 
     /// Run the job on `ws`. Pure in `(self)` — the workspace only
     /// contributes reusable scratch and value-keyed caches, never state
-    /// that can change an outcome.
+    /// that can change an outcome — except for the claim-time cut check,
+    /// whose empty output is only ever observed by an epilogue that also
+    /// sees the cut (monotonicity; see [`JobCut`]).
     pub fn run(mut self, ws: &mut CouplingWorkspace) -> BlockOutput {
+        if self.cut.as_ref().is_some_and(JobCut::is_cut) {
+            // Best-effort return the unconsumed panel so the recycler
+            // keeps its buffers (the next lease demotes the rows to
+            // spares); no verification work happens for a cut sequence.
+            if let Some(tx) = self.recycle.take() {
+                let _ = tx.send(std::mem::take(&mut self.panel));
+            }
+            return BlockOutput { tokens: Vec::new(), accepted: 0, surviving_draft: None };
+        }
         if !self.panel.is_empty() {
             let spent = ws.adopt_panel_slice(std::mem::take(&mut self.panel));
             if let Some(tx) = self.recycle.take() {
@@ -344,6 +385,11 @@ pub struct VerifyPool {
     workers: usize,
     /// Total workers ever spawned (names for respawned replacements).
     spawned: AtomicUsize,
+    /// Pool-level spare `PanelSlice` free list shared by every attached
+    /// engine: engines deposit surplus recycler returns here and lease
+    /// from it when their own recycler runs dry, so recycling capacity
+    /// follows load across engines instead of stranding per-engine.
+    bank: Arc<SliceBank>,
 }
 
 impl VerifyPool {
@@ -367,11 +413,17 @@ impl VerifyPool {
             handles: Mutex::new(handles),
             workers,
             spawned: AtomicUsize::new(workers),
+            bank: Arc::new(SliceBank::new()),
         }
     }
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The pool-level spare-slice bank shared by every attached engine.
+    pub fn slice_bank(&self) -> Arc<SliceBank> {
+        Arc::clone(&self.bank)
     }
 
     /// Join any dead worker threads and respawn replacements so the pool
@@ -664,6 +716,7 @@ mod tests {
             slot0: 0,
             panel,
             recycle: None,
+            cut: None,
         }
     }
 
@@ -937,6 +990,55 @@ mod tests {
         let outs = pool.run_batch(0, mk_batch()).expect("fuse exhausted").outputs;
         assert_eq!(outs.len(), 4);
         assert_eq!(pool.engine_stats(0).faults, 1);
+    }
+
+    #[test]
+    fn cut_job_skips_verification_and_returns_empty_output() {
+        let pool = VerifyPool::new(2);
+        let mut gen = XorShift128::new(0xC07);
+        // Job 0 is cut before submission, job 1 is live: the cut one must
+        // come back empty, the live one bit-exact — co-batching a cut
+        // sequence never perturbs its neighbors.
+        let mut cut_job = mk_job(&mut gen, VerifierKind::Gls, 11);
+        let token = CancelToken::new();
+        token.cancel();
+        cut_job.cut = Some(JobCut { cancel: token, deadline_at: None });
+        let live_job = mk_job(&mut gen, VerifierKind::Gls, 12);
+        let outs = pool.run_batch(0, vec![cut_job, live_job]).expect("no faults").outputs;
+        assert!(outs[0].tokens.is_empty(), "cut job must not emit tokens");
+        assert_eq!(outs[0].accepted, 0);
+        let mut gen = XorShift128::new(0xC07);
+        let _ = mk_job(&mut gen, VerifierKind::Gls, 11); // advance generator
+        let want = expected(&mut gen, VerifierKind::Gls, 12);
+        assert_eq!(outs[1], want, "live neighbor unaffected by the cut job");
+        // An uncut handle runs normally.
+        let mut gen = XorShift128::new(0x5EED);
+        let mut job = mk_job(&mut gen, VerifierKind::Gls, 13);
+        job.cut = Some(JobCut::default());
+        let outs = pool.run_batch(0, vec![job]).expect("no faults").outputs;
+        let mut gen = XorShift128::new(0x5EED);
+        let want = expected(&mut gen, VerifierKind::Gls, 13);
+        assert_eq!(outs[0], want, "an armed-but-uncut handle must not change output");
+    }
+
+    #[test]
+    fn cut_job_still_returns_its_panel_for_recycling() {
+        let pool = VerifyPool::new(1);
+        let mut recycler = crate::spec::kernel::SliceRecycler::new();
+        let mut gen = XorShift128::new(0x90);
+        let mut job = mk_job(&mut gen, VerifierKind::Gls, 21);
+        assert!(!job.panel.is_empty());
+        job.recycle = Some(recycler.return_sender());
+        let token = CancelToken::new();
+        token.cancel();
+        job.cut = Some(JobCut { cancel: token, deadline_at: None });
+        let _ = pool.run_batch(0, vec![job]).expect("no faults");
+        let slice = recycler.lease();
+        assert!(
+            slice.spare_len() > 0,
+            "cut job's panel buffers must flow back to the recycler"
+        );
+        assert_eq!(recycler.drain_recycled(), 1);
     }
 
     #[test]

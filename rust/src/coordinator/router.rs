@@ -19,9 +19,54 @@ use super::kv::PagedKvCache;
 use super::metrics::EngineMetrics;
 use super::pool::VerifyPool;
 use super::scheduler::Scheduler;
-use super::sequence::{Request, RequestResult};
+use super::sequence::{CancelToken, Request, RequestResult};
 use crate::model::backend::ModelPair;
 use crate::spec::types::VerifierKind;
+
+/// Why the router refused a submission. Admission control never drops a
+/// request silently: every shed is a typed error the caller must handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The bounded admission window (`ServerConfig::admit_queue`) is at
+    /// capacity: `depth` requests are already in flight against `bound`.
+    QueueFull { depth: usize, bound: usize },
+    /// `ServerConfig::shed_expired` is on and this request's deadline had
+    /// already passed at submission time — decoding it would only produce
+    /// a result nobody can use.
+    DeadlineExpired,
+    /// A drain has begun; intake is closed for good.
+    Draining,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { depth, bound } => {
+                write!(f, "admission queue full ({depth} in flight >= bound {bound})")
+            }
+            AdmitError::DeadlineExpired => write!(f, "deadline already expired at submission"),
+            AdmitError::Draining => write!(f, "router is draining; intake closed"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// What `Router::drain` does with requests still in flight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DrainPolicy {
+    /// Let everything already admitted run to completion, then stop.
+    #[default]
+    Finish,
+    /// Cancel everything in flight — each open request retires with a
+    /// typed `cancelled` result at its next block boundary (or straight
+    /// from the queue, if it never started).
+    CancelInFlight,
+}
+
+/// Registry length at which `register_cancel` prunes tokens whose request
+/// has already retired (registry copy is the only live handle).
+const CANCEL_REGISTRY_PRUNE: usize = 128;
 
 /// Cost a request contributes to a worker's `LeastLoaded` load signal.
 ///
@@ -67,6 +112,26 @@ pub struct Router {
     /// The server-global verify pool (`pool_scope = server` with the pool
     /// backend); `None` under per-engine pooling or non-pool backends.
     shared_pool: Option<Arc<VerifyPool>>,
+    /// Requests admitted but not yet retired, across all workers.
+    /// Incremented at admission; each worker decrements once per result
+    /// it emits, so the count is exact (one result per admitted request).
+    in_flight: Arc<AtomicUsize>,
+    /// `ServerConfig::admit_queue` (0 = unbounded, the default).
+    admit_bound: usize,
+    /// `ServerConfig::shed_expired`.
+    shed_expired_policy: bool,
+    /// Set by `begin_drain`; closes intake.
+    draining: bool,
+    /// Router-side shed counters, folded into the merged `EngineMetrics`
+    /// at shutdown/drain (workers never see shed requests).
+    shed_full: u64,
+    shed_expired: u64,
+    /// High-water mark of `in_flight` observed at admission.
+    queue_peak: u64,
+    /// Cancel handles of admitted requests, so `drain(CancelInFlight)`
+    /// can cut everything still open. Append-only between prunes;
+    /// `register_cancel` drops entries whose request already retired.
+    cancels: Vec<CancelToken>,
 }
 
 impl Router {
@@ -102,23 +167,39 @@ impl Router {
             None
         };
         let (results_tx, results_rx) = mpsc::channel();
+        let in_flight = Arc::new(AtomicUsize::new(0));
         let mut workers = Vec::with_capacity(server_cfg.workers);
         for w in 0..server_cfg.workers {
             let pair = make_pair(w);
             let (tx, rx) = mpsc::channel::<Request>();
             let load = Arc::new(AtomicUsize::new(0));
             let load_w = Arc::clone(&load);
+            let inflight_w = Arc::clone(&in_flight);
             let results = results_tx.clone();
             let ec = engine_cfg.clone();
             let sc = server_cfg.clone();
             let pool = shared_pool.clone();
             let join = std::thread::Builder::new()
                 .name(format!("gls-worker-{w}"))
-                .spawn(move || worker_loop(w, rx, results, load_w, ec, sc, pool, pair))
+                .spawn(move || worker_loop(w, rx, results, load_w, inflight_w, ec, sc, pool, pair))
                 .expect("spawn worker");
             workers.push(WorkerHandle { tx, load, join });
         }
-        Self { workers, policy, next_rr: 0, results_rx, shared_pool }
+        Self {
+            workers,
+            policy,
+            next_rr: 0,
+            results_rx,
+            shared_pool,
+            in_flight,
+            admit_bound: server_cfg.admit_queue,
+            shed_expired_policy: server_cfg.shed_expired,
+            draining: false,
+            shed_full: 0,
+            shed_expired: 0,
+            queue_peak: 0,
+            cancels: Vec::new(),
+        }
     }
 
     pub fn num_workers(&self) -> usize {
@@ -131,8 +212,42 @@ impl Router {
         self.shared_pool.as_ref()
     }
 
+    /// Requests admitted but not yet retired (observability).
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
     /// Route one request. Returns the worker index chosen.
+    ///
+    /// Panics if admission control refuses — with the default config
+    /// (unbounded queue, no expiry shedding, not draining) admission is
+    /// always open and this never fires. Backpressure-aware callers use
+    /// [`Router::try_submit`] and handle the typed error.
     pub fn submit(&mut self, req: Request) -> usize {
+        self.try_submit(req).expect("admission open")
+    }
+
+    /// Route one request through admission control. Returns the worker
+    /// index chosen, or a typed [`AdmitError`] explaining the shed.
+    pub fn try_submit(&mut self, req: Request) -> Result<usize, AdmitError> {
+        if self.draining {
+            return Err(AdmitError::Draining);
+        }
+        if self.admit_bound > 0 {
+            let depth = self.in_flight.load(Ordering::Acquire);
+            if depth >= self.admit_bound {
+                self.shed_full += 1;
+                return Err(AdmitError::QueueFull { depth, bound: self.admit_bound });
+            }
+        }
+        if self.shed_expired_policy {
+            if let Some(d) = req.deadline {
+                if req.submitted_at.elapsed() >= d {
+                    self.shed_expired += 1;
+                    return Err(AdmitError::DeadlineExpired);
+                }
+            }
+        }
         let idx = match self.policy {
             RoutingPolicy::RoundRobin => {
                 let i = self.next_rr;
@@ -147,15 +262,66 @@ impl Router {
                 .map(|(i, _)| i)
                 .unwrap(),
         };
+        let depth = self.in_flight.fetch_add(1, Ordering::AcqRel) + 1;
+        self.queue_peak = self.queue_peak.max(depth as u64);
+        self.register_cancel(req.cancel.clone());
         let cost = routing_cost(req.prompt.len(), req.max_new_tokens, req.verifier);
         self.workers[idx].load.fetch_add(cost, Ordering::Relaxed);
         self.workers[idx].tx.send(req).expect("worker alive");
-        idx
+        Ok(idx)
+    }
+
+    fn register_cancel(&mut self, token: CancelToken) {
+        if self.cancels.len() >= CANCEL_REGISTRY_PRUNE {
+            // A retired request's only remaining strong handle is the
+            // registry copy (unless the caller kept one, which is on the
+            // caller); drop those so the registry stays bounded by the
+            // number of genuinely open requests.
+            self.cancels.retain(|c| c.handle_count() > 1);
+        }
+        self.cancels.push(token);
+    }
+
+    /// Close intake without joining workers: subsequent `try_submit`
+    /// returns [`AdmitError::Draining`], and under
+    /// [`DrainPolicy::CancelInFlight`] every open request's cancel token
+    /// is flipped so workers retire them typed at the next block boundary.
+    /// Idempotent; [`Router::drain`] calls this first.
+    pub fn begin_drain(&mut self, policy: DrainPolicy) {
+        self.draining = true;
+        if policy == DrainPolicy::CancelInFlight {
+            for c in &self.cancels {
+                c.cancel();
+            }
+        }
+    }
+
+    /// Graceful drain: close intake, apply `policy` to in-flight work,
+    /// join every worker, and return the merged metrics plus any results
+    /// the caller had not yet received. After this returns, no worker
+    /// threads remain and every admitted request has exactly one terminal
+    /// result (delivered earlier via `results_rx` or in the returned Vec).
+    pub fn drain(mut self, policy: DrainPolicy) -> (EngineMetrics, Vec<RequestResult>) {
+        self.begin_drain(policy);
+        let Router { workers, results_rx, shed_full, shed_expired, queue_peak, .. } = self;
+        let mut merged = EngineMetrics::new();
+        for w in workers {
+            drop(w.tx);
+            merged.merge(&w.join.join().expect("worker panicked"));
+        }
+        merged.shed_full += shed_full;
+        merged.shed_expired += shed_expired;
+        merged.queue_peak = merged.queue_peak.max(queue_peak);
+        let mut leftovers = Vec::new();
+        while let Ok(r) = results_rx.try_recv() {
+            leftovers.push(r);
+        }
+        (merged, leftovers)
     }
 
     /// Close intake and join all workers, returning merged metrics.
     pub fn shutdown(self) -> EngineMetrics {
-        let Router { workers, .. } = self;
+        let Router { workers, shed_full, shed_expired, queue_peak, .. } = self;
         let mut merged = EngineMetrics::new();
         // Dropping senders closes intake; workers drain and exit.
         for w in workers {
@@ -163,6 +329,9 @@ impl Router {
             let m = w.join.join().expect("worker panicked");
             merged.merge(&m);
         }
+        merged.shed_full += shed_full;
+        merged.shed_expired += shed_expired;
+        merged.queue_peak = merged.queue_peak.max(queue_peak);
         merged
     }
 }
@@ -181,6 +350,7 @@ fn worker_loop(
     rx: Receiver<Request>,
     results: Sender<RequestResult>,
     load: Arc<AtomicUsize>,
+    in_flight: Arc<AtomicUsize>,
     engine_cfg: EngineConfig,
     server_cfg: ServerConfig,
     shared_pool: Option<Arc<VerifyPool>>,
@@ -232,6 +402,12 @@ fn worker_loop(
                 // would dogpile whichever worker last stored a stale low
                 // value.)
                 credit_load(&load, routing_cost(res.prompt_len, res.max_new_tokens, res.verifier));
+                // One decrement per result keeps the router's in-flight
+                // depth exact: every admitted request emits exactly one
+                // terminal result (finished, failed, or cancelled).
+                let _ = in_flight.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+                    Some(v.saturating_sub(1))
+                });
                 let _ = results.send(res);
             }
         }
@@ -430,6 +606,110 @@ mod tests {
         let router2 = Router::start(&sc_engine, &ec, RoutingPolicy::RoundRobin, sim_pair);
         assert!(router2.verify_pool().is_none());
         router2.shutdown();
+    }
+
+    #[test]
+    fn bounded_admission_sheds_typed_and_counts() {
+        let (sc, ec) = small_cfgs();
+        let sc = ServerConfig { admit_queue: 1, ..sc };
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let mut admitted = 0u64;
+        let mut shed = 0u64;
+        for i in 0..4 {
+            match router.try_submit(Request::new(i, vec![1], 64)) {
+                Ok(_) => admitted += 1,
+                Err(AdmitError::QueueFull { depth, bound }) => {
+                    assert_eq!(bound, 1);
+                    assert!(depth >= 1);
+                    shed += 1;
+                }
+                Err(e) => panic!("unexpected admit error: {e}"),
+            }
+        }
+        assert!(admitted >= 1, "first submission always admits");
+        assert!(shed >= 1, "burst against bound 1 must shed");
+        assert_eq!(admitted + shed, 4, "every submission gets a typed outcome");
+        for _ in 0..admitted {
+            router.results_rx.recv().unwrap();
+        }
+        let m = router.shutdown();
+        assert_eq!(m.shed_full, shed);
+        assert_eq!(m.completed, admitted);
+        assert!(m.queue_peak >= 1 && m.queue_peak <= 1, "peak bounded by admit_queue");
+    }
+
+    #[test]
+    fn expired_deadline_sheds_at_admission_when_enabled() {
+        let (sc, ec) = small_cfgs();
+        let sc = ServerConfig { shed_expired: true, ..sc };
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let err = router
+            .try_submit(Request::new(1, vec![1], 4).with_deadline(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(err, AdmitError::DeadlineExpired);
+        // Live-deadline and no-deadline requests still admit.
+        router.try_submit(Request::new(2, vec![1], 4)).unwrap();
+        router
+            .try_submit(Request::new(3, vec![1], 4).with_deadline(Duration::from_secs(60)))
+            .unwrap();
+        for _ in 0..2 {
+            router.results_rx.recv().unwrap();
+        }
+        let m = router.shutdown();
+        assert_eq!(m.shed_expired, 1);
+        assert_eq!(m.completed, 2);
+    }
+
+    #[test]
+    fn drain_cancels_in_flight_and_closes_intake() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::RoundRobin, sim_pair);
+        let n = 8u64;
+        for i in 0..n {
+            router.submit(Request::new(i, vec![1], 100));
+        }
+        router.begin_drain(DrainPolicy::CancelInFlight);
+        assert_eq!(
+            router.try_submit(Request::new(99, vec![1], 4)).unwrap_err(),
+            AdmitError::Draining
+        );
+        let (metrics, results) = router.drain(DrainPolicy::CancelInFlight);
+        // Every admitted request has exactly one terminal result, none
+        // were received before the drain, so all land in the leftovers.
+        assert_eq!(results.len() as u64, n);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, n, "no lost or duplicated sequences");
+        let cancelled = results.iter().filter(|r| r.cancelled.is_some()).count() as u64;
+        for r in &results {
+            assert!(!r.failed, "drain is not a failure");
+            if r.cancelled.is_none() {
+                assert_eq!(r.tokens.len(), 101, "uncancelled requests ran to completion");
+            }
+        }
+        assert_eq!(metrics.completed, n);
+        assert_eq!(metrics.cancelled + metrics.timed_out, cancelled);
+        // drain() joins every worker handle before returning, so reaching
+        // this line means no worker thread survived; the full OS-level
+        // thread census gate lives in `tests/serving_load.rs`.
+    }
+
+    #[test]
+    fn drain_finish_policy_completes_everything() {
+        let (sc, ec) = small_cfgs();
+        let mut router = Router::start(&sc, &ec, RoutingPolicy::LeastLoaded, sim_pair);
+        for i in 0..6 {
+            router.submit(Request::new(i, vec![1, 2], 10));
+        }
+        let (metrics, results) = router.drain(DrainPolicy::Finish);
+        assert_eq!(results.len(), 6);
+        for r in &results {
+            assert!(r.ok());
+            assert_eq!(r.tokens.len(), 12);
+        }
+        assert_eq!(metrics.completed, 6);
+        assert_eq!(metrics.cancelled + metrics.timed_out, 0);
     }
 
     #[test]

@@ -10,7 +10,16 @@
 use std::collections::VecDeque;
 
 use super::engine::SpecDecodeEngine;
-use super::sequence::{Request, RequestResult, SeqPhase, SequenceState};
+use super::sequence::{CancelCause, Request, RequestResult, SeqPhase, SequenceState};
+
+/// Consecutive no-progress ticks (work pending, nothing admitted, nothing
+/// stepped, nothing retired) before the watchdog fails every remaining
+/// sequence through the typed error path instead of spinning forever.
+/// Generous: a healthy scheduler always either steps a batch (tokens
+/// grow), admits, or retires on every tick, so any stall this long is a
+/// genuine wedge (e.g. a request whose KV budget exceeds pages that were
+/// reserved outside the scheduler's view).
+const WATCHDOG_STALL_TICKS: u32 = 64;
 
 pub struct Scheduler {
     pub max_running: usize,
@@ -20,6 +29,9 @@ pub struct Scheduler {
     /// steady-state scheduler loop allocates nothing (the engine's verify
     /// path is allocation-free too — see `coordinator::pool`).
     retire_scratch: Vec<SequenceState>,
+    /// Consecutive ticks that made no progress while work was pending
+    /// (the watchdog counter — see [`WATCHDOG_STALL_TICKS`]).
+    stalled: u32,
 }
 
 impl Scheduler {
@@ -30,6 +42,7 @@ impl Scheduler {
             queued: VecDeque::new(),
             running: Vec::new(),
             retire_scratch: Vec::new(),
+            stalled: 0,
         }
     }
 
@@ -84,6 +97,18 @@ impl Scheduler {
                 head.tokens.len() + head.max_new_tokens,
                 block,
             ) {
+                // If nothing is running and the cache holds no sequences,
+                // waiting cannot help: this request's worst-case budget
+                // exceeds the entire cache, so it would block the queue
+                // head forever. Fail it typed instead of wedging the loop.
+                // (It is never registered — the retire pass probes
+                // registration before releasing.)
+                if self.running.is_empty() && engine.kv.num_sequences() == 0 {
+                    let mut seq = self.queued.pop_front().unwrap();
+                    seq.phase = SeqPhase::Failed;
+                    self.running.push(seq);
+                    continue;
+                }
                 break;
             }
             let mut seq = self.queued.pop_front().unwrap();
@@ -96,13 +121,66 @@ impl Scheduler {
         }
     }
 
+    /// Reap cut (cancelled / deadline-expired) sequences still waiting in
+    /// the queue. They were never KV-registered, so they retire directly
+    /// into results — no release, no rollback — before they can block the
+    /// FIFO head or waste an admission slot.
+    fn reap_queued(&mut self, engine: &mut SpecDecodeEngine, results: &mut Vec<RequestResult>) {
+        let mut i = 0;
+        while i < self.queued.len() {
+            let Some(cause) = self.queued[i].cut_now() else {
+                i += 1;
+                continue;
+            };
+            let mut seq = self.queued.remove(i).expect("index in bounds");
+            seq.phase = SeqPhase::Cancelled;
+            seq.cancelled = Some(cause);
+            // Running sequences get these counters bumped in the engine's
+            // block epilogue; queued ones never reach the engine, so the
+            // scheduler accounts for them here.
+            match cause {
+                CancelCause::Explicit => engine.metrics.cancelled += 1,
+                CancelCause::DeadlineExpired => engine.metrics.timed_out += 1,
+            }
+            engine.metrics.completed += 1;
+            engine.metrics.be.push(seq.block_efficiency());
+            engine
+                .metrics
+                .latency
+                .record(seq.submitted_at.elapsed().as_secs_f64());
+            results.push(seq.into_result());
+        }
+    }
+
+    /// Watchdog trip: fail every remaining sequence through the typed
+    /// error path. Queued sequences join `running` so the next retire pass
+    /// emits their results; none of the newly failed queued entries were
+    /// KV-registered, and the retire pass probes registration before
+    /// releasing, so the cache stays consistent.
+    fn fail_all_pending(&mut self) {
+        for mut seq in self.queued.drain(..) {
+            seq.phase = SeqPhase::Failed;
+            self.running.push(seq);
+        }
+        for seq in &mut self.running {
+            if seq.phase == SeqPhase::Running {
+                seq.phase = SeqPhase::Failed;
+            }
+        }
+    }
+
     /// One scheduling iteration. Returns results of sequences that finished
     /// during this iteration.
     pub fn tick(&mut self, engine: &mut SpecDecodeEngine) -> Vec<RequestResult> {
+        let mut results = Vec::new();
+        self.reap_queued(engine, &mut results);
+        let queued_before = self.queued.len();
         self.admit(engine);
+        let admitted = self.queued.len() != queued_before;
         let max_len = engine.cfg.max_seq_len;
 
         // Run one block for every running (non-finished) sequence.
+        let mut stepped = false;
         {
             let mut batch: Vec<&mut SequenceState> = self
                 .running
@@ -110,26 +188,32 @@ impl Scheduler {
                 .filter(|s| s.phase == SeqPhase::Running)
                 .collect();
             if !batch.is_empty() {
+                stepped = true;
                 engine.step_blocks(&mut batch);
             }
         }
 
         // Retire. `keep` is the persistent scratch (capacity retained
         // across ticks), swapped back into `running` at the end.
-        let mut results = Vec::new();
         let mut keep = std::mem::take(&mut self.retire_scratch);
         keep.clear();
         for mut seq in self.running.drain(..) {
             let rejected = seq.phase == SeqPhase::Finished; // oversized
             // A verification fault (panicking verify job) retires the
             // sequence like a completion — with `RequestResult::failed`
-            // set — rather than wedging the worker's pipeline.
+            // set — rather than wedging the worker's pipeline. Cancelled
+            // sequences retire the same way with `RequestResult::cancelled`
+            // set (the engine already rolled their in-flight block back).
             let failed = seq.phase == SeqPhase::Failed;
-            if rejected || failed || seq.is_done(max_len) {
-                if !rejected {
+            let cancelled = seq.phase == SeqPhase::Cancelled;
+            if rejected || failed || cancelled || seq.is_done(max_len) {
+                // Release only sequences the cache actually knows:
+                // oversized rejects, impossible-admission failures, and
+                // watchdog-failed queue entries were never registered.
+                if engine.kv.committed_tokens(seq.id).is_some() {
                     engine.kv.release(seq.id).expect("release running seq");
                 }
-                if !failed {
+                if !failed && !cancelled {
                     seq.phase = SeqPhase::Finished;
                 }
                 engine.metrics.completed += 1;
@@ -154,6 +238,20 @@ impl Scheduler {
             }
         }
         self.retire_scratch = std::mem::replace(&mut self.running, keep);
+
+        // Stall watchdog: a healthy tick always retires, admits, or steps
+        // (tokens grow every stepped block), so a long run of do-nothing
+        // ticks with work still pending is a wedge — fail what's left
+        // rather than spinning the worker thread forever.
+        if !results.is_empty() || admitted || stepped || !self.has_work() {
+            self.stalled = 0;
+        } else {
+            self.stalled += 1;
+            if self.stalled >= WATCHDOG_STALL_TICKS {
+                self.stalled = 0;
+                self.fail_all_pending();
+            }
+        }
         results
     }
 
@@ -314,6 +412,85 @@ mod tests {
         sched2.run_to_completion(&mut eng);
         assert_eq!(eng.metrics.ttft.count(), 6);
         assert_eq!(eng.metrics.token_latency.count(), 6);
+    }
+
+    #[test]
+    fn impossible_request_fails_typed_instead_of_hanging() {
+        // Regression: 2 pages × 16 = 32 tokens of KV. The request's
+        // worst-case budget is pages(4 + 40 + 5) = 4 pages > 2 total, yet
+        // 49 < max_seq_len = 128 so the oversized check passes — the old
+        // scheduler spun forever waiting for pages that cannot exist.
+        let mut eng = engine_with_kv(2);
+        let mut sched = Scheduler::new(4);
+        sched.submit(Request::new(7, vec![0; 4], 40));
+        sched.submit(Request::new(8, vec![0; 4], 8)); // feasible, behind it
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 2);
+        let r7 = results.iter().find(|r| r.id == 7).unwrap();
+        assert!(r7.failed, "impossible budget must fail typed");
+        assert_eq!(r7.tokens.len(), 4, "prompt only, nothing generated");
+        let r8 = results.iter().find(|r| r.id == 8).unwrap();
+        assert!(r8.ok(), "feasible request behind the wedge still completes");
+        assert_eq!(r8.tokens.len(), 12);
+        assert_eq!(eng.kv.used_pages(), 0);
+        eng.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stall_watchdog_fails_stranded_work() {
+        // Occupy the cache behind the scheduler's back so the queue head
+        // can never admit while the cache is NOT empty: the instant
+        // impossible-admission check cannot fire, and only the tick-level
+        // watchdog can unwedge the loop.
+        let mut eng = engine_with_kv(4);
+        let block = eng.cfg.block_len + 1;
+        eng.kv.register(999, 16, 48, block).unwrap(); // hogs all 4 pages
+        let mut sched = Scheduler::new(4);
+        sched.submit(Request::new(1, vec![0; 8], 16));
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].failed, "watchdog must fail stranded work typed");
+        assert_eq!(results[0].tokens.len(), 8);
+        eng.kv.release(999).unwrap();
+        assert_eq!(eng.kv.used_pages(), 0);
+        eng.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cancelled_queued_request_is_reaped_without_kv_registration() {
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(1);
+        sched.submit(Request::new(1, vec![1, 2], 8));
+        let req = Request::new(2, vec![3, 4], 8);
+        let handle = req.cancel_handle();
+        sched.submit(req);
+        handle.cancel();
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 2);
+        let r2 = results.iter().find(|r| r.id == 2).unwrap();
+        assert!(!r2.ok());
+        assert!(!r2.failed, "cancellation is not a failure");
+        assert_eq!(r2.cancelled, Some(CancelCause::Explicit));
+        assert_eq!(r2.tokens.len(), 2, "prompt only");
+        assert!(results.iter().find(|r| r.id == 1).unwrap().ok());
+        assert_eq!(eng.metrics.cancelled, 1);
+        assert_eq!(eng.kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn expired_deadline_in_queue_times_out_typed() {
+        let mut eng = engine_with_kv(1024);
+        let mut sched = Scheduler::new(4);
+        sched.submit(
+            Request::new(5, vec![1], 6).with_deadline(std::time::Duration::ZERO),
+        );
+        let results = sched.run_to_completion(&mut eng);
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].cancelled, Some(CancelCause::DeadlineExpired));
+        assert_eq!(results[0].tokens.len(), 1);
+        assert_eq!(eng.metrics.timed_out, 1);
+        assert_eq!(eng.metrics.completed, 1);
+        assert_eq!(eng.kv.used_pages(), 0);
     }
 
     #[test]

@@ -1,8 +1,49 @@
 //! Request and sequence state tracked by the scheduler/engine.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::spec::types::VerifierKind;
+
+/// Shared cancellation handle for one request. Cloning yields another
+/// handle to the same flag, so a client can keep one side and hand the
+/// other to the router; flipping it is monotone (a cancelled request
+/// never un-cancels), which is what lets the engine epilogue and the
+/// verify-job claim check observe it independently without racing.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Request cancellation. Idempotent; takes effect at the next block
+    /// boundary or verify-job claim, whichever the sequence hits first.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Number of live handles to this flag (used by the router to prune
+    /// its registry once the client side is dropped).
+    pub(crate) fn handle_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+}
+
+/// Why a sequence was cut short of its generation budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelCause {
+    /// The client flipped the request's `CancelToken`.
+    Explicit,
+    /// The request's deadline elapsed before completion.
+    DeadlineExpired,
+}
 
 /// An inference request as submitted by a client.
 #[derive(Clone, Debug)]
@@ -20,17 +61,48 @@ pub struct Request {
     /// arm `VerifierKind::FaultInjection` on exactly the scripted
     /// requests.
     pub verifier: Option<VerifierKind>,
+    /// Wall-clock budget measured from `Request::new`. `None` = no
+    /// deadline. Checked at block boundaries and at verify-job claim
+    /// time; an expired sequence retires as
+    /// `CancelCause::DeadlineExpired` with its KV rolled back.
+    pub deadline: Option<Duration>,
+    /// Cancellation flag shared with whoever called `cancel_handle`.
+    pub cancel: CancelToken,
+    /// Stamped at construction so the deadline clock (and reported
+    /// latency) covers queue wait, not just decode time.
+    pub submitted_at: Instant,
 }
 
 impl Request {
     pub fn new(id: u64, prompt: Vec<u32>, max_new_tokens: usize) -> Self {
-        Self { id, prompt, max_new_tokens, rng_lane: id, verifier: None }
+        Self {
+            id,
+            prompt,
+            max_new_tokens,
+            rng_lane: id,
+            verifier: None,
+            deadline: None,
+            cancel: CancelToken::new(),
+            submitted_at: Instant::now(),
+        }
     }
 
     /// Builder-style verifier override (`None` = engine default).
     pub fn with_verifier(mut self, verifier: Option<VerifierKind>) -> Self {
         self.verifier = verifier;
         self
+    }
+
+    /// Builder-style deadline, measured from construction.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// A clone of the request's cancellation handle for the client to
+    /// keep after submitting.
+    pub fn cancel_handle(&self) -> CancelToken {
+        self.cancel.clone()
     }
 }
 
@@ -66,6 +138,17 @@ pub struct RequestResult {
     /// holds whatever was emitted before the failure. A failed request
     /// never takes down its worker — it is retired like any completion.
     pub failed: bool,
+    /// The sequence was cut short (client cancel or deadline): `tokens`
+    /// holds whatever was emitted before the cut. Cancelled requests
+    /// retire through the same KV-rollback path as failed ones.
+    pub cancelled: Option<CancelCause>,
+}
+
+impl RequestResult {
+    /// The request ran to its natural completion: neither failed nor cut.
+    pub fn ok(&self) -> bool {
+        !self.failed && self.cancelled.is_none()
+    }
 }
 
 /// Lifecycle of a sequence inside one worker.
@@ -81,6 +164,9 @@ pub enum SeqPhase {
     /// the scheduler retires it with `RequestResult::failed = true`
     /// instead of letting it wedge the engine.
     Failed,
+    /// Cut short by client cancellation or deadline expiry; retired with
+    /// the same KV rollback as `Failed` but reported separately.
+    Cancelled,
 }
 
 /// Scheduler-side state of an in-flight sequence.
@@ -102,6 +188,15 @@ pub struct SequenceState {
     pub verifier: Option<VerifierKind>,
     /// Stamped by the engine when the first generated token lands.
     pub first_token_at: Option<Duration>,
+    /// Cancellation flag carried from the request.
+    pub cancel: CancelToken,
+    /// Absolute deadline (`submitted_at + deadline`), precomputed once so
+    /// every checkpoint (engine epilogue, verify-job claim, scheduler
+    /// reap) agrees monotonically: once expired, always expired.
+    pub deadline_at: Option<Instant>,
+    /// Set when a cut is first observed, so the terminal cause is stable
+    /// even if the deadline also expires later.
+    pub cancelled: Option<CancelCause>,
 }
 
 impl SequenceState {
@@ -116,9 +211,24 @@ impl SequenceState {
             next_slot: 0,
             target_calls: 0,
             draft_steps: 0,
-            submitted_at: Instant::now(),
+            submitted_at: req.submitted_at,
             verifier: req.verifier,
             first_token_at: None,
+            cancel: req.cancel.clone(),
+            deadline_at: req.deadline.map(|d| req.submitted_at + d),
+            cancelled: None,
+        }
+    }
+
+    /// Should this sequence be cut right now? Explicit cancellation wins
+    /// over deadline expiry when both hold.
+    pub fn cut_now(&self) -> Option<CancelCause> {
+        if self.cancel.is_cancelled() {
+            return Some(CancelCause::Explicit);
+        }
+        match self.deadline_at {
+            Some(at) if Instant::now() >= at => Some(CancelCause::DeadlineExpired),
+            _ => None,
         }
     }
 
@@ -156,6 +266,11 @@ impl SequenceState {
             prompt_len: self.prompt_len,
             verifier: self.verifier,
             failed: self.phase == SeqPhase::Failed,
+            cancelled: if self.phase == SeqPhase::Cancelled {
+                self.cancelled.or(Some(CancelCause::Explicit))
+            } else {
+                None
+            },
         }
     }
 }
@@ -200,5 +315,53 @@ mod tests {
         let res = seq.into_result();
         assert!((res.block_efficiency - 2.5).abs() < 1e-12);
         assert_eq!(res.tokens.len(), 6);
+        assert!(res.ok());
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_monotone() {
+        let req = Request::new(4, vec![1], 8);
+        let handle = req.cancel_handle();
+        let seq = SequenceState::from_request(&req);
+        assert_eq!(seq.cut_now(), None);
+        handle.cancel();
+        assert_eq!(seq.cut_now(), Some(CancelCause::Explicit));
+        // Idempotent: a second cancel changes nothing.
+        handle.cancel();
+        assert_eq!(seq.cut_now(), Some(CancelCause::Explicit));
+    }
+
+    #[test]
+    fn zero_deadline_expires_immediately() {
+        let req = Request::new(5, vec![1, 2], 8).with_deadline(Duration::ZERO);
+        let seq = SequenceState::from_request(&req);
+        assert_eq!(seq.cut_now(), Some(CancelCause::DeadlineExpired));
+        // A generous deadline does not trip.
+        let req = Request::new(6, vec![1, 2], 8).with_deadline(Duration::from_secs(3600));
+        let seq = SequenceState::from_request(&req);
+        assert_eq!(seq.cut_now(), None);
+    }
+
+    #[test]
+    fn explicit_cancel_wins_over_expired_deadline() {
+        let req = Request::new(7, vec![1], 8).with_deadline(Duration::ZERO);
+        req.cancel.cancel();
+        let seq = SequenceState::from_request(&req);
+        assert_eq!(seq.cut_now(), Some(CancelCause::Explicit));
+    }
+
+    #[test]
+    fn cancelled_phase_maps_into_result() {
+        let req = Request::new(8, vec![1, 2, 3], 8);
+        let mut seq = SequenceState::from_request(&req);
+        seq.tokens.push(42);
+        seq.phase = SeqPhase::Cancelled;
+        seq.cancelled = Some(CancelCause::DeadlineExpired);
+        let res = seq.into_result();
+        assert!(!res.failed);
+        assert_eq!(res.cancelled, Some(CancelCause::DeadlineExpired));
+        assert!(!res.ok());
+        // Partial output survives the cut.
+        assert_eq!(res.tokens.len(), 4);
     }
 }

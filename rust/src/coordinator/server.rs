@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use super::config::{EngineConfig, ServerConfig};
 use super::metrics::EngineMetrics;
-use super::router::{Router, RoutingPolicy};
+use super::router::{AdmitError, DrainPolicy, Router, RoutingPolicy};
 use super::sequence::{Request, RequestResult};
 use crate::model::backend::ModelPair;
 
@@ -73,17 +73,39 @@ impl ServeReport {
     }
 
     /// Generated tokens per wall-clock second counting only sequences
-    /// that completed without a fault — the harness's goodput measure.
-    /// Failed sequences' partial output is real work but not useful
-    /// output, so it is excluded; `token_rate` keeps the raw number.
+    /// that completed cleanly — the harness's goodput measure. Failed and
+    /// cancelled sequences' partial output is real work but not useful
+    /// output, so both are excluded; `token_rate` keeps the raw number.
+    /// (With nothing cancelled, `r.ok()` is exactly the old `!r.failed`.)
     pub fn goodput(&self) -> f64 {
         let toks: usize = self
             .results
             .iter()
-            .filter(|r| !r.failed)
+            .filter(|r| r.ok())
             .map(|r| r.tokens.len().saturating_sub(r.prompt_len))
             .sum();
         toks as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Sequences retired by explicit cancellation.
+    pub fn cancelled(&self) -> u64 {
+        self.metrics.cancelled
+    }
+
+    /// Sequences retired because their deadline expired mid-flight or in
+    /// the queue.
+    pub fn timed_out(&self) -> u64 {
+        self.metrics.timed_out
+    }
+
+    /// Submissions shed at admission (queue-full plus already-expired).
+    pub fn shed(&self) -> u64 {
+        self.metrics.shed_full + self.metrics.shed_expired
+    }
+
+    /// High-water mark of in-flight requests observed at admission.
+    pub fn queue_peak(&self) -> u64 {
+        self.metrics.queue_peak
     }
 }
 
@@ -120,6 +142,33 @@ impl Server {
         self.submitted += 1;
         self.router.submit(Request::new(id, prompt, max_new_tokens));
         id
+    }
+
+    /// Submit a fully built [`Request`] (deadline, cancel handle, pinned
+    /// verifier) through admission control, assigning the next server id.
+    /// On a shed, the request never reaches a worker and the typed error
+    /// says why — the caller decides whether to retry or drop.
+    pub fn try_submit(&mut self, req: Request) -> Result<u64, AdmitError> {
+        let id = self.next_id;
+        // Follow `Request::new`'s lane = id convention unless the caller
+        // pinned a custom randomness lane.
+        let rng_lane = if req.rng_lane == req.id { id } else { req.rng_lane };
+        let req = Request { id, rng_lane, ..req };
+        self.router.try_submit(req)?;
+        self.next_id += 1;
+        self.submitted += 1;
+        Ok(id)
+    }
+
+    /// Graceful drain: close intake, apply `policy` to everything in
+    /// flight, join all workers, and report. `wall` spans only the drain
+    /// itself (callers timing a full workload should wrap externally).
+    pub fn drain(self, policy: DrainPolicy) -> ServeReport {
+        let start = Instant::now();
+        let (metrics, mut results) = self.router.drain(policy);
+        let wall = start.elapsed();
+        results.sort_by_key(|r| r.id);
+        ServeReport { results, metrics, wall }
     }
 
     /// Block until all submitted requests complete, then shut down.
@@ -312,6 +361,62 @@ mod tests {
             shared.metrics.panel_cache_hits > 0,
             "panel handoff never fired through the shared pool"
         );
+    }
+
+    #[test]
+    fn server_drain_reports_one_terminal_state_per_request() {
+        let (sc, ec) = cfgs();
+        let mut server = Server::start(&sc, &ec, RoutingPolicy::RoundRobin, |_| {
+            let (d, t) = SimLm::pair(32, 4, 1.0);
+            ModelPair::new(Box::new(d), Box::new(t))
+        });
+        for i in 0..8u32 {
+            server
+                .try_submit(Request::new(0, vec![i], 60))
+                .expect("default admission is open");
+        }
+        let report = server.drain(DrainPolicy::CancelInFlight);
+        assert_eq!(report.results.len(), 8);
+        for (i, r) in report.results.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "server assigns dense ids");
+            assert!(!r.failed);
+            assert!(r.cancelled.is_some() || r.tokens.len() == 61);
+        }
+        assert_eq!(report.metrics.completed, 8);
+        assert_eq!(
+            report.cancelled() + report.timed_out(),
+            report.results.iter().filter(|r| r.cancelled.is_some()).count() as u64
+        );
+        assert_eq!(report.shed(), 0);
+        // Goodput counts clean completions only; cancelled output is
+        // excluded even though its partial tokens are in `results`.
+        let clean: usize = report
+            .results
+            .iter()
+            .filter(|r| r.ok())
+            .map(|r| r.tokens.len() - r.prompt_len)
+            .sum();
+        assert!((report.goodput() - clean as f64 / report.wall.as_secs_f64()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn server_surfaces_typed_sheds() {
+        use crate::coordinator::router::AdmitError;
+        let (sc, ec) = cfgs();
+        let sc = ServerConfig { shed_expired: true, ..sc };
+        let mut server = Server::start(&sc, &ec, RoutingPolicy::RoundRobin, |_| {
+            let (d, t) = SimLm::pair(32, 4, 1.0);
+            ModelPair::new(Box::new(d), Box::new(t))
+        });
+        let err = server
+            .try_submit(Request::new(0, vec![1], 8).with_deadline(Duration::ZERO))
+            .unwrap_err();
+        assert_eq!(err, AdmitError::DeadlineExpired);
+        server.try_submit(Request::new(0, vec![1], 8)).unwrap();
+        let report = server.finish();
+        assert_eq!(report.results.len(), 1);
+        assert_eq!(report.shed(), 1);
+        assert!(report.results[0].ok());
     }
 
     #[test]

@@ -386,13 +386,21 @@ impl SliceRecycler {
     /// when available — its spare buffers make `record_race`
     /// allocation-free — else a fresh empty slice.
     pub fn lease(&mut self) -> PanelSlice {
+        self.try_lease().unwrap_or_default()
+    }
+
+    /// Like [`SliceRecycler::lease`], but only when a returned slice is
+    /// actually available — lets the engine fall back to the pool-level
+    /// [`SliceBank`] (then to a fresh slice) when the local channel is
+    /// dry, instead of silently allocating.
+    pub fn try_lease(&mut self) -> Option<PanelSlice> {
         match self.rx.try_recv() {
             Ok(mut slice) => {
                 slice.recycle_rows();
                 self.recycled += 1;
-                slice
+                Some(slice)
             }
-            Err(_) => PanelSlice::new(),
+            Err(_) => None,
         }
     }
 
@@ -406,6 +414,91 @@ impl SliceRecycler {
     /// into `EngineMetrics::panel_slices_recycled` once per block).
     pub fn drain_recycled(&mut self) -> u64 {
         std::mem::take(&mut self.recycled)
+    }
+
+    /// Drain every queued return beyond what `lease` consumed — surplus an
+    /// engine with small batches accumulates but will never use. The
+    /// engine deposits these into the pool-level [`SliceBank`] so another
+    /// engine's leases can reuse the buffers. Draining does not count as
+    /// recycling (nothing was leased).
+    pub fn drain_surplus(&mut self) -> Vec<PanelSlice> {
+        let mut out = Vec::new();
+        while let Ok(mut slice) = self.rx.try_recv() {
+            slice.recycle_rows();
+            out.push(slice);
+        }
+        out
+    }
+}
+
+/// Maximum spare slices a [`SliceBank`] holds before deposits are dropped
+/// on the floor (buffers simply deallocate — correctness never depends on
+/// the bank).
+const SLICE_BANK_CAP: usize = 256;
+
+/// Pool-level spare-`PanelSlice` free list, shared by every engine
+/// attached to one `VerifyPool`.
+///
+/// The per-engine [`SliceRecycler`] only recycles within its own engine:
+/// under skewed batch sizes a busy engine allocates fresh slices every
+/// block while an idle engine's returns sit unused in its channel. The
+/// bank closes that loop: engines deposit surplus returns (tagged with
+/// their engine id) and lease from the bank when their own recycler runs
+/// dry. Slices are inert owned buffers — sharing them across engines
+/// cannot change any decoded token.
+#[derive(Debug, Default)]
+pub struct SliceBank {
+    /// `(donor_engine_tag, slice)` pairs available for lease.
+    inner: std::sync::Mutex<Vec<(u64, PanelSlice)>>,
+    /// Leases where the donor engine differs from the borrower — the
+    /// observable that capacity actually moves across engines.
+    cross: std::sync::atomic::AtomicU64,
+}
+
+impl SliceBank {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Deposit a spent slice on behalf of engine `donor_tag`. Silently
+    /// drops the slice when the bank is full.
+    pub fn deposit(&self, donor_tag: u64, slice: PanelSlice) {
+        let mut bank = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if bank.len() < SLICE_BANK_CAP {
+            bank.push((donor_tag, slice));
+        }
+    }
+
+    /// Lease a spare slice for engine `tag`, preferring one donated by a
+    /// *different* engine (that is the whole point of the bank; it also
+    /// makes the cross-engine counter deterministic when both kinds are
+    /// present). Returns `None` when the bank is empty.
+    pub fn lease(&self, tag: u64) -> Option<PanelSlice> {
+        let mut bank = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let idx = bank
+            .iter()
+            .rposition(|(donor, _)| *donor != tag)
+            .unwrap_or(bank.len().checked_sub(1)?);
+        let (donor, slice) = bank.swap_remove(idx);
+        drop(bank);
+        if donor != tag {
+            self.cross.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }
+        Some(slice)
+    }
+
+    /// Spare slices currently banked.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Leases served from a different engine's deposits.
+    pub fn cross_engine_reuses(&self) -> u64 {
+        self.cross.load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 
@@ -1756,6 +1849,52 @@ mod tests {
         }
         assert_eq!(recycler.drain_recycled(), 3, "rounds 1..=3 lease recycled slices");
         assert_eq!(recycler.drain_recycled(), 0, "drain must reset");
+    }
+
+    #[test]
+    fn slice_bank_prefers_cross_engine_donors_and_counts() {
+        let bank = SliceBank::new();
+        assert!(bank.is_empty());
+        assert!(bank.lease(1).is_none());
+        bank.deposit(1, PanelSlice::new());
+        bank.deposit(2, PanelSlice::new());
+        // Engine 1 leases: must take engine 2's deposit first.
+        assert!(bank.lease(1).is_some());
+        assert_eq!(bank.cross_engine_reuses(), 1);
+        // Only its own deposit remains — still leasable, not cross.
+        assert!(bank.lease(1).is_some());
+        assert_eq!(bank.cross_engine_reuses(), 1);
+        assert!(bank.is_empty());
+    }
+
+    #[test]
+    fn recycler_surplus_flows_through_the_bank_bit_exactly() {
+        // An engine's unclaimed returns drain into the bank; another
+        // engine leases them and records bit-exactly on the used buffers.
+        let mut gen = XorShift128::new(0xBA2C);
+        let mut donor = SliceRecycler::new();
+        let bank = SliceBank::new();
+        let rng = CounterRng::new(0x91);
+        let d = testkit::gen_sparse_categorical(&mut gen, 60, 8);
+        let mut slice = donor.lease();
+        let tok = slice.record_race(&d, &rng, 0, 0);
+        assert_eq!(tok, d.sample_race(&rng, 0, 0));
+        let mut ws = CouplingWorkspace::new();
+        let spent = ws.adopt_panel_slice(slice);
+        donor.return_sender().send(spent).expect("receiver alive");
+        // The donor engine never leases again; its surplus moves banks.
+        let surplus = donor.drain_surplus();
+        assert_eq!(surplus.len(), 1);
+        assert!(surplus[0].is_empty(), "drained surplus is demoted to spares");
+        for s in surplus {
+            bank.deposit(7, s);
+        }
+        // A different engine leases the banked slice and records on it.
+        let mut leased = bank.lease(8).expect("banked slice available");
+        assert_eq!(bank.cross_engine_reuses(), 1);
+        assert!(leased.spare_len() > 0, "banked slice carries recycled buffers");
+        let tok2 = leased.record_race(&d, &rng, 1, 0);
+        assert_eq!(tok2, d.sample_race(&rng, 1, 0), "banked buffers stay bit-exact");
     }
 
     #[test]

@@ -22,7 +22,7 @@ use std::time::{Duration, Instant};
 
 use super::trace::{ArrivalProcess, LengthModel, RequestTrace, TraceSpec};
 use crate::coordinator::config::{EngineConfig, PoolScope, ServerConfig, VerifyBackend};
-use crate::coordinator::router::{Router, RoutingPolicy};
+use crate::coordinator::router::{DrainPolicy, Router, RoutingPolicy};
 use crate::coordinator::sequence::Request;
 use crate::coordinator::server::ServeReport;
 use crate::model::backend::ModelPair;
@@ -48,10 +48,27 @@ pub enum Scenario {
     /// Every ticket routed to worker 0 faults — the worker's engine keeps
     /// dying mid-ticket while worker 1 must stay healthy.
     EngineDeath,
+    /// Every 3rd request carries an already-expired (zero) deadline: the
+    /// lifecycle layer must reap each one typed (`timed_out`) while every
+    /// other request's tokens stay bit-identical to the no-fault run.
+    DeadlineStorm,
+    /// Every 4th request's cancel handle is flipped before submission:
+    /// typed `cancelled` retires, zero KV leak, honest requests bit-exact.
+    CancelFlood,
+    /// Bounded admission window + uniformly slowed backends: the submit
+    /// burst outruns decode, so the router must shed typed (`QueueFull`)
+    /// rather than queue without bound.
+    OverloadShed,
+    /// Panic storm, but the drill drains — cancelling everything in
+    /// flight — after half the trace has been submitted: every submitted
+    /// id must still land exactly one terminal state with a flat census.
+    DrainUnderStorm,
+    /// Panic storm + KV pressure + a straggler worker, all at once.
+    ComposedFault,
 }
 
 impl Scenario {
-    pub fn all() -> [Scenario; 6] {
+    pub fn all() -> [Scenario; 11] {
         [
             Scenario::NoFault,
             Scenario::Bursty,
@@ -59,6 +76,11 @@ impl Scenario {
             Scenario::KvPressure,
             Scenario::Straggler,
             Scenario::EngineDeath,
+            Scenario::DeadlineStorm,
+            Scenario::CancelFlood,
+            Scenario::OverloadShed,
+            Scenario::DrainUnderStorm,
+            Scenario::ComposedFault,
         ]
     }
 
@@ -70,6 +92,11 @@ impl Scenario {
             Scenario::KvPressure => "kv-pressure",
             Scenario::Straggler => "straggler",
             Scenario::EngineDeath => "engine-death",
+            Scenario::DeadlineStorm => "deadline-storm",
+            Scenario::CancelFlood => "cancel-flood",
+            Scenario::OverloadShed => "overload-shed",
+            Scenario::DrainUnderStorm => "drain-under-storm",
+            Scenario::ComposedFault => "composed-fault",
         }
     }
 }
@@ -85,8 +112,18 @@ pub struct Drill {
     pub trace: RequestTrace,
     /// Request ids whose prompts carry the fault trigger.
     pub poisoned: Vec<u64>,
+    /// Request ids scripted with an already-expired zero deadline.
+    pub deadline_zero: Vec<u64>,
+    /// Request ids whose cancel handle is flipped just before submission.
+    pub cancel_at_submit: Vec<u64>,
+    /// Submit only this many requests, then `drain(CancelInFlight)` the
+    /// router instead of waiting for completions.
+    pub drain_after: Option<usize>,
     /// `(worker, base_latency)` for the straggler's [`TimedLm`] wrap.
     pub straggler: Option<(usize, Duration)>,
+    /// Wrap *every* worker's backends in [`TimedLm`] with this latency —
+    /// overload-shed uses it so decode reliably outlasts the submit burst.
+    pub slow_all: Option<Duration>,
     /// Transient pool faults to arm before replay (retry-once drills).
     pub inject_transient_faults: usize,
     pub vocab: usize,
@@ -106,6 +143,7 @@ impl Drill {
             kv_pages: 4096,
             kv_page_size: 16,
             pool_scope: PoolScope::Server,
+            ..ServerConfig::default()
         };
         let engine_cfg = EngineConfig {
             verifier: VerifierKind::Gls,
@@ -144,7 +182,11 @@ impl Drill {
             engine_cfg,
             trace: RequestTrace { requests: Vec::new() },
             poisoned: Vec::new(),
+            deadline_zero: Vec::new(),
+            cancel_at_submit: Vec::new(),
+            drain_after: None,
             straggler: None,
+            slow_all: None,
             inject_transient_faults: 0,
             vocab: 64,
             trigger: 9_999,
@@ -179,6 +221,25 @@ impl Drill {
                 let w = drill.server_cfg.workers as u64;
                 drill.poisoned = (0..spec.n as u64).filter(|i| i % w == 0).collect();
             }
+            Scenario::DeadlineStorm => {
+                drill.deadline_zero = (0..spec.n as u64).filter(|i| i % 3 == 0).collect();
+            }
+            Scenario::CancelFlood => {
+                drill.cancel_at_submit = (0..spec.n as u64).filter(|i| i % 4 == 0).collect();
+            }
+            Scenario::OverloadShed => {
+                drill.server_cfg.admit_queue = 6;
+                drill.slow_all = Some(Duration::from_micros(200));
+            }
+            Scenario::DrainUnderStorm => {
+                drill.poisoned = (0..spec.n as u64).filter(|i| i % 5 == 0).collect();
+                drill.drain_after = Some(spec.n / 2);
+            }
+            Scenario::ComposedFault => {
+                drill.poisoned = (0..spec.n as u64).filter(|i| i % 5 == 0).collect();
+                drill.server_cfg.kv_pages = 32;
+                drill.straggler = Some((0, Duration::from_micros(400)));
+            }
         }
         drill.trace = RequestTrace::generate(&spec);
         drill
@@ -190,12 +251,17 @@ impl Drill {
     pub fn request(&self, idx: usize) -> Request {
         let id = idx as u64;
         let tr = &self.trace.requests[idx];
-        if self.poisoned.contains(&id) {
+        let req = if self.poisoned.contains(&id) {
             Request::new(id, vec![self.trigger], tr.max_new_tokens)
                 .with_verifier(Some(VerifierKind::FaultInjection))
         } else {
             Request::new(id, self.trace.prompt_tokens(idx, self.vocab, self.seed), tr.max_new_tokens)
                 .with_verifier(tr.verifier)
+        };
+        if self.deadline_zero.contains(&id) {
+            req.with_deadline(Duration::ZERO)
+        } else {
+            req
         }
     }
 
@@ -204,16 +270,22 @@ impl Drill {
     /// to an unwrapped run); the straggler worker's pair additionally
     /// pays a [`TimedLm`] latency per forward call (value-preserving).
     fn make_pair(&self) -> impl Fn(usize) -> ModelPair + '_ {
-        let (vocab, seed, trigger, straggler) = (self.vocab, self.seed, self.trigger, self.straggler);
+        let (vocab, seed, trigger, straggler, slow_all) =
+            (self.vocab, self.seed, self.trigger, self.straggler, self.slow_all);
         move |w| {
             let (d, t) = SimLm::pair(vocab, seed, 2.0);
             let d = PoisonDraft { inner: d, trigger };
-            match straggler {
-                Some((sw, lat)) if sw == w => ModelPair::new(
+            let lat = match (slow_all, straggler) {
+                (Some(lat), _) => Some(lat),
+                (None, Some((sw, lat))) if sw == w => Some(lat),
+                _ => None,
+            };
+            match lat {
+                Some(lat) => ModelPair::new(
                     Box::new(TimedLm::new(d, lat, 64)),
                     Box::new(TimedLm::new(t, lat, 64)),
                 ),
-                _ => ModelPair::new(Box::new(d), Box::new(t)),
+                None => ModelPair::new(Box::new(d), Box::new(t)),
             }
         }
     }
@@ -232,36 +304,68 @@ impl Drill {
                 .inject_transient_faults(self.inject_transient_faults);
         }
         let n = self.trace.requests.len();
+        let submit_limit = self.drain_after.unwrap_or(n).min(n);
         let start = Instant::now();
         let mut submitted = 0usize;
+        let mut admitted = 0usize;
+        let mut shed_ids = Vec::new();
         let mut results = Vec::with_capacity(n);
         let mut peak_census = thread_census();
-        while results.len() < n {
-            while submitted < n {
+        loop {
+            while submitted < submit_limit {
                 let due = self.trace.requests[submitted].at.mul_f64(self.time_scale);
                 if start.elapsed() >= due {
-                    router.submit(self.request(submitted));
+                    let req = self.request(submitted);
+                    if self.cancel_at_submit.contains(&req.id) {
+                        req.cancel.cancel();
+                    }
+                    // Sheds are typed and recorded — never silent: every
+                    // submission ends as either one terminal result or one
+                    // entry in `shed_ids`.
+                    match router.try_submit(req) {
+                        Ok(_) => admitted += 1,
+                        Err(_) => shed_ids.push(submitted as u64),
+                    }
                     submitted += 1;
                 } else {
                     break;
                 }
             }
-            match router.results_rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(res) => results.push(res),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(e) => panic!("worker dropped mid-drill: {e}"),
+            if submitted >= submit_limit && (self.drain_after.is_some() || results.len() >= admitted)
+            {
+                break;
+            }
+            if results.len() < admitted {
+                match router.results_rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(res) => results.push(res),
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(e) => panic!("worker dropped mid-drill: {e}"),
+                }
+            } else {
+                // Caught up on results but the next arrival isn't due yet.
+                std::thread::sleep(Duration::from_micros(200));
             }
             if let (Some(p), Some(now)) = (peak_census, thread_census()) {
                 peak_census = Some(p.max(now));
             }
         }
+        // Drain drills cut everything still in flight and fold whatever
+        // results the loop had not yet received; every admitted request
+        // still gets exactly one terminal result.
+        let metrics = if self.drain_after.is_some() {
+            let (metrics, leftovers) = router.drain(DrainPolicy::CancelInFlight);
+            results.extend(leftovers);
+            metrics
+        } else {
+            router.shutdown()
+        };
         let wall = start.elapsed();
-        let metrics = router.shutdown();
         results.sort_by_key(|r| r.id);
         DrillOutcome {
             report: ServeReport { results, metrics, wall },
             baseline_census,
             peak_census,
+            shed_ids,
         }
     }
 }
@@ -273,12 +377,20 @@ pub struct DrillOutcome {
     pub report: ServeReport,
     pub baseline_census: Option<usize>,
     pub peak_census: Option<usize>,
+    /// Ids shed at admission (typed `AdmitError`, never reached a worker).
+    pub shed_ids: Vec<u64>,
 }
 
 impl DrillOutcome {
     /// Ids of sequences that failed (fault-rolled-back).
     pub fn failed_ids(&self) -> Vec<u64> {
         self.report.results.iter().filter(|r| r.failed).map(|r| r.id).collect()
+    }
+
+    /// Ids of sequences that retired cancelled (explicitly or by
+    /// deadline), in id order.
+    pub fn cancelled_ids(&self) -> Vec<u64> {
+        self.report.results.iter().filter(|r| r.cancelled.is_some()).map(|r| r.id).collect()
     }
 
     /// Peak thread growth over the run's baseline, when measurable.
@@ -299,8 +411,45 @@ mod tests {
         let names: Vec<&str> = Scenario::all().iter().map(|s| s.name()).collect();
         assert_eq!(
             names,
-            ["no-fault", "bursty", "panic-storm", "kv-pressure", "straggler", "engine-death"]
+            [
+                "no-fault",
+                "bursty",
+                "panic-storm",
+                "kv-pressure",
+                "straggler",
+                "engine-death",
+                "deadline-storm",
+                "cancel-flood",
+                "overload-shed",
+                "drain-under-storm",
+                "composed-fault",
+            ]
         );
+    }
+
+    #[test]
+    fn lifecycle_scenarios_script_deterministically() {
+        let storm = Drill::new(Scenario::DeadlineStorm, 5);
+        assert_eq!(storm.deadline_zero, (0..48).filter(|i| i % 3 == 0).collect::<Vec<u64>>());
+        assert!(storm.request(0).deadline.is_some());
+        assert!(storm.request(1).deadline.is_none());
+        let flood = Drill::new(Scenario::CancelFlood, 5);
+        assert_eq!(flood.cancel_at_submit.len(), 12);
+        let shed = Drill::new(Scenario::OverloadShed, 5);
+        assert_eq!(shed.server_cfg.admit_queue, 6);
+        assert!(shed.slow_all.is_some());
+        let drain = Drill::new(Scenario::DrainUnderStorm, 5);
+        assert_eq!(drain.drain_after, Some(24));
+        assert!(!drain.poisoned.is_empty());
+        let composed = Drill::new(Scenario::ComposedFault, 5);
+        assert!(!composed.poisoned.is_empty());
+        assert_eq!(composed.server_cfg.kv_pages, 32);
+        assert!(composed.straggler.is_some());
+        // All lifecycle scenarios share the base trace payloads per seed.
+        let base = Drill::new(Scenario::NoFault, 5);
+        assert_eq!(base.trace, storm.trace);
+        assert_eq!(base.trace, flood.trace);
+        assert_eq!(base.trace, composed.trace);
     }
 
     #[test]

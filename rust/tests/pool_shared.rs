@@ -8,9 +8,11 @@
 use std::sync::Arc;
 
 use gls_serve::coordinator::config::{PoolScope, VerifyBackend};
+use gls_serve::coordinator::pool::VerifyPool;
 use gls_serve::coordinator::router::{Router, RoutingPolicy};
+use gls_serve::coordinator::scheduler::Scheduler;
 use gls_serve::coordinator::sequence::{Request, RequestResult};
-use gls_serve::coordinator::{EngineConfig, ServerConfig};
+use gls_serve::coordinator::{EngineConfig, PagedKvCache, ServerConfig, SpecDecodeEngine};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sim::SimLm;
 use gls_serve::spec::types::VerifierKind;
@@ -31,6 +33,7 @@ fn serve_cfgs(scope: PoolScope, backend: VerifyBackend) -> (ServerConfig, Engine
         kv_pages: 4096,
         kv_page_size: 16,
         pool_scope: scope,
+        ..ServerConfig::default()
     };
     let ec = EngineConfig {
         verifier: VerifierKind::Gls,
@@ -203,4 +206,57 @@ fn faulting_requests_fail_alone_through_the_shared_pool() {
     assert_eq!(metrics.verify_faults, poisoned.len() as u64, "engine fault accounting");
     let pool_faults: u64 = (0..WORKERS as u64).map(|w| pool.engine_stats(w).faults).sum();
     assert!(pool_faults <= poisoned.len() as u64, "pool fault over-count");
+}
+
+#[test]
+fn slice_bank_moves_recycling_capacity_across_engines_bit_exactly() {
+    // Two engines share one pool (tags 0/1). Engine 0 decodes a wide
+    // batch, then a narrow one — the narrow block's lease pass banks the
+    // surplus panel slices in the pool's SliceBank. Engine 1's first wide
+    // batch starts with a dry local recycler, so it must lease the banked
+    // slices (cross-engine reuse) and still emit bit-exactly the tokens
+    // of an identically seeded solo engine: banked slices are buffer
+    // capacity only, never state.
+    let (_, ec) = serve_cfgs(PoolScope::Server, VerifyBackend::Pool);
+    let pool = Arc::new(VerifyPool::new(VERIFY_WORKERS));
+    let mk_engine = || {
+        let (d, t) = SimLm::pair(64, 41, 2.0);
+        SpecDecodeEngine::new(
+            ec.clone(),
+            ModelPair::new(Box::new(d), Box::new(t)),
+            PagedKvCache::new(4096, 16),
+        )
+    };
+    let run = |eng: &mut SpecDecodeEngine, ids: std::ops::Range<u64>| {
+        let mut sched = Scheduler::new(16);
+        for i in ids {
+            sched.submit(Request::new(i, vec![1, (i % 7) as u32], 24));
+        }
+        let mut res = sched.run_to_completion(eng);
+        res.sort_by_key(|r| r.id);
+        res
+    };
+
+    let mut a = mk_engine();
+    a.attach_shared_pool(Arc::clone(&pool), 0);
+    run(&mut a, 0..6); // wide: primes the local recycler with 6 slices
+    run(&mut a, 6..8); // narrow: leases 2, banks the surplus for siblings
+    assert!(!pool.slice_bank().is_empty(), "engine 0 banked no surplus slices");
+    assert_eq!(pool.slice_bank().cross_engine_reuses(), 0, "no sibling has leased yet");
+
+    let mut b = mk_engine();
+    b.attach_shared_pool(Arc::clone(&pool), 1);
+    let pooled = run(&mut b, 100..104);
+    assert!(
+        pool.slice_bank().cross_engine_reuses() >= 1,
+        "engine 1 never leased a banked slice from engine 0"
+    );
+
+    let mut solo = mk_engine();
+    let serial = run(&mut solo, 100..104);
+    assert_eq!(pooled.len(), serial.len());
+    for (x, y) in pooled.iter().zip(&serial) {
+        assert!(!x.failed && !y.failed);
+        assert_eq!(x.tokens, y.tokens, "request {} diverged via banked slices", x.id);
+    }
 }

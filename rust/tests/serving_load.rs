@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use gls_serve::coordinator::config::{EngineConfig, VerifyBackend};
 use gls_serve::coordinator::scheduler::Scheduler;
-use gls_serve::coordinator::sequence::Request;
+use gls_serve::coordinator::sequence::{CancelCause, Request};
 use gls_serve::coordinator::{PagedKvCache, SpecDecodeEngine};
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sim::SimLm;
@@ -173,6 +173,204 @@ fn engine_death_on_one_worker_leaves_the_other_healthy() {
     assert_eq!(out.report.metrics.verify_faults, death.poisoned.len() as u64);
     if let Some(d) = out.census_delta() {
         assert!(d <= CENSUS_SLACK, "engine death grew {d} threads");
+    }
+}
+
+#[test]
+fn deadline_storm_times_out_exactly_the_script_and_keeps_the_rest_bit_exact() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let storm = Drill::new(Scenario::DeadlineStorm, SEED);
+    let out = storm.run();
+    let n = storm.trace.requests.len();
+    assert_eq!(out.report.results.len(), n, "lost or duplicated sequences");
+    assert!(out.shed_ids.is_empty(), "nothing sheds without an admission bound");
+    for (i, r) in out.report.results.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "id sequence has a hole or duplicate");
+        assert!(!r.failed, "a timeout is not a failure (request {})", r.id);
+        if storm.deadline_zero.contains(&r.id) {
+            assert_eq!(
+                r.cancelled,
+                Some(CancelCause::DeadlineExpired),
+                "scripted request {} did not time out",
+                r.id
+            );
+            assert_eq!(r.tokens.len(), r.prompt_len, "timed-out request {} decoded anyway", r.id);
+        } else {
+            assert!(r.ok(), "honest request {} did not complete cleanly", r.id);
+            // Expired requests still consumed their round-robin slot at
+            // admission, so the request→worker map — and therefore every
+            // honest token stream — matches the no-fault run exactly.
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "honest request {} diverged under the deadline storm",
+                r.id
+            );
+        }
+    }
+    assert_eq!(out.cancelled_ids(), storm.deadline_zero, "timeout set is exactly the script");
+    assert_eq!(out.report.metrics.timed_out, storm.deadline_zero.len() as u64);
+    assert_eq!(out.report.metrics.cancelled, 0);
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "deadline storm grew {d} threads");
+    }
+}
+
+#[test]
+fn cancel_flood_retires_exactly_the_script_with_zero_kv_leak() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let flood = Drill::new(Scenario::CancelFlood, SEED);
+    let out = flood.run();
+    assert_eq!(out.report.results.len(), flood.trace.requests.len());
+    assert!(out.shed_ids.is_empty());
+    for (i, r) in out.report.results.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert!(!r.failed, "a cancellation is not a failure (request {})", r.id);
+        if flood.cancel_at_submit.contains(&r.id) {
+            assert_eq!(
+                r.cancelled,
+                Some(CancelCause::Explicit),
+                "scripted request {} was not cancelled",
+                r.id
+            );
+            assert_eq!(r.tokens.len(), r.prompt_len, "cancelled request {} decoded anyway", r.id);
+        } else {
+            assert!(r.ok());
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "honest request {} diverged under the cancel flood",
+                r.id
+            );
+        }
+    }
+    assert_eq!(out.cancelled_ids(), flood.cancel_at_submit);
+    assert_eq!(out.report.metrics.cancelled, flood.cancel_at_submit.len() as u64);
+    assert_eq!(out.report.metrics.timed_out, 0);
+    // KV pages are checked directly by the engine-level gate in
+    // `cancelled_sequence_rolls_kv_back_and_counts` (engine tests) and
+    // `failed_sequences_roll_kv_back_to_zero_leak` below; here the leak
+    // gate is indirect — every honest request completed its full budget.
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "cancel flood grew {d} threads");
+    }
+}
+
+#[test]
+fn overload_shed_is_typed_bounded_and_loses_nothing() {
+    let _g = serve_guard();
+    let drill = Drill::new(Scenario::OverloadShed, SEED);
+    let out = drill.run();
+    let n = drill.trace.requests.len();
+    let bound = drill.server_cfg.admit_queue as u64;
+    // The burst outruns decode (every backend pays a TimedLm latency), so
+    // the bounded window must shed — and every submission ends as exactly
+    // one typed outcome: a terminal result or a recorded shed.
+    assert!(!out.shed_ids.is_empty(), "overload burst never shed");
+    assert_eq!(
+        out.report.results.len() + out.shed_ids.len(),
+        n,
+        "submissions lost: {} served + {} shed != {n}",
+        out.report.results.len(),
+        out.shed_ids.len()
+    );
+    for r in &out.report.results {
+        assert!(!out.shed_ids.contains(&r.id), "request {} both shed and served", r.id);
+        assert!(r.ok(), "admitted request {} did not complete cleanly", r.id);
+        assert_eq!(r.tokens.len(), r.prompt_len + r.max_new_tokens, "request {} truncated", r.id);
+    }
+    // (No bit-exact comparison against no-fault here: sheds consume no
+    // round-robin slot, so the request→worker map legitimately shifts.)
+    assert_eq!(out.report.metrics.shed_full, out.shed_ids.len() as u64);
+    assert_eq!(out.report.metrics.shed_expired, 0);
+    assert!(
+        out.report.metrics.queue_peak >= 1 && out.report.metrics.queue_peak <= bound,
+        "queue peak {} outside [1, {bound}]",
+        out.report.metrics.queue_peak
+    );
+    assert_eq!(out.report.metrics.completed, out.report.results.len() as u64);
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "overload shed grew {d} threads");
+    }
+}
+
+#[test]
+fn drain_under_storm_settles_every_submission_exactly_once() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let drill = Drill::new(Scenario::DrainUnderStorm, SEED);
+    let out = drill.run();
+    let submitted = drill.drain_after.expect("drain scenario");
+    assert!(out.shed_ids.is_empty());
+    assert_eq!(
+        out.report.results.len(),
+        submitted,
+        "every submitted id must land exactly one terminal state"
+    );
+    for (i, r) in out.report.results.iter().enumerate() {
+        assert_eq!(r.id, i as u64, "id sequence has a hole or duplicate");
+        // Terminal states are mutually exclusive by construction; spell it
+        // out so a regression reads as a gate failure, not a logic puzzle.
+        let terminals = usize::from(r.ok())
+            + usize::from(r.failed)
+            + usize::from(r.cancelled.is_some());
+        assert_eq!(terminals, 1, "request {} has {terminals} terminal states", r.id);
+        if r.failed {
+            assert!(drill.poisoned.contains(&r.id), "only poisoned requests may fail");
+        }
+        if r.ok() {
+            assert_eq!(r.tokens.len(), r.prompt_len + r.max_new_tokens);
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "honest completed request {} diverged under drain",
+                r.id
+            );
+        }
+    }
+    let cancelled = out.report.results.iter().filter(|r| r.cancelled.is_some()).count() as u64;
+    assert_eq!(out.report.metrics.cancelled + out.report.metrics.timed_out, cancelled);
+    assert_eq!(out.report.metrics.completed, submitted as u64);
+    // NOTE: verify_faults may be less than poisoned.len() — a poisoned
+    // request cancelled before its fault fires retires Cancelled, and
+    // cancellation deliberately wins over the fault path.
+    assert!(out.report.metrics.verify_faults <= drill.poisoned.len() as u64);
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "drain-under-storm grew {d} threads");
+    }
+}
+
+#[test]
+fn composed_fault_drill_contains_overlapping_failure_modes() {
+    let _g = serve_guard();
+    let base_out = Drill::new(Scenario::NoFault, SEED).run();
+    let drill = Drill::new(Scenario::ComposedFault, SEED);
+    let out = drill.run();
+    assert_eq!(out.report.results.len(), drill.trace.requests.len());
+    for r in &out.report.results {
+        if drill.poisoned.contains(&r.id) {
+            assert!(r.failed, "poisoned request {} did not fail", r.id);
+            assert_eq!(r.tokens, vec![drill.trigger], "request {} emitted past the fault", r.id);
+        } else {
+            assert!(r.ok(), "honest request {} caught a composed fault", r.id);
+            // Panic storm + KV pressure + straggler change when work
+            // happens and which sequences roll back, never what honest
+            // sequences decode.
+            assert_eq!(
+                r.tokens,
+                base_out.report.results[r.id as usize].tokens,
+                "honest request {} diverged under composed faults",
+                r.id
+            );
+        }
+    }
+    assert_eq!(out.failed_ids(), drill.poisoned, "failure set is exactly the script");
+    assert_eq!(out.report.metrics.verify_faults, drill.poisoned.len() as u64);
+    assert!(out.report.goodput() > 0.0);
+    if let Some(d) = out.census_delta() {
+        assert!(d <= CENSUS_SLACK, "composed-fault drill grew {d} threads");
     }
 }
 
