@@ -11,7 +11,7 @@
 //! ```
 
 use gls_serve::bench::Table;
-use gls_serve::compression::codec::{CodecConfig, GlsCodec, RandomnessMode};
+use gls_serve::compression::codec::{CodecConfig, CodecWorkspace, GlsCodec, RandomnessMode};
 use gls_serve::compression::gaussian::{run_gaussian, GaussianSource};
 use gls_serve::compression::image::{
     left_crop, mse, right_half, synthetic_digits, AnalyticVae, EncState, LatentCodecModel,
@@ -30,6 +30,7 @@ fn demo_images<M: LatentCodecModel>(model: &M, images: &[Vec<f32>], k: usize, l_
         mode: RandomnessMode::Independent,
     };
     let codec = GlsCodec::new(&src_model, cfg);
+    let mut ws = CodecWorkspace::new();
     let mut crop_rng = XorShift128::new(5);
 
     let mut t = Table::new(&["image", "matched?", "best decoder MSE", "per-decoder MSE"]);
@@ -43,13 +44,14 @@ fn demo_images<M: LatentCodecModel>(model: &M, images: &[Vec<f32>], k: usize, l_
                 model.project(&left_crop(img, cx, cy))
             })
             .collect();
-        let (enc, dec, hit) = codec.roundtrip(&EncState { mu, var }, &sides, b as u64);
-        let (samples, _) = codec.shared_randomness(b as u64);
-        let _ = enc;
+        // One shared-randomness materialization serves the encoder, all K
+        // decoders, and reconstruction.
+        let ctx = codec.block_context(b as u64);
+        let (_, dec, hit) = codec.roundtrip_with(&mut ws, &ctx, &EncState { mu, var }, &sides);
         let errs: Vec<f64> = dec
             .iter()
             .zip(&sides)
-            .map(|(&idx, side)| mse(&model.decode(&samples[idx], side), &source))
+            .map(|(&idx, side)| mse(&model.decode(&ctx.samples[idx], side), &source))
             .collect();
         let best = errs.iter().cloned().fold(f64::INFINITY, f64::min);
         t.row(&[

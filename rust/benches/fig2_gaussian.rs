@@ -1,31 +1,139 @@
-//! Figure 2 + Tables 5/6 reproduction: the synthetic Gaussian source.
+//! Figure 2 + Tables 5/6 reproduction — now doubling as the Gaussian
+//! compression throughput bench.
 //!
-//! (a)–(c): matching probability vs rate (L_max ∈ 2¹..2⁶) and number of
-//! decoders K ∈ {1..4}, for GLS with side information vs the
-//! shared-randomness baseline. (d): rate-distortion curves — per (K, L_max)
-//! the distortion is minimized over the paper's σ²_{W|A} grid.
-//! Also prints the Prop. 4 lower bound next to the measured match rate.
+//! Part 1 races the three pipelines over one identical request batch:
+//! the retained scalar reference (seed-style, re-materializing the shared
+//! randomness O((K+2)·N) times per block), the kernel path (one
+//! `BlockContext` per block + reused `CodecWorkspace`), and the
+//! `CompressionServer` (persistent multi-worker decode pool). All three
+//! must produce bit-identical match/MSE statistics — asserted here — so
+//! the speedup numbers compare genuinely equivalent work.
 //!
-//! Expected shape: match probability ↑ in rate and (for GLS) in K;
-//! baseline barely moves with K; distortion ↓ with rate, GLS < baseline
-//! for K > 1 with the gap largest at low rates; equal at K = 1.
+//! Part 2 keeps the paper tables: matching probability vs rate
+//! (L_max ∈ 2¹..2⁶) and K ∈ {1..4} for GLS vs the shared-randomness
+//! baseline, next to the Prop. 4 bound; then the rate-distortion sweep
+//! minimized over the σ²_{W|A} grid.
+//!
+//! Results merge into `BENCH_perf.json` (override `BENCH_PERF_JSON`)
+//! under `"section":"fig2-gaussian"` entries plus `compression_gaussian_*`
+//! summary keys; CI's compression job gates the kernel-vs-scalar speedup,
+//! match-rate monotonicity in K, and the rate-distortion ordering.
+//! `GLS_BENCH_QUICK=1` shrinks every grid.
 
-use gls_serve::bench::Table;
+use std::sync::Arc;
+
+use gls_serve::bench::{time, MergingPerfJson, Table};
 use gls_serve::compression::bounds::gaussian_prop4_bound;
-use gls_serve::compression::codec::RandomnessMode;
-use gls_serve::compression::gaussian::{best_over_distortion_grid, run_gaussian, GaussianSource};
+use gls_serve::compression::codec::{CodecConfig, RandomnessMode};
+use gls_serve::compression::gaussian::{
+    best_over_distortion_grid, gaussian_point, gaussian_requests, run_gaussian, GaussianSource,
+};
+use gls_serve::compression::service::{run_blocks_scalar, run_blocks_workspace, CompressionServer};
+
+const SECTION: &str = "fig2-gaussian";
 
 fn main() {
     let quick = std::env::var("GLS_BENCH_QUICK").is_ok();
-    let n_samples = if quick { 1 << 10 } else { 1 << 12 };
+    let mut json = MergingPerfJson::load(&[SECTION], &["compression_gaussian_"]);
+
+    // ---- Part 1: throughput (scalar vs kernel vs service) ----
+    let src = GaussianSource::paper_default(0.005);
+    let tp_n = if quick { 1 << 9 } else { 1 << 11 };
+    let tp_trials: u64 = if quick { 96 } else { 384 };
+    let tp_k = 4usize;
+    let workers = 4usize;
+    let iters = if quick { 2 } else { 3 };
+    let cfg = CodecConfig {
+        n_samples: tp_n,
+        l_max: 8,
+        k_decoders: tp_k,
+        seed: 7,
+        mode: RandomnessMode::Independent,
+    };
+    let requests = gaussian_requests(src, tp_k, tp_trials, 7);
+    // Candidate samples raced per pipeline pass: the unit of throughput.
+    let samples = (tp_trials as usize * tp_n) as f64;
+
+    println!("# Gaussian compression throughput — K = {tp_k}, L_max = 8, N = {tp_n}, {tp_trials} blocks\n");
+
+    // Equivalence first: the three pipelines must agree bit-for-bit on the
+    // statistics before their timings are comparable.
+    let p_scalar = gaussian_point(src, cfg, &requests, &run_blocks_scalar(&src, cfg, &requests));
+    let p_kernel =
+        gaussian_point(src, cfg, &requests, &run_blocks_workspace(&src, cfg, &requests));
+    let mut server = CompressionServer::new(Arc::new(src), cfg, workers);
+    let p_service = gaussian_point(src, cfg, &requests, &server.run_batch(requests.clone()));
+    assert_eq!(
+        p_scalar.match_rate.to_bits(),
+        p_kernel.match_rate.to_bits(),
+        "scalar and kernel paths diverged"
+    );
+    assert_eq!(p_scalar.mse.to_bits(), p_kernel.mse.to_bits());
+    assert_eq!(
+        p_kernel.match_rate.to_bits(),
+        p_service.match_rate.to_bits(),
+        "service diverged from the serial kernel reference"
+    );
+    assert_eq!(p_kernel.mse.to_bits(), p_service.mse.to_bits());
+
+    let r_scalar = time("scalar (seed-style, O((K+2)N)/block)", 1, iters, || {
+        std::hint::black_box(run_blocks_scalar(&src, cfg, &requests));
+    });
+    let r_kernel = time("kernel (workspace, O(N)/block)", 1, iters, || {
+        std::hint::black_box(run_blocks_workspace(&src, cfg, &requests));
+    });
+    let r_service = time(&format!("service ({workers} decode workers)"), 1, iters, || {
+        std::hint::black_box(server.run_batch(requests.clone()));
+    });
+
+    let sps_scalar = r_scalar.throughput(samples);
+    let sps_kernel = r_kernel.throughput(samples);
+    let sps_service = r_service.throughput(samples);
+    let speedup = sps_kernel / sps_scalar.max(1e-12);
+    let service_ratio = sps_service / sps_kernel.max(1e-12);
+
+    let mut tt = Table::new(&["pipeline", "ms/pass", "samples/s", "vs scalar"]);
+    for (r, sps) in [(&r_scalar, sps_scalar), (&r_kernel, sps_kernel), (&r_service, sps_service)]
+    {
+        tt.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.per_iter.mean * 1e3),
+            format!("{sps:.0}"),
+            format!("{:.2}x", sps / sps_scalar.max(1e-12)),
+        ]);
+    }
+    tt.print();
+    println!("(match rate {:.3}, identical bits across all three pipelines)\n", p_kernel.match_rate);
+
+    for (case, r, sps) in [
+        ("scalar", &r_scalar, sps_scalar),
+        ("kernel", &r_kernel, sps_kernel),
+        ("service-w4", &r_service, sps_service),
+    ] {
+        json.entry(format!(
+            "{{\"section\":\"{SECTION}\",\"case\":\"{case}\",\"samples_per_s\":{sps:.3},\
+             \"ms_per_pass\":{:.3},\"match_rate\":{:.4}}}",
+            r.per_iter.mean * 1e3,
+            p_kernel.match_rate
+        ));
+    }
+    json.metric("compression_gaussian_scalar_samples_per_s", sps_scalar);
+    json.metric("compression_gaussian_kernel_samples_per_s", sps_kernel);
+    json.metric("compression_gaussian_kernel_speedup", speedup);
+    json.metric("compression_gaussian_service_samples_per_s_w4", sps_service);
+    json.metric("compression_gaussian_service_vs_kernel_w4", service_ratio);
+
+    // ---- Part 2: the paper tables ----
+    let n_samples = if quick { 1 << 9 } else { 1 << 12 };
     let trials: u64 = if quick { 200 } else { 500 };
     let l_maxes: Vec<u64> = vec![2, 4, 8, 16, 32, 64];
     let ks: Vec<usize> = vec![1, 2, 3, 4];
 
     println!("# Figure 2 (a)–(c) — matching probability (σ²_W|A = 0.005, σ²_T|A = 0.5)");
     println!("# N = {n_samples} importance samples, {trials} trials per cell\n");
-    let src = GaussianSource::paper_default(0.005);
 
+    // Match rates at the gated operating point (L_max = 4) per K.
+    let mut match_by_k = [0.0f64; 3]; // K = 1, 2, 4
     let mut t = Table::new(&[
         "L_max", "rate(b)", "K", "GLS match", "BL match", "Prop4 bound",
     ]);
@@ -35,6 +143,14 @@ fn main() {
                 run_gaussian(src, k, l_max, n_samples, trials, 7, RandomnessMode::Independent);
             let bl = run_gaussian(src, k, l_max, n_samples, trials, 7, RandomnessMode::Shared);
             let bound = gaussian_prop4_bound(src, k, l_max, 4000, 3);
+            if l_max == 4 {
+                match k {
+                    1 => match_by_k[0] = gls.match_rate,
+                    2 => match_by_k[1] = gls.match_rate,
+                    4 => match_by_k[2] = gls.match_rate,
+                    _ => {}
+                }
+            }
             t.row(&[
                 l_max.to_string(),
                 format!("{:.0}", (l_max as f64).log2()),
@@ -46,12 +162,17 @@ fn main() {
         }
     }
     t.print();
+    json.metric("compression_gaussian_match_k1", match_by_k[0]);
+    json.metric("compression_gaussian_match_k2", match_by_k[1]);
+    json.metric("compression_gaussian_match_k4", match_by_k[2]);
 
     println!("\n# Figure 2 (d) + Tables 5/6 — rate-distortion (best σ²_W|A per cell)\n");
     let mut rd = Table::new(&[
         "K", "L_max", "GLS σ²_W|A*", "GLS dist (dB)", "BL σ²_W|A*", "BL dist (dB)",
     ]);
     let rd_trials = if quick { 150 } else { 250 };
+    let mut mse_db_l2 = 0.0f64;
+    let mut mse_db_l64 = 0.0f64;
     for &k in &ks {
         for &l_max in &l_maxes {
             let g = best_over_distortion_grid(
@@ -60,6 +181,12 @@ fn main() {
             let b = best_over_distortion_grid(
                 k, l_max, n_samples, rd_trials, 7, RandomnessMode::Shared,
             );
+            if k == 2 && l_max == 2 {
+                mse_db_l2 = g.mse_db;
+            }
+            if k == 2 && l_max == 64 {
+                mse_db_l64 = g.mse_db;
+            }
             rd.row(&[
                 k.to_string(),
                 l_max.to_string(),
@@ -71,8 +198,12 @@ fn main() {
         }
     }
     rd.print();
+    json.metric("compression_gaussian_mse_db_l2", mse_db_l2);
+    json.metric("compression_gaussian_mse_db_l64", mse_db_l64);
+
     println!(
         "\nshape checks: GLS match ↑ in K; baseline ~flat in K; distortion ↓ with rate;\n\
          GLS ≤ BL distortion for K > 1 (gap largest at low rate); equal at K = 1."
     );
+    json.write();
 }

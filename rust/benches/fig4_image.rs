@@ -1,30 +1,155 @@
-//! Figure 4 + Tables 8/9 reproduction: distributed image compression on
-//! the synthetic-digit dataset (MNIST stand-in — DESIGN.md §2).
+//! Figure 4 + Tables 8/9 reproduction (distributed image compression on
+//! the synthetic-digit dataset — DESIGN.md §2) — now doubling as the
+//! image compression throughput bench.
 //!
-//! Per (K, L_max) cell, rate-distortion MSE is minimized over the
-//! hyperparameter grid (N candidates × encoder channel variance, playing
-//! the paper's N × β grid), for GLS vs the shared-randomness baseline.
-//! Figure 3's qualitative success/failure split is reported as match-rate
-//! buckets (encoder-decoder agreement vs miss).
+//! Part 1 races the three pipelines over one identical request batch (the
+//! latent β-VAE stand-in codec): the retained scalar reference, the
+//! kernel workspace path, and the `CompressionServer` decode pool. All
+//! three must produce bit-identical match/MSE statistics — asserted here.
 //!
-//! Expected shape: MSE ↓ with rate and with K under GLS; GLS ≤ baseline
-//! with the gap largest at low rates; K = 1 equal.
+//! Part 2 keeps the paper tables: per (K, L_max) cell the
+//! rate-distortion MSE minimized over the hyperparameter grid
+//! (N candidates × encoder channel variance, playing the paper's N × β
+//! grid), GLS vs the shared-randomness baseline, plus Figure 3's
+//! success/failure anatomy.
+//!
+//! Results merge into `BENCH_perf.json` (override `BENCH_PERF_JSON`)
+//! under `"section":"fig4-image"` entries plus `compression_image_*`
+//! summary keys; CI's compression job gates the kernel-vs-scalar speedup,
+//! match-rate monotonicity in K, and the rate-distortion ordering.
+//! `GLS_BENCH_QUICK=1` shrinks every grid.
 
-use gls_serve::bench::Table;
-use gls_serve::compression::codec::RandomnessMode;
-use gls_serve::compression::image::{run_image, synthetic_digits, AnalyticVae, ImagePoint};
+use std::sync::Arc;
+
+use gls_serve::bench::{time, MergingPerfJson, Table};
+use gls_serve::compression::codec::{CodecConfig, RandomnessMode};
+use gls_serve::compression::image::{
+    image_point, image_requests, run_image, synthetic_digits, AnalyticVae, ImagePoint,
+    SharedLatentSource,
+};
+use gls_serve::compression::service::{run_blocks_scalar, run_blocks_workspace, CompressionServer};
+
+const SECTION: &str = "fig4-image";
 
 fn main() {
     let quick = std::env::var("GLS_BENCH_QUICK").is_ok();
+    let mut json = MergingPerfJson::load(&[SECTION], &["compression_image_"]);
+
     let train_n = if quick { 150 } else { 400 };
     let eval_n = if quick { 60 } else { 200 };
+    let all = synthetic_digits(train_n + eval_n, 21);
+    let (train, eval) = all.split_at(train_n);
+
+    // ---- Part 1: throughput (scalar vs kernel vs service) ----
+    let vae = Arc::new(AnalyticVae::fit(train, 4, 0.05, 13));
+    let tp_n = if quick { 128 } else { 256 };
+    let tp_k = 3usize;
+    let workers = 4usize;
+    let iters = if quick { 2 } else { 3 };
+    let cfg = CodecConfig {
+        n_samples: tp_n,
+        l_max: 8,
+        k_decoders: tp_k,
+        seed: 7,
+        mode: RandomnessMode::Independent,
+    };
+    let requests = image_requests(&*vae, eval, tp_k, 7);
+    let shared_src = SharedLatentSource { model: Arc::clone(&vae) };
+    // Latent candidates raced per pipeline pass: the unit of throughput.
+    let samples = (eval.len() * tp_n) as f64;
+
+    println!(
+        "# Image compression throughput — K = {tp_k}, L_max = 8, N = {tp_n}, {} images\n",
+        eval.len()
+    );
+
+    // Equivalence first: all three pipelines must agree bit-for-bit on the
+    // statistics before their timings are comparable.
+    let p_scalar =
+        image_point(&*vae, cfg, eval, &requests, &run_blocks_scalar(&shared_src, cfg, &requests));
+    let p_kernel = image_point(
+        &*vae,
+        cfg,
+        eval,
+        &requests,
+        &run_blocks_workspace(&shared_src, cfg, &requests),
+    );
+    let mut server =
+        CompressionServer::new(Arc::new(SharedLatentSource { model: Arc::clone(&vae) }), cfg, workers);
+    let p_service = image_point(&*vae, cfg, eval, &requests, &server.run_batch(requests.clone()));
+    assert_eq!(
+        p_scalar.match_rate.to_bits(),
+        p_kernel.match_rate.to_bits(),
+        "scalar and kernel paths diverged"
+    );
+    assert_eq!(p_scalar.mse.to_bits(), p_kernel.mse.to_bits());
+    assert_eq!(
+        p_kernel.match_rate.to_bits(),
+        p_service.match_rate.to_bits(),
+        "service diverged from the serial kernel reference"
+    );
+    assert_eq!(p_kernel.mse.to_bits(), p_service.mse.to_bits());
+
+    let r_scalar = time("scalar (seed-style, O((K+2)N)/block)", 1, iters, || {
+        std::hint::black_box(run_blocks_scalar(&shared_src, cfg, &requests));
+    });
+    let r_kernel = time("kernel (workspace, O(N)/block)", 1, iters, || {
+        std::hint::black_box(run_blocks_workspace(&shared_src, cfg, &requests));
+    });
+    let r_service = time(&format!("service ({workers} decode workers)"), 1, iters, || {
+        std::hint::black_box(server.run_batch(requests.clone()));
+    });
+
+    let sps_scalar = r_scalar.throughput(samples);
+    let sps_kernel = r_kernel.throughput(samples);
+    let sps_service = r_service.throughput(samples);
+    let speedup = sps_kernel / sps_scalar.max(1e-12);
+    let service_ratio = sps_service / sps_kernel.max(1e-12);
+
+    let mut tt = Table::new(&["pipeline", "ms/pass", "samples/s", "vs scalar"]);
+    for (r, sps) in [(&r_scalar, sps_scalar), (&r_kernel, sps_kernel), (&r_service, sps_service)]
+    {
+        tt.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.per_iter.mean * 1e3),
+            format!("{sps:.0}"),
+            format!("{:.2}x", sps / sps_scalar.max(1e-12)),
+        ]);
+    }
+    tt.print();
+    println!("(match rate {:.3}, identical bits across all three pipelines)\n", p_kernel.match_rate);
+
+    for (case, r, sps) in [
+        ("scalar", &r_scalar, sps_scalar),
+        ("kernel", &r_kernel, sps_kernel),
+        ("service-w4", &r_service, sps_service),
+    ] {
+        json.entry(format!(
+            "{{\"section\":\"{SECTION}\",\"case\":\"{case}\",\"samples_per_s\":{sps:.3},\
+             \"ms_per_pass\":{:.3},\"match_rate\":{:.4}}}",
+            r.per_iter.mean * 1e3,
+            p_kernel.match_rate
+        ));
+    }
+    json.metric("compression_image_scalar_samples_per_s", sps_scalar);
+    json.metric("compression_image_kernel_samples_per_s", sps_kernel);
+    json.metric("compression_image_kernel_speedup", speedup);
+    json.metric("compression_image_service_samples_per_s_w4", sps_service);
+    json.metric("compression_image_service_vs_kernel_w4", service_ratio);
+
+    // Match-rate monotonicity in K at a fixed low-rate operating point.
+    let m1 = run_image(&*vae, eval, 1, 4, 128, 3, RandomnessMode::Independent);
+    let m2 = run_image(&*vae, eval, 2, 4, 128, 3, RandomnessMode::Independent);
+    let m4 = run_image(&*vae, eval, 4, 4, 128, 3, RandomnessMode::Independent);
+    json.metric("compression_image_match_k1", m1.match_rate);
+    json.metric("compression_image_match_k2", m2.match_rate);
+    json.metric("compression_image_match_k4", m4.match_rate);
+
+    // ---- Part 2: the paper tables ----
     let l_maxes: Vec<u64> = vec![4, 8, 16, 32, 64];
     let ks: Vec<usize> = vec![1, 2, 3, 4];
     let n_grid: Vec<usize> = if quick { vec![128] } else { vec![128, 256, 512] };
     let var_grid: Vec<f64> = if quick { vec![0.05] } else { vec![0.02, 0.05, 0.15] };
-
-    let all = synthetic_digits(train_n + eval_n, 21);
-    let (train, eval) = all.split_at(train_n);
 
     // Fit one codec per encoder-variance point (the paper trains one VAE
     // per β); grid-search at eval time like App. D.3.
@@ -49,6 +174,8 @@ fn main() {
     println!("# Figure 4 + Tables 8/9 — image compression (synthetic digits)");
     println!("# {train_n} train / {eval_n} eval images; grid: N ∈ {n_grid:?}, σ² ∈ {var_grid:?}\n");
 
+    let mut mse_l4 = 0.0f64;
+    let mut mse_l64 = 0.0f64;
     let mut t = Table::new(&[
         "K", "L_max", "rate(b)", "GLS MSE", "GLS match", "BL MSE", "BL match",
     ]);
@@ -56,6 +183,12 @@ fn main() {
         for &l_max in &l_maxes {
             let g = best_cell(k, l_max, RandomnessMode::Independent);
             let b = best_cell(k, l_max, RandomnessMode::Shared);
+            if k == 2 && l_max == 4 {
+                mse_l4 = g.mse;
+            }
+            if k == 2 && l_max == 64 {
+                mse_l64 = g.mse;
+            }
             t.row(&[
                 k.to_string(),
                 l_max.to_string(),
@@ -68,6 +201,8 @@ fn main() {
         }
     }
     t.print();
+    json.metric("compression_image_mse_l4", mse_l4);
+    json.metric("compression_image_mse_l64", mse_l64);
 
     // Figure 3 stand-in: success/failure anatomy at a mid-rate point.
     println!("\n# Figure 3 — success/failure anatomy (K = 2, L_max = 8)");
@@ -82,4 +217,5 @@ fn main() {
         "\nshape checks: MSE ↓ with rate and K (GLS); GLS ≤ BL, gap largest at low rate;\n\
          K = 1 rows identical between schemes."
     );
+    json.write();
 }

@@ -12,75 +12,13 @@
 //!
 //! `GLS_BENCH_QUICK=1` shrinks every drill to 16 requests.
 
-use gls_serve::bench::Table;
+use gls_serve::bench::{MergingPerfJson, Table};
 use gls_serve::workload::{Drill, Scenario};
-
-/// Merging JSON sink: same trivial schema as the `perf_engine` writer
-/// (hand-rolled — no serde offline), but it first re-reads the log and
-/// keeps every entry / summary key that is not ours.
-struct MergingPerfJson {
-    path: String,
-    entries: Vec<String>,
-    /// Raw `"key":value` summary items (kept raw to avoid reparsing
-    /// floats written by the other bench).
-    summary: Vec<String>,
-}
-
-const ENTRIES_MARK: &str = "\"entries\":[\n";
-const SUMMARY_MARK: &str = "\n],\n\"summary\":{";
-
-impl MergingPerfJson {
-    fn load() -> Self {
-        let path = std::env::var("BENCH_PERF_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
-        let mut entries = Vec::new();
-        let mut summary = Vec::new();
-        if let Ok(doc) = std::fs::read_to_string(&path) {
-            if let (Some(es), Some(ss)) = (doc.find(ENTRIES_MARK), doc.find(SUMMARY_MARK)) {
-                let body = &doc[es + ENTRIES_MARK.len()..ss];
-                entries.extend(
-                    body.split(",\n")
-                        .map(str::trim)
-                        .filter(|e| !e.is_empty())
-                        .filter(|e| !e.contains("\"section\":\"serving-load\""))
-                        .map(String::from),
-                );
-                let rest = &doc[ss + SUMMARY_MARK.len()..];
-                if let Some(end) = rest.find('}') {
-                    summary.extend(
-                        rest[..end]
-                            .split(',')
-                            .map(str::trim)
-                            .filter(|s| !s.is_empty())
-                            .filter(|s| !s.starts_with("\"serving_load_"))
-                            .map(String::from),
-                    );
-                }
-            }
-        }
-        Self { path, entries, summary }
-    }
-
-    fn metric(&mut self, key: &str, value: f64) {
-        self.summary.push(format!("\"{key}\":{value:.3}"));
-    }
-
-    fn write(&self) {
-        let doc = format!(
-            "{{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n{}\n],\n\"summary\":{{{}}}\n}}\n",
-            self.entries.join(",\n"),
-            self.summary.join(",")
-        );
-        match std::fs::write(&self.path, doc) {
-            Ok(()) => println!("\nwrote {}", self.path),
-            Err(e) => eprintln!("\nfailed to write {}: {e}", self.path),
-        }
-    }
-}
 
 fn main() {
     let quick = std::env::var("GLS_BENCH_QUICK").is_ok();
     let seed = 0xD811u64;
-    let mut json = MergingPerfJson::load();
+    let mut json = MergingPerfJson::load(&["serving-load"], &["serving_load_"]);
     let mut table = Table::new(&[
         "scenario", "goodput tok/s", "p95 tok ms", "p99 tok ms", "ttft p50 ms", "ttft p95 ms",
         "failed", "cancelled", "shed", "threads",
@@ -150,7 +88,7 @@ fn main() {
             format!("{shed}"),
             format!("{threads:.0}"),
         ]);
-        json.entries.push(format!(
+        json.entry(format!(
             "{{\"section\":\"serving-load\",\"case\":\"{}\",\"goodput_tok_per_s\":{:.3},\
              \"p95_token_ms\":{:.3},\"p99_token_ms\":{:.3},\"ttft_p50_ms\":{:.3},\
              \"ttft_p95_ms\":{:.3},\"failed\":{},\"completed\":{},\"threads\":{:.0},\

@@ -118,6 +118,94 @@ pub fn pm(mean: f64, sem: f64) -> String {
     format!("{mean:.2} ± {sem:.2}")
 }
 
+const PERF_ENTRIES_MARK: &str = "\"entries\":[\n";
+const PERF_SUMMARY_MARK: &str = "\n],\n\"summary\":{";
+
+/// Merging sink for `BENCH_perf.json` (schema `gls-serve/BENCH_perf/v1`,
+/// hand-rolled — no serde offline). Several bench binaries share one perf
+/// log in CI: each declares which `"section"` entries and summary-key
+/// prefixes it owns, re-reads the log, keeps everything foreign, and
+/// replaces only its own stale records. The path comes from
+/// `BENCH_PERF_JSON` (default `BENCH_perf.json`).
+pub struct MergingPerfJson {
+    path: String,
+    entries: Vec<String>,
+    /// Raw `"key":value` summary items (kept raw to avoid reparsing floats
+    /// written by other benches).
+    summary: Vec<String>,
+}
+
+impl MergingPerfJson {
+    /// Load the existing log, dropping entries whose `"section"` is in
+    /// `sections` and summary keys starting with any of `key_prefixes`
+    /// (the caller is about to rewrite those).
+    pub fn load(sections: &[&str], key_prefixes: &[&str]) -> Self {
+        let path = std::env::var("BENCH_PERF_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
+        let doc = std::fs::read_to_string(&path).unwrap_or_default();
+        let (entries, summary) = Self::parse_foreign(&doc, sections, key_prefixes);
+        Self { path, entries, summary }
+    }
+
+    /// Split an existing log into the entries / summary items that belong
+    /// to *other* benches (everything not matching `sections` /
+    /// `key_prefixes`).
+    fn parse_foreign(
+        doc: &str,
+        sections: &[&str],
+        key_prefixes: &[&str],
+    ) -> (Vec<String>, Vec<String>) {
+        let owned_entry: Vec<String> =
+            sections.iter().map(|s| format!("\"section\":\"{s}\"")).collect();
+        let owned_key: Vec<String> = key_prefixes.iter().map(|p| format!("\"{p}")).collect();
+        let mut entries = Vec::new();
+        let mut summary = Vec::new();
+        if let (Some(es), Some(ss)) = (doc.find(PERF_ENTRIES_MARK), doc.find(PERF_SUMMARY_MARK)) {
+            let body = &doc[es + PERF_ENTRIES_MARK.len()..ss];
+            entries.extend(
+                body.split(",\n")
+                    .map(str::trim)
+                    .filter(|e| !e.is_empty())
+                    .filter(|e| !owned_entry.iter().any(|m| e.contains(m.as_str())))
+                    .map(String::from),
+            );
+            let rest = &doc[ss + PERF_SUMMARY_MARK.len()..];
+            if let Some(end) = rest.find('}') {
+                summary.extend(
+                    rest[..end]
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|s| !s.is_empty())
+                        .filter(|s| !owned_key.iter().any(|p| s.starts_with(p.as_str())))
+                        .map(String::from),
+                );
+            }
+        }
+        (entries, summary)
+    }
+
+    /// Append one raw JSON entry object (the caller formats it).
+    pub fn entry(&mut self, raw: String) {
+        self.entries.push(raw);
+    }
+
+    /// Append one numeric summary metric.
+    pub fn metric(&mut self, key: &str, value: f64) {
+        self.summary.push(format!("\"{key}\":{value:.3}"));
+    }
+
+    pub fn write(&self) {
+        let doc = format!(
+            "{{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n{}\n],\n\"summary\":{{{}}}\n}}\n",
+            self.entries.join(",\n"),
+            self.summary.join(",")
+        );
+        match std::fs::write(&self.path, doc) {
+            Ok(()) => println!("\nwrote {}", self.path),
+            Err(e) => eprintln!("\nfailed to write {}: {e}", self.path),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +250,47 @@ mod tests {
     #[test]
     fn pm_formats_like_paper() {
         assert_eq!(pm(4.783, 0.238), "4.78 ± 0.24");
+    }
+
+    #[test]
+    fn merging_perf_json_keeps_foreign_records_only() {
+        let doc = concat!(
+            "{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n",
+            "{\"section\":\"serving-load\",\"case\":\"steady\"},\n",
+            "{\"section\":\"fig2-gaussian\",\"case\":\"kernel\"}\n",
+            "],\n\"summary\":{\"serving_load_goodput\":12.000,",
+            "\"compression_gaussian_kernel_speedup\":2.100}\n}\n",
+        );
+        let (entries, summary) = MergingPerfJson::parse_foreign(
+            doc,
+            &["fig2-gaussian"],
+            &["compression_gaussian_"],
+        );
+        assert_eq!(entries, vec!["{\"section\":\"serving-load\",\"case\":\"steady\"}"]);
+        assert_eq!(summary, vec!["\"serving_load_goodput\":12.000"]);
+
+        // A missing / empty log yields a clean slate rather than an error.
+        let (e2, s2) = MergingPerfJson::parse_foreign("", &["fig2-gaussian"], &[]);
+        assert!(e2.is_empty() && s2.is_empty());
+    }
+
+    #[test]
+    fn merging_perf_json_round_trips_through_its_own_format() {
+        let mut j = MergingPerfJson {
+            path: String::new(),
+            entries: vec!["{\"section\":\"a\",\"x\":1}".into()],
+            summary: vec!["\"a_x\":1.000".into()],
+        };
+        j.entry("{\"section\":\"b\",\"y\":2}".into());
+        j.metric("b_y", 2.0);
+        let doc = format!(
+            "{{\n\"schema\":\"gls-serve/BENCH_perf/v1\",\n\"entries\":[\n{}\n],\n\"summary\":{{{}}}\n}}\n",
+            j.entries.join(",\n"),
+            j.summary.join(",")
+        );
+        // Re-parsing while owning section "b" recovers exactly section "a".
+        let (entries, summary) = MergingPerfJson::parse_foreign(&doc, &["b"], &["b_"]);
+        assert_eq!(entries, vec!["{\"section\":\"a\",\"x\":1}"]);
+        assert_eq!(summary, vec!["\"a_x\":1.000"]);
     }
 }

@@ -18,7 +18,35 @@
 //! (paper Fig. 2/4 "BL") replaces the K exponential sets with a single
 //! shared set — decoders differ only through their side information, so
 //! extra decoders help far less.
+//!
+//! # Kernel path vs scalar references
+//!
+//! The hot paths follow the coupling-kernel discipline of `spec/kernel.rs`:
+//! shared randomness is materialized **once** per block into a
+//! [`BlockContext`], races run out of a reusable [`CodecWorkspace`] over the
+//! sparse support of usable weights with the per-(block, lane) RNG prefix
+//! hoisted (`CounterRng::lane`), and the straightforward full re-derivation
+//! paths are retained as [`GlsCodec::encode_scalar`] /
+//! [`GlsCodec::decode_scalar`] parity references. The kernel path must stay
+//! **bit-exact** with the scalar references: it visits the same usable
+//! candidates in the same `(i asc, k inner)` order, compares with strict
+//! `<`, and derives every variate from identical RNG coordinates —
+//! `tests/compression.rs` enforces this across models, modes, and K the
+//! same way `tests/kernel_parity.rs` does for the verifiers.
+//!
+//! # Degenerate weights
+//!
+//! Weights that are NaN, infinite, or ≤ 0 carry no usable mass and are
+//! skipped *explicitly* on both paths. (The seed filtered only `w <= 0.0`:
+//! NaN weights slipped through the filter and then silently lost every
+//! `v < best` comparison, and an all-nonpositive block silently transmitted
+//! candidate 0's bin.) If **no** candidate has a usable weight, the encoder
+//! falls back deterministically to candidate 0 and says so via
+//! [`EncodeResult::degenerate`]; a decoder in the same situation falls back
+//! to the first in-bin candidate and reports [`DecodeOutcome::fallback`] —
+//! the two fallbacks mirror each other and are regression-tested.
 
+use crate::spec::kernel::fill_exp_panel;
 use crate::stats::rng::CounterRng;
 
 /// Whether each decoder has its own exponential set (GLS) or all share one
@@ -71,17 +99,67 @@ impl CodecConfig {
         if self.n_samples == 0 || self.l_max == 0 || self.k_decoders == 0 {
             return Err("n_samples, l_max, k_decoders must be ≥ 1".into());
         }
+        if self.n_samples as u64 >= PRIOR_DRAW_BUDGET {
+            return Err("n_samples must fit the per-candidate lane range".into());
+        }
         Ok(())
     }
 }
 
 /// Result of encoding one source symbol.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EncodeResult {
     /// Selected candidate index Y.
     pub index: usize,
     /// Transmitted message `M = ℓ_Y` (one of L_max values).
     pub message: u64,
+    /// True when **every** candidate weight was unusable (NaN, infinite or
+    /// ≤ 0) and the encoder fell back deterministically to candidate 0 —
+    /// the encoder-side mirror of [`DecodeOutcome::fallback`].
+    pub degenerate: bool,
+}
+
+/// Result of one decoder's selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeOutcome {
+    /// Selected candidate index `X^{(k)}`.
+    pub index: usize,
+    /// True when no in-bin candidate had a usable weight and the decoder
+    /// fell back to the first in-bin candidate (candidate 0 if the bin is
+    /// empty), so it always outputs *something*.
+    pub fallback: bool,
+}
+
+/// Shared randomness of one block, materialized once: the candidate list
+/// and bin labels both sides derive from the block id. Encoder, all K
+/// decoders, and reconstruction read the same context — the seed paths
+/// re-derived it K+2 times per block (once in `encode`, once per `decode`,
+/// again in `candidate`), turning O(N) work into O((K+2)·N).
+#[derive(Clone, Debug)]
+pub struct BlockContext<S> {
+    pub block: u64,
+    pub samples: Vec<S>,
+    pub bins: Vec<u64>,
+}
+
+/// Reusable race scratch for the kernel codec paths (the codec's analogue
+/// of `spec::kernel::RaceScratch`): sparse support of usable candidates,
+/// their weights, and the hoisted exponential panel. One workspace serves
+/// any number of blocks without reallocating in steady state.
+#[derive(Default)]
+pub struct CodecWorkspace {
+    /// Candidate indices with usable weight (ascending).
+    support: Vec<u32>,
+    /// Weight per support entry (same order).
+    weights: Vec<f64>,
+    /// Row-major `rows × support.len()` exponential panel.
+    panel: Vec<f64>,
+}
+
+impl CodecWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
 }
 
 /// The GLS (or baseline) codec over a source model.
@@ -91,9 +169,25 @@ pub struct GlsCodec<'a, M: SourceModel> {
     rng: CounterRng,
 }
 
-// Sub-stream tags: candidate draws, bin labels, exponentials.
-const LANE_PRIOR: u64 = 1 << 32;
+// Sub-stream tags (the `draft` coordinate of the block's counter RNG):
+// exponential sets occupy lanes 0..K (one per decoder), bin labels live in
+// LANE_BINS, and candidate i's prior draws get the dedicated lane
+// PRIOR_LANE_BASE + i. The seed packed every candidate into one lane at a
+// 1024-draw stride, so a source model drawing more than 1024 uniforms for
+// one candidate silently read candidate i+1's counter coordinates,
+// correlating supposedly independent candidates. A dedicated lane gives
+// each candidate the full 2^64 counter space; PRIOR_DRAW_BUDGET is a debug
+// tripwire (and the cap on n_samples, so lanes never alias LANE_BINS).
 const LANE_BINS: u64 = (1 << 32) + 1;
+const PRIOR_LANE_BASE: u64 = 1 << 33;
+const PRIOR_DRAW_BUDGET: u64 = 1 << 32;
+
+/// A weight carries usable mass only if it is a strictly positive finite
+/// number; NaN, ±∞ and anything ≤ 0 select nothing.
+#[inline]
+fn usable(w: f64) -> bool {
+    w.is_finite() && w > 0.0
+}
 
 impl<'a, M: SourceModel> GlsCodec<'a, M> {
     pub fn new(model: &'a M, cfg: CodecConfig) -> Self {
@@ -101,51 +195,79 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
         Self { model, cfg, rng: CounterRng::new(cfg.seed) }
     }
 
+    /// Effective number of exponential sets racing on the encoder side.
+    #[inline]
+    fn k_eff(&self) -> usize {
+        match self.cfg.mode {
+            RandomnessMode::Independent => self.cfg.k_decoders,
+            RandomnessMode::Shared => 1,
+        }
+    }
+
+    /// RNG lane holding decoder k's exponential set.
+    #[inline]
+    fn exp_lane(&self, k: usize) -> u64 {
+        match self.cfg.mode {
+            RandomnessMode::Independent => k as u64,
+            RandomnessMode::Shared => 0,
+        }
+    }
+
     /// Materialize the shared candidate list and bin labels for a block.
-    /// Both encoder and decoders call this with the same block id.
+    /// Both encoder and decoders call this with the same block id. Hot
+    /// paths should materialize once via [`Self::block_context`] and share
+    /// the result.
     pub fn shared_randomness(&self, block: u64) -> (Vec<M::Sample>, Vec<u64>) {
         let n = self.cfg.n_samples;
         let mut samples = Vec::with_capacity(n);
         for i in 0..n {
+            let lane = self.rng.lane(block, PRIOR_LANE_BASE + i as u64);
             let mut ctr = 0u64;
             let mut draw = || {
-                let u = self.rng.uniform(block, LANE_PRIOR, (i as u64) * 1024 + ctr);
+                debug_assert!(
+                    ctr < PRIOR_DRAW_BUDGET,
+                    "source model exhausted candidate {i}'s prior draw budget"
+                );
+                let u = lane.uniform(ctr);
                 ctr += 1;
                 u
             };
             samples.push(self.model.sample_prior(&mut draw));
         }
+        let bin_lane = self.rng.lane(block, LANE_BINS);
         let bins: Vec<u64> = (0..n)
-            .map(|i| {
-                (self.rng.uniform(block, LANE_BINS, i as u64) * self.cfg.l_max as f64) as u64
-                    % self.cfg.l_max
-            })
+            .map(|i| (bin_lane.uniform(i as u64) * self.cfg.l_max as f64) as u64 % self.cfg.l_max)
             .collect();
         (samples, bins)
     }
 
-    #[inline]
-    fn exp_s(&self, block: u64, k: usize, i: usize) -> f64 {
-        let lane = match self.cfg.mode {
-            RandomnessMode::Independent => k as u64,
-            RandomnessMode::Shared => 0,
-        };
-        self.rng.exponential(block, lane, i as u64)
+    /// Materialize one block's shared randomness as a reusable context.
+    pub fn block_context(&self, block: u64) -> BlockContext<M::Sample> {
+        let (samples, bins) = self.shared_randomness(block);
+        BlockContext { block, samples, bins }
     }
 
-    /// Encoder: select Y via GLS over the K decoders' exponentials and emit
-    /// the bin label message.
-    pub fn encode(&self, a: &M::Source, block: u64) -> EncodeResult {
+    #[inline]
+    fn exp_s(&self, block: u64, k: usize, i: usize) -> f64 {
+        self.rng.exponential(block, self.exp_lane(k), i as u64)
+    }
+
+    // -----------------------------------------------------------------
+    // Scalar parity references (straightforward full re-derivation).
+    // -----------------------------------------------------------------
+
+    /// Scalar encoder reference: re-materializes the block's randomness and
+    /// races with per-variate RNG coordinates. Kept for parity testing and
+    /// as the throughput baseline; must stay bit-exact with
+    /// [`Self::encode_with`].
+    pub fn encode_scalar(&self, a: &M::Source, block: u64) -> EncodeResult {
         let (samples, bins) = self.shared_randomness(block);
-        let k_eff = match self.cfg.mode {
-            RandomnessMode::Independent => self.cfg.k_decoders,
-            RandomnessMode::Shared => 1,
-        };
+        let k_eff = self.k_eff();
         let mut best = f64::INFINITY;
-        let mut arg = 0usize;
+        let mut arg = usize::MAX;
         for (i, u) in samples.iter().enumerate() {
             let w = self.model.weight_enc(u, a);
-            if w <= 0.0 {
+            if !usable(w) {
                 continue;
             }
             for k in 0..k_eff {
@@ -156,11 +278,15 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
                 }
             }
         }
-        EncodeResult { index: arg, message: bins[arg] }
+        match arg {
+            usize::MAX => EncodeResult { index: 0, message: bins[0], degenerate: true },
+            i => EncodeResult { index: i, message: bins[i], degenerate: false },
+        }
     }
 
-    /// Decoder k: select its candidate index given side info and message.
-    pub fn decode(&self, t: &M::Side, message: u64, k: usize, block: u64) -> usize {
+    /// Scalar decoder reference; must stay bit-exact with
+    /// [`Self::decode_with`].
+    pub fn decode_scalar(&self, t: &M::Side, message: u64, k: usize, block: u64) -> DecodeOutcome {
         assert!(k < self.cfg.k_decoders);
         let (samples, bins) = self.shared_randomness(block);
         let mut best = f64::INFINITY;
@@ -170,7 +296,7 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
                 continue; // the 1{ℓ_i = M} mask
             }
             let w = self.model.weight_dec(u, t);
-            if w <= 0.0 {
+            if !usable(w) {
                 continue;
             }
             let v = self.exp_s(block, k, i) / w;
@@ -179,69 +305,215 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
                 arg = i;
             }
         }
-        // All masked or zero-weight (pathological): fall back to the first
-        // in-bin candidate so the decoder always outputs something.
         if arg == usize::MAX {
-            arg = bins.iter().position(|&b| b == message).unwrap_or(0);
+            // All masked or unusable: fall back to the first in-bin
+            // candidate so the decoder always outputs something.
+            let idx = bins.iter().position(|&b| b == message).unwrap_or(0);
+            return DecodeOutcome { index: idx, fallback: true };
         }
-        arg
+        DecodeOutcome { index: arg, fallback: false }
     }
 
-    /// Run one full block with K decoders: returns the encoder result, the
-    /// decoder indices, and whether any decoder matched (the paper's
-    /// success event `Y ∈ {X^{(1)}, …, X^{(K)}}`).
-    pub fn roundtrip(&self, a: &M::Source, sides: &[M::Side], block: u64) -> (EncodeResult, Vec<usize>, bool) {
+    // -----------------------------------------------------------------
+    // Kernel paths (sparse race out of a reusable workspace).
+    // -----------------------------------------------------------------
+
+    /// Kernel encoder: sparse race over usable weights with the per-lane
+    /// RNG prefix hoisted. The exponential panel is filled k-major but the
+    /// race itself visits `(i asc, k inner)` so strict-`<` tie-breaking
+    /// matches [`Self::encode_scalar`] bit-for-bit.
+    pub fn encode_with(
+        &self,
+        ws: &mut CodecWorkspace,
+        ctx: &BlockContext<M::Sample>,
+        a: &M::Source,
+    ) -> EncodeResult {
+        debug_assert_eq!(ctx.samples.len(), self.cfg.n_samples);
+        let k_eff = self.k_eff();
+        ws.support.clear();
+        ws.weights.clear();
+        for (i, u) in ctx.samples.iter().enumerate() {
+            let w = self.model.weight_enc(u, a);
+            if usable(w) {
+                ws.support.push(i as u32);
+                ws.weights.push(w);
+            }
+        }
+        if ws.support.is_empty() {
+            return EncodeResult { index: 0, message: ctx.bins[0], degenerate: true };
+        }
+        fill_exp_panel(&mut ws.panel, &self.rng, ctx.block, k_eff, &ws.support, |k| {
+            self.exp_lane(k)
+        });
+        let s = ws.support.len();
+        let mut best = f64::INFINITY;
+        let mut arg = usize::MAX;
+        for (j, &iu) in ws.support.iter().enumerate() {
+            let w = ws.weights[j];
+            for k in 0..k_eff {
+                let v = ws.panel[k * s + j] / w;
+                if v < best {
+                    best = v;
+                    arg = iu as usize;
+                }
+            }
+        }
+        match arg {
+            // Every ratio overflowed to +∞ (subnormal weights) — the scalar
+            // reference lands on the same fallback.
+            usize::MAX => EncodeResult { index: 0, message: ctx.bins[0], degenerate: true },
+            i => EncodeResult { index: i, message: ctx.bins[i], degenerate: false },
+        }
+    }
+
+    /// Kernel decoder k: sparse race over the in-bin usable candidates.
+    pub fn decode_with(
+        &self,
+        ws: &mut CodecWorkspace,
+        ctx: &BlockContext<M::Sample>,
+        t: &M::Side,
+        message: u64,
+        k: usize,
+    ) -> DecodeOutcome {
+        assert!(k < self.cfg.k_decoders);
+        debug_assert_eq!(ctx.samples.len(), self.cfg.n_samples);
+        ws.support.clear();
+        ws.weights.clear();
+        for (i, u) in ctx.samples.iter().enumerate() {
+            if ctx.bins[i] != message {
+                continue;
+            }
+            let w = self.model.weight_dec(u, t);
+            if usable(w) {
+                ws.support.push(i as u32);
+                ws.weights.push(w);
+            }
+        }
+        if ws.support.is_empty() {
+            let idx = ctx.bins.iter().position(|&b| b == message).unwrap_or(0);
+            return DecodeOutcome { index: idx, fallback: true };
+        }
+        let lane = self.exp_lane(k);
+        fill_exp_panel(&mut ws.panel, &self.rng, ctx.block, 1, &ws.support, |_| lane);
+        let mut best = f64::INFINITY;
+        let mut arg = usize::MAX;
+        for (j, &iu) in ws.support.iter().enumerate() {
+            let v = ws.panel[j] / ws.weights[j];
+            if v < best {
+                best = v;
+                arg = iu as usize;
+            }
+        }
+        if arg == usize::MAX {
+            let idx = ctx.bins.iter().position(|&b| b == message).unwrap_or(0);
+            return DecodeOutcome { index: idx, fallback: true };
+        }
+        DecodeOutcome { index: arg, fallback: false }
+    }
+
+    /// One full block against an already-materialized context: encoder plus
+    /// all K decoders out of one workspace.
+    pub fn roundtrip_with(
+        &self,
+        ws: &mut CodecWorkspace,
+        ctx: &BlockContext<M::Sample>,
+        a: &M::Source,
+        sides: &[M::Side],
+    ) -> (EncodeResult, Vec<usize>, bool) {
         assert_eq!(sides.len(), self.cfg.k_decoders);
-        let enc = self.encode(a, block);
+        let enc = self.encode_with(ws, ctx, a);
         let dec: Vec<usize> = sides
             .iter()
             .enumerate()
-            .map(|(k, t)| self.decode(t, enc.message, k, block))
+            .map(|(k, t)| self.decode_with(ws, ctx, t, enc.message, k).index)
             .collect();
         let hit = dec.contains(&enc.index);
         (enc, dec, hit)
     }
 
-    /// Candidate value by index (for reconstruction).
+    // -----------------------------------------------------------------
+    // Convenience wrappers (kernel-backed, one-shot).
+    // -----------------------------------------------------------------
+
+    /// Encoder: select Y via GLS over the K decoders' exponentials and emit
+    /// the bin label message.
+    pub fn encode(&self, a: &M::Source, block: u64) -> EncodeResult {
+        let ctx = self.block_context(block);
+        self.encode_with(&mut CodecWorkspace::new(), &ctx, a)
+    }
+
+    /// Decoder k: select its candidate index given side info and message.
+    pub fn decode(&self, t: &M::Side, message: u64, k: usize, block: u64) -> usize {
+        let ctx = self.block_context(block);
+        self.decode_with(&mut CodecWorkspace::new(), &ctx, t, message, k).index
+    }
+
+    /// Run one full block with K decoders: returns the encoder result, the
+    /// decoder indices, and whether any decoder matched (the paper's
+    /// success event `Y ∈ {X^{(1)}, …, X^{(K)}}`). Materializes the shared
+    /// randomness once for the whole block.
+    pub fn roundtrip(
+        &self,
+        a: &M::Source,
+        sides: &[M::Side],
+        block: u64,
+    ) -> (EncodeResult, Vec<usize>, bool) {
+        let ctx = self.block_context(block);
+        self.roundtrip_with(&mut CodecWorkspace::new(), &ctx, a, sides)
+    }
+
+    /// Candidate value by index (for reconstruction). One-shot: hot paths
+    /// should read `BlockContext::samples` instead of re-materializing.
     pub fn candidate(&self, block: u64, index: usize) -> M::Sample {
         let (samples, _) = self.shared_randomness(block);
         samples[index].clone()
     }
 }
 
+/// Toy discrete source shared by the codec's unit, conformance, and parity
+/// suites: W uniform on {0..9}, encoder/decoder observe W through symmetric
+/// flip channels, weights are explicit categorical ratios — the §5.1
+/// discrete scheme with no importance sampling needed.
+#[derive(Clone, Copy, Debug)]
+pub struct ToyDiscrete {
+    pub flip_enc: f64,
+    pub flip_dec: f64,
+}
+
+impl ToyDiscrete {
+    /// `p_{W|A}(·|a)` as an explicit 10-way categorical (the chi-square
+    /// conformance target for the encoder-selected candidate marginal).
+    pub fn enc_posterior(&self, a: usize) -> Vec<f64> {
+        (0..10)
+            .map(|u| if u == a { 1.0 - self.flip_enc } else { self.flip_enc / 9.0 })
+            .collect()
+    }
+}
+
+impl SourceModel for ToyDiscrete {
+    type Source = usize;
+    type Side = usize;
+    type Sample = usize;
+
+    fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> usize {
+        (draw() * 10.0) as usize % 10
+    }
+
+    fn weight_enc(&self, u: &usize, a: &usize) -> f64 {
+        // p_{W|A}(u|a): stay with prob 1-flip, else uniform.
+        let p = if u == a { 1.0 - self.flip_enc } else { self.flip_enc / 9.0 };
+        p / 0.1
+    }
+
+    fn weight_dec(&self, u: &usize, t: &usize) -> f64 {
+        let p = if u == t { 1.0 - self.flip_dec } else { self.flip_dec / 9.0 };
+        p / 0.1
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Trivial discrete model: W uniform on {0..9}, A = W observed through
-    /// a noisy channel, T = W observed through a noisier channel. Weights
-    /// are explicit categorical ratios — this exercises the §5.1 discrete
-    /// scheme (no importance sampling needed).
-    struct ToyDiscrete {
-        flip_enc: f64,
-        flip_dec: f64,
-    }
-
-    impl SourceModel for ToyDiscrete {
-        type Source = usize;
-        type Side = usize;
-        type Sample = usize;
-
-        fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> usize {
-            (draw() * 10.0) as usize % 10
-        }
-
-        fn weight_enc(&self, u: &usize, a: &usize) -> f64 {
-            // p_{W|A}(u|a): stay with prob 1-flip, else uniform.
-            let p = if u == a { 1.0 - self.flip_enc } else { self.flip_enc / 9.0 };
-            p / 0.1
-        }
-
-        fn weight_dec(&self, u: &usize, t: &usize) -> f64 {
-            let p = if u == t { 1.0 - self.flip_dec } else { self.flip_dec / 9.0 };
-            p / 0.1
-        }
-    }
 
     fn run_match_rate(mode: RandomnessMode, k: usize, l_max: u64, trials: u64) -> f64 {
         let model = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.35 };
@@ -343,5 +615,213 @@ mod tests {
             mode: RandomnessMode::Independent,
         };
         assert!((cfg.rate_bits() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_path_matches_scalar_reference() {
+        let model = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 };
+        for mode in [RandomnessMode::Independent, RandomnessMode::Shared] {
+            let cfg = CodecConfig { n_samples: 48, l_max: 4, k_decoders: 3, seed: 21, mode };
+            let codec = GlsCodec::new(&model, cfg);
+            let mut ws = CodecWorkspace::new();
+            for b in 0..60u64 {
+                let a = (b % 10) as usize;
+                let ctx = codec.block_context(b);
+                let enc = codec.encode_with(&mut ws, &ctx, &a);
+                assert_eq!(enc, codec.encode_scalar(&a, b));
+                for k in 0..3 {
+                    let t = ((b + k as u64) % 10) as usize;
+                    let dec = codec.decode_with(&mut ws, &ctx, &t, enc.message, k);
+                    assert_eq!(dec, codec.decode_scalar(&t, enc.message, k, b));
+                }
+            }
+        }
+    }
+
+    /// Model whose encoder weight is NaN on one candidate value and honest
+    /// elsewhere — exercises the degenerate-weight filter.
+    struct NanOn {
+        inner: ToyDiscrete,
+        poison: usize,
+    }
+
+    impl SourceModel for NanOn {
+        type Source = usize;
+        type Side = usize;
+        type Sample = usize;
+
+        fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> usize {
+            self.inner.sample_prior(draw)
+        }
+
+        fn weight_enc(&self, u: &usize, a: &usize) -> f64 {
+            if *u == self.poison {
+                f64::NAN
+            } else {
+                self.inner.weight_enc(u, a)
+            }
+        }
+
+        fn weight_dec(&self, u: &usize, t: &usize) -> f64 {
+            self.inner.weight_dec(u, t)
+        }
+    }
+
+    #[test]
+    fn nan_weights_never_selected_and_paths_agree() {
+        let inner = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 };
+        let model = NanOn { inner, poison: 7 };
+        let cfg = CodecConfig {
+            n_samples: 64,
+            l_max: 4,
+            k_decoders: 2,
+            seed: 31,
+            mode: RandomnessMode::Independent,
+        };
+        let codec = GlsCodec::new(&model, cfg);
+        let mut ws = CodecWorkspace::new();
+        for b in 0..100u64 {
+            let a = 7usize; // the poisoned value is also the likeliest one
+            let ctx = codec.block_context(b);
+            let enc = codec.encode_with(&mut ws, &ctx, &a);
+            assert_eq!(enc, codec.encode_scalar(&a, b));
+            assert!(!enc.degenerate);
+            assert_ne!(ctx.samples[enc.index], 7, "selected a NaN-weight candidate");
+        }
+    }
+
+    /// Model with no usable weight anywhere: encoder weight is NaN on even
+    /// candidates and 0 on odd ones, decoder weight always −1.
+    struct AllDegenerate;
+
+    impl SourceModel for AllDegenerate {
+        type Source = usize;
+        type Side = usize;
+        type Sample = usize;
+
+        fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> usize {
+            (draw() * 10.0) as usize % 10
+        }
+
+        fn weight_enc(&self, u: &usize, _a: &usize) -> f64 {
+            if u % 2 == 0 {
+                f64::NAN
+            } else {
+                0.0
+            }
+        }
+
+        fn weight_dec(&self, _u: &usize, _t: &usize) -> f64 {
+            -1.0
+        }
+    }
+
+    #[test]
+    fn degenerate_block_falls_back_explicitly_on_both_sides() {
+        let cfg = CodecConfig {
+            n_samples: 32,
+            l_max: 4,
+            k_decoders: 2,
+            seed: 13,
+            mode: RandomnessMode::Independent,
+        };
+        let codec = GlsCodec::new(&AllDegenerate, cfg);
+        let mut ws = CodecWorkspace::new();
+        for b in 0..50u64 {
+            let ctx = codec.block_context(b);
+            let enc = codec.encode_with(&mut ws, &ctx, &0);
+            assert!(enc.degenerate, "all-unusable weights must be explicit");
+            assert_eq!(enc.index, 0);
+            assert_eq!(enc.message, ctx.bins[0]);
+            assert_eq!(enc, codec.encode_scalar(&0, b));
+            // Decoder mirror: nothing usable in the bin → typed fallback to
+            // the first in-bin candidate.
+            let dec = codec.decode_with(&mut ws, &ctx, &0, enc.message, 0);
+            assert!(dec.fallback);
+            let expect = ctx.bins.iter().position(|&x| x == enc.message).unwrap();
+            assert_eq!(dec.index, expect);
+            assert_eq!(dec, codec.decode_scalar(&0, enc.message, 0, b));
+        }
+    }
+
+    /// Source model that burns `draws` uniforms per candidate and keeps the
+    /// first — used to pin down per-candidate stream isolation.
+    struct Hungry {
+        draws: usize,
+        keep_last: bool,
+    }
+
+    impl SourceModel for Hungry {
+        type Source = usize;
+        type Side = usize;
+        type Sample = u64;
+
+        fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> u64 {
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for j in 0..self.draws {
+                let u = draw();
+                if j == 0 {
+                    first = u;
+                }
+                last = u;
+            }
+            let kept = if self.keep_last { last } else { first };
+            (kept * 1e12) as u64
+        }
+
+        fn weight_enc(&self, _u: &u64, _a: &usize) -> f64 {
+            1.0
+        }
+
+        fn weight_dec(&self, _u: &u64, _t: &usize) -> f64 {
+            1.0
+        }
+    }
+
+    #[test]
+    fn hungry_source_models_do_not_alias_neighbour_candidates() {
+        // Seed bug: candidate i's draws lived at counter i*1024 + ctr, so a
+        // model drawing 1025 uniforms read candidate i+1's first coordinate
+        // — `frugal[i+1]` would equal `hungry[i]` exactly. Dedicated lanes
+        // make every candidate's stream independent of its neighbours'.
+        let cfg = CodecConfig {
+            n_samples: 16,
+            l_max: 2,
+            k_decoders: 1,
+            seed: 3,
+            mode: RandomnessMode::Independent,
+        };
+        let hungry = Hungry { draws: 1025, keep_last: true };
+        let frugal = Hungry { draws: 1, keep_last: false };
+        let (h, _) = GlsCodec::new(&hungry, cfg).shared_randomness(0);
+        let (f, _) = GlsCodec::new(&frugal, cfg).shared_randomness(0);
+        for i in 0..15 {
+            assert_ne!(h[i], f[i + 1], "candidate {i} aliased its neighbour's stream");
+        }
+        // And the first draw is the same coordinate no matter how many
+        // draws follow it: frugal candidates are a prefix of hungry ones.
+        let hungry_first = Hungry { draws: 1025, keep_last: false };
+        let (hf, _) = GlsCodec::new(&hungry_first, cfg).shared_randomness(0);
+        assert_eq!(hf, f);
+    }
+
+    #[test]
+    fn shared_and_independent_agree_at_k1() {
+        let model = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 };
+        let base = CodecConfig {
+            n_samples: 64,
+            l_max: 8,
+            k_decoders: 1,
+            seed: 17,
+            mode: RandomnessMode::Independent,
+        };
+        let ind = GlsCodec::new(&model, base);
+        let sh = GlsCodec::new(&model, CodecConfig { mode: RandomnessMode::Shared, ..base });
+        for b in 0..100u64 {
+            let a = (b % 10) as usize;
+            let t = ((b + 3) % 10) as usize;
+            assert_eq!(ind.roundtrip(&a, &[t], b), sh.roundtrip(&a, &[t], b));
+        }
     }
 }

@@ -11,8 +11,10 @@
 //!   `g(w, t) = (σ²_ζ w + σ²_η t) / (σ²_η + σ²_ζ + σ²_η σ²_ζ)`.
 
 use crate::stats::dist::{box_muller, normal_logpdf};
+use crate::stats::rng::CounterRng;
 
-use super::codec::{CodecConfig, GlsCodec, RandomnessMode, SourceModel};
+use super::codec::{CodecConfig, RandomnessMode, SourceModel};
+use super::service::{run_blocks_scalar, run_blocks_workspace, BatchOutput, CompressionRequest};
 
 /// Gaussian source/side-information model.
 #[derive(Clone, Copy, Debug)]
@@ -98,7 +100,84 @@ pub struct GaussianPoint {
     pub mse_db: f64,
 }
 
-/// Run `trials` independent source symbols through the Gaussian pipeline.
+/// Source symbol and the K side observations for one block — the same
+/// counter-RNG coordinates whichever runner (kernel, scalar, service)
+/// consumes them, so every path sees identical inputs.
+pub fn gaussian_block_inputs(src: GaussianSource, k: usize, seed: u64, b: u64) -> (f64, Vec<f64>) {
+    let noise = CounterRng::new(seed ^ 0xABCD_EF01);
+    let (za, _) = box_muller(noise.uniform(b, 0, 0), noise.uniform(b, 0, 1));
+    let a = za;
+    let sides: Vec<f64> = (0..k)
+        .map(|kk| {
+            let (z, _) = box_muller(
+                noise.uniform(b, 1, kk as u64 * 2),
+                noise.uniform(b, 1, kk as u64 * 2 + 1),
+            );
+            a + z * src.var_t_given_a.sqrt()
+        })
+        .collect();
+    (a, sides)
+}
+
+/// Materialize `trials` blocks of Gaussian service requests.
+pub fn gaussian_requests(
+    src: GaussianSource,
+    k: usize,
+    trials: u64,
+    seed: u64,
+) -> Vec<CompressionRequest<f64, f64>> {
+    (0..trials)
+        .map(|b| {
+            let (a, sides) = gaussian_block_inputs(src, k, seed, b);
+            CompressionRequest { block: b, source: a, sides }
+        })
+        .collect()
+}
+
+/// Fold a batch's results into a table cell: match rate plus the best
+/// decoder's MMSE reconstruction error (paper: "choose the estimate with
+/// the least distortion among all decoders").
+pub fn gaussian_point(
+    src: GaussianSource,
+    cfg: CodecConfig,
+    requests: &[CompressionRequest<f64, f64>],
+    batch: &BatchOutput<f64>,
+) -> GaussianPoint {
+    let mut hits = 0u64;
+    let mut sq_err = 0.0f64;
+    for (req, blk) in requests.iter().zip(&batch.blocks) {
+        if blk.hit {
+            hits += 1;
+        }
+        let a = req.source;
+        let best = blk
+            .decoded
+            .iter()
+            .zip(&req.sides)
+            .filter_map(|(d, &t)| {
+                d.index().map(|idx| {
+                    let w = blk.ctx.samples[idx];
+                    let a_hat = src.mmse(w, t);
+                    (a - a_hat) * (a - a_hat)
+                })
+            })
+            .fold(f64::INFINITY, f64::min);
+        sq_err += best;
+    }
+    let trials = requests.len() as f64;
+    let mse = sq_err / trials;
+    GaussianPoint {
+        k: cfg.k_decoders,
+        l_max: cfg.l_max,
+        var_w_given_a: src.var_w_given_a,
+        match_rate: hits as f64 / trials,
+        mse,
+        mse_db: 10.0 * mse.log10(),
+    }
+}
+
+/// Run `trials` independent source symbols through the Gaussian pipeline
+/// (kernel path: one context materialization per block, reused workspace).
 pub fn run_gaussian(
     src: GaussianSource,
     k: usize,
@@ -109,52 +188,27 @@ pub fn run_gaussian(
     mode: RandomnessMode,
 ) -> GaussianPoint {
     let cfg = CodecConfig { n_samples, l_max, k_decoders: k, seed, mode };
-    let codec = GlsCodec::new(&src, cfg);
-    let noise = crate::stats::rng::CounterRng::new(seed ^ 0xABCD_EF01);
+    let requests = gaussian_requests(src, k, trials, seed);
+    let batch = run_blocks_workspace(&src, cfg, &requests);
+    gaussian_point(src, cfg, &requests, &batch)
+}
 
-    let mut hits = 0u64;
-    let mut sq_err = 0.0f64;
-    for b in 0..trials {
-        // Source and side info (independent noise per decoder).
-        let (za, _) = box_muller(noise.uniform(b, 0, 0), noise.uniform(b, 0, 1));
-        let a = za;
-        let sides: Vec<f64> = (0..k)
-            .map(|kk| {
-                let (z, _) =
-                    box_muller(noise.uniform(b, 1, kk as u64 * 2), noise.uniform(b, 1, kk as u64 * 2 + 1));
-                a + z * src.var_t_given_a.sqrt()
-            })
-            .collect();
-
-        let (enc, dec, hit) = codec.roundtrip(&a, &sides, b);
-        if hit {
-            hits += 1;
-        }
-        // Reconstruction: each decoder outputs its candidate; keep the best
-        // (paper: "choose the estimate with the least distortion among all
-        // decoders").
-        let (samples, _) = codec.shared_randomness(b);
-        let _ = enc;
-        let best = dec
-            .iter()
-            .zip(&sides)
-            .map(|(&idx, &t)| {
-                let w = samples[idx];
-                let a_hat = src.mmse(w, t);
-                (a - a_hat) * (a - a_hat)
-            })
-            .fold(f64::INFINITY, f64::min);
-        sq_err += best;
-    }
-    let mse = sq_err / trials as f64;
-    GaussianPoint {
-        k,
-        l_max,
-        var_w_given_a: src.var_w_given_a,
-        match_rate: hits as f64 / trials as f64,
-        mse,
-        mse_db: 10.0 * mse.log10(),
-    }
+/// Scalar twin of [`run_gaussian`] on the retained seed-style paths —
+/// the throughput benches' baseline; must agree with the kernel runner
+/// bit-for-bit.
+pub fn run_gaussian_scalar(
+    src: GaussianSource,
+    k: usize,
+    l_max: u64,
+    n_samples: usize,
+    trials: u64,
+    seed: u64,
+    mode: RandomnessMode,
+) -> GaussianPoint {
+    let cfg = CodecConfig { n_samples, l_max, k_decoders: k, seed, mode };
+    let requests = gaussian_requests(src, k, trials, seed);
+    let batch = run_blocks_scalar(&src, cfg, &requests);
+    gaussian_point(src, cfg, &requests, &batch)
 }
 
 /// Sweep σ²_{W|A} over the paper's grid and keep the best (lowest-MSE)
@@ -242,6 +296,17 @@ mod tests {
         let low = run_gaussian(GaussianSource::paper_default(0.005), 2, 2, n, t, 5, RandomnessMode::Independent);
         let high = run_gaussian(GaussianSource::paper_default(0.005), 2, 64, n, t, 5, RandomnessMode::Independent);
         assert!(high.mse < low.mse, "high-rate mse {} >= low-rate {}", high.mse, low.mse);
+    }
+
+    #[test]
+    fn scalar_and_kernel_runners_agree_bitwise() {
+        for mode in [RandomnessMode::Independent, RandomnessMode::Shared] {
+            let kern = run_gaussian(GaussianSource::paper_default(0.005), 3, 4, 1 << 8, 100, 11, mode);
+            let scal =
+                run_gaussian_scalar(GaussianSource::paper_default(0.005), 3, 4, 1 << 8, 100, 11, mode);
+            assert_eq!(kern.match_rate.to_bits(), scal.match_rate.to_bits());
+            assert_eq!(kern.mse.to_bits(), scal.mse.to_bits());
+        }
     }
 
     #[test]

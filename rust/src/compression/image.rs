@@ -18,10 +18,13 @@
 //!   actual architecture, miniaturized), exercised by the integration
 //!   tests and the compression example when artifacts are present.
 
+use std::sync::Arc;
+
 use crate::stats::dist::normal_logpdf;
 use crate::stats::rng::XorShift128;
 
-use super::codec::{CodecConfig, GlsCodec, RandomnessMode, SourceModel};
+use super::codec::{CodecConfig, RandomnessMode, SourceModel};
+use super::service::{run_blocks_scalar, run_blocks_workspace, BatchOutput, CompressionRequest};
 
 pub const IMG: usize = 28;
 pub const HALF_W: usize = 14;
@@ -343,6 +346,27 @@ pub struct EncState {
     pub var: Vec<f64>,
 }
 
+/// Draw one latent candidate from the standard-normal prior.
+fn latent_sample_prior(dim: usize, draw: &mut dyn FnMut() -> f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(dim);
+    while out.len() < dim {
+        let (z0, z1) = crate::stats::dist::box_muller(draw(), draw());
+        out.push(z0);
+        if out.len() < dim {
+            out.push(z1);
+        }
+    }
+    out
+}
+
+/// `p_{W|A}(u|a) / p_W(u)` in latent space (diagonal Gaussians).
+fn latent_weight_enc(u: &[f64], a: &EncState) -> f64 {
+    let lp: f64 = (0..u.len())
+        .map(|d| normal_logpdf(u[d], a.mu[d], a.var[d]) - normal_logpdf(u[d], 0.0, 1.0))
+        .sum();
+    lp.exp()
+}
+
 /// SourceModel over latent space: prior `p_W = N(0, I)`.
 pub struct LatentSource<'m, M: LatentCodecModel> {
     pub model: &'m M,
@@ -354,23 +378,37 @@ impl<'m, M: LatentCodecModel> SourceModel for LatentSource<'m, M> {
     type Sample = Vec<f64>; // latent w
 
     fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> Vec<f64> {
-        let d = self.model.latent_dim();
-        let mut out = Vec::with_capacity(d);
-        while out.len() < d {
-            let (z0, z1) = crate::stats::dist::box_muller(draw(), draw());
-            out.push(z0);
-            if out.len() < d {
-                out.push(z1);
-            }
-        }
-        out
+        latent_sample_prior(self.model.latent_dim(), draw)
     }
 
     fn weight_enc(&self, u: &Vec<f64>, a: &EncState) -> f64 {
-        let lp: f64 = (0..u.len())
-            .map(|d| normal_logpdf(u[d], a.mu[d], a.var[d]) - normal_logpdf(u[d], 0.0, 1.0))
-            .sum();
-        lp.exp()
+        latent_weight_enc(u, a)
+    }
+
+    fn weight_dec(&self, u: &Vec<f64>, t: &Vec<f64>) -> f64 {
+        self.model.estimate_logratio(u, t).exp()
+    }
+}
+
+/// Owned (`Arc`-backed) twin of [`LatentSource`] for the multi-decoder
+/// [`super::service::CompressionServer`], whose persistent workers need a
+/// `'static` model. Same weights, same prior — bit-exact with the borrowed
+/// adapter.
+pub struct SharedLatentSource<M: LatentCodecModel> {
+    pub model: Arc<M>,
+}
+
+impl<M: LatentCodecModel> SourceModel for SharedLatentSource<M> {
+    type Source = EncState;
+    type Side = Vec<f64>;
+    type Sample = Vec<f64>;
+
+    fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> Vec<f64> {
+        latent_sample_prior(self.model.latent_dim(), draw)
+    }
+
+    fn weight_enc(&self, u: &Vec<f64>, a: &EncState) -> f64 {
+        latent_weight_enc(u, a)
     }
 
     fn weight_dec(&self, u: &Vec<f64>, t: &Vec<f64>) -> f64 {
@@ -389,7 +427,78 @@ pub struct ImagePoint {
     pub mse: f64,
 }
 
-/// Run the image pipeline on `images`, one block per image.
+/// Materialize one service request per image: the encoder state plus K
+/// independent side crops. The crop RNG is sequential over (image, k), so
+/// every runner consuming the same `(images, k, seed)` sees identical
+/// inputs.
+pub fn image_requests<M: LatentCodecModel>(
+    model: &M,
+    images: &[Vec<f32>],
+    k: usize,
+    seed: u64,
+) -> Vec<CompressionRequest<EncState, Vec<f64>>> {
+    let mut crop_rng = XorShift128::new(seed ^ 0xC209);
+    images
+        .iter()
+        .enumerate()
+        .map(|(b, img)| {
+            let source = right_half(img);
+            let (mu, var) = model.encode(&source);
+            // Independent side crops per decoder.
+            let sides: Vec<Vec<f64>> = (0..k)
+                .map(|_| {
+                    let cx = crop_rng.next_below((HALF_W - CROP + 1) as u64) as usize;
+                    let cy = crop_rng.next_below((IMG - CROP + 1) as u64) as usize;
+                    model.project(&left_crop(img, cx, cy))
+                })
+                .collect();
+            CompressionRequest { block: b as u64, source: EncState { mu, var }, sides }
+        })
+        .collect()
+}
+
+/// Fold a batch's results into a table cell: match rate plus the best
+/// decoder's pixel-space reconstruction error.
+pub fn image_point<M: LatentCodecModel>(
+    model: &M,
+    cfg: CodecConfig,
+    images: &[Vec<f32>],
+    requests: &[CompressionRequest<EncState, Vec<f64>>],
+    batch: &BatchOutput<Vec<f64>>,
+) -> ImagePoint {
+    let mut hits = 0u64;
+    let mut total_mse = 0.0;
+    for ((img, req), blk) in images.iter().zip(requests).zip(&batch.blocks) {
+        let source = right_half(img);
+        if blk.hit {
+            hits += 1;
+        }
+        // Reconstruct with each surviving decoder's latent; keep the best.
+        let best = blk
+            .decoded
+            .iter()
+            .zip(&req.sides)
+            .filter_map(|(d, side)| {
+                d.index().map(|idx| {
+                    let recon = model.decode(&blk.ctx.samples[idx], side);
+                    mse(&recon, &source)
+                })
+            })
+            .fold(f64::INFINITY, f64::min);
+        total_mse += best;
+    }
+    ImagePoint {
+        k: cfg.k_decoders,
+        l_max: cfg.l_max,
+        n_samples: cfg.n_samples,
+        enc_var: 0.0,
+        match_rate: hits as f64 / images.len() as f64,
+        mse: total_mse / images.len() as f64,
+    }
+}
+
+/// Run the image pipeline on `images`, one block per image (kernel path:
+/// one context materialization per block, reused workspace).
 pub fn run_image<M: LatentCodecModel>(
     model: &M,
     images: &[Vec<f32>],
@@ -399,50 +508,30 @@ pub fn run_image<M: LatentCodecModel>(
     seed: u64,
     mode: RandomnessMode,
 ) -> ImagePoint {
-    let src = LatentSource { model };
     let cfg = CodecConfig { n_samples, l_max, k_decoders: k, seed, mode };
-    let codec = GlsCodec::new(&src, cfg);
-    let mut crop_rng = XorShift128::new(seed ^ 0xC209);
+    let requests = image_requests(model, images, k, seed);
+    let src = LatentSource { model };
+    let batch = run_blocks_workspace(&src, cfg, &requests);
+    image_point(model, cfg, images, &requests, &batch)
+}
 
-    let mut hits = 0u64;
-    let mut total_mse = 0.0;
-    for (b, img) in images.iter().enumerate() {
-        let source = right_half(img);
-        let (mu, var) = model.encode(&source);
-        let enc_state = EncState { mu, var };
-        // Independent side crops per decoder.
-        let sides: Vec<Vec<f64>> = (0..k)
-            .map(|_| {
-                let cx = crop_rng.next_below((HALF_W - CROP + 1) as u64) as usize;
-                let cy = crop_rng.next_below((IMG - CROP + 1) as u64) as usize;
-                model.project(&left_crop(img, cx, cy))
-            })
-            .collect();
-        let (enc, dec, hit) = codec.roundtrip(&enc_state, &sides, b as u64);
-        if hit {
-            hits += 1;
-        }
-        // Reconstruct with each decoder's latent; keep the best.
-        let (samples, _) = codec.shared_randomness(b as u64);
-        let _ = enc;
-        let best = dec
-            .iter()
-            .zip(&sides)
-            .map(|(&idx, side)| {
-                let recon = model.decode(&samples[idx], side);
-                mse(&recon, &source)
-            })
-            .fold(f64::INFINITY, f64::min);
-        total_mse += best;
-    }
-    ImagePoint {
-        k,
-        l_max,
-        n_samples,
-        enc_var: 0.0,
-        match_rate: hits as f64 / images.len() as f64,
-        mse: total_mse / images.len() as f64,
-    }
+/// Scalar twin of [`run_image`] on the retained seed-style paths — the
+/// throughput benches' baseline; must agree with the kernel runner
+/// bit-for-bit.
+pub fn run_image_scalar<M: LatentCodecModel>(
+    model: &M,
+    images: &[Vec<f32>],
+    k: usize,
+    l_max: u64,
+    n_samples: usize,
+    seed: u64,
+    mode: RandomnessMode,
+) -> ImagePoint {
+    let cfg = CodecConfig { n_samples, l_max, k_decoders: k, seed, mode };
+    let requests = image_requests(model, images, k, seed);
+    let src = LatentSource { model };
+    let batch = run_blocks_scalar(&src, cfg, &requests);
+    image_point(model, cfg, images, &requests, &batch)
 }
 
 pub fn mse(a: &[f32], b: &[f32]) -> f64 {
@@ -523,6 +612,19 @@ mod tests {
             bl4.match_rate
         );
         assert!(k4.mse <= k1.mse + 1e-3, "more decoders should not hurt MSE");
+    }
+
+    #[test]
+    fn scalar_and_kernel_runners_agree_bitwise() {
+        let imgs = synthetic_digits(60, 4);
+        let vae = AnalyticVae::fit(&imgs[..40], 4, 0.05, 7);
+        let eval = &imgs[40..];
+        for mode in [RandomnessMode::Independent, RandomnessMode::Shared] {
+            let kern = run_image(&vae, eval, 2, 4, 64, 9, mode);
+            let scal = run_image_scalar(&vae, eval, 2, 4, 64, 9, mode);
+            assert_eq!(kern.match_rate.to_bits(), scal.match_rate.to_bits());
+            assert_eq!(kern.mse.to_bits(), scal.mse.to_bits());
+        }
     }
 
     #[test]

@@ -12,11 +12,28 @@
 //!   model is either the AOT-compiled β-VAE artifacts or an analytic
 //!   linear-Gaussian stand-in for artifact-free tests/benches.
 //! * [`bounds`] — Proposition 4 error-bound evaluation.
+//! * [`service`] — the batched multi-decoder compression service: one
+//!   encoder fans each block's message out to K persistent decode workers
+//!   (the `VerifyPool` worker discipline applied to the paper's
+//!   distributed topology), bit-exact with the serial references.
+//!
+//! The codec hot paths run kernel-style (sparse race out of a reusable
+//! [`codec::CodecWorkspace`] over a once-per-block [`codec::BlockContext`],
+//! RNG prefixes hoisted) with the straightforward scalar paths retained as
+//! bit-exact parity references — see `tests/compression.rs`.
 
 pub mod bounds;
 pub mod codec;
 pub mod gaussian;
 pub mod image;
+pub mod service;
 
-pub use codec::{CodecConfig, EncodeResult, GlsCodec, RandomnessMode, SourceModel};
+pub use codec::{
+    BlockContext, CodecConfig, CodecWorkspace, DecodeOutcome, EncodeResult, GlsCodec,
+    RandomnessMode, SourceModel, ToyDiscrete,
+};
 pub use gaussian::GaussianSource;
+pub use service::{
+    BatchOutput, BlockResult, CompressionRequest, CompressionServer, DecoderOutcome,
+    ServiceError,
+};

@@ -1,0 +1,526 @@
+//! Batched multi-decoder compression service: the paper's distributed
+//! topology (§5, Fig. 2) run as a serving component rather than a bench
+//! loop. One encoder thread walks a batch of blocks; every encoded block
+//! fans out to the K decoders as independent decode jobs consumed by a
+//! pool of persistent workers.
+//!
+//! The worker discipline mirrors `coordinator/pool.rs` (`VerifyPool`):
+//!
+//! * workers are long-lived threads parked on a condvar, each owning its
+//!   [`CodecWorkspace`] across blocks — no per-block spawn, no per-block
+//!   scratch allocation in steady state;
+//! * jobs are published incrementally as the encoder finishes each block
+//!   and claimed through a shared cursor, so decoding of block b overlaps
+//!   encoding of block b+1 (no global barrier between the two stages);
+//! * a panicking decode job is contained with `catch_unwind`: it fails
+//!   only its own `(block, decoder)` slot (reported as
+//!   [`DecoderOutcome::Panicked`] and in [`BatchOutput::panicked`]), the
+//!   worker replaces its scratch and keeps serving, and every other job's
+//!   output is untouched;
+//! * results are bit-exact with the single-threaded reference
+//!   ([`run_blocks_workspace`]) regardless of worker count or scheduling —
+//!   every decode is a pure function of `(cfg, block, side, message, k)`.
+//!
+//! The block's shared randomness is materialized **once** by the encoder
+//! ([`BlockContext`]) and handed to all K decode jobs behind an `Arc`, so
+//! a batch costs O(N) materialization per block instead of the seed's
+//! O((K+2)·N).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use super::codec::{BlockContext, CodecConfig, CodecWorkspace, EncodeResult, GlsCodec, SourceModel};
+
+/// One block's worth of work for the service: the block id, what the
+/// encoder observes, and one side-information observation per decoder.
+#[derive(Clone, Debug)]
+pub struct CompressionRequest<Src, Side> {
+    pub block: u64,
+    pub source: Src,
+    /// Length must equal `cfg.k_decoders`.
+    pub sides: Vec<Side>,
+}
+
+/// What one decoder produced for one block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecoderOutcome {
+    /// The decoder selected a candidate (`fallback` as in
+    /// [`super::codec::DecodeOutcome`]).
+    Decoded { index: usize, fallback: bool },
+    /// The decode job panicked; only this `(block, decoder)` slot is lost.
+    Panicked,
+}
+
+impl DecoderOutcome {
+    /// Selected candidate index, if the decoder survived.
+    pub fn index(&self) -> Option<usize> {
+        match self {
+            DecoderOutcome::Decoded { index, .. } => Some(*index),
+            DecoderOutcome::Panicked => None,
+        }
+    }
+}
+
+/// One block's full result: encoder output, all K decoder outcomes, and
+/// the materialized context (kept for reconstruction — `ctx.samples[i]` is
+/// candidate i's value, so callers never re-derive the randomness).
+#[derive(Clone, Debug)]
+pub struct BlockResult<S> {
+    pub block: u64,
+    pub enc: EncodeResult,
+    pub decoded: Vec<DecoderOutcome>,
+    /// The paper's success event: some surviving decoder recovered Y.
+    pub hit: bool,
+    pub ctx: Arc<BlockContext<S>>,
+}
+
+/// A batch's results in request order, plus which jobs panicked.
+#[derive(Clone, Debug)]
+pub struct BatchOutput<S> {
+    pub blocks: Vec<BlockResult<S>>,
+    /// `(index into the batch, decoder k)` of every panicked decode job.
+    pub panicked: Vec<(usize, usize)>,
+}
+
+impl<S> BatchOutput<S> {
+    /// All-clean results, or a typed error naming the failed jobs.
+    pub fn ok(self) -> Result<Vec<BlockResult<S>>, ServiceError> {
+        if self.panicked.is_empty() {
+            Ok(self.blocks)
+        } else {
+            Err(ServiceError::DecodersPanicked { failed: self.panicked })
+        }
+    }
+}
+
+/// Typed service failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// Some decode jobs panicked; everything else completed normally.
+    DecodersPanicked { failed: Vec<(usize, usize)> },
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::DecodersPanicked { failed } => {
+                write!(f, "{} decode job(s) panicked: {failed:?}", failed.len())
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// An encoded block published to the decode workers: the shared context,
+/// the transmitted message, and the decoders' side observations.
+struct EncodedBlock<S, T> {
+    ctx: Arc<BlockContext<S>>,
+    message: u64,
+    sides: Vec<T>,
+}
+
+struct ServiceState<S, T> {
+    /// Flat decode-job list: `(block, decoder)` pairs in publication order
+    /// (job id `bi * K + k` for batch index `bi`).
+    jobs: Vec<(Arc<EncodedBlock<S, T>>, usize)>,
+    /// Claim cursor: workers self-schedule by bumping it under the lock.
+    next: usize,
+    /// Slot per job, pre-filled `Panicked`; a surviving worker overwrites.
+    results: Vec<DecoderOutcome>,
+    /// Published minus completed jobs.
+    pending: usize,
+    /// The current batch is fully published (drain signal).
+    closed: bool,
+    shutdown: bool,
+}
+
+struct ServiceShared<S, T> {
+    cfg: CodecConfig,
+    state: Mutex<ServiceState<S, T>>,
+    /// Workers park here when the job list is drained.
+    work_cv: Condvar,
+    /// The submitter parks here until `pending == 0 && closed`.
+    done_cv: Condvar,
+}
+
+/// The multi-decoder compression service. One instance owns its decode
+/// workers for its whole life; `run_batch` is the (exclusive) submission
+/// path. Dropping the server shuts the workers down and joins them.
+pub struct CompressionServer<M: SourceModel> {
+    model: Arc<M>,
+    shared: Arc<ServiceShared<M::Sample, M::Side>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl<M> CompressionServer<M>
+where
+    M: SourceModel + Send + Sync + 'static,
+    M::Sample: Send + Sync,
+    M::Side: Send + Sync,
+{
+    pub fn new(model: Arc<M>, cfg: CodecConfig, workers: usize) -> Self {
+        cfg.validate().expect("codec config");
+        assert!(workers >= 1, "need at least one decode worker");
+        let shared = Arc::new(ServiceShared {
+            cfg,
+            state: Mutex::new(ServiceState {
+                jobs: Vec::new(),
+                next: 0,
+                results: Vec::new(),
+                pending: 0,
+                closed: true,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (0..workers)
+            .map(|wid| {
+                let sh = Arc::clone(&shared);
+                let m = Arc::clone(&model);
+                thread::Builder::new()
+                    .name(format!("gls-compress-dec-{wid}"))
+                    .spawn(move || worker_loop(sh, m))
+                    .expect("spawn compression decode worker")
+            })
+            .collect();
+        Self { model, shared, workers }
+    }
+
+    /// Encode every request in order, fanning each block's message out to
+    /// the K decode workers as soon as it is encoded. Blocks come back in
+    /// request order; scheduling never changes the bits (each decode is a
+    /// pure function of its inputs).
+    pub fn run_batch(
+        &mut self,
+        requests: Vec<CompressionRequest<M::Source, M::Side>>,
+    ) -> BatchOutput<M::Sample> {
+        let k = self.shared.cfg.k_decoders;
+        let codec = GlsCodec::new(&*self.model, self.shared.cfg);
+        let mut enc_ws = CodecWorkspace::new();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert!(st.closed && st.pending == 0, "overlapping batch");
+            st.jobs.clear();
+            st.results.clear();
+            st.next = 0;
+            st.closed = false;
+        }
+        let mut encoded = Vec::with_capacity(requests.len());
+        for req in requests {
+            assert_eq!(req.sides.len(), k, "one side observation per decoder");
+            let ctx = Arc::new(codec.block_context(req.block));
+            let enc = codec.encode_with(&mut enc_ws, &ctx, &req.source);
+            let eb =
+                Arc::new(EncodedBlock { ctx, message: enc.message, sides: req.sides });
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                for kk in 0..k {
+                    st.jobs.push((Arc::clone(&eb), kk));
+                    st.results.push(DecoderOutcome::Panicked);
+                }
+                st.pending += k;
+            }
+            self.shared.work_cv.notify_all();
+            encoded.push((enc, eb));
+        }
+        let results = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            while st.pending > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            std::mem::take(&mut st.results)
+        };
+        let mut blocks = Vec::with_capacity(encoded.len());
+        let mut panicked = Vec::new();
+        for (bi, (enc, eb)) in encoded.into_iter().enumerate() {
+            let decoded = results[bi * k..(bi + 1) * k].to_vec();
+            for (kk, d) in decoded.iter().enumerate() {
+                if *d == DecoderOutcome::Panicked {
+                    panicked.push((bi, kk));
+                }
+            }
+            let hit = decoded.iter().any(|d| d.index() == Some(enc.index));
+            let ctx = Arc::clone(&eb.ctx);
+            blocks.push(BlockResult { block: ctx.block, enc, decoded, hit, ctx });
+        }
+        BatchOutput { blocks, panicked }
+    }
+}
+
+impl<M: SourceModel> Drop for CompressionServer<M> {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop<M>(shared: Arc<ServiceShared<M::Sample, M::Side>>, model: Arc<M>)
+where
+    M: SourceModel + Send + Sync + 'static,
+    M::Sample: Send + Sync,
+    M::Side: Send + Sync,
+{
+    let codec = GlsCodec::new(&*model, shared.cfg);
+    let mut ws = CodecWorkspace::new();
+    loop {
+        let (id, eb, k) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.next < st.jobs.len() {
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            let id = st.next;
+            st.next += 1;
+            let (eb, k) = &st.jobs[id];
+            (id, Arc::clone(eb), *k)
+        };
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            codec.decode_with(&mut ws, &eb.ctx, &eb.sides[k], eb.message, k)
+        }));
+        if out.is_err() {
+            // The scratch may have been mid-mutation when the model
+            // panicked; replace it rather than trust its contents.
+            ws = CodecWorkspace::new();
+        }
+        let mut st = shared.state.lock().unwrap();
+        if let Ok(d) = out {
+            st.results[id] = DecoderOutcome::Decoded { index: d.index, fallback: d.fallback };
+        }
+        st.pending -= 1;
+        if st.pending == 0 && st.closed {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Single-threaded kernel reference: same contexts, same workspace path,
+/// no worker pool. The service must match this bit-for-bit.
+pub fn run_blocks_workspace<M: SourceModel>(
+    model: &M,
+    cfg: CodecConfig,
+    requests: &[CompressionRequest<M::Source, M::Side>],
+) -> BatchOutput<M::Sample> {
+    let codec = GlsCodec::new(model, cfg);
+    let mut ws = CodecWorkspace::new();
+    let blocks = requests
+        .iter()
+        .map(|req| {
+            assert_eq!(req.sides.len(), cfg.k_decoders);
+            let ctx = Arc::new(codec.block_context(req.block));
+            let enc = codec.encode_with(&mut ws, &ctx, &req.source);
+            let decoded: Vec<DecoderOutcome> = req
+                .sides
+                .iter()
+                .enumerate()
+                .map(|(k, t)| {
+                    let d = codec.decode_with(&mut ws, &ctx, t, enc.message, k);
+                    DecoderOutcome::Decoded { index: d.index, fallback: d.fallback }
+                })
+                .collect();
+            let hit = decoded.iter().any(|d| d.index() == Some(enc.index));
+            BlockResult { block: ctx.block, enc, decoded, hit, ctx }
+        })
+        .collect();
+    BatchOutput { blocks, panicked: Vec::new() }
+}
+
+/// Scalar baseline: the retained seed-style paths, re-materializing the
+/// shared randomness for the encoder, every decoder, and reconstruction —
+/// the throughput benches' denominator for the kernel speedup gate.
+pub fn run_blocks_scalar<M: SourceModel>(
+    model: &M,
+    cfg: CodecConfig,
+    requests: &[CompressionRequest<M::Source, M::Side>],
+) -> BatchOutput<M::Sample> {
+    let codec = GlsCodec::new(model, cfg);
+    let blocks = requests
+        .iter()
+        .map(|req| {
+            assert_eq!(req.sides.len(), cfg.k_decoders);
+            let enc = codec.encode_scalar(&req.source, req.block);
+            let decoded: Vec<DecoderOutcome> = req
+                .sides
+                .iter()
+                .enumerate()
+                .map(|(k, t)| {
+                    let d = codec.decode_scalar(t, enc.message, k, req.block);
+                    DecoderOutcome::Decoded { index: d.index, fallback: d.fallback }
+                })
+                .collect();
+            let hit = decoded.iter().any(|d| d.index() == Some(enc.index));
+            // Seed-faithful reconstruction access: one more materialization.
+            let ctx = Arc::new(codec.block_context(req.block));
+            BlockResult { block: req.block, enc, decoded, hit, ctx }
+        })
+        .collect();
+    BatchOutput { blocks, panicked: Vec::new() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::codec::{RandomnessMode, ToyDiscrete};
+
+    fn toy_requests(k: usize, blocks: u64) -> Vec<CompressionRequest<usize, usize>> {
+        (0..blocks)
+            .map(|b| CompressionRequest {
+                block: b,
+                source: (b % 10) as usize,
+                sides: (0..k).map(|kk| ((b + kk as u64) % 10) as usize).collect(),
+            })
+            .collect()
+    }
+
+    fn toy_cfg(k: usize) -> CodecConfig {
+        CodecConfig {
+            n_samples: 48,
+            l_max: 4,
+            k_decoders: k,
+            seed: 9,
+            mode: RandomnessMode::Independent,
+        }
+    }
+
+    fn assert_same_blocks(a: &BatchOutput<usize>, b: &BatchOutput<usize>) {
+        assert_eq!(a.blocks.len(), b.blocks.len());
+        for (x, y) in a.blocks.iter().zip(&b.blocks) {
+            assert_eq!(x.block, y.block);
+            assert_eq!(x.enc, y.enc);
+            assert_eq!(x.decoded, y.decoded);
+            assert_eq!(x.hit, y.hit);
+        }
+    }
+
+    #[test]
+    fn service_matches_serial_reference_across_worker_counts() {
+        let model = Arc::new(ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 });
+        let cfg = toy_cfg(3);
+        let requests = toy_requests(3, 40);
+        let reference = run_blocks_workspace(&*model, cfg, &requests);
+        assert!(reference.panicked.is_empty());
+        for workers in [1, 2, 4] {
+            let mut server = CompressionServer::new(Arc::clone(&model), cfg, workers);
+            let out = server.run_batch(requests.clone());
+            assert!(out.panicked.is_empty(), "workers={workers}");
+            assert_same_blocks(&out, &reference);
+        }
+    }
+
+    #[test]
+    fn scalar_and_workspace_references_agree() {
+        let model = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.35 };
+        let cfg = toy_cfg(2);
+        let requests = toy_requests(2, 60);
+        let scalar = run_blocks_scalar(&model, cfg, &requests);
+        let kernel = run_blocks_workspace(&model, cfg, &requests);
+        assert_same_blocks(&scalar, &kernel);
+    }
+
+    #[test]
+    fn server_survives_across_batches() {
+        let model = Arc::new(ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 });
+        let cfg = toy_cfg(2);
+        let mut server = CompressionServer::new(Arc::clone(&model), cfg, 2);
+        for round in 0..3u64 {
+            let requests: Vec<_> = toy_requests(2, 15)
+                .into_iter()
+                .map(|mut r| {
+                    r.block += round * 1000;
+                    r
+                })
+                .collect();
+            let reference = run_blocks_workspace(&*model, cfg, &requests);
+            let out = server.run_batch(requests);
+            assert_same_blocks(&out, &reference);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let model = Arc::new(ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 });
+        let mut server = CompressionServer::new(model, toy_cfg(1), 2);
+        let out = server.run_batch(Vec::new());
+        assert!(out.blocks.is_empty() && out.panicked.is_empty());
+        assert!(out.ok().is_ok());
+    }
+
+    /// Decoder weight panics on a sentinel side value — only that job dies.
+    struct PoisonSide {
+        inner: ToyDiscrete,
+    }
+
+    const POISON: usize = usize::MAX;
+
+    impl SourceModel for PoisonSide {
+        type Source = usize;
+        type Side = usize;
+        type Sample = usize;
+
+        fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> usize {
+            self.inner.sample_prior(draw)
+        }
+
+        fn weight_enc(&self, u: &usize, a: &usize) -> f64 {
+            self.inner.weight_enc(u, a)
+        }
+
+        fn weight_dec(&self, u: &usize, t: &usize) -> f64 {
+            assert!(*t != POISON, "poisoned side observation");
+            self.inner.weight_dec(u, t)
+        }
+    }
+
+    #[test]
+    fn panicking_decode_fails_only_its_own_slot() {
+        let model = Arc::new(PoisonSide { inner: ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 } });
+        let cfg = toy_cfg(2);
+        let mut requests: Vec<CompressionRequest<usize, usize>> = toy_requests(2, 20);
+        requests[7].sides[1] = POISON;
+        let honest: Vec<_> =
+            requests.iter().filter(|r| !r.sides.contains(&POISON)).cloned().collect();
+        let reference = run_blocks_workspace(&*model, cfg, &honest);
+
+        let mut server = CompressionServer::new(Arc::clone(&model), cfg, 2);
+        let out = server.run_batch(requests);
+        assert_eq!(out.panicked, vec![(7, 1)]);
+        assert_eq!(out.blocks[7].decoded[1], DecoderOutcome::Panicked);
+        // Decoder 0 of the poisoned block still decoded.
+        assert!(matches!(out.blocks[7].decoded[0], DecoderOutcome::Decoded { .. }));
+        // Every honest block is bit-exact with the serial reference.
+        let mut ref_iter = reference.blocks.iter();
+        for blk in out.blocks.iter().filter(|b| b.block != 7) {
+            let want = ref_iter.next().unwrap();
+            assert_eq!(blk.enc, want.enc);
+            assert_eq!(blk.decoded, want.decoded);
+            assert_eq!(blk.hit, want.hit);
+        }
+        // The typed error path names the failed job.
+        let mut server2 = CompressionServer::new(Arc::clone(&model), cfg, 2);
+        let mut requests2 = toy_requests(2, 5);
+        requests2[2].sides[0] = POISON;
+        match server2.run_batch(requests2).ok() {
+            Err(ServiceError::DecodersPanicked { failed }) => assert_eq!(failed, vec![(2, 0)]),
+            other => panic!("expected typed panic error, got {other:?}"),
+        }
+        // And the server keeps serving clean batches afterwards.
+        let clean = toy_requests(2, 10);
+        let again = server2.run_batch(clean.clone());
+        assert!(again.panicked.is_empty());
+        assert_same_blocks(&again, &run_blocks_workspace(&*model, cfg, &clean));
+    }
+}

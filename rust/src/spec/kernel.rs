@@ -1469,6 +1469,33 @@ impl CouplingWorkspace {
     }
 }
 
+/// Fill `panel` with a row-major `rows × items.len()` block of Exp(1)
+/// variates over a *sparse* item set: entry `[r * items.len() + j]` is the
+/// variate at RNG coordinates `(slot, lane_of(r), items[j])`. The
+/// per-(slot, lane) prefix is hoisted once per row ([`CounterRng::lane`]),
+/// so each variate costs a single mix round — the same trick every race in
+/// [`CouplingWorkspace`] uses, exposed for other Gumbel-race consumers (the
+/// compression codec races over its usable-weight support with it).
+/// Bit-exact with calling `rng.exponential(slot, lane_of(r), items[j])`
+/// per entry.
+pub fn fill_exp_panel(
+    panel: &mut Vec<f64>,
+    rng: &CounterRng,
+    slot: u64,
+    rows: usize,
+    items: &[u32],
+    lane_of: impl Fn(usize) -> u64,
+) {
+    panel.clear();
+    panel.reserve(rows * items.len());
+    for r in 0..rows {
+        let lane = rng.lane(slot, lane_of(r));
+        for &i in items {
+            panel.push(lane.exponential(i as u64));
+        }
+    }
+}
+
 thread_local! {
     static WORKSPACE: RefCell<CouplingWorkspace> = RefCell::new(CouplingWorkspace::new());
 }
@@ -1493,6 +1520,24 @@ mod tests {
     use crate::spec::spectr::SpecTrVerifier;
     use crate::stats::rng::XorShift128;
     use crate::testkit;
+
+    #[test]
+    fn fill_exp_panel_matches_unhoisted_coordinates() {
+        let rng = CounterRng::new(0xFE11);
+        let items: Vec<u32> = vec![0, 3, 7, 64, 1000];
+        let mut panel = Vec::new();
+        fill_exp_panel(&mut panel, &rng, 42, 3, &items, |r| 10 + r as u64);
+        assert_eq!(panel.len(), 3 * items.len());
+        for r in 0..3 {
+            for (j, &i) in items.iter().enumerate() {
+                let want = rng.exponential(42, 10 + r as u64, i as u64);
+                assert_eq!(panel[r * items.len() + j].to_bits(), want.to_bits());
+            }
+        }
+        // Refill reuses the buffer and replaces the contents.
+        fill_exp_panel(&mut panel, &rng, 42, 1, &items[..2], |_| 0);
+        assert_eq!(panel.len(), 2);
+    }
 
     #[test]
     fn support_union_is_sorted_and_exact() {

@@ -1,0 +1,274 @@
+//! Compression-path parity + conformance suite: the codec analogue of
+//! `tests/kernel_parity.rs` and `tests/conformance.rs`.
+//!
+//! 1. **Kernel/scalar bit-exactness.** The workspace-backed kernel paths
+//!    (`encode_with` / `decode_with`) must agree bit-for-bit with the
+//!    retained scalar references across every source model (toy discrete,
+//!    Gaussian, latent β-VAE stand-in), both randomness modes, and
+//!    K ∈ {1, 2, 4}.
+//! 2. **Service bit-exactness.** The `CompressionServer` decode pool must
+//!    match the single-threaded kernel reference at every worker count —
+//!    scheduling may never change the bits.
+//! 3. **Statistical conformance.** The encoder-selected candidate's value
+//!    marginal must be chi-square-consistent with the target `p_{W|A}`:
+//!    the exponential race picks candidate i with probability
+//!    `λ_i / Σ_j λ_j` (Gumbel-max over importance weights), so the
+//!    selected value follows the self-normalized importance-sampling
+//!    estimate of `p_{W|A}` with O(1/N) bias — far below the chi-square
+//!    resolution at N = 512.
+//! 4. **Mode equivalence.** At K = 1, Shared and Independent randomness
+//!    are the same algorithm and must produce identical bits end-to-end.
+//! 5. **Fault containment.** A panicking decode job fails only its own
+//!    `(block, decoder)` slot at full batch scale; every honest slot stays
+//!    bit-exact and the server keeps serving.
+
+use std::sync::Arc;
+
+use gls_serve::compression::codec::{
+    CodecConfig, CodecWorkspace, GlsCodec, RandomnessMode, SourceModel, ToyDiscrete,
+};
+use gls_serve::compression::gaussian::{
+    gaussian_requests, run_gaussian, run_gaussian_scalar, GaussianSource,
+};
+use gls_serve::compression::image::{
+    image_requests, run_image, run_image_scalar, synthetic_digits, AnalyticVae, SharedLatentSource,
+};
+use gls_serve::compression::service::{
+    run_blocks_scalar, run_blocks_workspace, BatchOutput, CompressionServer, DecoderOutcome,
+    ServiceError,
+};
+use gls_serve::spec::types::Categorical;
+use gls_serve::testkit::assert_marginal;
+
+const MODES: [RandomnessMode; 2] = [RandomnessMode::Independent, RandomnessMode::Shared];
+const KS: [usize; 3] = [1, 2, 4];
+
+/// Batches must agree on everything observable: encoder result, every
+/// decoder outcome, and the success event, block by block.
+fn assert_same_batches<S>(label: &str, a: &BatchOutput<S>, b: &BatchOutput<S>) {
+    assert_eq!(a.blocks.len(), b.blocks.len(), "{label}: block count");
+    for (x, y) in a.blocks.iter().zip(&b.blocks) {
+        assert_eq!(x.block, y.block, "{label}: block id");
+        assert_eq!(x.enc, y.enc, "{label}: encoder result, block {}", x.block);
+        assert_eq!(x.decoded, y.decoded, "{label}: decoder outcomes, block {}", x.block);
+        assert_eq!(x.hit, y.hit, "{label}: success event, block {}", x.block);
+    }
+}
+
+#[test]
+fn toy_discrete_kernel_matches_scalar_across_modes_and_k() {
+    let model = ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 };
+    for mode in MODES {
+        for k in KS {
+            let cfg = CodecConfig { n_samples: 64, l_max: 4, k_decoders: k, seed: 19, mode };
+            let codec = GlsCodec::new(&model, cfg);
+            let mut ws = CodecWorkspace::new();
+            for b in 0..40u64 {
+                let a = (b % 10) as usize;
+                let ctx = codec.block_context(b);
+                let enc = codec.encode_with(&mut ws, &ctx, &a);
+                assert_eq!(
+                    enc,
+                    codec.encode_scalar(&a, b),
+                    "toy encode diverged (mode {mode:?}, K={k}, block {b})"
+                );
+                for kk in 0..k {
+                    let t = ((b + kk as u64) % 10) as usize;
+                    let dec = codec.decode_with(&mut ws, &ctx, &t, enc.message, kk);
+                    assert_eq!(
+                        dec,
+                        codec.decode_scalar(&t, enc.message, kk, b),
+                        "toy decode diverged (mode {mode:?}, K={k}, k={kk}, block {b})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gaussian_scalar_kernel_and_service_agree_bitwise() {
+    let src = GaussianSource::paper_default(0.005);
+    for mode in MODES {
+        for k in KS {
+            let cfg = CodecConfig { n_samples: 256, l_max: 4, k_decoders: k, seed: 23, mode };
+            let requests = gaussian_requests(src, k, 60, 23);
+            let scalar = run_blocks_scalar(&src, cfg, &requests);
+            let kernel = run_blocks_workspace(&src, cfg, &requests);
+            assert_same_batches(&format!("gaussian scalar/kernel mode {mode:?} K={k}"), &scalar, &kernel);
+            for workers in [1, 3] {
+                let mut server = CompressionServer::new(Arc::new(src), cfg, workers);
+                let out = server.run_batch(requests.clone());
+                assert!(out.panicked.is_empty());
+                assert_same_batches(
+                    &format!("gaussian service mode {mode:?} K={k} workers={workers}"),
+                    &out,
+                    &kernel,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn latent_scalar_kernel_and_service_agree_bitwise() {
+    let imgs = synthetic_digits(70, 11);
+    let vae = Arc::new(AnalyticVae::fit(&imgs[..50], 4, 0.05, 13));
+    let eval = &imgs[50..];
+    let shared_src = SharedLatentSource { model: Arc::clone(&vae) };
+    for mode in MODES {
+        for k in KS {
+            let cfg = CodecConfig { n_samples: 64, l_max: 4, k_decoders: k, seed: 9, mode };
+            let requests = image_requests(&*vae, eval, k, 9);
+            let scalar = run_blocks_scalar(&shared_src, cfg, &requests);
+            let kernel = run_blocks_workspace(&shared_src, cfg, &requests);
+            assert_same_batches(&format!("latent scalar/kernel mode {mode:?} K={k}"), &scalar, &kernel);
+            let mut server = CompressionServer::new(
+                Arc::new(SharedLatentSource { model: Arc::clone(&vae) }),
+                cfg,
+                2,
+            );
+            let out = server.run_batch(requests.clone());
+            assert!(out.panicked.is_empty());
+            assert_same_batches(&format!("latent service mode {mode:?} K={k}"), &out, &kernel);
+        }
+    }
+}
+
+#[test]
+fn encoder_selected_value_marginal_follows_enc_posterior() {
+    // The encoder races min_k S_i^{(k)} / λ_i over candidates drawn from
+    // the uniform prior; candidate i wins with probability λ_i / Σ_j λ_j
+    // (min-stability of exponentials — K only rescales every rate). The
+    // selected *value* therefore follows the SNIS estimate of p_{W|A},
+    // whose bias at N = 512 candidates is O(1/N) — invisible to this
+    // chi-square at 3000 trials. A crossing here means the race consumes
+    // wrong RNG coordinates or mis-weights candidates, not noise.
+    let model = ToyDiscrete { flip_enc: 0.2, flip_dec: 0.3 };
+    let a = 3usize;
+    let expected = Categorical::new(model.enc_posterior(a));
+    let trials = 3000usize;
+    for (k, mode) in [(1usize, RandomnessMode::Independent), (4, RandomnessMode::Independent)] {
+        let cfg = CodecConfig { n_samples: 512, l_max: 4, k_decoders: k, seed: 29, mode };
+        let codec = GlsCodec::new(&model, cfg);
+        let mut ws = CodecWorkspace::new();
+        let mut counts = vec![0usize; 10];
+        for b in 0..trials as u64 {
+            let ctx = codec.block_context(b);
+            let enc = codec.encode_with(&mut ws, &ctx, &a);
+            assert!(!enc.degenerate);
+            counts[ctx.samples[enc.index]] += 1;
+        }
+        assert_marginal(
+            &format!("encoder-selected value vs p_W|A (K={k}, {mode:?})"),
+            &counts,
+            &expected,
+            trials,
+        );
+    }
+}
+
+#[test]
+fn shared_and_independent_are_bit_identical_at_k1() {
+    // K = 1 collapses the list: one decoder, one exponential set. The two
+    // randomness modes must then be the same algorithm down to the bits,
+    // end-to-end through the pipeline runners.
+    let src = GaussianSource::paper_default(0.005);
+    let g_ind = run_gaussian(src, 1, 8, 1 << 8, 150, 17, RandomnessMode::Independent);
+    let g_sh = run_gaussian(src, 1, 8, 1 << 8, 150, 17, RandomnessMode::Shared);
+    assert_eq!(g_ind.match_rate.to_bits(), g_sh.match_rate.to_bits());
+    assert_eq!(g_ind.mse.to_bits(), g_sh.mse.to_bits());
+    // And through the scalar references.
+    let s_ind = run_gaussian_scalar(src, 1, 8, 1 << 8, 150, 17, RandomnessMode::Independent);
+    assert_eq!(g_ind.match_rate.to_bits(), s_ind.match_rate.to_bits());
+    assert_eq!(g_ind.mse.to_bits(), s_ind.mse.to_bits());
+
+    let imgs = synthetic_digits(60, 4);
+    let vae = AnalyticVae::fit(&imgs[..40], 4, 0.05, 7);
+    let eval = &imgs[40..];
+    let i_ind = run_image(&vae, eval, 1, 4, 64, 9, RandomnessMode::Independent);
+    let i_sh = run_image(&vae, eval, 1, 4, 64, 9, RandomnessMode::Shared);
+    let i_scal = run_image_scalar(&vae, eval, 1, 4, 64, 9, RandomnessMode::Shared);
+    assert_eq!(i_ind.match_rate.to_bits(), i_sh.match_rate.to_bits());
+    assert_eq!(i_ind.mse.to_bits(), i_sh.mse.to_bits());
+    assert_eq!(i_ind.match_rate.to_bits(), i_scal.match_rate.to_bits());
+    assert_eq!(i_ind.mse.to_bits(), i_scal.mse.to_bits());
+}
+
+/// Gaussian wrapper whose decoder panics on an infinite side observation —
+/// the inner model treats the same observation as an unusable (NaN) weight,
+/// so the two agree everywhere the wrapper survives.
+struct PanicOnInfiniteSide {
+    inner: GaussianSource,
+}
+
+impl SourceModel for PanicOnInfiniteSide {
+    type Source = f64;
+    type Side = f64;
+    type Sample = f64;
+
+    fn sample_prior(&self, draw: &mut dyn FnMut() -> f64) -> f64 {
+        self.inner.sample_prior(draw)
+    }
+
+    fn weight_enc(&self, u: &f64, a: &f64) -> f64 {
+        self.inner.weight_enc(u, a)
+    }
+
+    fn weight_dec(&self, u: &f64, t: &f64) -> f64 {
+        assert!(t.is_finite(), "poisoned side observation");
+        self.inner.weight_dec(u, t)
+    }
+}
+
+#[test]
+fn panicking_decodes_fail_only_their_slots_at_batch_scale() {
+    let src = GaussianSource::paper_default(0.005);
+    let cfg = CodecConfig {
+        n_samples: 128,
+        l_max: 4,
+        k_decoders: 3,
+        seed: 41,
+        mode: RandomnessMode::Independent,
+    };
+    let mut requests = gaussian_requests(src, 3, 50, 41);
+    let poisoned = [(7usize, 1usize), (23, 0), (23, 2)];
+    for &(bi, kk) in &poisoned {
+        requests[bi].sides[kk] = f64::INFINITY;
+    }
+    // Reference on the inner model: identical weights on every finite side,
+    // typed fallback (not a panic) on the infinite ones.
+    let reference = run_blocks_workspace(&src, cfg, &requests);
+
+    let model = Arc::new(PanicOnInfiniteSide { inner: src });
+    let mut server = CompressionServer::new(Arc::clone(&model), cfg, 4);
+    let out = server.run_batch(requests.clone());
+
+    let mut failed = out.panicked.clone();
+    failed.sort_unstable();
+    assert_eq!(failed, poisoned.to_vec(), "panic set must be exactly the poisoned jobs");
+    let poisoned_blocks = [7usize, 23];
+    for (bi, (blk, want)) in out.blocks.iter().zip(&reference.blocks).enumerate() {
+        assert_eq!(blk.enc, want.enc, "encoder never sees sides, block {bi}");
+        for kk in 0..3 {
+            if poisoned.contains(&(bi, kk)) {
+                assert_eq!(blk.decoded[kk], DecoderOutcome::Panicked);
+            } else {
+                assert_eq!(blk.decoded[kk], want.decoded[kk], "honest slot ({bi}, {kk}) moved");
+            }
+        }
+        if !poisoned_blocks.contains(&bi) {
+            assert_eq!(blk.hit, want.hit, "honest block {bi} success event moved");
+        }
+    }
+    match out.ok() {
+        Err(ServiceError::DecodersPanicked { failed }) => assert_eq!(failed.len(), 3),
+        other => panic!("expected typed panic error, got {:?}", other.map(|b| b.len())),
+    }
+
+    // The server keeps serving clean batches bit-exactly afterwards.
+    let clean = gaussian_requests(src, 3, 30, 43);
+    let again = server.run_batch(clean.clone());
+    assert!(again.panicked.is_empty());
+    assert_same_batches("post-panic clean batch", &again, &run_blocks_workspace(&src, cfg, &clean));
+}
