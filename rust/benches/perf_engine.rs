@@ -27,6 +27,7 @@
 use std::time::Duration;
 
 use gls_serve::bench::{time_budget, BenchResult, Table};
+use gls_serve::coordinator::config::DEFAULT_PARALLEL_THRESHOLD;
 use gls_serve::coordinator::engine::SpecDecodeEngine;
 use gls_serve::coordinator::kv::PagedKvCache;
 use gls_serve::coordinator::router::{Router, RoutingPolicy};
@@ -36,6 +37,7 @@ use gls_serve::coordinator::{EngineConfig, PoolScope, ServerConfig, VerifyBacken
 use gls_serve::model::backend::ModelPair;
 use gls_serve::model::sampling::SamplingParams;
 use gls_serve::model::sim::SimLm;
+use gls_serve::perf::{CounterSnapshot, PerfCounters};
 use gls_serve::spec::daliri::DaliriVerifier;
 use gls_serve::spec::gls::GlsVerifier;
 use gls_serve::spec::make_verifier;
@@ -58,12 +60,28 @@ impl PerfJson {
         Self { entries: Vec::new(), summary: Vec::new() }
     }
 
-    fn entry(&mut self, section: &str, case: &str, r: &BenchResult) {
+    /// Append one flat entry. When a hardware-counter snapshot is present
+    /// (already normalized per iteration/block by the caller), the entry
+    /// carries the counter columns; otherwise the columns are simply
+    /// absent — downstream tooling treats missing columns as "counters
+    /// unavailable here", never as zero.
+    fn entry(&mut self, section: &str, case: &str, r: &BenchResult, c: Option<&CounterSnapshot>) {
         let us = r.per_iter.mean * 1e6;
         let per_s = if r.per_iter.mean > 0.0 { 1.0 / r.per_iter.mean } else { 0.0 };
+        let counters = match c {
+            Some(c) => format!(
+                ",\"cycles\":{},\"instructions\":{},\"ipc\":{:.3},\"llc_refs\":{},\"llc_misses\":{}",
+                c.cycles,
+                c.instructions,
+                c.ipc(),
+                c.llc_refs,
+                c.llc_misses
+            ),
+            None => String::new(),
+        };
         self.entries.push(format!(
-            "{{\"section\":\"{}\",\"case\":\"{}\",\"us_per_iter\":{:.3},\"iters_per_s\":{:.3},\"iters\":{}}}",
-            section, case, us, per_s, r.iters
+            "{{\"section\":\"{}\",\"case\":\"{}\",\"us_per_iter\":{:.3},\"iters_per_s\":{:.3},\"iters\":{}{}}}",
+            section, case, us, per_s, r.iters, counters
         ));
     }
 
@@ -88,6 +106,40 @@ impl PerfJson {
             Err(e) => eprintln!("\nfailed to write {path}: {e}"),
         }
     }
+}
+
+/// Hardware counters over `iters` runs of `f`, normalized to one of the
+/// `iters * denom` logical blocks executed (`denom` = blocks per run).
+/// `None` when counters are unavailable — the reason was already printed
+/// once at startup by the probe.
+///
+/// Counters are thread-scoped (this thread only): for pooled engine cases
+/// they cover the engine thread's dispatch + draft recording, not the
+/// worker threads — a deliberate, documented scope (EXPERIMENTS.md §Perf,
+/// "Counter methodology").
+fn counters_per_block(iters: u64, denom: u64, mut f: impl FnMut()) -> Option<CounterSnapshot> {
+    let mut c = PerfCounters::open().ok()?;
+    c.start().ok()?;
+    for _ in 0..iters {
+        f();
+    }
+    let s = c.stop().ok()?;
+    let d = (iters * denom).max(1);
+    Some(CounterSnapshot {
+        cycles: s.cycles / d,
+        instructions: s.instructions / d,
+        llc_refs: s.llc_refs / d,
+        llc_misses: s.llc_misses / d,
+    })
+}
+
+/// Push the standard per-block counter metrics into the summary.
+fn counter_metrics(json: &mut PerfJson, prefix: &str, c: &CounterSnapshot) {
+    json.metric(&format!("{prefix}_cycles_per_block_k8_n2048_topk50"), c.cycles as f64);
+    json.metric(&format!("{prefix}_instructions_per_block_k8_n2048_topk50"), c.instructions as f64);
+    json.metric(&format!("{prefix}_ipc_k8_n2048_topk50"), c.ipc());
+    json.metric(&format!("{prefix}_llc_refs_per_block_k8_n2048_topk50"), c.llc_refs as f64);
+    json.metric(&format!("{prefix}_llc_misses_per_block_k8_n2048_topk50"), c.llc_misses as f64);
 }
 
 fn synth_block(k: usize, l: usize, n: usize, seed: u64) -> BlockInput {
@@ -130,6 +182,21 @@ fn main() {
     let mut json = PerfJson::new();
     println!("# §Perf — serving hot-path benchmarks\n");
 
+    // One probe up front; every section then measures or skips uniformly.
+    // A skip is labeled, never silent: CI greps this line to distinguish
+    // "counters forbidden here" from "harness broke".
+    let counters_on = match gls_serve::perf::probe() {
+        Ok(()) => {
+            println!("perf-counters: available — cycles/instructions/IPC/LLC columns attached\n");
+            true
+        }
+        Err(e) => {
+            println!("perf-counters: unavailable ({e}) — counter columns omitted\n");
+            false
+        }
+    };
+    json.metric("perf_counters_available", if counters_on { 1.0 } else { 0.0 });
+
     // ---------------------------------------------------------- L3a verify
     {
         let mut t = Table::new(&["verifier", "K", "N(vocab)", "µs/block", "blocks/s"]);
@@ -144,7 +211,7 @@ fn main() {
                     std::hint::black_box(v.verify_block(&input, &rng, slot));
                     slot = slot.wrapping_add(5);
                 });
-                json.entry("L3a", &case, &r);
+                json.entry("L3a", &case, &r, None);
                 t.row(&[
                     vk.name().to_string(),
                     k.to_string(),
@@ -190,13 +257,44 @@ fn main() {
             "kernel/scalar divergence — see tests/kernel_parity.rs"
         );
 
+        // Counter pass (separate from the timing pass, same workload):
+        // per-block cycles/instructions/IPC/LLC for the acceptance pair.
+        let (c_scalar, c_kernel) = if counters_on {
+            let mut slot = 0u64;
+            let cs = counters_per_block(400, 1, || {
+                std::hint::black_box(cond.verify_block_scalar(&input, &rng, slot));
+                slot = slot.wrapping_add(5);
+            });
+            let mut slot = 0u64;
+            let ck = counters_per_block(400, 1, || {
+                std::hint::black_box(v.verify_block(&input, &rng, slot));
+                slot = slot.wrapping_add(5);
+            });
+            (cs, ck)
+        } else {
+            (None, None)
+        };
+
         let scalar_us = r_scalar.per_iter.mean * 1e6;
         let kernel_us = r_kernel.per_iter.mean * 1e6;
-        json.entry("L3a-kernel", "gls-scalar-K8-N2048-topk50", &r_scalar);
-        json.entry("L3a-kernel", "gls-kernel-K8-N2048-topk50", &r_kernel);
+        json.entry("L3a-kernel", "gls-scalar-K8-N2048-topk50", &r_scalar, c_scalar.as_ref());
+        json.entry("L3a-kernel", "gls-kernel-K8-N2048-topk50", &r_kernel, c_kernel.as_ref());
         json.metric("scalar_us_per_block_k8_n2048_topk50", scalar_us);
         json.metric("kernel_us_per_block_k8_n2048_topk50", kernel_us);
         json.metric("kernel_speedup_k8_n2048_topk50", scalar_us / kernel_us);
+        if let Some(c) = &c_scalar {
+            counter_metrics(&mut json, "scalar", c);
+        }
+        if let Some(c) = &c_kernel {
+            counter_metrics(&mut json, "kernel", c);
+        }
+        if let (Some(cs), Some(ck)) = (&c_scalar, &c_kernel) {
+            println!(
+                "counters: scalar {} cyc/blk (IPC {:.2}, LLC {}/{}) | kernel {} cyc/blk (IPC {:.2}, LLC {}/{})",
+                cs.cycles, cs.ipc(), cs.llc_misses, cs.llc_refs,
+                ck.cycles, ck.ipc(), ck.llc_misses, ck.llc_refs,
+            );
+        }
 
         for (name, r) in [("scalar", &r_scalar), ("kernel", &r_kernel)] {
             t.row(&[
@@ -244,10 +342,22 @@ fn main() {
                 kernel_fn(slot);
                 slot = slot.wrapping_add(5);
             });
+            let measure = |f: &dyn Fn(u64)| -> Option<CounterSnapshot> {
+                if !counters_on {
+                    return None;
+                }
+                let mut slot = 0u64;
+                counters_per_block(400, 1, || {
+                    f(slot);
+                    slot = slot.wrapping_add(5);
+                })
+            };
+            let c_scalar = measure(scalar_fn);
+            let c_kernel = measure(kernel_fn);
             let scalar_us = r_scalar.per_iter.mean * 1e6;
             let kernel_us = r_kernel.per_iter.mean * 1e6;
-            json.entry("L3a-ported", &case_scalar, &r_scalar);
-            json.entry("L3a-ported", &case_kernel, &r_kernel);
+            json.entry("L3a-ported", &case_scalar, &r_scalar, c_scalar.as_ref());
+            json.entry("L3a-ported", &case_kernel, &r_kernel, c_kernel.as_ref());
             json.metric(&format!("{name}_scalar_us_per_block_k8_n2048_topk50"), scalar_us);
             json.metric(&format!("{name}_kernel_us_per_block_k8_n2048_topk50"), kernel_us);
             json.metric(&format!("{name}_speedup_k8_n2048_topk50"), scalar_us / kernel_us);
@@ -357,7 +467,7 @@ fn main() {
                     let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
                     std::hint::black_box(eng.step_blocks(&mut refs));
                 });
-                json.entry("L3b", &case, &r);
+                json.entry("L3b", &case, &r, None);
                 let blocks_per_s = batch as f64 / r.per_iter.mean;
                 let be = eng.metrics.block_efficiency();
                 t.row(&[
@@ -391,7 +501,10 @@ fn main() {
         // backends' wall clocks directly, so tighter means matter more
         // than total bench runtime here.
         let budget = Duration::from_millis(900);
-        let mut bench_backend = |batch: usize, backend: VerifyBackend, json: &mut PerfJson| -> f64 {
+        let mut bench_backend = |batch: usize,
+                                 backend: VerifyBackend,
+                                 json: &mut PerfJson|
+         -> (f64, Option<CounterSnapshot>) {
             let (d, tg) = SimLm::pair(vocab, 5, 2.0);
             let cfg = EngineConfig {
                 num_drafts: k,
@@ -422,16 +535,37 @@ fn main() {
                 let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
                 std::hint::black_box(eng.step_blocks(&mut refs));
             });
-            json.entry("L3d", &case, &r);
-            batch as f64 / r.per_iter.mean
+            // Counter pass over the same warmed engine. Thread-scoped: on
+            // the pooled backend this is the engine thread's share
+            // (dispatch, draft recording, epilogue) per verified block.
+            let c = if counters_on {
+                counters_per_block(10, batch as u64, || {
+                    let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+                    std::hint::black_box(eng.step_blocks(&mut refs));
+                })
+            } else {
+                None
+            };
+            json.entry("L3d", &case, &r, c.as_ref());
+            (batch as f64 / r.per_iter.mean, c)
         };
         for &batch in &[1usize, 4, 16] {
-            let spawn_bps = bench_backend(batch, VerifyBackend::Spawn, &mut json);
-            let pool_bps = bench_backend(batch, VerifyBackend::Pool, &mut json);
+            let (spawn_bps, c_spawn) = bench_backend(batch, VerifyBackend::Spawn, &mut json);
+            let (pool_bps, c_pool) = bench_backend(batch, VerifyBackend::Pool, &mut json);
             let speedup = pool_bps / spawn_bps;
             json.metric(&format!("engine_spawn_blocks_per_s_b{batch}"), spawn_bps);
             json.metric(&format!("engine_pool_blocks_per_s_b{batch}"), pool_bps);
             json.metric(&format!("engine_pool_vs_spawn_speedup_b{batch}"), speedup);
+            if batch == 4 {
+                // The per-verified-block counter columns for the pooled
+                // path at the acceptance shape (K=8, N=2048, top-k 50).
+                if let Some(c) = &c_pool {
+                    counter_metrics(&mut json, "pool", c);
+                }
+                if let Some(c) = &c_spawn {
+                    counter_metrics(&mut json, "spawn", c);
+                }
+            }
             t.row(&[
                 batch.to_string(),
                 "spawn".into(),
@@ -448,6 +582,91 @@ fn main() {
         println!("## L3d — engine step_blocks: persistent pool vs per-block spawn (K=8, N=2048, top-k 50)");
         t.print();
         println!();
+    }
+
+    // --------------------- L3d' parallel-threshold calibration sweep
+    // The measurement behind DEFAULT_PARALLEL_THRESHOLD: serial stepping
+    // vs forced pool fan-out at batch 4 (K=8, L=4, top-k 50) across vocab
+    // sizes, i.e. across per-sequence work `k·(l+1)·vocab` — the exact
+    // quantity the engine's dispatch gate compares against the threshold.
+    // The crossover (smallest work where the pool first wins) is the
+    // calibrated threshold; the shipped default rounds it UP to the next
+    // power of two, biasing toward serial where fan-out wins nothing
+    // (EXPERIMENTS.md §Perf, "Threshold sweep").
+    {
+        let mut t = Table::new(&["vocab", "work", "serial blk/s", "pool blk/s", "pool/serial"]);
+        let (k, l, top_k, batch) = (8usize, 4usize, 50usize, 4usize);
+        let budget = Duration::from_millis(500);
+        let mut bench_sweep = |vocab: usize, backend: VerifyBackend, json: &mut PerfJson| -> f64 {
+            let (d, tg) = SimLm::pair(vocab, 5, 2.0);
+            let cfg = EngineConfig {
+                num_drafts: k,
+                block_len: l,
+                verifier: VerifierKind::Gls,
+                target_params: SamplingParams::new(1.0, Some(top_k)),
+                draft_params: vec![SamplingParams::new(1.0, Some(top_k))],
+                max_seq_len: 4096,
+                seed: 3,
+                verify_backend: backend,
+                // Pin the dispatch decision instead of letting the gate
+                // make it: the sweep measures both sides of the decision
+                // at every work size, so the gate must not veto either.
+                parallel_threshold: 0,
+                ..EngineConfig::default()
+            };
+            let mut eng = SpecDecodeEngine::new(
+                cfg,
+                ModelPair::new(Box::new(d), Box::new(tg)),
+                PagedKvCache::new(1 << 14, 16),
+            );
+            let mut seqs: Vec<_> = (0..batch)
+                .map(|i| {
+                    let req = Request::new(i as u64, vec![1, 2, 3], 3000);
+                    let s = gls_serve::coordinator::sequence::SequenceState::from_request(&req);
+                    eng.kv.register(s.id, 3, 3103, 5).unwrap();
+                    s
+                })
+                .collect();
+            let case = format!("sweep-{}-V{vocab}", backend.name());
+            let r = time_budget(&case, budget, 10, || {
+                let mut refs: Vec<&mut _> = seqs.iter_mut().collect();
+                std::hint::black_box(eng.step_blocks(&mut refs));
+            });
+            json.entry("L3d-sweep", &case, &r, None);
+            batch as f64 / r.per_iter.mean
+        };
+        let mut crossover_work: Option<usize> = None;
+        for &vocab in &[64usize, 128, 256, 512, 1024, 2048] {
+            let work = k * (l + 1) * vocab;
+            let serial_bps = bench_sweep(vocab, VerifyBackend::Serial, &mut json);
+            let pool_bps = bench_sweep(vocab, VerifyBackend::Pool, &mut json);
+            json.metric(&format!("threshold_sweep_serial_blocks_per_s_v{vocab}"), serial_bps);
+            json.metric(&format!("threshold_sweep_pool_blocks_per_s_v{vocab}"), pool_bps);
+            if pool_bps > serial_bps && crossover_work.is_none() {
+                crossover_work = Some(work);
+            }
+            t.row(&[
+                vocab.to_string(),
+                work.to_string(),
+                format!("{serial_bps:.0}"),
+                format!("{pool_bps:.0}"),
+                format!("{:.2}×", pool_bps / serial_bps),
+            ]);
+        }
+        // 0 = the pool never won inside the swept range (threshold should
+        // then sit above the largest swept work, not inside it).
+        json.metric("threshold_sweep_crossover_work", crossover_work.map_or(0.0, |w| w as f64));
+        json.metric("threshold_sweep_shipped_default", DEFAULT_PARALLEL_THRESHOLD as f64);
+        println!("## L3d' — parallel-threshold calibration sweep (batch 4, K=8, L=4, top-k 50)");
+        t.print();
+        match crossover_work {
+            Some(w) => println!(
+                "crossover work {w}; shipped DEFAULT_PARALLEL_THRESHOLD = {DEFAULT_PARALLEL_THRESHOLD}\n"
+            ),
+            None => println!(
+                "no crossover in swept range; shipped DEFAULT_PARALLEL_THRESHOLD = {DEFAULT_PARALLEL_THRESHOLD}\n"
+            ),
+        }
     }
 
     // --------------------------------------------------- L3c serving stack
@@ -620,7 +839,7 @@ fn pjrt_section(json: &mut PerfJson) {
             let r = time_budget("pjrt-forward-B8", Duration::from_secs(2), 5, || {
                 std::hint::black_box(target.next_logits(&seqs));
             });
-            json.entry("L1L2", "pjrt-forward-B8", &r);
+            json.entry("L1L2", "pjrt-forward-B8", &r, None);
             let mut t = Table::new(&["op", "ms/call", "rows/s"]);
             t.row(&[
                 "target_lm forward (B=8, S=96)".into(),
@@ -642,7 +861,7 @@ fn pjrt_section(json: &mut PerfJson) {
                     execute_tuple(&exe, &[lit(&u), lit(&u), lit(&u)]).unwrap(),
                 );
             });
-            json.entry("L1L2", "pjrt-gls-select", &r);
+            json.entry("L1L2", "pjrt-gls-select", &r, None);
             t.row(&[
                 format!("gls_select artifact (K={k}, N={n})"),
                 format!("{:.3}", r.per_iter.mean * 1e3),
@@ -654,7 +873,7 @@ fn pjrt_section(json: &mut PerfJson) {
             let r = time_budget("native-gls-select", Duration::from_secs(1), 10, || {
                 std::hint::black_box(gls_serve::spec::gls::sample_gls(&p, &q, k, &rng, 0));
             });
-            json.entry("L1L2", "native-gls-select", &r);
+            json.entry("L1L2", "native-gls-select", &r, None);
             t.row(&[
                 format!("gls_select native (K={k}, N={n})"),
                 format!("{:.3}", r.per_iter.mean * 1e3),

@@ -152,7 +152,9 @@ pub struct CodecWorkspace {
     support: Vec<u32>,
     /// Weight per support entry (same order).
     weights: Vec<f64>,
-    /// Row-major `rows × support.len()` exponential panel.
+    /// Item-major `support.len() × rows` exponential panel
+    /// (`panel[j * rows + k]` — see [`fill_exp_panel`]): the encoder race
+    /// visits `(j outer, k inner)`, so its reads walk memory in order.
     panel: Vec<f64>,
 }
 
@@ -319,9 +321,11 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
     // -----------------------------------------------------------------
 
     /// Kernel encoder: sparse race over usable weights with the per-lane
-    /// RNG prefix hoisted. The exponential panel is filled k-major but the
-    /// race itself visits `(i asc, k inner)` so strict-`<` tie-breaking
-    /// matches [`Self::encode_scalar`] bit-for-bit.
+    /// RNG prefix hoisted. The exponential panel is item-major — the same
+    /// `(i asc, k inner)` order the race visits, so panel reads are
+    /// sequential — and strict-`<` tie-breaking matches
+    /// [`Self::encode_scalar`] bit-for-bit (variate *values* are pure
+    /// functions of their coordinates, so layout cannot move an outcome).
     pub fn encode_with(
         &self,
         ws: &mut CodecWorkspace,
@@ -345,13 +349,12 @@ impl<'a, M: SourceModel> GlsCodec<'a, M> {
         fill_exp_panel(&mut ws.panel, &self.rng, ctx.block, k_eff, &ws.support, |k| {
             self.exp_lane(k)
         });
-        let s = ws.support.len();
         let mut best = f64::INFINITY;
         let mut arg = usize::MAX;
         for (j, &iu) in ws.support.iter().enumerate() {
             let w = ws.weights[j];
             for k in 0..k_eff {
-                let v = ws.panel[k * s + j] / w;
+                let v = ws.panel[j * k_eff + k] / w;
                 if v < best {
                     best = v;
                     arg = iu as usize;

@@ -12,12 +12,18 @@ use crate::spec::types::VerifierKind;
 /// verification out to worker threads; below it the serial path wins.
 ///
 /// This is a *measured* default, not a magic number: the calibration
-/// procedure (documented in EXPERIMENTS.md §Perf) sweeps
-/// `benches/perf_engine.rs`'s L3d engine cases across work sizes and picks
-/// the crossover where the pooled path first beats serial stepping on CI
-/// hardware. Re-run the sweep and override via the `parallel_threshold`
-/// config key when deploying on different cores.
-pub const DEFAULT_PARALLEL_THRESHOLD: usize = 8_192;
+/// procedure (documented in EXPERIMENTS.md §Perf, "Threshold sweep")
+/// sweeps `benches/perf_engine.rs`'s L3d threshold-sweep section — serial
+/// vs pooled stepping at batch 4 across vocab sizes, i.e. across
+/// `k · (l+1) · vocab` — and picks the crossover where the pooled path
+/// first beats serial on CI hardware, rounded up to the next power of
+/// two. Rounding *up* biases toward serial near the crossover, where
+/// dispatch overhead (ticket build, two condvar round-trips, panel-slice
+/// handoff) is the same order as the verification math itself and
+/// fan-out wins nothing. Re-run the sweep (`BENCH_perf.json` L3d entries
+/// are the artifact) and override via the `parallel_threshold` config key
+/// when deploying on different cores.
+pub const DEFAULT_PARALLEL_THRESHOLD: usize = 16_384;
 
 /// How `step_blocks` executes the per-sequence verification jobs once the
 /// batch clears the parallelism threshold.

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::model::backend::ModelPair;
-use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceBank, SliceRecycler};
+use crate::spec::kernel::{CouplingWorkspace, PanelCacheStats, PanelSlice, SliceBank, SliceRecycler};
 use crate::spec::types::{Categorical, TokenMatrix};
 use crate::spec::VerifierKind;
 use crate::stats::rng::CounterRng;
@@ -320,9 +320,9 @@ impl SpecDecodeEngine {
         // Every path yields one `Option<BlockOutput>` per sequence: `None`
         // marks a job whose verifier panicked (contained — the sequence
         // fails, the engine and pool survive).
-        let (outs, cache_hits): (Vec<Option<_>>, u64) = if !parallel {
+        let (outs, cache_stats): (Vec<Option<_>>, PanelCacheStats) = if !parallel {
             let mut outs = Vec::with_capacity(seqs.len());
-            let mut hits = 0u64;
+            let mut stats = PanelCacheStats::default();
             for job in jobs {
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     job.run(&mut self.ws)
@@ -333,14 +333,14 @@ impl SpecDecodeEngine {
                         // Scratch state after an unwind is unspecified;
                         // caches are value-keyed, so a fresh workspace
                         // only costs warm-up.
-                        hits += self.ws.drain_panel_cache_hits();
+                        stats.merge(self.ws.drain_cache_stats());
                         self.ws = CouplingWorkspace::new();
                         outs.push(None);
                     }
                 }
             }
-            hits += self.ws.drain_panel_cache_hits();
-            (outs, hits)
+            stats.merge(self.ws.drain_cache_stats());
+            (outs, stats)
         } else {
             match self.cfg.verify_backend {
                 VerifyBackend::Pool => {
@@ -360,9 +360,9 @@ impl SpecDecodeEngine {
                         .get_or_insert_with(|| Arc::new(VerifyPool::new(workers)));
                     match pool.run_batch(tag, jobs) {
                         Ok(batch) => {
-                            (batch.outputs.into_iter().map(Some).collect(), batch.cache_hits)
+                            (batch.outputs.into_iter().map(Some).collect(), batch.cache)
                         }
-                        Err(PoolError::JobsPanicked { failed, mut completed, mut cache_hits }) => {
+                        Err(PoolError::JobsPanicked { failed, mut completed, mut cache }) => {
                             if retry && !failed.is_empty() {
                                 // Retry-once: resubmit exactly the failed
                                 // jobs. Transient faults (a worker dying
@@ -379,7 +379,7 @@ impl SpecDecodeEngine {
                                 self.metrics.verify_retries += retry_jobs.len() as u64;
                                 match pool.run_batch(tag, retry_jobs) {
                                     Ok(batch) => {
-                                        cache_hits += batch.cache_hits;
+                                        cache.merge(batch.cache);
                                         for (&i, out) in failed.iter().zip(batch.outputs) {
                                             self.metrics.verify_retries_recovered += 1;
                                             completed[i] = Some(out);
@@ -387,10 +387,10 @@ impl SpecDecodeEngine {
                                     }
                                     Err(PoolError::JobsPanicked {
                                         completed: retried,
-                                        cache_hits: h2,
+                                        cache: c2,
                                         ..
                                     }) => {
-                                        cache_hits += h2;
+                                        cache.merge(c2);
                                         for (&i, out) in failed.iter().zip(retried) {
                                             if out.is_some() {
                                                 self.metrics.verify_retries_recovered += 1;
@@ -400,18 +400,20 @@ impl SpecDecodeEngine {
                                     }
                                 }
                             }
-                            (completed, cache_hits)
+                            (completed, cache)
                         }
                     }
                 }
                 VerifyBackend::Spawn => {
-                    let (outs, hits) = VerifyPool::run_scoped(jobs, workers);
-                    (outs.into_iter().map(Some).collect(), hits)
+                    let (outs, stats) = VerifyPool::run_scoped(jobs, workers);
+                    (outs.into_iter().map(Some).collect(), stats)
                 }
                 VerifyBackend::Serial => unreachable!("parallel implies non-serial backend"),
             }
         };
-        self.metrics.panel_cache_hits += cache_hits;
+        self.metrics.panel_cache_hits += cache_stats.hits;
+        self.metrics.panel_cache_misses += cache_stats.misses;
+        self.metrics.panel_cache_overwrites += cache_stats.overwrites;
 
         // --- Serial epilogue: sequence state, KV commits, metrics. --------
         let mut outcomes = Vec::with_capacity(seqs.len());
@@ -705,6 +707,16 @@ mod tests {
         assert!(
             serial.metrics.panel_cache_hits > 0,
             "draft panels never hit on the serial path"
+        );
+        // The leaky cache's miss counter must also flow back through both
+        // paths: a cold workspace's first probes are always misses.
+        assert!(
+            pooled.metrics.panel_cache_misses > 0,
+            "pool workers never reported cold-probe misses"
+        );
+        assert!(
+            serial.metrics.panel_cache_misses > 0,
+            "serial path never reported cold-probe misses"
         );
         // Block 2's draft phase must lease slices recycled from block 1's
         // consumers — on both the pooled and serial paths.

@@ -30,6 +30,14 @@ pub struct EngineMetrics {
     /// Exponential-panel rows verification reused from the draft phase
     /// (serial cache hits + pool-worker hits via the panel-slice handoff).
     pub panel_cache_hits: u64,
+    /// Panel-cache probes that found no usable row (cold lane, or the
+    /// slot's previous occupant was overwritten) — the recompute side of
+    /// the leaky cache's hit/miss ledger.
+    pub panel_cache_misses: u64,
+    /// Occupied direct-mapped slots reclaimed for a different lane key
+    /// (the "leak" in the leaky cache: collisions overwrite, they never
+    /// chain or grow).
+    pub panel_cache_overwrites: u64,
     /// Draft-phase panel-slice leases served from the recycling channel
     /// (spent buffers returned by consuming workspaces) rather than fresh
     /// allocation — the observable of the slice lease/return protocol.
@@ -84,6 +92,8 @@ impl EngineMetrics {
             draft_time: Duration::ZERO,
             verify_time: Duration::ZERO,
             panel_cache_hits: 0,
+            panel_cache_misses: 0,
+            panel_cache_overwrites: 0,
             panel_slices_recycled: 0,
             verify_faults: 0,
             ttft: Histogram::latency(),
@@ -128,6 +138,8 @@ impl EngineMetrics {
         self.draft_time += other.draft_time;
         self.verify_time += other.verify_time;
         self.panel_cache_hits += other.panel_cache_hits;
+        self.panel_cache_misses += other.panel_cache_misses;
+        self.panel_cache_overwrites += other.panel_cache_overwrites;
         self.panel_slices_recycled += other.panel_slices_recycled;
         self.verify_faults += other.verify_faults;
         self.ttft.merge(&other.ttft);
@@ -145,7 +157,7 @@ impl EngineMetrics {
         format!(
             "blocks={} emitted={} BE={:.3} accept/blk={:.3} completed={} \
              p50={:.1}ms p95={:.1}ms target={:.0}ms draft={:.0}ms verify={:.2}ms \
-             panel-hits={} slices-recycled={} faults={} \
+             panel-hits={}/m{}/o{} slices-recycled={} faults={} \
              ttft-p50={:.1}ms tok-p95={:.2}ms retries={}/{} \
              cancelled={} timed-out={} shed={}/{} queue-peak={}",
             self.blocks,
@@ -159,6 +171,8 @@ impl EngineMetrics {
             self.draft_time.as_secs_f64() * 1e3,
             self.verify_time.as_secs_f64() * 1e3,
             self.panel_cache_hits,
+            self.panel_cache_misses,
+            self.panel_cache_overwrites,
             self.panel_slices_recycled,
             self.verify_faults,
             self.ttft.quantile(0.5) * 1e3,
@@ -201,6 +215,22 @@ mod tests {
         assert_eq!(a.blocks, 5);
         assert_eq!(a.emitted_tokens, 20);
         assert_eq!(a.completed, 1);
+    }
+
+    #[test]
+    fn merge_accumulates_panel_cache_counters() {
+        let mut a = EngineMetrics::new();
+        a.panel_cache_hits = 5;
+        a.panel_cache_misses = 2;
+        a.panel_cache_overwrites = 1;
+        let mut b = EngineMetrics::new();
+        b.panel_cache_hits = 3;
+        b.panel_cache_misses = 4;
+        b.panel_cache_overwrites = 2;
+        a.merge(&b);
+        assert_eq!(a.panel_cache_hits, 8);
+        assert_eq!(a.panel_cache_misses, 6);
+        assert_eq!(a.panel_cache_overwrites, 3);
     }
 
     #[test]

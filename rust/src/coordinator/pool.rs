@@ -40,7 +40,7 @@
 //! slots, a claim cursor, and the submitting engine's tag. Workers scan
 //! tickets in epoch order and claim chunks from the first ticket with
 //! unclaimed jobs, so concurrent batches interleave FIFO without ever
-//! mixing state: claims, outputs, and the panel-cache-hit count all live
+//! mixing state: claims, outputs, and the panel-cache counters all live
 //! on the ticket they came from, which is what keeps per-engine metrics
 //! (`EngineMetrics::panel_cache_hits`, [`VerifyPool::engine_stats`])
 //! attributable under sharing. The submitter parks on a condvar until its
@@ -82,7 +82,7 @@ use std::time::Instant;
 
 use super::sequence::CancelToken;
 use crate::model::sampling::SamplingParams;
-use crate::spec::kernel::{CouplingWorkspace, PanelSlice, SliceBank};
+use crate::spec::kernel::{CouplingWorkspace, PanelCacheStats, PanelSlice, SliceBank};
 use crate::spec::types::{BlockInput, BlockOutput, Categorical, TokenMatrix, VerifierKind};
 use crate::stats::rng::CounterRng;
 
@@ -211,12 +211,13 @@ impl VerifyJob {
 }
 
 /// Outputs of one successfully verified batch, in job order, plus the
-/// panel-cache hits the workers observed while running exactly this
-/// batch's jobs (per-ticket attribution — see the module docs).
+/// panel-cache reuse counters (hits / misses / collision overwrites) the
+/// workers observed while running exactly this batch's jobs (per-ticket
+/// attribution — see the module docs).
 #[derive(Debug)]
 pub struct BatchOutput {
     pub outputs: Vec<BlockOutput>,
-    pub cache_hits: u64,
+    pub cache: PanelCacheStats,
 }
 
 /// Typed failure surface of [`VerifyPool::run_batch`].
@@ -230,7 +231,7 @@ pub enum PoolError {
     JobsPanicked {
         failed: Vec<usize>,
         completed: Vec<Option<BlockOutput>>,
-        cache_hits: u64,
+        cache: PanelCacheStats,
     },
 }
 
@@ -282,8 +283,9 @@ struct Ticket {
     chunk: usize,
     /// Jobs not yet completed (claimed or unclaimed).
     pending: usize,
-    /// Panel-cache hits observed while running this ticket's jobs.
-    cache_hits: u64,
+    /// Panel-cache reuse counters observed while running this ticket's
+    /// jobs.
+    cache: PanelCacheStats,
 }
 
 struct PoolState {
@@ -455,7 +457,7 @@ impl VerifyPool {
     pub fn run_batch(&self, engine: u64, jobs: Vec<VerifyJob>) -> Result<BatchOutput, PoolError> {
         let n = jobs.len();
         if n == 0 {
-            return Ok(BatchOutput { outputs: Vec::new(), cache_hits: 0 });
+            return Ok(BatchOutput { outputs: Vec::new(), cache: PanelCacheStats::default() });
         }
         self.ensure_workers();
         let id = {
@@ -474,7 +476,7 @@ impl VerifyPool {
                 // chunk, so don't go below 1.
                 chunk: (n / (self.workers * 4)).max(1),
                 pending: n,
-                cache_hits: 0,
+                cache: PanelCacheStats::default(),
             });
             self.shared.work.notify_all();
             id
@@ -492,7 +494,7 @@ impl VerifyPool {
                 let s = st.stats_mut(t.engine);
                 s.batches += 1;
                 s.jobs += n as u64;
-                s.cache_hits += t.cache_hits;
+                s.cache_hits += t.cache.hits;
                 s.faults += t.failed.len() as u64;
                 drop(st);
                 return if t.failed.is_empty() {
@@ -502,14 +504,14 @@ impl VerifyPool {
                             .into_iter()
                             .map(|o| o.expect("job completed"))
                             .collect(),
-                        cache_hits: t.cache_hits,
+                        cache: t.cache,
                     })
                 } else {
                     t.failed.sort_unstable();
                     Err(PoolError::JobsPanicked {
                         failed: t.failed,
                         completed: t.outs,
-                        cache_hits: t.cache_hits,
+                        cache: t.cache,
                     })
                 };
             }
@@ -543,9 +545,9 @@ impl VerifyPool {
     /// pure perf difference, never a token difference). Preserved as the
     /// baseline `benches/perf_engine.rs` races the pool against and as a
     /// config escape hatch (`verify_backend = spawn`). Returns the outputs
-    /// in job order plus the panel-cache hits observed (~0 by
-    /// construction).
-    pub fn run_scoped(jobs: Vec<VerifyJob>, threads: usize) -> (Vec<BlockOutput>, u64) {
+    /// in job order plus the panel-cache reuse counters observed (hits ~0
+    /// by construction).
+    pub fn run_scoped(jobs: Vec<VerifyJob>, threads: usize) -> (Vec<BlockOutput>, PanelCacheStats) {
         let n = jobs.len();
         let threads = threads.max(1).min(n.max(1));
         let mut jobs: Vec<Option<VerifyJob>> = jobs
@@ -558,30 +560,43 @@ impl VerifyPool {
             .collect();
         let mut outs: Vec<Option<BlockOutput>> = (0..n).map(|_| None).collect();
         let hits = AtomicU64::new(0);
+        let misses = AtomicU64::new(0);
+        let overwrites = AtomicU64::new(0);
+        let publish = |ws: &mut CouplingWorkspace| {
+            let s = ws.drain_cache_stats();
+            hits.fetch_add(s.hits, Ordering::Relaxed);
+            misses.fetch_add(s.misses, Ordering::Relaxed);
+            overwrites.fetch_add(s.overwrites, Ordering::Relaxed);
+        };
         if threads <= 1 {
             let mut ws = CouplingWorkspace::new();
             for (slot, job) in outs.iter_mut().zip(jobs.iter_mut()) {
                 *slot = Some(job.take().expect("job unclaimed").run(&mut ws));
             }
-            hits.fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
+            publish(&mut ws);
         } else {
             let chunk = n.div_ceil(threads);
             std::thread::scope(|scope| {
                 for (out_chunk, job_chunk) in outs.chunks_mut(chunk).zip(jobs.chunks_mut(chunk)) {
-                    let hits = &hits;
+                    let publish = &publish;
                     scope.spawn(move || {
                         let mut ws = CouplingWorkspace::new();
                         for (slot, job) in out_chunk.iter_mut().zip(job_chunk.iter_mut()) {
                             *slot = Some(job.take().expect("job unclaimed").run(&mut ws));
                         }
-                        hits.fetch_add(ws.drain_panel_cache_hits(), Ordering::Relaxed);
+                        publish(&mut ws);
                     });
                 }
             });
         }
+        drop(publish);
         (
             outs.into_iter().map(|o| o.expect("job ran")).collect(),
-            hits.into_inner(),
+            PanelCacheStats {
+                hits: hits.into_inner(),
+                misses: misses.into_inner(),
+                overwrites: overwrites.into_inner(),
+            },
         )
     }
 }
@@ -642,7 +657,7 @@ fn worker_loop(shared: Arc<PoolShared>) {
         };
         // ---- Run outside the lock; each job individually contained. ----
         let mut done: Vec<(usize, Option<BlockOutput>)> = Vec::with_capacity(claimed.len());
-        let mut hits = 0u64;
+        let mut stats = PanelCacheStats::default();
         for (i, job) in claimed {
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 shared.trip_injected_fault();
@@ -652,16 +667,16 @@ fn worker_loop(shared: Arc<PoolShared>) {
             if out.is_none() {
                 // Scratch state after an unwind is unspecified; caches are
                 // value-keyed, so a fresh workspace only costs warm-up.
-                hits += ws.drain_panel_cache_hits();
+                stats.merge(ws.drain_cache_stats());
                 ws = CouplingWorkspace::new();
             }
             done.push((i, out));
         }
-        hits += ws.drain_panel_cache_hits();
+        stats.merge(ws.drain_cache_stats());
         // ---- Publish results on the ticket (panic-free under lock). ----
         let mut st = shared.lock();
         if let Some(t) = st.ticket_mut(ticket_id) {
-            t.cache_hits += hits;
+            t.cache.merge(stats);
             for (i, out) in done {
                 match out {
                     Some(o) => t.outs[i] = Some(o),
@@ -899,12 +914,12 @@ mod tests {
             .collect();
         let out = pool.run_batch(4, jobs).expect("no faults");
         assert!(
-            out.cache_hits > 0,
+            out.cache.hits > 0,
             "draft-phase panels must be reused on worker threads"
         );
         assert_eq!(
             pool.engine_stats(4).cache_hits,
-            out.cache_hits,
+            out.cache.hits,
             "per-engine stats must attribute the same hits"
         );
     }
@@ -953,7 +968,7 @@ mod tests {
         };
         let pool = VerifyPool::new(3);
         let a = pool.run_batch(0, mk_batch()).expect("no faults").outputs;
-        let (b, _hits) = VerifyPool::run_scoped(mk_batch(), 3);
+        let (b, _stats) = VerifyPool::run_scoped(mk_batch(), 3);
         assert_eq!(a, b);
     }
 

@@ -32,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod lp;
 pub mod model;
+pub mod perf;
 /// PJRT bridge; needs the vendored `xla` crate — see Cargo.toml `pjrt`
 /// feature notes. The default (offline) build runs entirely on the native
 /// Rust mirror in [`model`].

@@ -14,10 +14,18 @@
 //! * [`CouplingWorkspace`] owns reusable flat scratch buffers — races and
 //!   rejection cascades make **no heap allocations** beyond their mandated
 //!   outputs once the workspace has warmed up.
-//! * Exponentials are materialized once per race into a single row-major
-//!   **panel** (`panel[row * support_len + j]`), with the per-`(slot,
-//!   draft)` SplitMix64 prefix hoisted via [`CounterRng::lane`] so each
-//!   item costs one mix round instead of three.
+//! * Exponentials are materialized once per race into a single
+//!   **item-major panel** (`panel[j * rows + row]`): races visit items
+//!   outer and lanes inner, so the panel's memory order *is* the read
+//!   order — at the paper's hot shape (K=8, top-k 50) one item's column
+//!   of 8 `f64`s is one 64-byte cache line, where the previous row-major
+//!   layout cost K strided touches per item. The per-`(slot, draft)`
+//!   SplitMix64 prefix is hoisted via [`CounterRng::lane`] so each item
+//!   costs one mix round instead of three. (Layout audit note: the panel
+//!   is the only k×items buffer the races stride through; the
+//!   [`ResidualScratch`] mass buffer must stay dense/item-indexed because
+//!   the rejection cascades read `mass[token]` by raw token id — the
+//!   scalar parity contract pins that shape.)
 //! * Races iterate a **sparse support**: the ascending union
 //!   `supp(p) ∪ supp(q)` (resp. the union over participating drafts).
 //!   This is *exact*, not approximate — a zero-mass symbol is skipped by
@@ -35,9 +43,12 @@
 //!   verification race on the same workspace at the same coordinates (the
 //!   coupled verify step — the draft/verifier coordinate overlap *is* the
 //!   paper's shared-randomness coupling) reassembles its panel from the
-//!   cache instead of re-hashing. Cache entries are keyed by exactly the
-//!   value that determines the variates, so reuse is structurally
-//!   bit-exact — a hit and a miss produce identical panels.
+//!   cache instead of re-hashing. The cache is **leaky** (see "Leaky
+//!   panel-cache contract" below): a fixed array of direct-mapped slots
+//!   over flat backing storage, overwrite on collision. Entries are keyed
+//!   by exactly the value that determines the variates, so reuse is
+//!   structurally bit-exact — a hit, a miss, and an overwritten entry all
+//!   produce identical panels.
 //! * The same reuse works **across threads** via [`PanelSlice`]: the
 //!   engine's draft phase records each race's evaluated exponentials into
 //!   a per-sequence, `Send`-able slice
@@ -65,31 +76,63 @@
 //!    variate is a pure function of `(key, item)`;
 //!    `CounterLane::key` documents that contract).
 //! 3. **Install.** The worker that claims the job calls
-//!    `adopt_panel_slice` *before* verification, moving the recorded rows
-//!    into its workspace [`PanelCache`] (vector swap, no re-hash, no
-//!    copy of the variates).
+//!    `adopt_panel_slice` *before* verification, copying each recorded
+//!    row into its direct-mapped [`PanelCache`] slot (a bounded
+//!    `memcpy` into flat storage — no re-hash, no allocation, and no
+//!    capacity growth: rows longer than a slot store their ascending
+//!    prefix, rows landing on an occupied slot overwrite it).
 //! 4. **Reuse.** Verification races at the same `(slot, lane)`
 //!    coordinates find the rows by key and merge cached items into their
 //!    panels ([`RaceScratch::fill_panel`]), counting one panel-cache hit
 //!    per merged row — [`CouplingWorkspace::panel_cache_hits`] is the
 //!    observable the engine aggregates into its metrics and tests assert
-//!    on.
+//!    on (misses and collision overwrites travel alongside it in
+//!    [`PanelCacheStats`]).
 //! 5. **Recycle.** `adopt_panel_slice` hands the spent container back:
-//!    the recorded rows move into the cache and the buffers they displace
-//!    come back inside the same [`PanelSlice`] as *spare* row capacity.
-//!    The consumer ships the spent slice to the recording engine's
-//!    [`SliceRecycler`] (an mpsc return channel; each verify job carries
-//!    the sender), where the next block's [`SliceRecycler::lease`] hands
-//!    it back to the draft phase. [`PanelSlice::record_race`] pops spare
-//!    rows before allocating, so steady-state draft-phase recording makes
-//!    **no heap allocations** — the cross-thread equivalent of the old
-//!    in-workspace warm path. Recycling moves only buffer *capacity*,
-//!    never recorded values; a lost or late return degrades to a fresh
-//!    allocation, not a wrong panel.
+//!    the recorded values are copied into the cache and the rows' own
+//!    buffers come back inside the same [`PanelSlice`] as *spare* row
+//!    capacity (one spare pair per adopted row). The consumer ships the
+//!    spent slice to the recording engine's [`SliceRecycler`] (an mpsc
+//!    return channel; each verify job carries the sender), where the
+//!    next block's [`SliceRecycler::lease`] hands it back to the draft
+//!    phase. [`PanelSlice::record_race`] pops spare rows before
+//!    allocating, so steady-state draft-phase recording makes **no heap
+//!    allocations** — the cross-thread equivalent of the in-workspace
+//!    warm path. Recycling moves only buffer *capacity*, never recorded
+//!    values; a lost or late return degrades to a fresh allocation, not
+//!    a wrong panel.
 //!
 //! A hit can never change an outcome — key equality implies variate
 //! equality — so the handoff is a pure perf transport; adversarial slices
 //! (wrong sequence, stale block) degrade to misses, not corruption.
+//!
+//! # Leaky panel-cache contract
+//!
+//! The cache follows the "leaky" design from the BDD-repo perf playbook:
+//! reuse is an optimization, never correctness, so the cache is allowed
+//! to *lose* entries at any time and for any reason. Concretely:
+//!
+//! * **Fixed size, direct-mapped.** [`PANEL_CACHE_SLOTS`] slots indexed
+//!   by the low bits of the lane key (already a full SplitMix64 mix —
+//!   every bit is avalanche-mixed, so no second hash is needed), each
+//!   backed by a [`PANEL_CACHE_SLOT_CAP`]-item region of two flat
+//!   arrays. A probe is one key compare plus two contiguous loads; there
+//!   is no probing chain, no linked entries, and no per-entry heap
+//!   allocation to chase.
+//! * **Overwrite on collision.** Two live keys mapping to one slot simply
+//!   take turns; the loser's next read is a miss that recomputes its
+//!   variates (bit-identical by purity of `(key, item)`). Collision
+//!   overwrites are counted ([`PanelCacheStats::overwrites`]) so the
+//!   engine can see thrash, but nothing is ever rehoused or resized.
+//! * **Prefix truncation.** A recorded row longer than a slot keeps only
+//!   its first [`PANEL_CACHE_SLOT_CAP`] (ascending) items; the panel
+//!   merge computes whatever the cache does not carry. The slot size
+//!   covers the paper's hot shape (top-k 50 < 64) with a full line-pair
+//!   of values.
+//! * **Bounded memory, structurally.** The backing arrays are sized once
+//!   in [`PanelCache::new`] and never grow — adopting an arbitrarily
+//!   large slice cannot inflate the workspace (the old ring's
+//!   `ensure_capacity` ratchet is gone; a regression test pins this).
 //!
 //! # Kernel contract
 //!
@@ -166,80 +209,171 @@ use crate::stats::rng::CounterRng;
 use super::gls::{BilateralOutcome, GlsOutcome};
 use super::types::{BlockInput, BlockOutput, Categorical, VerifierKind, FAULT_MARKER_TOKEN};
 
-/// Capacity of the draft-phase panel cache (ring replacement). Sized to
-/// hold a few blocks' worth of `(slot, lane)` rows; eviction only costs
+/// Number of direct-mapped slots in the leaky [`PanelCache`]. Power of
+/// two (the slot index is `key & (SLOTS - 1)`; the key is already a full
+/// SplitMix64 mix, so its low bits are uniform). Sized to hold several
+/// blocks' worth of `(slot, lane)` rows; a collision only costs
 /// recomputation, never correctness.
-const PANEL_CACHE_CAP: usize = 128;
+pub const PANEL_CACHE_SLOTS: usize = 128;
 
-/// One memoized `(slot, draft)` row of exponentials: `values[j]` is the
-/// Exp(1) variate at item `items[j]` (ascending) for the lane identified
-/// by `key` ([`crate::stats::rng::CounterLane::key`]).
-#[derive(Debug, Default)]
-struct CacheEntry {
-    key: u64,
-    items: Vec<u32>,
-    values: Vec<f64>,
+/// Items each slot can memoize. A row longer than this keeps its first
+/// `PANEL_CACHE_SLOT_CAP` (ascending) items — a *prefix*, still valid for
+/// merging; missing items are recomputed. Covers the paper's hot shape
+/// (top-k 50) with headroom: one slot's values span 8 cache lines read
+/// contiguously, instead of a heap `Vec` found by linear scan.
+pub const PANEL_CACHE_SLOT_CAP: usize = 64;
+
+/// Slot-occupancy sentinel for [`PanelCache::lens`]. Distinct from every
+/// real length (≤ [`PANEL_CACHE_SLOT_CAP`]) so an empty slot can never
+/// false-hit, whatever key bits it holds.
+const SLOT_EMPTY: u32 = u32::MAX;
+
+/// Running reuse counters of one workspace's [`PanelCache`]: panel rows
+/// served from cache (`hits`), rows that had to be fully recomputed
+/// (`misses`), and live entries displaced by a different key mapping to
+/// the same slot (`overwrites` — the "leak" actually leaking). Purely
+/// observational; the engine drains them into `EngineMetrics` per block.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PanelCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub overwrites: u64,
 }
 
-/// Memo of recently evaluated draft-phase exponential rows, keyed by the
-/// lane prefix. Since every variate is a pure function of `(key, item)`,
-/// any entry with a matching key holds valid values for the items it
-/// lists — reuse can never change an outcome, only skip hash+`ln` work.
+impl PanelCacheStats {
+    /// Fold another drain's counters into this one.
+    pub fn merge(&mut self, other: PanelCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.overwrites += other.overwrites;
+    }
+}
+
+/// Leaky memo of recently evaluated draft-phase exponential rows, keyed
+/// by the lane prefix ([`CounterLane::key`]). Since every variate is a
+/// pure function of `(key, item)`, any slot with a matching key holds
+/// valid values for the items it lists — reuse can never change an
+/// outcome, only skip hash+`ln` work — and therefore the cache is free to
+/// drop entries whenever convenient: fixed [`PANEL_CACHE_SLOTS`]
+/// direct-mapped slots over flat `items`/`values` arrays, overwrite on
+/// collision, prefix-truncate on oversized rows. See the module-level
+/// "Leaky panel-cache contract".
+///
+/// [`CounterLane::key`]: crate::stats::rng::CounterLane::key
 struct PanelCache {
-    entries: Vec<CacheEntry>,
-    next: usize,
-    /// Ring capacity: starts at [`PANEL_CACHE_CAP`] and grows to fit
-    /// adopted panel slices (see [`PanelCache::ensure_capacity`]) so a
-    /// big-`K·L` block's handoff is never self-evicting.
-    cap: usize,
+    /// Per-slot lane key; only meaningful where `lens[slot] != SLOT_EMPTY`.
+    keys: Vec<u64>,
+    /// Per-slot recorded length, or [`SLOT_EMPTY`].
+    lens: Vec<u32>,
+    /// Flat ascending item ids: slot `s` owns `items[s*CAP .. (s+1)*CAP]`.
+    items: Vec<u32>,
+    /// Flat Exp(1) values, same geometry as `items`.
+    values: Vec<f64>,
+    /// Live entries displaced by a colliding key (not same-key refresh).
+    overwrites: u64,
 }
 
 impl PanelCache {
     fn new() -> Self {
-        Self { entries: Vec::new(), next: 0, cap: PANEL_CACHE_CAP }
-    }
-
-    fn find(&self, key: u64) -> Option<&CacheEntry> {
-        self.entries.iter().find(|e| e.key == key)
-    }
-
-    /// Claim a (possibly recycled) entry for `key`, cleared and ready to
-    /// record a race's evaluated items.
-    fn begin(&mut self, key: u64) -> &mut CacheEntry {
-        if self.entries.len() < self.cap {
-            self.entries.push(CacheEntry { key, items: Vec::new(), values: Vec::new() });
-            self.entries.last_mut().expect("just pushed")
-        } else {
-            let pos = self.next;
-            self.next = (self.next + 1) % self.cap;
-            let e = &mut self.entries[pos];
-            e.key = key;
-            e.items.clear();
-            e.values.clear();
-            e
+        Self {
+            keys: vec![0; PANEL_CACHE_SLOTS],
+            lens: vec![SLOT_EMPTY; PANEL_CACHE_SLOTS],
+            items: vec![0; PANEL_CACHE_SLOTS * PANEL_CACHE_SLOT_CAP],
+            values: vec![0.0; PANEL_CACHE_SLOTS * PANEL_CACHE_SLOT_CAP],
+            overwrites: 0,
         }
     }
 
-    /// Grow the ring so at least `rows` freshly installed entries survive
-    /// until they are read. A `K·L` panel slice larger than the default
-    /// capacity would otherwise wrap the ring during adoption and evict
-    /// its own earliest rows before verification races them — wasted
-    /// recording, never an incorrect outcome, but worth preventing.
-    fn ensure_capacity(&mut self, rows: usize) {
-        self.cap = self.cap.max(rows.saturating_add(rows / 2));
+    #[inline]
+    fn slot_of(key: u64) -> usize {
+        (key & (PANEL_CACHE_SLOTS as u64 - 1)) as usize
     }
 
-    /// Install an externally recorded row (the panel-slice handoff),
-    /// swapping its buffers into a (possibly recycled) cache entry — no
-    /// re-hash, no copy of the variates. Returns the displaced buffers
-    /// (the entry's previous allocation, or empty on a cold entry) so the
-    /// caller can recycle them back to the recording side.
-    fn adopt(&mut self, mut row: CacheEntry) -> CacheEntry {
-        let e = self.begin(row.key);
-        std::mem::swap(&mut e.items, &mut row.items);
-        std::mem::swap(&mut e.values, &mut row.values);
-        row
+    /// Probe for `key`: one compare, then two contiguous flat-array
+    /// slices. Returns the memoized `(items, values)` prefix on a hit.
+    #[inline]
+    fn find(&self, key: u64) -> Option<(&[u32], &[f64])> {
+        let s = Self::slot_of(key);
+        if self.lens[s] != SLOT_EMPTY && self.keys[s] == key {
+            let len = self.lens[s] as usize;
+            let base = s * PANEL_CACHE_SLOT_CAP;
+            Some((&self.items[base..base + len], &self.values[base..base + len]))
+        } else {
+            None
+        }
     }
+
+    /// Claim `key`'s slot for recording, overwriting any colliding entry,
+    /// and return a bounds-checked writer over its flat region.
+    fn begin(&mut self, key: u64) -> SlotWriter<'_> {
+        let s = Self::slot_of(key);
+        if self.lens[s] != SLOT_EMPTY && self.keys[s] != key {
+            self.overwrites += 1;
+        }
+        self.keys[s] = key;
+        self.lens[s] = 0;
+        let base = s * PANEL_CACHE_SLOT_CAP;
+        SlotWriter {
+            items: &mut self.items[base..base + PANEL_CACHE_SLOT_CAP],
+            values: &mut self.values[base..base + PANEL_CACHE_SLOT_CAP],
+            len: &mut self.lens[s],
+        }
+    }
+
+    /// Install an externally recorded row (the panel-slice handoff):
+    /// a bounded copy of its ascending prefix into `key`'s slot. Rows
+    /// longer than a slot truncate (the merge recomputes the tail); rows
+    /// colliding with a live entry overwrite it.
+    fn adopt(&mut self, key: u64, items: &[u32], values: &[f64]) {
+        debug_assert_eq!(items.len(), values.len());
+        let s = Self::slot_of(key);
+        if self.lens[s] != SLOT_EMPTY && self.keys[s] != key {
+            self.overwrites += 1;
+        }
+        let n = items.len().min(PANEL_CACHE_SLOT_CAP);
+        let base = s * PANEL_CACHE_SLOT_CAP;
+        self.items[base..base + n].copy_from_slice(&items[..n]);
+        self.values[base..base + n].copy_from_slice(&values[..n]);
+        self.keys[s] = key;
+        self.lens[s] = n as u32;
+    }
+
+    /// Take and reset the collision-overwrite counter.
+    fn drain_overwrites(&mut self) -> u64 {
+        std::mem::take(&mut self.overwrites)
+    }
+}
+
+/// In-progress recording into one [`PanelCache`] slot: appends until the
+/// slot region is full, then silently drops the tail (prefix truncation —
+/// the leaky contract makes that safe).
+struct SlotWriter<'a> {
+    items: &'a mut [u32],
+    values: &'a mut [f64],
+    len: &'a mut u32,
+}
+
+impl SlotWriter<'_> {
+    #[inline]
+    fn push(&mut self, item: u32, value: f64) {
+        let l = *self.len as usize;
+        if l < PANEL_CACHE_SLOT_CAP {
+            self.items[l] = item;
+            self.values[l] = value;
+            *self.len = (l + 1) as u32;
+        }
+    }
+}
+
+/// One recorded `(slot, draft)` row of exponentials in a [`PanelSlice`]:
+/// `values[j]` is the Exp(1) variate at item `items[j]` (ascending) for
+/// the lane identified by `key`
+/// ([`crate::stats::rng::CounterLane::key`]).
+#[derive(Debug, Default)]
+struct PanelRow {
+    key: u64,
+    items: Vec<u32>,
+    values: Vec<f64>,
 }
 
 /// A `Send`-able record of draft-phase exponential rows for *one*
@@ -264,10 +398,10 @@ impl PanelCache {
 #[derive(Debug, Default)]
 pub struct PanelSlice {
     /// Recorded `(slot, draft)` rows awaiting adoption.
-    rows: Vec<CacheEntry>,
+    rows: Vec<PanelRow>,
     /// Recycled row buffers (cleared-but-capacitated) awaiting reuse by
     /// [`PanelSlice::record_race`].
-    spare: Vec<CacheEntry>,
+    spare: Vec<PanelRow>,
 }
 
 impl PanelSlice {
@@ -508,17 +642,28 @@ struct RaceScratch {
     support: Vec<u32>,
     /// Occupancy bitset used to build `support` (one bit per item).
     mask: Vec<u64>,
-    /// Row-major exponential panel: `panel[row * support.len() + j]` is the
-    /// Exp(1) variate of panel row `row` at item `support[j]`.
+    /// Item-major exponential panel: `panel[j * rows + row]` is the
+    /// Exp(1) variate of panel row `row` at item `support[j]` — the
+    /// layout the j-outer/lane-inner races read contiguously.
     panel: Vec<f64>,
+    /// Per-row hoisted lane prefixes for the panel being filled.
+    lanes: Vec<crate::stats::rng::CounterLane>,
+    /// Per-row cache-slot base offset into the [`PanelCache`] flat
+    /// arrays, or `usize::MAX` for a miss (row fully recomputed).
+    row_base: Vec<usize>,
+    /// Per-row cached-prefix length / merge cursor pair.
+    row_len: Vec<u32>,
+    row_cur: Vec<u32>,
     /// Per-lane running minima and argmins.
     best: Vec<f64>,
     arg: Vec<usize>,
-    /// Panel rows assembled from cache/handoff entries instead of being
-    /// re-hashed (one count per merged row). Purely observational — the
-    /// engine aggregates it into its metrics and the handoff tests assert
-    /// it fires on worker threads.
+    /// Panel rows assembled (at least partially) from cache/handoff
+    /// entries instead of being re-hashed, and rows recomputed from
+    /// scratch. Purely observational — the engine aggregates them into
+    /// its metrics and the handoff tests assert hits fire on worker
+    /// threads.
     cache_hits: u64,
+    cache_misses: u64,
 }
 
 impl RaceScratch {
@@ -527,9 +672,14 @@ impl RaceScratch {
             support: Vec::new(),
             mask: Vec::new(),
             panel: Vec::new(),
+            lanes: Vec::new(),
+            row_base: Vec::new(),
+            row_len: Vec::new(),
+            row_cur: Vec::new(),
             best: Vec::new(),
             arg: Vec::new(),
             cache_hits: 0,
+            cache_misses: 0,
         }
     }
 
@@ -588,12 +738,21 @@ impl RaceScratch {
         }
     }
 
-    /// Fill `rows` panel rows of exponentials over the current support;
-    /// panel row `r` uses the draft coordinate `lane_of(r)`. Entries are
-    /// bit-exact with `rng.exponential(slot, lane_of(r), item)` — rows
-    /// whose lane prefix is memoized in `cache` (a draft-phase race at the
-    /// same coordinates) are merged from the cached values, the rest are
-    /// computed; both sources yield identical bits by construction.
+    /// Fill an item-major panel (`panel[j * rows + r]`) of exponentials
+    /// over the current support; panel row `r` uses the draft coordinate
+    /// `lane_of(r)`. Entries are bit-exact with
+    /// `rng.exponential(slot, lane_of(r), item)` — rows whose lane prefix
+    /// is memoized in `cache` (a draft-phase race at the same
+    /// coordinates) merge the cached values in, the rest are computed;
+    /// both sources yield identical bits by construction, and evaluation
+    /// *order* is free to differ from the scalar path because every
+    /// variate is a pure function of `(key, item)` (only race *visit*
+    /// order is contractual — rule 2).
+    ///
+    /// Generation runs j-outer/row-inner so writes are sequential in the
+    /// item-major layout; the per-row lane prefixes are hoisted into
+    /// `lanes` once, and each cached row keeps its own two-pointer merge
+    /// cursor (`row_cur`) that only ever advances as `j` ascends.
     fn fill_panel(
         &mut self,
         rng: &CounterRng,
@@ -602,32 +761,50 @@ impl RaceScratch {
         mut lane_of: impl FnMut(usize) -> u64,
         cache: &PanelCache,
     ) {
-        self.panel.clear();
-        self.panel.reserve(rows * self.support.len());
+        self.lanes.clear();
+        self.row_base.clear();
+        self.row_len.clear();
+        self.row_cur.clear();
         for r in 0..rows {
             let lane = rng.lane(slot, lane_of(r));
             match cache.find(lane.key()) {
-                Some(hit) => {
+                Some((items, _)) => {
                     self.cache_hits += 1;
-                    // Two-pointer merge over two ascending item lists:
-                    // cached items are copied, the rest are evaluated.
-                    let mut ci = 0usize;
-                    for &i in &self.support {
-                        while ci < hit.items.len() && hit.items[ci] < i {
-                            ci += 1;
-                        }
-                        if ci < hit.items.len() && hit.items[ci] == i {
-                            self.panel.push(hit.values[ci]);
-                        } else {
-                            self.panel.push(lane.exponential(i as u64));
-                        }
-                    }
+                    self.row_base.push(PanelCache::slot_of(lane.key()) * PANEL_CACHE_SLOT_CAP);
+                    self.row_len.push(items.len() as u32);
                 }
                 None => {
-                    for &i in &self.support {
-                        self.panel.push(lane.exponential(i as u64));
-                    }
+                    self.cache_misses += 1;
+                    self.row_base.push(usize::MAX);
+                    self.row_len.push(0);
                 }
+            }
+            self.row_cur.push(0);
+            self.lanes.push(lane);
+        }
+        self.panel.clear();
+        self.panel.reserve(rows * self.support.len());
+        for &i in &self.support {
+            for r in 0..rows {
+                let base = self.row_base[r];
+                let mut cached = f64::NAN;
+                let mut have = false;
+                if base != usize::MAX {
+                    // Two-pointer merge against the slot's ascending
+                    // cached prefix: copy on item match, compute the rest.
+                    let len = self.row_len[r];
+                    let mut c = self.row_cur[r];
+                    while c < len && cache.items[base + c as usize] < i {
+                        c += 1;
+                    }
+                    if c < len && cache.items[base + c as usize] == i {
+                        cached = cache.values[base + c as usize];
+                        have = true;
+                    }
+                    self.row_cur[r] = c;
+                }
+                let v = if have { cached } else { self.lanes[r].exponential(i as u64) };
+                self.panel.push(v);
             }
         }
     }
@@ -650,8 +827,8 @@ impl RaceScratch {
     {
         assert!(!participants.is_empty());
         self.build_support(n, participants.iter().map(|&k| dist_of(k)));
-        self.fill_panel(rng, slot, participants.len(), |r| participants[r] as u64, cache);
-        let s = self.support.len();
+        let rows = participants.len();
+        self.fill_panel(rng, slot, rows, |r| participants[r] as u64, cache);
         let mut best = f64::INFINITY;
         let mut arg = 0usize;
         for (j, &iu) in self.support.iter().enumerate() {
@@ -661,7 +838,9 @@ impl RaceScratch {
                 if qi <= 0.0 {
                     continue;
                 }
-                let v = self.panel[r * s + j] / qi;
+                // Item-major panel: this inner loop walks one contiguous
+                // column of `rows` values.
+                let v = self.panel[j * rows + r] / qi;
                 if v < best {
                     best = v;
                     arg = i;
@@ -830,7 +1009,7 @@ impl CouplingWorkspace {
     /// [`PanelSlice::record_race`] + [`CouplingWorkspace::adopt_panel_slice`].)
     pub fn sample_race(&mut self, d: &Categorical, rng: &CounterRng, slot: u64, draft: u64) -> usize {
         let lane = rng.lane(slot, draft);
-        let entry = self.cache.begin(lane.key());
+        let mut entry = self.cache.begin(lane.key());
         let mut best = f64::INFINITY;
         let mut arg = 0usize;
         let mut consider = |i: usize, p: f64| {
@@ -838,8 +1017,7 @@ impl CouplingWorkspace {
                 return;
             }
             let e = lane.exponential(i as u64);
-            entry.items.push(i as u32);
-            entry.values.push(e);
+            entry.push(i as u32, e);
             let v = e / p;
             if v < best {
                 best = v;
@@ -863,18 +1041,23 @@ impl CouplingWorkspace {
 
     /// Install a [`PanelSlice`] recorded by the engine's draft phase into
     /// this workspace's panel cache — step 3 of the handoff protocol (see
-    /// module docs). Buffers are moved, not copied; subsequent races at
-    /// the recorded `(slot, lane)` coordinates merge from the cache.
+    /// module docs). Each row's ascending prefix is copied into its
+    /// direct-mapped slot (a bounded `memcpy`, never an allocation or a
+    /// capacity change); subsequent races at the recorded `(slot, lane)`
+    /// coordinates merge from the cache. Rows colliding in one slot
+    /// overwrite each other and rows longer than a slot truncate — both
+    /// degrade to recomputation, never to a wrong panel (the leaky
+    /// contract).
     ///
-    /// Returns the spent container: its recorded rows have moved into the
-    /// cache, and the buffers they displaced ride back as spare capacity —
-    /// ship it to the recording engine's [`SliceRecycler`] (step 5) so the
-    /// next block's draft-phase recording reuses the allocations.
+    /// Returns the spent container: the recorded values now live in the
+    /// cache, and the rows' own buffers ride back as spare capacity (one
+    /// pair per adopted row) — ship it to the recording engine's
+    /// [`SliceRecycler`] (step 5) so the next block's draft-phase
+    /// recording reuses the allocations.
     pub fn adopt_panel_slice(&mut self, mut slice: PanelSlice) -> PanelSlice {
-        self.cache.ensure_capacity(slice.rows.len());
         for row in slice.rows.drain(..) {
-            let displaced = self.cache.adopt(row);
-            slice.spare.push(displaced);
+            self.cache.adopt(row.key, &row.items, &row.values);
+            slice.spare.push(row);
         }
         slice
     }
@@ -891,6 +1074,17 @@ impl CouplingWorkspace {
     #[inline]
     pub fn drain_panel_cache_hits(&mut self) -> u64 {
         std::mem::take(&mut self.race.cache_hits)
+    }
+
+    /// Take and reset all panel-cache reuse counters — hits, misses, and
+    /// collision overwrites — as one [`PanelCacheStats`]. The pool/engine
+    /// drain this once per batch into `EngineMetrics`.
+    pub fn drain_cache_stats(&mut self) -> PanelCacheStats {
+        PanelCacheStats {
+            hits: std::mem::take(&mut self.race.cache_hits),
+            misses: std::mem::take(&mut self.race.cache_misses),
+            overwrites: self.cache.drain_overwrites(),
+        }
     }
 
     /// Dispatch `verify_block` for any registered verifier kind onto this
@@ -944,7 +1138,6 @@ impl CouplingWorkspace {
         let Self { race, cache, .. } = self;
         race.build_support(p.len(), [p, q].into_iter());
         race.fill_panel(rng, slot, k, |r| r as u64, cache);
-        let s = race.support.len();
 
         let mut y_best = f64::INFINITY;
         let mut y_arg = 0usize;
@@ -958,7 +1151,7 @@ impl CouplingWorkspace {
             let qi = q.prob(i);
             let pi = p.prob(i);
             for kk in 0..k {
-                let e = race.panel[kk * s + j];
+                let e = race.panel[j * k + kk];
                 if qi > 0.0 {
                     let v = e / qi;
                     if v < y_best {
@@ -999,7 +1192,6 @@ impl CouplingWorkspace {
         let Self { race, cache, .. } = self;
         race.build_support(n, ps.iter().chain(std::iter::once(q)));
         race.fill_panel(rng, slot, k, |r| r as u64, cache);
-        let s = race.support.len();
 
         let mut y_best = f64::INFINITY;
         let mut y_arg = 0usize;
@@ -1016,7 +1208,7 @@ impl CouplingWorkspace {
                 if qi <= 0.0 && pi <= 0.0 {
                     continue;
                 }
-                let e = race.panel[kk * s + j];
+                let e = race.panel[j * k + kk];
                 if qi > 0.0 {
                     let v = e / qi;
                     if v < y_best {
@@ -1056,8 +1248,8 @@ impl CouplingWorkspace {
         assert!(k_a >= 1 && k_b >= 1);
         let Self { race, cache, .. } = self;
         race.build_support(p.len(), [p, q].into_iter());
-        race.fill_panel(rng, slot, k_a * k_b, |r| r as u64, cache);
-        let s = race.support.len();
+        let rows = k_a * k_b;
+        race.fill_panel(rng, slot, rows, |r| r as u64, cache);
 
         // best/arg lanes: [0, k_a) for X, [k_a, k_a + k_b) for Y.
         race.best.clear();
@@ -1071,7 +1263,7 @@ impl CouplingWorkspace {
             let qi = q.prob(i);
             for k in 0..k_a {
                 for m in 0..k_b {
-                    let e = race.panel[(k * k_b + m) * s + j];
+                    let e = race.panel[j * rows + (k * k_b + m)];
                     if pi > 0.0 {
                         let v = e / pi;
                         if v < race.best[k] {
@@ -1469,15 +1661,17 @@ impl CouplingWorkspace {
     }
 }
 
-/// Fill `panel` with a row-major `rows × items.len()` block of Exp(1)
-/// variates over a *sparse* item set: entry `[r * items.len() + j]` is the
-/// variate at RNG coordinates `(slot, lane_of(r), items[j])`. The
+/// Fill `panel` with an **item-major** `items.len() × rows` block of
+/// Exp(1) variates over a *sparse* item set: entry `[j * rows + r]` is
+/// the variate at RNG coordinates `(slot, lane_of(r), items[j])` — the
+/// layout a j-outer/row-inner race reads as contiguous columns. The
 /// per-(slot, lane) prefix is hoisted once per row ([`CounterRng::lane`]),
 /// so each variate costs a single mix round — the same trick every race in
 /// [`CouplingWorkspace`] uses, exposed for other Gumbel-race consumers (the
 /// compression codec races over its usable-weight support with it).
 /// Bit-exact with calling `rng.exponential(slot, lane_of(r), items[j])`
-/// per entry.
+/// per entry — evaluation order is free because each variate is a pure
+/// function of its coordinates.
 pub fn fill_exp_panel(
     panel: &mut Vec<f64>,
     rng: &CounterRng,
@@ -1488,10 +1682,27 @@ pub fn fill_exp_panel(
 ) {
     panel.clear();
     panel.reserve(rows * items.len());
-    for r in 0..rows {
-        let lane = rng.lane(slot, lane_of(r));
+    let mut lanes = [crate::stats::rng::CounterLane::default(); 16];
+    if rows <= lanes.len() {
+        // Common case (rows = K ≤ 16): hoist the lanes into a stack
+        // array and emit in write order — sequential stores, no heap.
+        for (r, lane) in lanes.iter_mut().enumerate().take(rows) {
+            *lane = rng.lane(slot, lane_of(r));
+        }
         for &i in items {
-            panel.push(lane.exponential(i as u64));
+            for lane in lanes.iter().take(rows) {
+                panel.push(lane.exponential(i as u64));
+            }
+        }
+    } else {
+        // Arbitrary row counts: fill column-by-column re-deriving lanes
+        // per row (rows > 16 is outside every current caller's shape).
+        panel.resize(rows * items.len(), 0.0);
+        for r in 0..rows {
+            let lane = rng.lane(slot, lane_of(r));
+            for (j, &i) in items.iter().enumerate() {
+                panel[j * rows + r] = lane.exponential(i as u64);
+            }
         }
     }
 }
@@ -1526,12 +1737,24 @@ mod tests {
         let rng = CounterRng::new(0xFE11);
         let items: Vec<u32> = vec![0, 3, 7, 64, 1000];
         let mut panel = Vec::new();
+        // Item-major layout: entry [j * rows + r].
         fill_exp_panel(&mut panel, &rng, 42, 3, &items, |r| 10 + r as u64);
         assert_eq!(panel.len(), 3 * items.len());
         for r in 0..3 {
             for (j, &i) in items.iter().enumerate() {
                 let want = rng.exponential(42, 10 + r as u64, i as u64);
-                assert_eq!(panel[r * items.len() + j].to_bits(), want.to_bits());
+                assert_eq!(panel[j * 3 + r].to_bits(), want.to_bits());
+            }
+        }
+        // More rows than the stack-hoisted lane array (the fallback
+        // branch) must produce the identical layout and bits.
+        let rows = 33;
+        fill_exp_panel(&mut panel, &rng, 7, rows, &items, |r| r as u64);
+        assert_eq!(panel.len(), rows * items.len());
+        for r in 0..rows {
+            for (j, &i) in items.iter().enumerate() {
+                let want = rng.exponential(7, r as u64, i as u64);
+                assert_eq!(panel[j * rows + r].to_bits(), want.to_bits());
             }
         }
         // Refill reuses the buffer and replaces the contents.
@@ -1597,10 +1820,11 @@ mod tests {
         let mut race = RaceScratch::new();
         race.build_support(4, std::iter::once(&p));
         race.fill_panel(&rng, 11, 3, |r| r as u64, &PanelCache::new());
+        // Item-major: entry [j * rows + r].
         for k in 0..3u64 {
             for i in 0..4u64 {
                 assert_eq!(
-                    race.panel[(k as usize) * 4 + i as usize],
+                    race.panel[(i as usize) * 3 + k as usize],
                     rng.exponential(11, k, i)
                 );
             }
@@ -1704,14 +1928,15 @@ mod tests {
     }
 
     #[test]
-    fn panel_cache_ring_eviction_stays_exact() {
-        // Overflow the cache capacity, then race: stale/evicted entries
-        // must never corrupt outcomes.
+    fn panel_cache_collision_overwrites_stay_exact() {
+        // Record far more rows than slots so keys collide and overwrite
+        // each other, then race: overwritten/stale entries must never
+        // corrupt outcomes, and the overwrite counter must see the leak.
         let mut gen = XorShift128::new(91);
         let d = testkit::gen_categorical(&mut gen, 25);
         let rng = CounterRng::new(4);
         let mut ws = CouplingWorkspace::new();
-        for slot in 0..(3 * PANEL_CACHE_CAP as u64) {
+        for slot in 0..(3 * PANEL_CACHE_SLOTS as u64) {
             assert_eq!(ws.sample_race(&d, &rng, slot, 1), d.sample_race(&rng, slot, 1));
         }
         let p = testkit::gen_categorical(&mut gen, 25);
@@ -1719,6 +1944,33 @@ mod tests {
             ws.sample_gls(&p, &d, 2, &rng, 5),
             gls::sample_gls_scalar(&p, &d, 2, &rng, 5)
         );
+        let stats = ws.drain_cache_stats();
+        assert!(
+            stats.overwrites > 0,
+            "3× slot count of distinct keys must collide somewhere"
+        );
+        // Draining resets every counter.
+        assert_eq!(ws.drain_cache_stats(), PanelCacheStats::default());
+    }
+
+    #[test]
+    fn rows_longer_than_a_slot_truncate_and_stay_exact() {
+        // A dense row wider than PANEL_CACHE_SLOT_CAP memoizes only its
+        // ascending prefix; the verify-side merge must recompute the tail
+        // bit-exactly (truncation is invisible except as saved work).
+        let mut gen = XorShift128::new(0x7A1);
+        let n = 3 * PANEL_CACHE_SLOT_CAP;
+        let d = testkit::gen_categorical(&mut gen, n);
+        let rng = CounterRng::new(19);
+        let mut ws = CouplingWorkspace::new();
+        assert_eq!(ws.sample_race(&d, &rng, 0, 0), d.sample_race(&rng, 0, 0));
+        let p = testkit::gen_categorical(&mut gen, n);
+        assert_eq!(
+            ws.sample_gls(&p, &d, 1, &rng, 0),
+            gls::sample_gls_scalar(&p, &d, 1, &rng, 0)
+        );
+        // The truncated row still counts as a (partial) hit.
+        assert!(ws.panel_cache_hits() > 0);
     }
 
     #[test]
@@ -1834,30 +2086,50 @@ mod tests {
     }
 
     #[test]
-    fn adopting_oversized_slice_grows_ring_and_all_rows_hit() {
-        // A slice with more rows than the default ring capacity (a big
-        // K·L block) must not evict itself during adoption: every adopted
-        // row must still be hittable afterwards.
+    fn adopting_oversized_slice_keeps_memory_bounded_and_stays_exact() {
+        // Satellite regression for the old `ensure_capacity` ratchet: a
+        // slice with more rows than the cache has slots — and rows wider
+        // than a slot — must neither grow the cache's backing storage nor
+        // change any outcome. Colliding rows overwrite (the leak), missing
+        // rows recompute; memory stays at its construction-time footprint.
         let mut gen = XorShift128::new(0xB16);
         let d = testkit::gen_sparse_categorical(&mut gen, 60, 6);
+        let wide = testkit::gen_categorical(&mut gen, 2 * PANEL_CACHE_SLOT_CAP);
         let rng = CounterRng::new(88);
         let mut slice = PanelSlice::new();
-        let rows_n = PANEL_CACHE_CAP + 40;
+        let rows_n = PANEL_CACHE_SLOTS + 40;
         let toks: Vec<usize> =
             (0..rows_n as u64).map(|slot| slice.record_race(&d, &rng, slot, 0)).collect();
+        // A handful of oversized rows ride along at disjoint slots.
+        for slot in 0..8u64 {
+            slice.record_race(&wide, &rng, 1_000 + slot, 3);
+        }
         let mut ws = CouplingWorkspace::new();
+        let keys0 = ws.cache.keys.len();
+        let (items0, values0) = (ws.cache.items.capacity(), ws.cache.values.capacity());
         ws.adopt_panel_slice(slice);
-        // Re-race every recorded coordinate: identical tokens, all from
-        // cache hits (select at lane 0 over the same distribution reads
-        // exactly the recorded cells).
+        // Re-race every recorded coordinate: identical tokens whether the
+        // row survived adoption (hit) or was overwritten by a colliding
+        // later row (recomputed miss).
         for (slot, &tok) in toks.iter().enumerate() {
             assert_eq!(ws.select_target_token(&[&d], &[0], &rng, slot as u64), tok);
         }
-        assert!(
-            ws.panel_cache_hits() >= rows_n as u64,
-            "only {} of {rows_n} adopted rows hit",
-            ws.panel_cache_hits()
+        let stats = ws.drain_cache_stats();
+        assert!(stats.hits > 0, "surviving adopted rows must hit");
+        assert!(stats.overwrites > 0, "more rows than slots must overwrite");
+        // The bounded-memory contract: adoption never grows the cache.
+        assert_eq!(ws.cache.keys.len(), keys0);
+        assert_eq!(ws.cache.lens.len(), keys0);
+        assert_eq!(ws.cache.items.capacity(), items0);
+        assert_eq!(ws.cache.values.capacity(), values0);
+        assert_eq!(ws.cache.items.len(), PANEL_CACHE_SLOTS * PANEL_CACHE_SLOT_CAP);
+        // Processing small blocks afterwards stays exact and bounded too.
+        let p = testkit::gen_sparse_categorical(&mut gen, 60, 5);
+        assert_eq!(
+            ws.sample_gls(&p, &d, 2, &rng, 7),
+            gls::sample_gls_scalar(&p, &d, 2, &rng, 7)
         );
+        assert_eq!(ws.cache.values.capacity(), values0);
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod spectr;
 pub mod specinfer;
 pub mod types;
 
-pub use kernel::{CouplingWorkspace, PanelSlice, SliceBank, SliceRecycler};
+pub use kernel::{CouplingWorkspace, PanelCacheStats, PanelSlice, SliceBank, SliceRecycler};
 pub use types::{
     BlockInput, BlockOutput, BlockVerifier, Categorical, Invariance, TokenMatrix, VerifierKind,
 };

@@ -198,7 +198,7 @@ impl CounterRng {
 
 /// A `(slot, draft)` sub-stream of [`CounterRng`] with the first two mix
 /// rounds pre-applied. Per-item evaluation costs one SplitMix64 round.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct CounterLane {
     prefix: u64,
 }

@@ -407,6 +407,75 @@ fn sample_race_support_cache_is_exact() {
 }
 
 #[test]
+fn forced_slot_collisions_stay_bit_exact_for_every_verifier() {
+    // The leaky panel cache is direct-mapped into PANEL_CACHE_SLOTS slots,
+    // so racing several times more distinct (slot, lane) lane keys than
+    // slots forces collision overwrites by pigeonhole — whatever SplitMix64
+    // does to the keys. A second pass then revisits every block, probing
+    // slots whose occupants were overwritten in between. None of it may
+    // change a token for ANY registered verifier: reuse is an optimization,
+    // recompute-on-miss is the fallback, and the scalar references are the
+    // oracle. One workspace persists across all kinds and both passes for
+    // maximal cross-pollution of the cache.
+    use gls_serve::spec::all_verifiers;
+    use gls_serve::spec::kernel::{PanelCacheStats, PANEL_CACHE_SLOTS};
+    use gls_serve::spec::single_draft::SingleDraftVerifier;
+    use gls_serve::spec::types::{BlockOutput, VerifierKind};
+
+    let scalar_reference =
+        |kind: VerifierKind, input: &BlockInput, rng: &CounterRng, slot0: u64| -> BlockOutput {
+            match kind {
+                VerifierKind::Gls => GlsVerifier::conditional().verify_block_scalar(input, rng, slot0),
+                VerifierKind::GlsStrong => GlsVerifier::strong().verify_block_scalar(input, rng, slot0),
+                VerifierKind::SpecTr => SpecTrVerifier::new().verify_block_scalar(input, rng, slot0),
+                VerifierKind::SpecInfer => {
+                    SpecInferVerifier::new().verify_block_scalar(input, rng, slot0)
+                }
+                VerifierKind::SingleDraft => {
+                    SingleDraftVerifier::new().verify_block_scalar(input, rng, slot0)
+                }
+                VerifierKind::Daliri => DaliriVerifier::new().verify_block_scalar(input, rng, slot0),
+                other => unreachable!("no scalar reference for {other:?}"),
+            }
+        };
+
+    let (k, l, n) = (4usize, 3usize, 257usize);
+    // Each block's verification keys k lanes at each of l+1 slots; size the
+    // sweep so the keyed lanes outnumber the direct-mapped slots ~3×.
+    let n_blocks = (3 * PANEL_CACHE_SLOTS) / (k * (l + 1)) + 1;
+    let mut ws = CouplingWorkspace::new();
+    let mut stats = PanelCacheStats::default();
+    let mut gen = XorShift128::new(0xC011);
+    for v in all_verifiers() {
+        let kind = v.kind();
+        // Same rng and slots for every kind: each kind probes slots the
+        // previous kind populated (same lane keys, different visit
+        // patterns) — legal reuse under the key-purity contract.
+        let rng = CounterRng::new(0xBEEF);
+        let blocks: Vec<(u64, BlockInput)> = (0..n_blocks)
+            .map(|b| {
+                let slot0 = (b * (l + 1)) as u64;
+                (slot0, random_block(&mut gen, b % 3, k, l, n, 0x9000 + b as u64))
+            })
+            .collect();
+        for pass in 0..2 {
+            for (slot0, input) in &blocks {
+                let out = ws.verify_block_kind(kind, input, &rng, *slot0);
+                let reference = scalar_reference(kind, input, &rng, *slot0);
+                assert_eq!(out, reference, "{kind:?} pass {pass} slot0 {slot0}");
+            }
+        }
+        stats.merge(ws.drain_cache_stats());
+    }
+    assert!(stats.misses > 0, "cold probes never missed — counters broken");
+    assert!(
+        stats.overwrites > 0,
+        "flooding {PANEL_CACHE_SLOTS} slots with {n_blocks} blocks/kind never collided"
+    );
+    assert!(stats.hits > 0, "revisit passes never hit a surviving row");
+}
+
+#[test]
 fn from_logits_scratch_reuse_is_exact() {
     let mut gen = XorShift128::new(0x70F);
     let mut scratch = Vec::new();
@@ -752,6 +821,20 @@ mod pool_grid {
             assert!(
                 serial_eng.metrics.panel_cache_hits > 0,
                 "{vk:?}: draft-phase panel reuse never fired serially"
+            );
+            // The miss side of the ledger flows back through both paths
+            // too: cold probes (e.g. the bonus position, which has no
+            // recorded draft panel) must surface as misses — i.e. the
+            // counters are wired, not defaulted. (Overwrite counting is
+            // pinned by the forced-collision property above and the
+            // kernel's own unit suite.)
+            assert!(
+                pooled_eng.metrics.panel_cache_misses > 0,
+                "{vk:?}: pool workers reported no cold-probe misses"
+            );
+            assert!(
+                serial_eng.metrics.panel_cache_misses > 0,
+                "{vk:?}: serial path reported no cold-probe misses"
             );
         }
     }
