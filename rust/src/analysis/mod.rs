@@ -1,0 +1,18 @@
+//! Static-analysis subsystem: the machine-checked invariants layer.
+//!
+//! Two halves, both std-only and dependency-free:
+//!
+//! - [`lanes`] — the central RNG lane registry: every `(slot, lane)` region
+//!   the coupling stack consumes, declared as data with owner/span/budget,
+//!   plus a pure overlap checker that runs as a tier-1 test and as debug
+//!   assertions at dispatch sites.
+//! - [`repo_lint`] — a repo-specific source auditor that scans `rust/src`
+//!   for the bug classes this codebase has shipped (NaN-unsafe comparisons,
+//!   poison-propagating locks, stray thread spawns, unregistered lane
+//!   construction), gated in CI via `tests/static_audit.rs`.
+//!
+//! Policy and the human-readable lane table live in EXPERIMENTS.md
+//! §Analysis.
+
+pub mod lanes;
+pub mod repo_lint;

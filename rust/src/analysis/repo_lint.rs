@@ -1,0 +1,658 @@
+//! Repo-specific source lint: a std-only, dependency-free auditor for the
+//! invariant classes this codebase has actually shipped bugs in.
+//!
+//! Clippy cannot know that `usable()` is the one blessed weight filter, that
+//! `sync::lock_recover` is the one blessed way to take a lock, or that
+//! `CounterRng::lane` construction is centralized in
+//! [`crate::analysis::lanes`]. This scanner encodes those house rules as
+//! typed findings over `rust/src`, with a checked-in allowlist
+//! ([`ALLOWLIST`]) for deliberate exceptions. `tests/static_audit.rs` runs it
+//! as a tier-1 test and CI runs it in the `lint` job.
+//!
+//! The scanner is line-oriented and deliberately simple: it strips comments,
+//! string/char literals, and `#[cfg(test)]` items (so doc tables and test
+//! scaffolding can mention the forbidden patterns freely), then matches
+//! substrings on what remains. That misses exotic formattings
+//! (`partial_cmp` split across lines) — acceptable for a tripwire whose goal
+//! is catching the idioms people actually type.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::lanes;
+
+/// The repo-specific rule set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// `.partial_cmp(` — NaN-panicking or NaN-swallowing float comparison;
+    /// use `total_cmp` (with an explicit NaN policy where sign matters).
+    NanUnsafeCmp,
+    /// Bare `<= 0.0` / `> 0.0` weight filters in `compression/` outside the
+    /// `usable()` helper — a NaN weight passes `!(w <= 0.0)` and can win a
+    /// race (the PR 8 bug class).
+    NanUnsafeWeightFilter,
+    /// `.lock().unwrap()` / `.wait(..).unwrap()` — poison-propagating lock
+    /// acquisition; use `crate::sync::{lock_recover, wait_recover}`.
+    LockUnwrap,
+    /// `thread::spawn` / `thread::Builder` / `thread::scope` outside the
+    /// pool/router/batcher/service modules that own thread lifecycles.
+    RawThreadSpawn,
+    /// `.lane(` outside [`lanes::BLESSED_LANE_MODULES`] — lane construction
+    /// must go through the registry's constants and helpers.
+    UnregisteredLane,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [
+        RuleId::NanUnsafeCmp,
+        RuleId::NanUnsafeWeightFilter,
+        RuleId::LockUnwrap,
+        RuleId::RawThreadSpawn,
+        RuleId::UnregisteredLane,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::NanUnsafeCmp => "nan-unsafe-cmp",
+            RuleId::NanUnsafeWeightFilter => "nan-unsafe-weight-filter",
+            RuleId::LockUnwrap => "lock-unwrap",
+            RuleId::RawThreadSpawn => "raw-thread-spawn",
+            RuleId::UnregisteredLane => "unregistered-lane",
+        }
+    }
+}
+
+/// One rule violation at one source line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Path relative to `rust/src`, with `/` separators.
+    pub file: String,
+    /// 1-based line number in the original file.
+    pub line: usize,
+    /// The offending line (trimmed, capped) from the *original* source.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {}:{}: {}",
+            self.rule.name(),
+            self.file,
+            self.line,
+            self.excerpt
+        )
+    }
+}
+
+/// A deliberate, justified exception. Policy (EXPERIMENTS.md §Analysis):
+/// every entry must name the rule, the file, a distinguishing substring of
+/// the offending line, and a one-line justification; stale entries (matching
+/// nothing) fail the audit so the list can only shrink.
+#[derive(Clone, Copy, Debug)]
+pub struct AllowEntry {
+    pub rule: RuleId,
+    /// Suffix of the relative file path, e.g. `compression/image.rs`.
+    pub file_suffix: &'static str,
+    /// Substring of the offending line's excerpt.
+    pub contains: &'static str,
+    pub why: &'static str,
+}
+
+/// The checked-in allowlist. Empty after this PR's fixes: the three
+/// `partial_cmp` sites, the service lock ports, and the lane-constant moves
+/// eliminated every known violation. Additions need a `why` that survives
+/// review.
+pub const ALLOWLIST: &[AllowEntry] = &[];
+
+/// Files (suffix match, relative to `rust/src`) that own thread lifecycles
+/// and may call `thread::spawn` / `thread::scope` directly.
+pub const SPAWN_BLESSED: &[&str] = &[
+    "coordinator/batcher.rs",
+    "coordinator/pool.rs",
+    "coordinator/router.rs",
+    "compression/service.rs",
+];
+
+/// Scan one file's source text. `rel` is the path relative to `rust/src`.
+pub fn scan_source(rel: &str, raw: &str) -> Vec<Finding> {
+    let clean = strip_comments_and_strings(raw);
+    let active = non_test_line_mask(&clean);
+    let usable_body = fn_body_mask(&clean, "fn usable");
+    let raw_lines: Vec<&str> = raw.lines().collect();
+
+    let lane_blessed = lanes::BLESSED_LANE_MODULES
+        .iter()
+        .any(|m| rel.ends_with(m));
+    let spawn_blessed = SPAWN_BLESSED.iter().any(|m| rel.ends_with(m));
+    let in_compression = rel.starts_with("compression/");
+
+    let mut findings = Vec::new();
+    for (idx, line) in clean.lines().enumerate() {
+        if !active.get(idx).copied().unwrap_or(true) {
+            continue;
+        }
+        let mut hit = |rule: RuleId| {
+            let original = raw_lines.get(idx).copied().unwrap_or(line).trim();
+            let excerpt: String = original.chars().take(120).collect();
+            findings.push(Finding {
+                rule,
+                file: rel.to_string(),
+                line: idx + 1,
+                excerpt,
+            });
+        };
+
+        if line.contains(".partial_cmp(") {
+            hit(RuleId::NanUnsafeCmp);
+        }
+        if in_compression
+            && (line.contains("<= 0.0") || line.contains("> 0.0"))
+            && !line.contains("assert")
+            && !usable_body.get(idx).copied().unwrap_or(false)
+        {
+            hit(RuleId::NanUnsafeWeightFilter);
+        }
+        if line.contains(".lock().unwrap()")
+            || line.contains(".lock().expect(")
+            || (line.contains(".wait(") && line.contains(".unwrap()"))
+        {
+            hit(RuleId::LockUnwrap);
+        }
+        if !spawn_blessed
+            && (line.contains("thread::spawn")
+                || line.contains("thread::Builder")
+                || line.contains("thread::scope"))
+        {
+            hit(RuleId::RawThreadSpawn);
+        }
+        if !lane_blessed && line.contains(".lane(") {
+            hit(RuleId::UnregisteredLane);
+        }
+    }
+    findings
+}
+
+/// Walk `root` (the `rust/src` directory) and scan every `.rs` file.
+pub fn scan_dir(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    for rel in rust_files(root)? {
+        let raw = fs::read_to_string(root.join(&rel))?;
+        findings.extend(scan_source(&rel, &raw));
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+/// Split findings into (violations not covered by the allowlist, allowlist
+/// entries that matched nothing). Both must be empty for the audit to pass.
+pub fn apply_allowlist<'a>(
+    findings: &[Finding],
+    allowlist: &'a [AllowEntry],
+) -> (Vec<Finding>, Vec<&'a AllowEntry>) {
+    let mut matched = vec![false; allowlist.len()];
+    let mut unmatched_findings = Vec::new();
+    for f in findings {
+        let mut covered = false;
+        for (i, a) in allowlist.iter().enumerate() {
+            if a.rule == f.rule && f.file.ends_with(a.file_suffix) && f.excerpt.contains(a.contains)
+            {
+                matched[i] = true;
+                covered = true;
+            }
+        }
+        if !covered {
+            unmatched_findings.push(f.clone());
+        }
+    }
+    let stale = allowlist
+        .iter()
+        .zip(&matched)
+        .filter(|(_, m)| !**m)
+        .map(|(a, _)| a)
+        .collect();
+    (unmatched_findings, stale)
+}
+
+/// Files (relative paths) whose *non-test* code calls `.lane(` — the
+/// registry-coverage audit compares this set against
+/// [`lanes::BLESSED_LANE_MODULES`].
+pub fn lane_call_files(root: &Path) -> io::Result<BTreeSet<String>> {
+    let mut out = BTreeSet::new();
+    for rel in rust_files(root)? {
+        let raw = fs::read_to_string(root.join(&rel))?;
+        let clean = strip_comments_and_strings(&raw);
+        let active = non_test_line_mask(&clean);
+        for (idx, line) in clean.lines().enumerate() {
+            if active.get(idx).copied().unwrap_or(true) && line.contains(".lane(") {
+                out.insert(rel.clone());
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Recursively list `.rs` files under `root`, as `/`-separated relative
+/// paths in sorted order.
+pub fn rust_files(root: &Path) -> io::Result<Vec<String>> {
+    fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            if path.is_dir() {
+                walk(root, &path, out)?;
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(root)
+                    .expect("walk stays under root")
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(rel);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Source-text preprocessing.
+// ---------------------------------------------------------------------------
+
+/// Replace comments (line + nested block), string literals (plain, raw, and
+/// byte variants), and char literals with spaces, preserving the line
+/// structure so findings keep their original line numbers. Lifetimes (`'a`)
+/// are left intact.
+pub fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+
+    // Emit `c` if it is a newline (keep structure), else a space.
+    fn blank(out: &mut String, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nested).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            out.push_str("  ");
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    out.push_str("  ");
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw-byte) string literal: r"...", r#"..."#, br#"..."#.
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let start = if c == 'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            let is_raw = j < n && b[j] == '"';
+            // Only treat as a literal when `r` starts a token (previous char
+            // is not identifier-continuing), so `for`/`ptr` etc. don't match.
+            let token_start = i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+            if is_raw && token_start {
+                for _ in i..=j {
+                    out.push(' ');
+                }
+                i = j + 1;
+                // Scan to closing quote + `hashes` hashes.
+                'raw: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain (and byte) string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            if c == 'b' {
+                out.push(' ');
+                i += 1;
+            }
+            out.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    out.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime. `'x'` / `'\n'` are literals; `'a` (no
+        // closing quote right after one char) is a lifetime and stays.
+        if c == '\'' {
+            let is_escape = i + 1 < n && b[i + 1] == '\\';
+            let closes_after_one = i + 2 < n && b[i + 2] == '\'';
+            if is_escape || closes_after_one {
+                out.push(' ');
+                i += 1;
+                while i < n {
+                    if b[i] == '\\' && i + 1 < n {
+                        out.push_str("  ");
+                        i += 2;
+                        continue;
+                    }
+                    if b[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    }
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime: emit as-is.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// Per-line mask over *stripped* text: `true` = outside every `#[cfg(test)]`
+/// item. Attribute lines, the item header, and its brace-balanced body are
+/// all masked. Handles `;`-terminated items (e.g. `#[cfg(test)] use ...;`)
+/// and attributes stacked between the cfg and the item.
+pub fn non_test_line_mask(clean: &str) -> Vec<bool> {
+    let lines: Vec<&str> = clean.lines().collect();
+    let mut active = vec![true; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let t = lines[i].trim_start();
+        if !(t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")) {
+            i += 1;
+            continue;
+        }
+        // Mask from the attribute line through the end of the item it gates:
+        // a brace-balanced block, or a `;`-terminated item. Characters inside
+        // attributes (`#[...]`, bracket-balanced) are skipped so stacked
+        // attributes and `#[cfg(test)] use x;` on one line both work.
+        let mut depth: i64 = 0;
+        let mut saw_open = false;
+        let mut saw_item = false;
+        let mut attr_depth: i64 = 0;
+        let mut j = i;
+        'mask: while j < lines.len() {
+            active[j] = false;
+            let chars: Vec<char> = lines[j].chars().collect();
+            let mut c = 0;
+            while c < chars.len() {
+                if attr_depth > 0 {
+                    match chars[c] {
+                        '[' => attr_depth += 1,
+                        ']' => attr_depth -= 1,
+                        _ => {}
+                    }
+                } else if chars[c] == '#' && c + 1 < chars.len() && chars[c + 1] == '[' {
+                    attr_depth = 1;
+                    c += 1;
+                } else {
+                    match chars[c] {
+                        '{' => {
+                            depth += 1;
+                            saw_open = true;
+                            saw_item = true;
+                        }
+                        '}' => {
+                            depth -= 1;
+                            if saw_open && depth == 0 {
+                                j += 1;
+                                break 'mask;
+                            }
+                        }
+                        ';' if depth == 0 && !saw_open && saw_item => {
+                            j += 1;
+                            break 'mask;
+                        }
+                        ch if !ch.is_whitespace() => {
+                            saw_item = true;
+                        }
+                        _ => {}
+                    }
+                }
+                c += 1;
+            }
+            j += 1;
+        }
+        i = j;
+    }
+    active
+}
+
+/// Per-line mask: `true` = line is inside the body of the first function
+/// whose header contains `header_needle` (e.g. `"fn usable"`). Used to exempt
+/// the blessed weight filter itself from the weight-filter rule.
+fn fn_body_mask(clean: &str, header_needle: &str) -> Vec<bool> {
+    let lines: Vec<&str> = clean.lines().collect();
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].contains(header_needle) {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut saw_open = false;
+        let mut j = i;
+        while j < lines.len() {
+            mask[j] = true;
+            let mut done = false;
+            for ch in lines[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        saw_open = true;
+                    }
+                    '}' => {
+                        depth -= 1;
+                        if saw_open && depth == 0 {
+                            done = true;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            j += 1;
+            if done {
+                break;
+            }
+        }
+        i = j;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_blanks_comments_strings_and_chars_but_keeps_lifetimes() {
+        let src = concat!(
+            "let a = \"x.partial_cmp(y)\"; // .lock().unwrap()\n",
+            "/* thread::spawn /* nested */ still comment */\n",
+            "let r = r#\"raw .lane( body\"#;\n",
+            "let c = '\\n'; let q = '\"';\n",
+            "fn f<'a>(x: &'a str) -> &'a str { x }\n",
+        );
+        let clean = strip_comments_and_strings(src);
+        assert!(!clean.contains("partial_cmp"));
+        assert!(!clean.contains("lock()"));
+        assert!(!clean.contains("thread::spawn"));
+        assert!(!clean.contains(".lane("));
+        assert!(clean.contains("<'a>"), "lifetimes must survive:\n{clean}");
+        assert_eq!(clean.lines().count(), src.lines().count());
+    }
+
+    #[test]
+    fn stray_double_quote_in_char_literal_does_not_derail_stripper() {
+        // The '"' char literal above must not open a string that swallows
+        // the rest of the file.
+        let src = "let q = '\"';\nlet bad = x.partial_cmp(&y);\n";
+        let clean = strip_comments_and_strings(src);
+        assert!(clean.contains("partial_cmp"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = concat!(
+            "fn prod() { a.partial_cmp(&b); }\n",
+            "#[cfg(test)]\n",
+            "mod tests {\n",
+            "    fn helper() { std::thread::spawn(|| {}); }\n",
+            "}\n",
+            "fn prod2() {}\n",
+        );
+        let findings = scan_source("stats/other.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].rule, RuleId::NanUnsafeCmp);
+        assert_eq!(findings[0].line, 1);
+    }
+
+    #[test]
+    fn weight_filter_rule_exempts_usable_and_asserts() {
+        let src = concat!(
+            "fn usable(w: f64) -> bool {\n",
+            "    w.is_finite() && w > 0.0\n",
+            "}\n",
+            "fn bad(w: f64) -> bool { w > 0.0 }\n",
+            "fn checked(w: f64) { assert!(w > 0.0); }\n",
+        );
+        let findings = scan_source("compression/codec.rs", src);
+        let weights: Vec<_> = findings
+            .iter()
+            .filter(|f| f.rule == RuleId::NanUnsafeWeightFilter)
+            .collect();
+        assert_eq!(weights.len(), 1, "{findings:?}");
+        assert_eq!(weights[0].line, 4);
+        // Same source outside compression/ raises no weight findings.
+        let outside = scan_source("spec/other.rs", src);
+        assert!(outside
+            .iter()
+            .all(|f| f.rule != RuleId::NanUnsafeWeightFilter));
+    }
+
+    #[test]
+    fn lock_and_spawn_and_lane_rules_respect_blessings() {
+        let src = concat!(
+            "fn f() {\n",
+            "    let g = self.state.lock().unwrap();\n",
+            "    let g = cv.wait(g).unwrap();\n",
+            "    std::thread::spawn(move || {});\n",
+            "    let l = rng.lane(slot, 3);\n",
+            "}\n",
+        );
+        let findings = scan_source("coordinator/server.rs", src);
+        let rules: Vec<RuleId> = findings.iter().map(|f| f.rule).collect();
+        assert!(rules.contains(&RuleId::LockUnwrap));
+        assert!(rules.contains(&RuleId::RawThreadSpawn));
+        assert!(rules.contains(&RuleId::UnregisteredLane));
+        assert_eq!(
+            findings
+                .iter()
+                .filter(|f| f.rule == RuleId::LockUnwrap)
+                .count(),
+            2
+        );
+        // pool.rs may spawn; kernel.rs may build lanes.
+        let pool = scan_source("coordinator/pool.rs", src);
+        assert!(pool.iter().all(|f| f.rule != RuleId::RawThreadSpawn));
+        let kernel = scan_source("spec/kernel.rs", src);
+        assert!(kernel.iter().all(|f| f.rule != RuleId::UnregisteredLane));
+    }
+
+    #[test]
+    fn allowlist_covers_and_reports_stale_entries() {
+        let findings = vec![Finding {
+            rule: RuleId::NanUnsafeCmp,
+            file: "compression/image.rs".to_string(),
+            line: 7,
+            excerpt: "a.partial_cmp(&b)".to_string(),
+        }];
+        let allow = [
+            AllowEntry {
+                rule: RuleId::NanUnsafeCmp,
+                file_suffix: "compression/image.rs",
+                contains: "partial_cmp",
+                why: "test entry",
+            },
+            AllowEntry {
+                rule: RuleId::LockUnwrap,
+                file_suffix: "nowhere.rs",
+                contains: "never",
+                why: "stale entry",
+            },
+        ];
+        let (open, stale) = apply_allowlist(&findings, &allow);
+        assert!(open.is_empty());
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].why, "stale entry");
+    }
+}

@@ -46,6 +46,7 @@
 //! to the first in-bin candidate and reports [`DecodeOutcome::fallback`] —
 //! the two fallbacks mirror each other and are regression-tested.
 
+use crate::analysis::lanes;
 use crate::spec::kernel::fill_exp_panel;
 use crate::stats::rng::CounterRng;
 
@@ -99,10 +100,10 @@ impl CodecConfig {
         if self.n_samples == 0 || self.l_max == 0 || self.k_decoders == 0 {
             return Err("n_samples, l_max, k_decoders must be ≥ 1".into());
         }
-        if self.n_samples as u64 >= PRIOR_DRAW_BUDGET {
-            return Err("n_samples must fit the per-candidate lane range".into());
-        }
-        Ok(())
+        // Full lane-layout check against the central registry: the
+        // per-candidate prior block must fit its reserved span and all
+        // regions (exp sets, bins, priors) must stay pairwise disjoint.
+        lanes::check_codec_layout(self.n_samples, self.k_decoders).map_err(|e| e.to_string())
     }
 }
 
@@ -180,9 +181,14 @@ pub struct GlsCodec<'a, M: SourceModel> {
 // correlating supposedly independent candidates. A dedicated lane gives
 // each candidate the full 2^64 counter space; PRIOR_DRAW_BUDGET is a debug
 // tripwire (and the cap on n_samples, so lanes never alias LANE_BINS).
-const LANE_BINS: u64 = (1 << 32) + 1;
-const PRIOR_LANE_BASE: u64 = 1 << 33;
-const PRIOR_DRAW_BUDGET: u64 = 1 << 32;
+//
+// The values are owned by the central lane registry (`analysis::lanes`,
+// human-readable table in EXPERIMENTS.md §Analysis); `validate()` runs the
+// registry's overlap/budget check so a layout change that introduces
+// aliasing fails as a typed error, not silent correlation.
+const LANE_BINS: u64 = lanes::CODEC_LANE_BINS;
+const PRIOR_LANE_BASE: u64 = lanes::CODEC_PRIOR_LANE_BASE;
+const PRIOR_DRAW_BUDGET: u64 = lanes::CODEC_PRIOR_DRAW_BUDGET;
 
 /// A weight carries usable mass only if it is a strictly positive finite
 /// number; NaN, ±∞ and anything ≤ 0 select nothing.

@@ -223,15 +223,69 @@ pub fn best_over_distortion_grid(
 ) -> GaussianPoint {
     // Paper grid: {0.01, 0.008, 0.006, 0.005, 0.003, 0.002, 0.001}.
     const GRID: [f64; 7] = [0.01, 0.008, 0.006, 0.005, 0.003, 0.002, 0.001];
-    GRID.iter()
-        .map(|&v| run_gaussian(GaussianSource::paper_default(v), k, l_max, n_samples, trials, seed, mode))
-        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
-        .unwrap()
+    best_point(GRID.iter().map(|&v| {
+        run_gaussian(GaussianSource::paper_default(v), k, l_max, n_samples, trials, seed, mode)
+    }))
+}
+
+/// Lowest-MSE point of a non-empty sweep. A NaN MSE (a degenerate sweep cell)
+/// must lose to every real measurement instead of panicking the whole sweep,
+/// so the comparator gives NaN an explicit "worst" rank.
+fn best_point<I: Iterator<Item = GaussianPoint>>(points: I) -> GaussianPoint {
+    points.min_by(|a, b| mse_order(a.mse, b.mse)).expect("empty sweep")
+}
+
+/// Total order on MSE values with NaN ranked strictly worst. `total_cmp`
+/// alone is not enough: x86 can produce *negative* NaN (e.g. `0.0 / 0.0`),
+/// which `total_cmp` orders below -inf — i.e. best. Rank NaN explicitly.
+fn mse_order(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn point(mse: f64) -> GaussianPoint {
+        GaussianPoint {
+            k: 2,
+            l_max: 4,
+            var_w_given_a: 0.01,
+            match_rate: 0.5,
+            mse,
+            mse_db: 10.0 * mse.log10(),
+        }
+    }
+
+    #[test]
+    fn min_mse_select_ranks_nan_strictly_worst() {
+        // Both NaN signs: x86 0.0/0.0 yields negative NaN, which raw
+        // total_cmp would rank *best*. Neither may win while a real
+        // measurement exists, and neither may panic the sweep.
+        let neg_nan = f64::NAN.copysign(-1.0);
+        let best = best_point([point(f64::NAN), point(0.25), point(neg_nan), point(0.5)].into_iter());
+        assert_eq!(best.mse, 0.25);
+        // An all-NaN sweep still returns (degenerate, but not a panic).
+        let degenerate = best_point([point(f64::NAN), point(neg_nan)].into_iter());
+        assert!(degenerate.mse.is_nan());
+    }
+
+    #[test]
+    fn mse_order_is_a_total_order_on_the_grid() {
+        use std::cmp::Ordering;
+        assert_eq!(mse_order(0.1, 0.2), Ordering::Less);
+        assert_eq!(mse_order(0.2, 0.1), Ordering::Greater);
+        assert_eq!(mse_order(0.1, 0.1), Ordering::Equal);
+        assert_eq!(mse_order(f64::NAN, f64::INFINITY), Ordering::Greater);
+        assert_eq!(mse_order(f64::NEG_INFINITY, f64::NAN), Ordering::Less);
+        assert_eq!(mse_order(f64::NAN, f64::NAN), Ordering::Equal);
+    }
 
     #[test]
     fn conditional_distribution_matches_paper_formula() {

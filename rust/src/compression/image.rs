@@ -269,12 +269,23 @@ fn ridge(xs: &[Vec<f64>], ys: &[f64], lambda: f64) -> Vec<f64> {
     solve_spd(a, b)
 }
 
+/// Pivot magnitude with NaN ranked below every real value (including 0), so
+/// a NaN entry can never be *chosen* as pivot while real rows remain, and
+/// `max_by` stays total instead of panicking mid-elimination.
+fn pivot_key(v: f64) -> f64 {
+    if v.is_nan() {
+        -1.0
+    } else {
+        v.abs()
+    }
+}
+
 /// Gaussian elimination with partial pivoting (small dense systems).
 fn solve_spd(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
     let n = b.len();
     for col in 0..n {
         let piv = (col..n)
-            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .max_by(|&i, &j| pivot_key(a[i][col]).total_cmp(&pivot_key(a[j][col])))
             .unwrap();
         a.swap(col, piv);
         b.swap(col, piv);
@@ -542,6 +553,32 @@ pub fn mse(a: &[f32], b: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn spd_pivot_select_survives_nan_input() {
+        // Column 0 holds {NaN, 3.0}: max_by over partial_cmp used to panic
+        // here. The NaN still propagates through elimination arithmetic (the
+        // system is garbage-in), but the solver must return, not unwind.
+        let a = vec![vec![f64::NAN, 1.0], vec![3.0, 0.5]];
+        let b = vec![1.0, 2.0];
+        let x = solve_spd(a, b);
+        assert_eq!(x.len(), 2);
+    }
+
+    #[test]
+    fn pivot_key_ranks_nan_below_zero() {
+        assert!(pivot_key(f64::NAN) < pivot_key(0.0));
+        assert!(pivot_key(-2.0) > pivot_key(1.0));
+        assert_eq!(pivot_key(-0.5), 0.5);
+    }
+
+    #[test]
+    fn solve_spd_unchanged_on_well_posed_systems() {
+        // 2x2: [[2,1],[1,3]] x = [3,5] -> x = [4/5, 7/5].
+        let x = solve_spd(vec![vec![2.0, 1.0], vec![1.0, 3.0]], vec![3.0, 5.0]);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
 
     #[test]
     fn synthetic_digits_have_structure() {

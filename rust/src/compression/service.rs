@@ -17,6 +17,10 @@
 //!   [`DecoderOutcome::Panicked`] and in [`BatchOutput::panicked`]), the
 //!   worker replaces its scratch and keeps serving, and every other job's
 //!   output is untouched;
+//! * every lock acquisition goes through the poison-recovering helpers in
+//!   [`crate::sync`] (the `VerifyPool` discipline): a panic on any thread
+//!   while it held the state mutex must not cascade into other threads'
+//!   unwraps — panic reporting stays exactly per-job, never lock-induced;
 //! * results are bit-exact with the single-threaded reference
 //!   ([`run_blocks_workspace`]) regardless of worker count or scheduling —
 //!   every decode is a pure function of `(cfg, block, side, message, k)`.
@@ -31,6 +35,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 use super::codec::{BlockContext, CodecConfig, CodecWorkspace, EncodeResult, GlsCodec, SourceModel};
+use crate::sync::{lock_recover, wait_recover};
 
 /// One block's worth of work for the service: the block id, what the
 /// encoder observes, and one side-information observation per decoder.
@@ -201,7 +206,7 @@ where
         let codec = GlsCodec::new(&*self.model, self.shared.cfg);
         let mut enc_ws = CodecWorkspace::new();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             debug_assert!(st.closed && st.pending == 0, "overlapping batch");
             st.jobs.clear();
             st.results.clear();
@@ -216,7 +221,7 @@ where
             let eb =
                 Arc::new(EncodedBlock { ctx, message: enc.message, sides: req.sides });
             {
-                let mut st = self.shared.state.lock().unwrap();
+                let mut st = lock_recover(&self.shared.state);
                 for kk in 0..k {
                     st.jobs.push((Arc::clone(&eb), kk));
                     st.results.push(DecoderOutcome::Panicked);
@@ -227,10 +232,10 @@ where
             encoded.push((enc, eb));
         }
         let results = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.closed = true;
             while st.pending > 0 {
-                st = self.shared.done_cv.wait(st).unwrap();
+                st = wait_recover(&self.shared.done_cv, st);
             }
             std::mem::take(&mut st.results)
         };
@@ -254,7 +259,7 @@ where
 impl<M: SourceModel> Drop for CompressionServer<M> {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_recover(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -274,7 +279,7 @@ where
     let mut ws = CodecWorkspace::new();
     loop {
         let (id, eb, k) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_recover(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -282,7 +287,7 @@ where
                 if st.next < st.jobs.len() {
                     break;
                 }
-                st = shared.work_cv.wait(st).unwrap();
+                st = wait_recover(&shared.work_cv, st);
             }
             let id = st.next;
             st.next += 1;
@@ -297,7 +302,7 @@ where
             // panicked; replace it rather than trust its contents.
             ws = CodecWorkspace::new();
         }
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_recover(&shared.state);
         if let Ok(d) = out {
             st.results[id] = DecoderOutcome::Decoded { index: d.index, fallback: d.fallback };
         }
@@ -522,5 +527,43 @@ mod tests {
         let again = server2.run_batch(clean.clone());
         assert!(again.panicked.is_empty());
         assert_same_blocks(&again, &run_blocks_workspace(&*model, cfg, &clean));
+    }
+
+    /// Panic while *holding the state lock* (poisoning it), then prove the
+    /// service neither cascades the panic nor misreports anything as
+    /// `DecodersPanicked`: the next batch is clean and bit-exact, and a
+    /// genuinely panicking decode job is still reported exactly per-slot.
+    #[test]
+    fn poisoned_state_lock_does_not_cascade_or_misreport() {
+        let model = Arc::new(PoisonSide { inner: ToyDiscrete { flip_enc: 0.1, flip_dec: 0.3 } });
+        let cfg = toy_cfg(2);
+        let mut server = CompressionServer::new(Arc::clone(&model), cfg, 2);
+
+        // A thread dies mid-critical-section; the state mutex is now
+        // poisoned under the parked workers and the future submitter.
+        let sh = Arc::clone(&server.shared);
+        let poisoner = thread::spawn(move || {
+            let _g = sh.state.lock().unwrap();
+            panic!("die while holding the service state lock");
+        });
+        assert!(poisoner.join().is_err());
+        assert!(server.shared.state.is_poisoned());
+
+        // Clean batch over the poisoned lock: no cascade, no phantom
+        // Panicked slots, bit-exact with the serial reference.
+        let requests = toy_requests(2, 25);
+        let reference = run_blocks_workspace(&*model, cfg, &requests);
+        let out = server.run_batch(requests);
+        assert!(out.panicked.is_empty(), "poison misreported: {:?}", out.panicked);
+        assert_same_blocks(&out, &reference);
+
+        // A real decode panic on the still-poisoned lock is reported for
+        // exactly its own slot — poison adds nothing, hides nothing.
+        let mut requests = toy_requests(2, 8);
+        requests[3].sides[0] = POISON;
+        let out = server.run_batch(requests);
+        assert_eq!(out.panicked, vec![(3, 0)]);
+        assert_eq!(out.blocks[3].decoded[0], DecoderOutcome::Panicked);
+        assert!(matches!(out.blocks[3].decoded[1], DecoderOutcome::Decoded { .. }));
     }
 }

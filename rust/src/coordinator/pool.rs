@@ -76,7 +76,7 @@
 //! `tests/kernel_parity.rs`.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -341,12 +341,14 @@ impl PoolShared {
     /// Poison-recovering lock: a panic on another thread while it held the
     /// mutex must not cascade (state transitions are written to be
     /// panic-free under the lock, so recovered state is always coherent).
+    /// Delegates to the crate-wide helpers in [`crate::sync`] — the one
+    /// blessed lock discipline, enforced by the repo lint.
     fn lock(&self) -> MutexGuard<'_, PoolState> {
-        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+        crate::sync::lock_recover(&self.state)
     }
 
     fn wait<'a>(&self, cv: &Condvar, g: MutexGuard<'a, PoolState>) -> MutexGuard<'a, PoolState> {
-        cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+        crate::sync::wait_recover(cv, g)
     }
 }
 
@@ -434,7 +436,7 @@ impl VerifyPool {
     /// service must not erode). Called on every submission; the common
     /// path is `workers` cheap `is_finished` loads.
     fn ensure_workers(&self) {
-        let mut hs = self.handles.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut hs = crate::sync::lock_recover(&self.handles);
         let mut i = 0;
         while i < hs.len() {
             if hs[i].is_finished() {
@@ -608,9 +610,7 @@ impl Drop for VerifyPool {
             st.shutdown = true;
             self.shared.work.notify_all();
         }
-        let handles = std::mem::take(
-            self.handles.get_mut().unwrap_or_else(PoisonError::into_inner),
-        );
+        let handles = std::mem::take(crate::sync::get_mut_recover(&mut self.handles));
         for h in handles {
             let _ = h.join();
         }

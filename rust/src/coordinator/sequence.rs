@@ -79,7 +79,7 @@ impl Request {
             id,
             prompt,
             max_new_tokens,
-            rng_lane: id,
+            rng_lane: crate::analysis::lanes::server_request_lane(id),
             verifier: None,
             deadline: None,
             cancel: CancelToken::new(),

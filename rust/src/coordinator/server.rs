@@ -150,9 +150,14 @@ impl Server {
     /// says why — the caller decides whether to retry or drop.
     pub fn try_submit(&mut self, req: Request) -> Result<u64, AdmitError> {
         let id = self.next_id;
-        // Follow `Request::new`'s lane = id convention unless the caller
-        // pinned a custom randomness lane.
-        let rng_lane = if req.rng_lane == req.id { id } else { req.rng_lane };
+        // Follow `Request::new`'s lane = id convention (the registry's
+        // `server_request_lane` contract) unless the caller pinned a custom
+        // randomness lane.
+        let rng_lane = if req.rng_lane == req.id {
+            crate::analysis::lanes::server_request_lane(id)
+        } else {
+            req.rng_lane
+        };
         let req = Request { id, rng_lane, ..req };
         self.router.try_submit(req)?;
         self.next_id += 1;

@@ -26,6 +26,7 @@
 //! Everything below `runtime` also has a native-Rust mirror ([`model`]) so
 //! the algorithm layer is testable and benchable without artifacts.
 
+pub mod analysis;
 pub mod bench;
 pub mod compression;
 pub mod config;
@@ -40,6 +41,7 @@ pub mod perf;
 pub mod runtime;
 pub mod spec;
 pub mod stats;
+pub mod sync;
 pub mod testkit;
 pub mod workload;
 

@@ -165,6 +165,12 @@
 //!
 //! # RNG coordinate map
 //!
+//! This table is *declared as data* in the central lane registry
+//! (`crate::analysis::lanes`), which checks region disjointness as a tier-1
+//! test and debug-asserts it at [`CouplingWorkspace::verify_block_kind`]
+//! dispatch; the consolidated human-readable map (engine, codec, trace,
+//! server) lives in EXPERIMENTS.md §Analysis.
+//!
 //! Which shared-randomness coordinates each consumer reads (`slot` is the
 //! absolute decoding position; K = number of drafts the engine runs):
 //!
@@ -1099,6 +1105,20 @@ impl CouplingWorkspace {
         rng: &CounterRng,
         slot0: u64,
     ) -> BlockOutput {
+        // Every dispatch re-checks this kind's lane-consumption shape
+        // against the central registry (debug builds; the debug-assertions
+        // CI lane runs the full suites with it armed), so a verifier whose
+        // lane layout drifts out of the registered coordinate map fails
+        // typed at its first block.
+        debug_assert!(
+            crate::analysis::lanes::check_engine_profile(
+                crate::analysis::lanes::engine_profile_of(kind),
+                input.k(),
+            )
+            .is_ok(),
+            "lane registry rejects {kind:?} at K={}",
+            input.k(),
+        );
         match kind {
             VerifierKind::Gls => self.verify_block_gls(input, rng, slot0, false),
             VerifierKind::GlsStrong => self.verify_block_gls(input, rng, slot0, true),

@@ -68,7 +68,20 @@ impl Categorical {
         assert!(!logits.is_empty());
         assert!(temperature > 0.0);
         let inv_t = 1.0 / temperature;
-        let mut w: Vec<f64> = logits.iter().map(|&l| l as f64 * inv_t).collect();
+        // NaN logits (garbage rows from a crashed forward pass) are masked to
+        // -inf up front: they can never enter the support, the top-k select
+        // below stays a total order, and the max fold stays NaN-free.
+        let mut w: Vec<f64> = logits
+            .iter()
+            .map(|&l| {
+                let s = l as f64 * inv_t;
+                if s.is_nan() {
+                    f64::NEG_INFINITY
+                } else {
+                    s
+                }
+            })
+            .collect();
         if let Some(k) = top_k {
             if k < w.len() {
                 scratch.clear();
@@ -76,7 +89,7 @@ impl Categorical {
                 // k-th largest = (k-1)-th in descending order; O(n) via
                 // select_nth on the index buffer, values untouched.
                 let (_, mid, _) = scratch.select_nth_unstable_by(k - 1, |&a, &b| {
-                    w[b as usize].partial_cmp(&w[a as usize]).unwrap()
+                    w[b as usize].total_cmp(&w[a as usize])
                 });
                 let thresh = w[*mid as usize];
                 for s in w.iter_mut() {
@@ -87,6 +100,10 @@ impl Categorical {
             }
         }
         let max = w.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            max > f64::NEG_INFINITY,
+            "all logits are NaN or -inf: no symbol can carry mass"
+        );
         let mut total = 0.0;
         for s in w.iter_mut() {
             *s = (*s - max).exp();
@@ -545,6 +562,39 @@ pub trait BlockVerifier {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn nan_logits_are_masked_out_of_the_support() {
+        // A NaN logit must behave as -inf: zero mass, excluded from top-k,
+        // and no panic inside the top-k index select.
+        let logits = [1.0f32, f32::NAN, 3.0, f32::NAN, 2.0];
+        let c = Categorical::from_logits(&logits, 1.0, None);
+        assert_eq!(c.prob(1), 0.0);
+        assert_eq!(c.prob(3), 0.0);
+        let total: f64 = (0..logits.len()).map(|i| c.prob(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+
+        let t = Categorical::from_logits(&logits, 0.7, Some(2));
+        assert_eq!(t.prob(1), 0.0);
+        assert_eq!(t.prob(3), 0.0);
+        let support = t.support().expect("top-k caches support");
+        assert_eq!(support, &[2, 4]);
+    }
+
+    #[test]
+    fn nan_logits_with_topk_larger_than_real_support_do_not_panic() {
+        // top_k = 4 forces the select threshold onto a masked NaN entry.
+        let logits = [5.0f32, f32::NAN, f32::NAN, f32::NAN, 1.0];
+        let c = Categorical::from_logits(&logits, 1.0, Some(4));
+        assert!(c.prob(0) > c.prob(4));
+        assert_eq!(c.prob(1) + c.prob(2) + c.prob(3), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no symbol can carry mass")]
+    fn all_nan_logits_panic_with_a_typed_message() {
+        let _ = Categorical::from_logits(&[f32::NAN, f32::NAN], 1.0, None);
+    }
 
     #[test]
     fn categorical_normalizes() {

@@ -1,0 +1,86 @@
+//! Poison-recovering lock discipline, shared across the coordinator and the
+//! compression service.
+//!
+//! A `Mutex` poisons when a thread panics while holding the guard. Everywhere
+//! in this crate the data behind a lock is either plain bookkeeping (counters,
+//! queues of already-validated work) or is re-validated by the reader, so the
+//! right response to poison is to keep going with the inner value — a panicked
+//! *worker* must surface as a typed outcome (`WorkerOutcome::Panicked`,
+//! `DecoderOutcome::Panicked`), never as a cascading `PoisonError` unwrap in an
+//! unrelated thread. `coordinator/pool.rs` established this discipline; these
+//! helpers make it the one blessed way to take a lock so the repo lint
+//! (`analysis/repo_lint.rs`, rule `LockUnwrap`) can reject every raw
+//! `.lock().unwrap()` in `rust/src`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// Acquire `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Block on `cv`, recovering the re-acquired guard if the lock was poisoned
+/// while we slept.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Exclusive access through a `&mut Mutex<T>` (no other threads can hold the
+/// lock), still recovering from a poison flag left by an earlier panic.
+pub fn get_mut_recover<T>(m: &mut Mutex<T>) -> &mut T {
+    m.get_mut().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = Arc::clone(m);
+        let h = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock on purpose");
+        });
+        assert!(h.join().is_err());
+    }
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        poison(&m);
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 9;
+        assert_eq!(*lock_recover(&m), 9);
+    }
+
+    #[test]
+    fn get_mut_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        poison(&m);
+        let mut m = Arc::try_unwrap(m).expect("sole owner");
+        get_mut_recover(&mut m).push(4);
+        assert_eq!(get_mut_recover(&mut m).len(), 4);
+    }
+
+    #[test]
+    fn wait_recover_wakes_after_poisoning_notifier() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = Arc::clone(&pair);
+        let notifier = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut g = m.lock().unwrap();
+            *g = true;
+            cv.notify_all();
+            panic!("poison while the waiter sleeps");
+        });
+        let (m, cv) = &*pair;
+        let mut g = lock_recover(m);
+        while !*g {
+            g = wait_recover(cv, g);
+        }
+        assert!(*g);
+        assert!(notifier.join().is_err());
+    }
+}

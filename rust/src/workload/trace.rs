@@ -5,8 +5,9 @@
 //! lengths, and per-request `VerifierKind` mixes — all deterministic
 //! per seed so drills replay bit-identically.
 
+use crate::analysis::lanes::{self, TraceStream};
 use crate::spec::types::VerifierKind;
-use crate::stats::rng::{SplitMix64, XorShift128};
+use crate::stats::rng::XorShift128;
 
 /// One scheduled request arrival.
 #[derive(Clone, Debug)]
@@ -210,10 +211,17 @@ impl RequestTrace {
     /// draws from its own salted sub-stream so marginals are stable
     /// under changes to the others.
     pub fn generate(spec: &TraceSpec) -> Self {
-        let mut arrival_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(1));
-        let mut prompt_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(2));
-        let mut output_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(3));
-        let mut kind_rng = XorShift128::new(spec.seed ^ SplitMix64::mix(4));
+        // Sub-stream seeds come from the central lane registry
+        // (`analysis::lanes`), which also proves the four salts (plus every
+        // per-prompt salt) pairwise distinct as a tier-1 test.
+        let mut arrival_rng =
+            XorShift128::new(lanes::trace_stream_seed(spec.seed, TraceStream::Arrivals));
+        let mut prompt_rng =
+            XorShift128::new(lanes::trace_stream_seed(spec.seed, TraceStream::PromptLen));
+        let mut output_rng =
+            XorShift128::new(lanes::trace_stream_seed(spec.seed, TraceStream::OutputLen));
+        let mut kind_rng =
+            XorShift128::new(lanes::trace_stream_seed(spec.seed, TraceStream::VerifierMix));
         let total_weight: f64 = spec.verifier_mix.iter().map(|(_, w)| w).sum();
         let arrivals = spec.arrivals.sample_arrivals(spec.n, &mut arrival_rng);
         let requests = arrivals
@@ -264,7 +272,7 @@ impl RequestTrace {
     /// prompts regardless of generation order.
     pub fn prompt_tokens(&self, idx: usize, vocab: usize, seed: u64) -> Vec<u32> {
         let len = self.requests[idx].prompt_len;
-        let mut rng = XorShift128::new(seed ^ SplitMix64::mix(0x70_0000 + idx as u64));
+        let mut rng = XorShift128::new(lanes::trace_prompt_seed(seed, idx));
         (0..len).map(|_| rng.next_below(vocab as u64) as u32).collect()
     }
 }
